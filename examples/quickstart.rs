@@ -1,0 +1,46 @@
+//! Quickstart: generate a small planted-partition graph, stream-cluster
+//! it with the paper's algorithm, and score against ground truth.
+//!
+//!     cargo run --release --example quickstart
+
+use streamcom::coordinator::algorithm::{StrConfig, StreamingClusterer};
+use streamcom::graph::generators::sbm::{self, SbmConfig};
+use streamcom::metrics::{f1, labels_to_communities, modularity, nmi};
+
+fn main() {
+    // 10 communities of 100 nodes; intra edges 10x more likely than inter
+    let g = sbm::generate(&SbmConfig::equal(10, 100, 0.10, 0.001, 42));
+    println!("graph: n={} m={} (planted 10 communities)", g.n(), g.m());
+
+    // one pass over the edge stream, three integers per node
+    let mut clusterer = StreamingClusterer::new(g.n(), StrConfig::new(1024));
+    let t0 = std::time::Instant::now();
+    clusterer.process_chunk(&g.edges.edges);
+    let elapsed = t0.elapsed();
+
+    let labels = clusterer.labels();
+    let truth = g.truth.to_labels(g.n());
+    println!(
+        "clustered {} edges in {:?} ({:.1} Medges/s)",
+        g.m(),
+        elapsed,
+        g.m() as f64 / elapsed.as_secs_f64() / 1e6
+    );
+    println!(
+        "found {} communities (stats: {} joins, {} same-community, {} threshold rejects)",
+        labels_to_communities(&labels).len(),
+        clusterer.stats.joins,
+        clusterer.stats.same_community,
+        clusterer.stats.threshold_rejects,
+    );
+    println!(
+        "scores: F1={:.3}  NMI={:.3}  modularity={:.3}",
+        f1::average_f1_labels(&labels, &truth),
+        nmi::nmi_labels(&labels, &truth),
+        modularity::modularity(g.n(), &g.edges.edges, &labels),
+    );
+    println!(
+        "sketch memory: {} bytes = 16 B/node (the paper's three integers)",
+        clusterer.state.memory_bytes()
+    );
+}

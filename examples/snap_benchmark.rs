@@ -1,0 +1,80 @@
+//! End-to-end driver (the repository's headline validation run):
+//! regenerate the paper's full evaluation — Table 1 (runtimes + the
+//! `cat` bound), the §4.4 memory comparison, and Table 2 (F1 + NMI) —
+//! on the six SNAP-shaped workloads.
+//!
+//!     cargo run --release --example snap_benchmark           # scale 0.1
+//!     SCALE=0.05 cargo run --release --example snap_benchmark
+//!
+//! Results for the recorded run live in EXPERIMENTS.md.
+
+use streamcom::bench::memory::{edge_list_bytes, fmt_bytes, sketch_bytes};
+use streamcom::bench::report::Table;
+use streamcom::bench::table1::{self, Table1Config};
+use streamcom::bench::table2::{self, Table2Config};
+use streamcom::bench::workloads;
+
+fn main() {
+    let scale: f64 = std::env::var("SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(workloads::DEFAULT_SCALE);
+    println!("# snap_benchmark at scale {scale} (of the DESIGN.md §3 stand-in sizes)\n");
+
+    // --- Table 1: execution times + readonly bound --------------------
+    let (t1, rows1) = table1::run(&Table1Config { scale, ..Default::default() });
+    println!("{}", t1.render());
+    for r in &rows1 {
+        if let Some(s) = table1::speedup_vs_fastest_baseline(r) {
+            println!(
+                "  {:<16} STR speedup vs fastest baseline {s:>6.1}x; STR/read {:.1}x",
+                r.name,
+                r.str_secs / r.readonly_secs.max(1e-12)
+            );
+        }
+    }
+    println!();
+
+    // --- Memory (§4.4) -------------------------------------------------
+    let graphs = workloads::load_all(scale, None, true);
+    let mut tm = Table::new(
+        "Memory (§4.4)",
+        &["dataset", "edge list", "STR sketch", "ratio"],
+    );
+    for g in &graphs {
+        let el = edge_list_bytes(g.m() as u64);
+        let sk = sketch_bytes(g.n() as u64);
+        tm.push_row(vec![
+            g.name.clone(),
+            fmt_bytes(el),
+            fmt_bytes(sk),
+            format!("{:.1}x", el as f64 / sk as f64),
+        ]);
+    }
+    println!("{}", tm.render());
+
+    // --- Table 2: detection quality ------------------------------------
+    let (t2, rows2) = table2::run(&Table2Config { scale, ..Default::default() });
+    println!("{}", t2.render());
+
+    // --- headline summary ----------------------------------------------
+    println!("headline checks:");
+    let all_speedups_over_10x = rows1
+        .iter()
+        .filter_map(table1::speedup_vs_fastest_baseline)
+        .all(|s| s > 10.0);
+    println!("  STR >10x faster than every baseline on every row: {all_speedups_over_10x}");
+    let mut str_wins = 0;
+    let mut louvain_rows = 0;
+    for r in rows2.iter().filter(|r| {
+        matches!(r.name.as_str(), "youtube-s" | "livejournal-s" | "orkut-s")
+    }) {
+        if let Some((lf1, _)) = r.baseline_scores[1] {
+            louvain_rows += 1;
+            if r.str_scores.0 > lf1 {
+                str_wins += 1;
+            }
+        }
+    }
+    println!("  STR beats Louvain on large rows: {str_wins}/{louvain_rows}");
+}

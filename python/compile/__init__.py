@@ -1,0 +1,5 @@
+"""Build-time compile package: L2 model + L1 kernels + AOT pipeline.
+
+Never imported at runtime — the Rust binary consumes only the HLO-text
+artifacts this package emits via ``python -m compile.aot``.
+"""

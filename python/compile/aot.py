@@ -1,0 +1,78 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* artifacts.
+
+HLO text — NOT ``lowered.compile()`` or serialised ``HloModuleProto`` — is
+the interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids
+which the ``xla`` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage (from ``make artifacts``):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits ``<name>.hlo.txt`` per artifact plus ``manifest.txt`` recording the
+input/output shapes the Rust runtime validates against.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_str(s) -> str:
+    return f"{s.dtype}[{','.join(str(d) for d in s.shape)}]"
+
+
+def build_artifacts(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    written = {}
+    for name, (fn, args) in model.example_args().items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *args)
+        out_desc = (
+            _shape_str(out_shapes)
+            if hasattr(out_shapes, "shape")
+            else ";".join(_shape_str(s) for s in out_shapes)
+        )
+        in_desc = ";".join(_shape_str(s) for s in args)
+        manifest_lines.append(f"{name} in={in_desc} out={out_desc}")
+        written[name] = path
+        print(f"wrote {path} ({len(text)} chars)  in={in_desc} out={out_desc}")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    return written
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--out", default=None, help="(compat) ignored if --out-dir given")
+    args = p.parse_args()
+    out_dir = args.out_dir
+    if args.out and not args.out_dir:
+        out_dir = os.path.dirname(args.out) or "."
+    build_artifacts(out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""L1 Pallas kernels + pure-jnp reference oracles.
+
+Kernel modules (each with an interpret-mode Pallas implementation):
+
+* :mod:`.metrics_kernel`    — sweep-sketch scoring (entropy/density/balance)
+* :mod:`.modularity_kernel` — block-streamed modularity partial sums
+* :mod:`.nmi_kernel`        — NMI contingency reduction
+
+:mod:`.ref` holds the oracles and the fixed AOT shape constants.
+"""
+
+from . import metrics_kernel, modularity_kernel, nmi_kernel, ref
+
+__all__ = ["metrics_kernel", "modularity_kernel", "nmi_kernel", "ref"]

@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: sweep-sketch scoring (entropy / density / balance).
+
+This is the §2.5 selection hot-spot: the multi-parameter run keeps ``A``
+concurrent ``(c, v)`` sketches and must score each of them *without the
+graph*, using only the community volume/size tables.
+
+TPU mapping (DESIGN.md §6): the ``(A, K)`` tables are tiled ``(1, K_TILE)``
+into VMEM via ``BlockSpec``; each grid step computes the partial row
+reductions on the VPU and accumulates into the ``(1, 4)`` output block,
+which stays resident across the K-tile loop (output index map ignores the
+K grid axis). ``K_TILE = 512`` → 2 inputs × 512 × 4 B = 4 KiB live VMEM per
+step, leaving room for double buffering of the HBM→VMEM pipeline.
+
+Runs with ``interpret=True`` everywhere in this repo: the CPU PJRT client
+cannot execute Mosaic custom-calls, and interpret mode lowers to plain HLO
+so the AOT artifact is executable from Rust.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+K_TILE = 512
+
+
+def _sweep_metrics_kernel(vols_ref, sizes_ref, w_ref, out_ref):
+    """Grid = (A, K // K_TILE). Accumulates the four row statistics."""
+    kt = pl.program_id(1)
+
+    vols = vols_ref[...]          # (1, K_TILE)
+    sizes = sizes_ref[...]        # (1, K_TILE)
+    w = w_ref[...]                # (1,)
+
+    w_safe = jnp.where(w > 0.0, w, 1.0)[0]
+    p = jnp.where(w[0] > 0.0, vols / w_safe, 0.0)
+
+    # entropy partial: -sum p log p  (0 log 0 := 0)
+    logp = jnp.log(jnp.where(p > 0.0, p, 1.0))
+    h_part = -jnp.sum(jnp.where(p > 0.0, p * logp, 0.0))
+
+    # density numerator partial: sum over |C_k| > 1 of v_k / (s_k (s_k - 1))
+    denom = sizes * (sizes - 1.0)
+    d_part = jnp.sum(
+        jnp.where(sizes > 1.0, vols / jnp.where(denom > 0.0, denom, 1.0), 0.0)
+    )
+
+    # balance partial: sum p^2
+    b_part = jnp.sum(p * p)
+
+    # non-empty community count partial
+    n_part = jnp.sum((sizes > 0.0).astype(vols.dtype))
+
+    partial = jnp.stack([h_part, d_part, b_part, n_part])[None, :]  # (1, 4)
+
+    @pl.when(kt == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sweep_metrics_raw(vols, sizes, w):
+    """Accumulated [H, D_num, balance, ncomms] per sweep row, f32[A, 4].
+
+    ``D_num`` is the *unnormalised* density sum; `sweep_metrics` divides by
+    ``ncomms`` afterwards (the division needs the full row, so it lives
+    outside the tile loop).
+    """
+    a, k = vols.shape
+    assert k % K_TILE == 0, f"K={k} must be a multiple of K_TILE={K_TILE}"
+    grid = (a, k // K_TILE)
+    return pl.pallas_call(
+        _sweep_metrics_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, K_TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((1, K_TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, 4), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((a, 4), vols.dtype),
+        interpret=True,
+    )(vols, sizes, w)
+
+
+def sweep_metrics(vols, sizes, w):
+    """Kernel-backed equivalent of :func:`ref.sweep_metrics_ref`."""
+    raw = sweep_metrics_raw(vols, sizes, w)
+    h, d_num, bal, ncomms = raw[:, 0], raw[:, 1], raw[:, 2], raw[:, 3]
+    density = jnp.where(ncomms > 0.0, d_num / jnp.where(ncomms > 0.0, ncomms, 1.0), 0.0)
+    return jnp.stack([h, density, bal, ncomms], axis=1)

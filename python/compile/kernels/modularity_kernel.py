@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: block-streamed modularity partial sums.
+
+Modularity (paper §3.1):
+
+    Q = (1/w) [ sum_ij w_ij δ(i,j) - sum_C Vol(C)^2 / w ]
+
+The Rust coordinator evaluates Q periodically without storing the stream:
+it replays buffered *blocks* of edges (a bounded sample) through this
+kernel together with the current community-volume table, and combines the
+partial sums. The kernel computes, per call:
+
+    out[0] = sum_b mask_b · 1{ci_b == cj_b}   (intra-community edges)
+    out[1] = sum_k vols_k^2                   (squared volume mass)
+
+TPU mapping: edge labels are tiled ``(B_TILE,)`` into VMEM; the
+volume table is a single ``(K,)`` block (4096 · 4 B = 16 KiB) folded in on
+the first grid step only. Equality + masked sum are VPU ops; the kernel is
+bandwidth-bound, so ``B_TILE = 1024`` keeps the HBM→VMEM pipeline full.
+
+interpret=True as everywhere (see metrics_kernel.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+B_TILE = 1024
+
+
+def _modularity_kernel(ci_ref, cj_ref, mask_ref, vols_ref, out_ref):
+    """Grid = (B // B_TILE,). out = f32[2] accumulated across tiles."""
+    bt = pl.program_id(0)
+
+    ci = ci_ref[...]
+    cj = cj_ref[...]
+    mask = mask_ref[...]
+
+    intra = jnp.sum(mask * (ci == cj).astype(mask.dtype))
+
+    @pl.when(bt == 0)
+    def _init():
+        vols = vols_ref[...]
+        out_ref[0] = 0.0
+        out_ref[1] = jnp.sum(vols * vols)
+
+    out_ref[0] += intra
+
+
+@jax.jit
+def modularity_partials(ci, cj, mask, vols):
+    """Kernel-backed equivalent of :func:`ref.modularity_partials_ref`.
+
+    Args:
+      ci, cj: i32[B] endpoint community labels (B multiple of B_TILE).
+      mask:   f32[B] edge validity mask.
+      vols:   f32[K] current community volumes.
+
+    Returns:
+      f32[2] = [intra_edges, sum vols^2].
+    """
+    (b,) = ci.shape
+    assert b % B_TILE == 0, f"B={b} must be a multiple of B_TILE={B_TILE}"
+    grid = (b // B_TILE,)
+    return pl.pallas_call(
+        _modularity_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B_TILE,), lambda i: (i,)),
+            pl.BlockSpec((B_TILE,), lambda i: (i,)),
+            pl.BlockSpec((B_TILE,), lambda i: (i,)),
+            pl.BlockSpec(vols.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((2,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((2,), mask.dtype),
+        interpret=True,
+    )(ci, cj, mask, vols)

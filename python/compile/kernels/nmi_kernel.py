@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: NMI contingency reduction.
+
+Computes the three information terms of a padded ``(C, C)`` contingency
+table between detected communities and ground truth:
+
+    out = [ I(U;V), H(U), H(V) ]   (nats)
+
+The Rust scorer builds the table (top-C classes per side + tail bucket,
+see ``rust/src/metrics/nmi.rs``) and normalises the result
+(NMI_max or NMI_avg).
+
+TPU mapping: C = 256 → the whole table is one 256 KiB VMEM block; row and
+column marginals plus the log-ratio sum are VPU reductions over a single
+tile, so no grid is needed. For larger C this would tile rows
+``(C_TILE, C)`` with marginal accumulation; at C = 256 single-block is
+both simplest and fastest.
+
+interpret=True as everywhere (see metrics_kernel.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xlogx(p):
+    return jnp.where(p > 0.0, p * jnp.log(jnp.where(p > 0.0, p, 1.0)), 0.0)
+
+
+def _nmi_kernel(cont_ref, out_ref):
+    cont = cont_ref[...]
+    total = jnp.sum(cont)
+    n = jnp.where(total > 0.0, total, 1.0)
+    pij = cont / n
+    pi = jnp.sum(pij, axis=1)
+    pj = jnp.sum(pij, axis=0)
+    outer = pi[:, None] * pj[None, :]
+    ratio = jnp.where(
+        (pij > 0.0) & (outer > 0.0),
+        pij / jnp.where(outer > 0.0, outer, 1.0),
+        1.0,
+    )
+    mi = jnp.sum(jnp.where(pij > 0.0, pij * jnp.log(ratio), 0.0))
+    h_u = -jnp.sum(_xlogx(pi))
+    h_v = -jnp.sum(_xlogx(pj))
+    out_ref[...] = jnp.stack([mi, h_u, h_v])
+
+
+@jax.jit
+def nmi_terms(cont):
+    """Kernel-backed equivalent of :func:`ref.nmi_terms_ref`."""
+    return pl.pallas_call(
+        _nmi_kernel,
+        out_shape=jax.ShapeDtypeStruct((3,), cont.dtype),
+        interpret=True,
+    )(cont)

@@ -1,0 +1,111 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the *correctness ground truth* for the L1 kernels: every Pallas
+kernel in this package must match its `*_ref` twin to float32 tolerance.
+pytest (``python/tests/``) enforces this, including hypothesis sweeps over
+shapes and value ranges.
+
+The three computations are the quality-metric engine of the paper
+(Hollocou et al. 2017):
+
+* ``sweep_metrics_ref`` — §2.5 sketch-only selection scores: for each of
+  the ``A`` concurrent ``v_max`` sweeps, compute entropy ``H(v)``, average
+  density ``D(c, v)``, a volume-balance score, and the number of non-empty
+  communities, from the padded ``(A, K)`` community volume/size tables.
+* ``modularity_partials_ref`` — the two streaming partial sums needed to
+  evaluate modularity over an edge block: the intra-community edge count
+  and the squared-volume sum (Rust combines blocks and normalises).
+* ``nmi_terms_ref`` — mutual information and marginal entropies of a
+  detected-vs-ground-truth contingency matrix (Rust normalises).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Fixed AOT shapes — must stay in sync with DESIGN.md §7 and
+# rust/src/runtime/artifacts.rs.
+NUM_SWEEPS = 8          # A — concurrent v_max values in the sweep
+VOLUME_BUCKETS = 4096   # K — padded community buckets per sweep
+EDGE_BLOCK = 4096       # B — edges per modularity block
+CONTINGENCY = 256       # C — padded classes per side of the NMI table
+
+
+def _safe_xlogx(p):
+    """x * log(x) with the 0·log(0) = 0 convention, elementwise."""
+    return jnp.where(p > 0.0, p * jnp.log(jnp.where(p > 0.0, p, 1.0)), 0.0)
+
+
+def sweep_metrics_ref(vols, sizes, w):
+    """Score each sweep row from its community-volume sketch.
+
+    Args:
+      vols:  f32[A, K] community volumes (padded with zeros).
+      sizes: f32[A, K] community sizes in nodes (padded with zeros).
+      w:     f32[A]    total graph weight (2m) per sweep row.
+
+    Returns:
+      f32[A, 4] with columns:
+        0: entropy      H(v)   = -sum_k (v_k/w) log(v_k/w)   over v_k > 0
+        1: avg density  D(c,v) = (1/|P|) sum_{k: |C_k|>1} v_k/(|C_k|(|C_k|-1))
+        2: balance      sum_k (v_k/w)^2  (inverse-Simpson concentration)
+        3: ncomms       |P| = #{k : |C_k| > 0}
+    """
+    w_col = w[:, None]
+    p = jnp.where(w_col > 0.0, vols / jnp.where(w_col > 0.0, w_col, 1.0), 0.0)
+    entropy = -jnp.sum(_safe_xlogx(p), axis=1)
+
+    nonempty = (sizes > 0.0).astype(vols.dtype)
+    ncomms = jnp.sum(nonempty, axis=1)
+    denom = sizes * (sizes - 1.0)
+    dens_term = jnp.where(sizes > 1.0, vols / jnp.where(denom > 0.0, denom, 1.0), 0.0)
+    density = jnp.where(
+        ncomms > 0.0,
+        jnp.sum(dens_term, axis=1) / jnp.where(ncomms > 0.0, ncomms, 1.0),
+        0.0,
+    )
+
+    balance = jnp.sum(p * p, axis=1)
+    return jnp.stack([entropy, density, balance, ncomms], axis=1)
+
+
+def modularity_partials_ref(ci, cj, mask, vols):
+    """Partial sums for block-streamed modularity evaluation.
+
+    Args:
+      ci, cj: i32[B] community labels of the two endpoints of each edge.
+      mask:   f32[B] 1.0 for valid edges, 0.0 for padding.
+      vols:   f32[K] community volumes of the *current* partition.
+
+    Returns:
+      f32[2]: [ sum_b mask_b * 1{ci_b == cj_b},  sum_k vols_k^2 ].
+
+    Rust combines blocks: Q = intra_total/m - volsq/(2m)^2.
+    """
+    intra = jnp.sum(mask * (ci == cj).astype(mask.dtype))
+    volsq = jnp.sum(vols * vols)
+    return jnp.stack([intra, volsq])
+
+
+def nmi_terms_ref(cont):
+    """Mutual information + marginal entropies of a contingency table.
+
+    Args:
+      cont: f32[C, C] joint counts n_{uv} (detected u, truth v), padded
+            with zeros.
+
+    Returns:
+      f32[3]: [ I(U;V), H(U), H(V) ] in nats. NMI_max = I / max(H_U, H_V),
+      NMI_avg = 2I / (H_U + H_V); normalisation is done by the caller.
+    """
+    total = jnp.sum(cont)
+    n = jnp.where(total > 0.0, total, 1.0)
+    pij = cont / n
+    pi = jnp.sum(pij, axis=1)
+    pj = jnp.sum(pij, axis=0)
+    outer = pi[:, None] * pj[None, :]
+    ratio = jnp.where((pij > 0.0) & (outer > 0.0), pij / jnp.where(outer > 0.0, outer, 1.0), 1.0)
+    mi = jnp.sum(jnp.where(pij > 0.0, pij * jnp.log(ratio), 0.0))
+    h_u = -jnp.sum(_safe_xlogx(pi))
+    h_v = -jnp.sum(_safe_xlogx(pj))
+    return jnp.stack([mi, h_u, h_v])

@@ -1,0 +1,78 @@
+"""L2 — the JAX compute graph over the L1 Pallas kernels.
+
+Three jittable entry points, each AOT-lowered to an HLO-text artifact by
+:mod:`compile.aot` and executed from the Rust runtime
+(``rust/src/runtime/``). Shapes are fixed at lowering time
+(DESIGN.md §7); Rust pads its inputs.
+
+Python never runs at serving/streaming time — these functions exist only
+to be traced, lowered and serialised.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import metrics_kernel, modularity_kernel, nmi_kernel
+from .kernels.ref import CONTINGENCY, EDGE_BLOCK, NUM_SWEEPS, VOLUME_BUCKETS
+
+
+def sweep_metrics_model(vols, sizes, w):
+    """Score the A sweep sketches and rank them.
+
+    Returns f32[A, 6]: the four kernel metrics plus two derived selection
+    scores used by ``coordinator/selection.rs``:
+
+      col 4: density_score = D · log(1 + ncomms)   (the §2.5 selector —
+             prefers dense partitions but penalises the all-singletons
+             degenerate answer which has |P| = n)
+      col 5: balance_score = H - balance           (entropy-driven
+             alternative selector)
+    """
+    m = metrics_kernel.sweep_metrics(vols, sizes, w)
+    h, d, bal, ncomms = m[:, 0], m[:, 1], m[:, 2], m[:, 3]
+    density_score = d * jnp.log1p(ncomms)
+    balance_score = h - bal
+    return jnp.concatenate(
+        [m, density_score[:, None], balance_score[:, None]], axis=1
+    )
+
+
+def modularity_model(ci, cj, mask, vols):
+    """Block modularity partials; see modularity_kernel for the contract."""
+    return modularity_kernel.modularity_partials(ci, cj, mask, vols)
+
+
+def nmi_model(cont):
+    """NMI information terms; see nmi_kernel for the contract."""
+    return nmi_kernel.nmi_terms(cont)
+
+
+def example_args():
+    """ShapeDtypeStructs for AOT lowering, keyed by artifact name."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    return {
+        "sweep_metrics": (
+            sweep_metrics_model,
+            (
+                jax.ShapeDtypeStruct((NUM_SWEEPS, VOLUME_BUCKETS), f32),
+                jax.ShapeDtypeStruct((NUM_SWEEPS, VOLUME_BUCKETS), f32),
+                jax.ShapeDtypeStruct((NUM_SWEEPS,), f32),
+            ),
+        ),
+        "modularity": (
+            modularity_model,
+            (
+                jax.ShapeDtypeStruct((EDGE_BLOCK,), i32),
+                jax.ShapeDtypeStruct((EDGE_BLOCK,), i32),
+                jax.ShapeDtypeStruct((EDGE_BLOCK,), f32),
+                jax.ShapeDtypeStruct((VOLUME_BUCKETS,), f32),
+            ),
+        ),
+        "nmi": (
+            nmi_model,
+            (jax.ShapeDtypeStruct((CONTINGENCY, CONTINGENCY), f32),),
+        ),
+    }

@@ -1,0 +1,70 @@
+"""AOT pipeline tests: HLO-text artifacts are produced and well-formed.
+
+These validate the Python half of the interchange contract; the Rust
+integration test (`rust/tests/runtime_integration.rs`) validates the
+other half by loading and executing the same artifacts via PJRT.
+"""
+
+from __future__ import annotations
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    return aot.build_artifacts(str(out)), str(out)
+
+
+def test_all_artifacts_written(artifacts):
+    written, out = artifacts
+    assert set(written) == set(model.example_args())
+    for path in written.values():
+        assert os.path.getsize(path) > 100
+
+
+def test_hlo_text_is_parseable_hlo(artifacts):
+    """Artifacts must be HLO text modules with an ENTRY computation and
+    no custom-calls (a Mosaic custom-call would be unloadable on CPU
+    PJRT — the interpret=True contract)."""
+    written, _ = artifacts
+    for name, path in written.items():
+        text = open(path).read()
+        assert text.lstrip().startswith("HloModule"), name
+        assert "ENTRY" in text, name
+        assert "custom-call" not in text, f"{name} contains a custom-call"
+
+
+def test_entry_shapes_in_hlo(artifacts):
+    """The ENTRY signature must carry the DESIGN.md §7 shapes."""
+    written, _ = artifacts
+    sweep = open(written["sweep_metrics"]).read()
+    assert "f32[8,4096]" in sweep
+    assert "f32[8,6]" in sweep
+    mod = open(written["modularity"]).read()
+    assert "s32[4096]" in mod
+    assert "f32[2]" in mod
+    nmi = open(written["nmi"]).read()
+    assert "f32[256,256]" in nmi
+    assert "f32[3]" in nmi
+
+
+def test_manifest_lists_every_artifact(artifacts):
+    written, out = artifacts
+    manifest = open(os.path.join(out, "manifest.txt")).read()
+    for name in written:
+        assert name in manifest
+
+
+def test_outputs_are_tuples(artifacts):
+    """Lowered with return_tuple=True: ENTRY root must be a tuple —
+    the Rust side unwraps with to_tuple1()."""
+    written, _ = artifacts
+    for name, path in written.items():
+        text = open(path).read()
+        # The entry computation's ROOT should produce a tuple type like (f32[8,6])
+        assert "ROOT" in text, name

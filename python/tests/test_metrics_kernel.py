@@ -1,0 +1,143 @@
+"""Kernel-vs-oracle tests for the sweep-metrics Pallas kernel.
+
+The CORE correctness signal for L1: the kernel must agree with the
+pure-jnp oracle on every input the Rust runtime can feed it, including
+the degenerate sketches the coordinator actually produces (all
+singletons, one giant community, empty rows, zero weight).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.metrics_kernel import K_TILE, sweep_metrics
+
+A, K = ref.NUM_SWEEPS, ref.VOLUME_BUCKETS
+
+
+def _check(vols, sizes, w, rtol=2e-5, atol=1e-5):
+    got = np.asarray(sweep_metrics(jnp.array(vols), jnp.array(sizes), jnp.array(w)))
+    exp = np.asarray(ref.sweep_metrics_ref(jnp.array(vols), jnp.array(sizes), jnp.array(w)))
+    np.testing.assert_allclose(got, exp, rtol=rtol, atol=atol)
+    return got
+
+
+def _sketch(rng, max_size=6, max_mult=5):
+    sizes = rng.integers(0, max_size, (A, K)).astype(np.float32)
+    vols = (sizes * rng.integers(1, max_mult, (A, K))).astype(np.float32)
+    w = np.maximum(vols.sum(axis=1), 1.0).astype(np.float32)
+    return vols, sizes, w
+
+
+def test_shapes_and_dtype():
+    vols, sizes, w = _sketch(np.random.default_rng(1))
+    out = _check(vols, sizes, w)
+    assert out.shape == (A, 4)
+    assert out.dtype == np.float32
+
+
+def test_random_sketches_match_oracle():
+    for seed in range(5):
+        _check(*_sketch(np.random.default_rng(seed)))
+
+
+def test_all_zero_sketch():
+    z = np.zeros((A, K), np.float32)
+    out = _check(z, z, np.zeros(A, np.float32))
+    np.testing.assert_array_equal(out, np.zeros((A, 4), np.float32))
+
+
+def test_single_giant_community():
+    """All mass in bucket 0: H = 0, ncomms = 1."""
+    vols = np.zeros((A, K), np.float32)
+    sizes = np.zeros((A, K), np.float32)
+    vols[:, 0] = 1000.0
+    sizes[:, 0] = 100.0
+    w = np.full(A, 1000.0, np.float32)
+    out = _check(vols, sizes, w)
+    np.testing.assert_allclose(out[:, 0], 0.0, atol=1e-6)  # entropy
+    np.testing.assert_allclose(out[:, 3], 1.0)             # ncomms
+    np.testing.assert_allclose(out[:, 2], 1.0, rtol=1e-6)  # balance = 1
+
+
+def test_all_singletons():
+    """Every node its own community: density contributions are all zero."""
+    vols = np.ones((A, K), np.float32)
+    sizes = np.ones((A, K), np.float32)
+    w = vols.sum(axis=1).astype(np.float32)
+    out = _check(vols, sizes, w)
+    np.testing.assert_allclose(out[:, 1], 0.0, atol=1e-7)   # density
+    np.testing.assert_allclose(out[:, 3], float(K))          # ncomms
+    # uniform distribution: H = log K
+    np.testing.assert_allclose(out[:, 0], np.log(K), rtol=1e-5)
+
+
+def test_uniform_k_communities_entropy():
+    """k equal communities → H = log k, balance = 1/k."""
+    for k in (2, 16, 256):
+        vols = np.zeros((A, K), np.float32)
+        sizes = np.zeros((A, K), np.float32)
+        vols[:, :k] = 10.0
+        sizes[:, :k] = 4.0
+        w = np.full(A, 10.0 * k, np.float32)
+        out = _check(vols, sizes, w)
+        np.testing.assert_allclose(out[:, 0], np.log(k), rtol=1e-5)
+        np.testing.assert_allclose(out[:, 2], 1.0 / k, rtol=1e-5)
+
+
+def test_density_two_node_communities():
+    """|C| = 2, v = 2 → per-community density 2/(2·1) = 1, so D = 1."""
+    vols = np.zeros((A, K), np.float32)
+    sizes = np.zeros((A, K), np.float32)
+    vols[:, :8] = 2.0
+    sizes[:, :8] = 2.0
+    w = np.full(A, 16.0, np.float32)
+    out = _check(vols, sizes, w)
+    np.testing.assert_allclose(out[:, 1], 1.0, rtol=1e-6)
+
+
+def test_rows_are_independent():
+    """Permuting sweep rows permutes the output rows identically."""
+    vols, sizes, w = _sketch(np.random.default_rng(7))
+    base = np.asarray(sweep_metrics(jnp.array(vols), jnp.array(sizes), jnp.array(w)))
+    perm = np.random.default_rng(8).permutation(A)
+    permed = np.asarray(
+        sweep_metrics(jnp.array(vols[perm]), jnp.array(sizes[perm]), jnp.array(w[perm]))
+    )
+    np.testing.assert_allclose(permed, base[perm], rtol=1e-6)
+
+
+def test_k_tile_divides_buckets():
+    assert K % K_TILE == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.5, 1e4),
+    fill=st.floats(0.01, 1.0),
+)
+def test_hypothesis_value_sweep(seed, scale, fill):
+    """Property: oracle agreement holds across magnitudes and sparsity."""
+    rng = np.random.default_rng(seed)
+    mask = (rng.random((A, K)) < fill).astype(np.float32)
+    sizes = mask * rng.integers(1, 8, (A, K)).astype(np.float32)
+    vols = sizes * rng.random((A, K)).astype(np.float32) * scale
+    w = np.maximum(vols.sum(axis=1), 1e-3).astype(np.float32)
+    _check(vols, sizes, w, rtol=5e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_scale_invariance_of_entropy(seed):
+    """H and balance depend only on v/w — scaling both is a no-op."""
+    rng = np.random.default_rng(seed)
+    vols, sizes, w = _sketch(rng)
+    a = np.asarray(sweep_metrics(jnp.array(vols), jnp.array(sizes), jnp.array(w)))
+    b = np.asarray(sweep_metrics(jnp.array(vols * 4), jnp.array(sizes), jnp.array(w * 4)))
+    np.testing.assert_allclose(a[:, 0], b[:, 0], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(a[:, 2], b[:, 2], rtol=1e-4, atol=1e-6)

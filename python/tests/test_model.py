@@ -1,0 +1,78 @@
+"""L2 model tests: wrapper shapes, selection-score semantics."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+A, K = ref.NUM_SWEEPS, ref.VOLUME_BUCKETS
+
+
+def _sketch_with(k_communities, comm_size, vol_per):
+    """A sweep row with `k_communities` equal communities."""
+    vols = np.zeros(K, np.float32)
+    sizes = np.zeros(K, np.float32)
+    vols[:k_communities] = vol_per
+    sizes[:k_communities] = comm_size
+    return vols, sizes, vols.sum()
+
+
+def test_sweep_model_output_shape():
+    vols = np.random.default_rng(0).random((A, K)).astype(np.float32)
+    sizes = np.ones((A, K), np.float32)
+    w = vols.sum(axis=1).astype(np.float32)
+    out = np.asarray(model.sweep_metrics_model(jnp.array(vols), jnp.array(sizes), jnp.array(w)))
+    assert out.shape == (A, 6)
+
+
+def test_density_score_prefers_good_partition_over_singletons():
+    """The selector must rank a dense clustered sketch above the
+    all-singletons degenerate sketch (the failure mode of naive density).
+    """
+    vols = np.zeros((A, K), np.float32)
+    sizes = np.zeros((A, K), np.float32)
+    w = np.zeros(A, np.float32)
+    # row 0: 32 dense communities of 8 nodes, vol 40 each
+    v, s, tot = _sketch_with(32, 8.0, 40.0)
+    vols[0], sizes[0], w[0] = v, s, tot
+    # row 1: all singletons (v = 1 each)
+    vols[1] = 1.0
+    sizes[1] = 1.0
+    w[1] = float(K)
+    out = np.asarray(
+        model.sweep_metrics_model(jnp.array(vols), jnp.array(sizes), jnp.array(w))
+    )
+    density_score = out[:, 4]
+    assert density_score[0] > density_score[1]
+
+
+def test_model_matches_kernel_metrics_columns():
+    rng = np.random.default_rng(4)
+    sizes = rng.integers(0, 6, (A, K)).astype(np.float32)
+    vols = sizes * 3.0
+    w = np.maximum(vols.sum(axis=1), 1.0).astype(np.float32)
+    out = np.asarray(model.sweep_metrics_model(jnp.array(vols), jnp.array(sizes), jnp.array(w)))
+    exp = np.asarray(ref.sweep_metrics_ref(jnp.array(vols), jnp.array(sizes), jnp.array(w)))
+    np.testing.assert_allclose(out[:, :4], exp, rtol=2e-4, atol=1e-5)
+    # derived columns
+    np.testing.assert_allclose(out[:, 4], exp[:, 1] * np.log1p(exp[:, 3]), rtol=1e-4)
+    np.testing.assert_allclose(out[:, 5], exp[:, 0] - exp[:, 2], rtol=1e-4, atol=1e-5)
+
+
+def test_example_args_cover_all_artifacts():
+    names = set(model.example_args().keys())
+    assert names == {"sweep_metrics", "modularity", "nmi"}
+
+
+def test_example_args_shapes_match_design():
+    ea = model.example_args()
+    sm_args = ea["sweep_metrics"][1]
+    assert sm_args[0].shape == (A, K)
+    mod_args = ea["modularity"][1]
+    assert mod_args[0].shape == (ref.EDGE_BLOCK,)
+    assert mod_args[3].shape == (K,)
+    nmi_args = ea["nmi"][1]
+    assert nmi_args[0].shape == (ref.CONTINGENCY, ref.CONTINGENCY)

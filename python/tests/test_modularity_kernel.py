@@ -1,0 +1,135 @@
+"""Kernel-vs-oracle tests for the modularity-partials Pallas kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.modularity_kernel import B_TILE, modularity_partials
+
+B, K = ref.EDGE_BLOCK, ref.VOLUME_BUCKETS
+
+
+def _check(ci, cj, mask, vols, rtol=2e-5):
+    got = np.asarray(
+        modularity_partials(jnp.array(ci), jnp.array(cj), jnp.array(mask), jnp.array(vols))
+    )
+    exp = np.asarray(
+        ref.modularity_partials_ref(jnp.array(ci), jnp.array(cj), jnp.array(mask), jnp.array(vols))
+    )
+    np.testing.assert_allclose(got, exp, rtol=rtol, atol=1e-4)
+    return got
+
+
+def _block(rng, ncomm=64, density=0.9):
+    ci = rng.integers(0, ncomm, B).astype(np.int32)
+    cj = rng.integers(0, ncomm, B).astype(np.int32)
+    mask = (rng.random(B) < density).astype(np.float32)
+    vols = (rng.random(K) * 50).astype(np.float32)
+    return ci, cj, mask, vols
+
+
+def test_random_blocks():
+    for seed in range(5):
+        _check(*_block(np.random.default_rng(seed)))
+
+
+def test_all_intra():
+    """ci == cj everywhere → intra equals the mask sum."""
+    rng = np.random.default_rng(3)
+    ci = rng.integers(0, 10, B).astype(np.int32)
+    mask = (rng.random(B) < 0.8).astype(np.float32)
+    vols = np.zeros(K, np.float32)
+    out = _check(ci, ci.copy(), mask, vols)
+    np.testing.assert_allclose(out[0], mask.sum(), rtol=1e-6)
+    assert out[1] == 0.0
+
+
+def test_all_inter():
+    """Disjoint label ranges → zero intra edges."""
+    ci = np.zeros(B, np.int32)
+    cj = np.ones(B, np.int32)
+    mask = np.ones(B, np.float32)
+    vols = np.ones(K, np.float32)
+    out = _check(ci, cj, mask, vols)
+    assert out[0] == 0.0
+    np.testing.assert_allclose(out[1], float(K), rtol=1e-6)
+
+
+def test_mask_zero_ignores_everything():
+    rng = np.random.default_rng(5)
+    ci, cj, _, vols = _block(rng)
+    out = _check(ci, cj, np.zeros(B, np.float32), vols)
+    assert out[0] == 0.0
+
+
+def test_volsq_known_value():
+    vols = np.zeros(K, np.float32)
+    vols[:4] = np.array([1.0, 2.0, 3.0, 4.0])
+    out = _check(
+        np.zeros(B, np.int32), np.zeros(B, np.int32), np.zeros(B, np.float32), vols
+    )
+    np.testing.assert_allclose(out[1], 30.0, rtol=1e-6)
+
+
+def test_b_tile_divides_block():
+    assert B % B_TILE == 0
+
+
+def test_modularity_composition():
+    """End-to-end: combining partials reproduces direct modularity.
+
+    Q = intra/m - volsq/(2m)^2 for a small planted two-community graph,
+    cross-checked against a direct O(n^2) computation.
+    """
+    rng = np.random.default_rng(11)
+    n, ncomm = 64, 2
+    labels = np.arange(n) % ncomm
+    # planted partition: p_in = 0.5, p_out = 0.05
+    edges = []
+    for i in range(n):
+        for j in range(i + 1, n):
+            p = 0.5 if labels[i] == labels[j] else 0.05
+            if rng.random() < p:
+                edges.append((i, j))
+    m = len(edges)
+    deg = np.zeros(n)
+    for i, j in edges:
+        deg[i] += 1
+        deg[j] += 1
+    w = 2.0 * m
+    # direct modularity
+    q_direct = 0.0
+    adj = set(edges)
+    for i in range(n):
+        for j in range(n):
+            wij = 1.0 if ((i, j) in adj or (j, i) in adj) else 0.0
+            if labels[i] == labels[j]:
+                q_direct += wij - deg[i] * deg[j] / w
+    q_direct /= w
+
+    # kernel path
+    ci = np.full(B, -1, np.int32)
+    cj = np.full(B, -2, np.int32)
+    mask = np.zeros(B, np.float32)
+    for b, (i, j) in enumerate(edges):
+        ci[b], cj[b], mask[b] = labels[i], labels[j], 1.0
+    vols = np.zeros(K, np.float32)
+    for c in range(ncomm):
+        vols[c] = deg[labels == c].sum()
+    out = _check(ci, cj, mask, vols)
+    q_kernel = out[0] / m - out[1] / (w * w)
+    np.testing.assert_allclose(q_kernel, q_direct, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    ncomm=st.integers(1, 4096),
+    density=st.floats(0.0, 1.0),
+)
+def test_hypothesis_blocks(seed, ncomm, density):
+    rng = np.random.default_rng(seed)
+    _check(*_block(rng, ncomm=ncomm, density=density))

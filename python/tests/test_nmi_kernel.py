@@ -1,0 +1,80 @@
+"""Kernel-vs-oracle tests for the NMI contingency Pallas kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.nmi_kernel import nmi_terms
+
+C = ref.CONTINGENCY
+
+
+def _check(cont, rtol=2e-4):
+    got = np.asarray(nmi_terms(jnp.array(cont)))
+    exp = np.asarray(ref.nmi_terms_ref(jnp.array(cont)))
+    np.testing.assert_allclose(got, exp, rtol=rtol, atol=1e-5)
+    return got
+
+
+def test_random_tables():
+    for seed in range(5):
+        cont = np.random.default_rng(seed).integers(0, 30, (C, C)).astype(np.float32)
+        _check(cont)
+
+
+def test_perfect_match_diagonal():
+    """Identity contingency → I = H_U = H_V (NMI = 1)."""
+    cont = np.zeros((C, C), np.float32)
+    k = 16
+    for i in range(k):
+        cont[i, i] = 10.0
+    out = _check(cont)
+    mi, hu, hv = out
+    np.testing.assert_allclose(mi, hu, rtol=1e-5)
+    np.testing.assert_allclose(mi, hv, rtol=1e-5)
+    np.testing.assert_allclose(mi, np.log(k), rtol=1e-5)
+
+
+def test_independent_partitions():
+    """Rank-one table (outer product of marginals) → I = 0."""
+    rng = np.random.default_rng(2)
+    a = rng.random(C).astype(np.float32)
+    b = rng.random(C).astype(np.float32)
+    cont = np.outer(a, b).astype(np.float32) * 100
+    out = _check(cont)
+    np.testing.assert_allclose(out[0], 0.0, atol=1e-3)
+
+
+def test_empty_table():
+    out = _check(np.zeros((C, C), np.float32))
+    np.testing.assert_array_equal(out, np.zeros(3, np.float32))
+
+
+def test_symmetry():
+    """I(U;V) = I(V;U); H swaps."""
+    cont = np.random.default_rng(9).integers(0, 10, (C, C)).astype(np.float32)
+    a = _check(cont)
+    b = _check(cont.T.copy())
+    np.testing.assert_allclose(a[0], b[0], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(a[1], b[2], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(a[2], b[1], rtol=1e-4, atol=1e-5)
+
+
+def test_mi_bounded_by_entropies():
+    for seed in range(3):
+        cont = np.random.default_rng(seed).integers(0, 50, (C, C)).astype(np.float32)
+        mi, hu, hv = _check(cont)
+        assert mi <= min(hu, hv) + 1e-3
+        assert mi >= -1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), sparsity=st.floats(0.001, 1.0))
+def test_hypothesis_sparse_tables(seed, sparsity):
+    rng = np.random.default_rng(seed)
+    cont = rng.integers(0, 100, (C, C)).astype(np.float32)
+    cont *= (rng.random((C, C)) < sparsity).astype(np.float32)
+    _check(cont)

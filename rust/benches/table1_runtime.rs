@@ -1,0 +1,37 @@
+//! Bench T1 — regenerates the paper's Table 1 (execution times) plus
+//! the T1b `cat` comparison. `cargo bench --bench table1_runtime`
+//! (env `SCALE=0.2` to change workload scale).
+
+use streamcom::bench::report::fmt_secs;
+use streamcom::bench::table1::{run, speedup_vs_fastest_baseline, Table1Config};
+
+fn main() {
+    let scale: f64 = std::env::var("SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(streamcom::bench::workloads::DEFAULT_SCALE);
+    let cfg = Table1Config { scale, ..Default::default() };
+    eprintln!("# T1: generating workloads at scale {scale} (cached under target/workloads)");
+    let (table, rows) = run(&cfg);
+    println!("{}", table.render());
+
+    println!("paper-shape checks:");
+    for r in &rows {
+        let ratio = r.str_secs / r.readonly_secs.max(1e-12);
+        let speedup = speedup_vs_fastest_baseline(r)
+            .map(|s| format!("{s:.1}x"))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "  {:<16} STR {:>8}  read {:>8}  STR/read {:>5.1}x  speedup-vs-fastest-baseline {:>8}",
+            r.name,
+            fmt_secs(r.str_secs),
+            fmt_secs(r.readonly_secs),
+            ratio,
+            speedup
+        );
+    }
+    println!(
+        "\npaper claim: STR >10x faster than SCD/Louvain on every graph; \
+         STR within ~2x of the raw read on the largest graph"
+    );
+}

@@ -1,0 +1,32 @@
+//! Bench T2 — regenerates the paper's Table 2 (average F1 + NMI).
+//! `cargo bench --bench table2_quality` (env `SCALE=` to change scale).
+
+use streamcom::bench::table2::{run, Table2Config};
+
+fn main() {
+    let scale: f64 = std::env::var("SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(streamcom::bench::workloads::DEFAULT_SCALE);
+    let cfg = Table2Config { scale, ..Default::default() };
+    eprintln!("# T2: generating workloads at scale {scale} (cached under target/workloads)");
+    let (table, rows) = run(&cfg);
+    println!("{}", table.render());
+
+    println!("paper-shape checks (STR vs Louvain on the large rows):");
+    for r in rows.iter().filter(|r| {
+        matches!(r.name.as_str(), "youtube-s" | "livejournal-s" | "orkut-s" | "friendster-s")
+    }) {
+        if let Some((l_f1, _)) = r.baseline_scores[1] {
+            let mark = if r.str_scores.0 > l_f1 { "STR wins" } else { "Louvain wins" };
+            println!(
+                "  {:<16} STR F1 {:.2} vs Louvain {:.2}  → {mark}",
+                r.name, r.str_scores.0, l_f1
+            );
+        }
+    }
+    println!(
+        "\npaper claim: Louvain/OSLOM lead on Amazon/DBLP; STR equal or \
+         better on the large graphs (see EXPERIMENTS.md for the SCD caveat)"
+    );
+}

@@ -1,0 +1,68 @@
+//! Bench S1 — the §2.5 multi-parameter experiment: sweep `v_max` over a
+//! geometric ladder on each workload, score each sweep with the
+//! sketch-only metrics, and compare the sketch-selected winner against
+//! the F1-optimal choice (which a streaming system cannot know).
+//!
+//! Uses the PJRT metric engine when artifacts are available, else the
+//! native engine (printed in the header).
+
+use streamcom::bench::report::Table;
+use streamcom::bench::workloads;
+use streamcom::coordinator::selection::{
+    select, MetricEngine, NativeEngine, SelectionRule,
+};
+use streamcom::coordinator::sweep::MultiSweep;
+use streamcom::graph::generators::presets::SNAP_PRESETS;
+use streamcom::metrics::f1::average_f1_labels;
+use streamcom::runtime::PjrtEngine;
+
+fn main() {
+    let scale: f64 = std::env::var("SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.05);
+
+    let mut pjrt = PjrtEngine::load_default().ok();
+    let engine_name = if pjrt.is_some() { "pjrt" } else { "native" };
+    println!("# S1: v_max sweep at scale {scale}, engine = {engine_name}\n");
+
+    let mut table = Table::new(
+        "S1 — sketch-only selection vs F1-optimal v_max",
+        &["dataset", "ladder", "selected", "F1(sel)", "best", "F1(best)", "regret"],
+    );
+    for preset in &SNAP_PRESETS[..4] {
+        let g = workloads::load_preset(preset, scale, true);
+        let truth = g.truth.to_labels(g.n());
+        let avg_deg = (2 * g.m() / g.n()).max(4) as u64;
+        let ladder = MultiSweep::geometric_ladder(avg_deg, 8);
+        let mut sweep = MultiSweep::new(g.n(), ladder.clone());
+        sweep.process_chunk(&g.edges.edges);
+
+        let engine: &mut dyn MetricEngine = match &mut pjrt {
+            Some(e) => e,
+            None => &mut NativeEngine,
+        };
+        let (winner, _) = select(&sweep, engine, SelectionRule::DensityScore);
+
+        let f1s: Vec<f64> = (0..ladder.len())
+            .map(|a| average_f1_labels(&sweep.labels(a), &truth))
+            .collect();
+        let best = f1s
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        table.push_row(vec![
+            g.name.clone(),
+            format!("{}..{}", ladder[0], ladder[ladder.len() - 1]),
+            ladder[winner].to_string(),
+            format!("{:.3}", f1s[winner]),
+            ladder[best].to_string(),
+            format!("{:.3}", f1s[best]),
+            format!("{:.1}%", 100.0 * (f1s[best] - f1s[winner]) / f1s[best].max(1e-9)),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("regret = how much F1 the sketch-only §2.5 selection loses vs oracle");
+}

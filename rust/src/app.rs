@@ -1,0 +1,310 @@
+//! CLI application: subcommand dispatch for the `streamcom` binary.
+//!
+//! ```text
+//! streamcom generate --preset amazon-s --scale 0.1 --out graph.bin
+//! streamcom run --input graph.bin --vmax 64 [--parallel 4] [--out labels.txt]
+//! streamcom run --preset amazon-s --scale 0.1 --vmax 64
+//! streamcom sweep --preset dblp-s --scale 0.1 [--engine pjrt|native]
+//! streamcom bench table1|table2|memory [--scale 0.1]
+//! streamcom serve            # dynamic events on stdin, results on stdout
+//! ```
+
+use streamcom::bench::{memory, report, table1, table2, workloads};
+use streamcom::coordinator::algorithm::{StrConfig, StreamingClusterer};
+use streamcom::coordinator::dynamic::{DynamicClusterer, Event};
+use streamcom::coordinator::parallel::{run_parallel, ParallelConfig};
+use streamcom::coordinator::selection::{select, NativeEngine, SelectionRule};
+use streamcom::coordinator::sweep::MultiSweep;
+use streamcom::graph::edge::Edge;
+use streamcom::graph::generators::presets;
+use streamcom::graph::generators::{lfr, GeneratedGraph};
+use streamcom::graph::io;
+use streamcom::metrics;
+use streamcom::stream::meter::Meter;
+use streamcom::util::cli::Args;
+
+const USAGE: &str = "\
+streamcom — streaming graph clustering (Hollocou et al. 2017 reproduction)
+
+USAGE: streamcom <command> [options]
+
+COMMANDS:
+  generate   produce a SNAP-shaped workload (edge file + ground truth)
+               --preset <name>      amazon-s dblp-s youtube-s livejournal-s orkut-s friendster-s
+               --scale <f>          size multiplier [default 0.1]
+               --seed <u64>         workload seed
+               --out <path.bin>     binary edge output (also writes .cmty, .txt)
+  run        one-pass streaming clustering
+               --input <path>       .bin or .txt edge file (else --preset/--scale)
+               --vmax <u64>         threshold parameter [default 64]
+               --parallel <k>       sharded workers (0 = sequential)
+               --refine             two-pass coarse-graph refinement (extension)
+               --out <path>         write node<TAB>community labels
+               --score              score against ground truth if available
+  sweep      §2.5 multi-parameter run + sketch-only selection
+               --preset/--scale/--input as above
+               --base <u64>         ladder base [default 4]
+               --engine <native|pjrt>  metric engine [default native]
+  bench      regenerate the paper's tables
+               table1|table2|memory  --scale <f>
+  serve      dynamic stream service: reads events from stdin
+               ('+ u v' insert, '- u v' delete, '?' report), writes reports
+  help       this text
+";
+
+pub fn main_with_args(argv: Vec<String>) -> i32 {
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let cmd = args.command.clone().unwrap_or_else(|| "help".into());
+    let result = match cmd.as_str() {
+        "generate" => cmd_generate(&args),
+        "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
+        "bench" => cmd_bench(&args),
+        "serve" => cmd_serve(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}; try `streamcom help`")),
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn load_workload(args: &Args) -> Result<GeneratedGraph, String> {
+    if let Some(input) = args.get("input") {
+        let edges = if input.ends_with(".bin") {
+            io::read_binary_edges(input).map_err(|e| e.to_string())?
+        } else {
+            io::read_text_edges(input).map_err(|e| e.to_string())?.0
+        };
+        // look for ground truth next to the edges
+        let gt_path = input
+            .rsplit_once('.')
+            .map(|(stem, _)| format!("{stem}.cmty"))
+            .unwrap_or_else(|| format!("{input}.cmty"));
+        let truth = io::read_ground_truth(&gt_path).unwrap_or_default();
+        return Ok(GeneratedGraph { name: input.to_string(), edges, truth });
+    }
+    let preset_name = args.get_or("preset", "amazon-s");
+    let preset = presets::find(preset_name)
+        .ok_or_else(|| format!("unknown preset {preset_name:?}"))?;
+    let scale = args.f64_or("scale", 0.1).map_err(|e| e.to_string())?;
+    let seed = args.u64_or("seed", workloads::WORKLOAD_SEED).map_err(|e| e.to_string())?;
+    Ok(lfr::generate(&preset.config(scale, seed)))
+}
+
+fn cmd_generate(args: &Args) -> Result<(), String> {
+    let g = load_workload(args)?;
+    let out = args.get_or("out", "workload.bin").to_string();
+    io::write_binary_edges(&out, &g.edges).map_err(|e| e.to_string())?;
+    let stem = out.rsplit_once('.').map(|(s, _)| s.to_string()).unwrap_or(out.clone());
+    io::write_ground_truth(format!("{stem}.cmty"), &g.truth).map_err(|e| e.to_string())?;
+    io::write_text_edges(format!("{stem}.txt"), &g.edges).map_err(|e| e.to_string())?;
+    println!(
+        "generated {}: n={} m={} communities={} → {out} / {stem}.cmty / {stem}.txt",
+        g.name,
+        g.n(),
+        g.m(),
+        g.truth.len()
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let g = load_workload(args)?;
+    let v_max = args.u64_or("vmax", 64).map_err(|e| e.to_string())?;
+    let shards = args.usize_or("parallel", 0).map_err(|e| e.to_string())?;
+
+    let mut meter = Meter::start();
+    let mut labels = if shards > 1 {
+        let res = run_parallel(g.n(), &g.edges.edges, &ParallelConfig::new(shards, v_max));
+        meter.add_edges(res.state.edges_processed);
+        res.labels()
+    } else {
+        let mut c = StreamingClusterer::new(g.n(), StrConfig::new(v_max));
+        c.process_chunk(&g.edges.edges);
+        meter.add_edges(c.stats.edges);
+        c.labels()
+    };
+    if args.flag("refine") {
+        // two-pass extension: cluster the coarse community graph
+        labels = streamcom::coordinator::refine::refine_two_pass(&g.edges.edges, &labels, 7);
+    }
+    let r = meter.finish();
+    let ncomm = metrics::labels_to_communities(&labels).len();
+    println!(
+        "{}: n={} m={} v_max={v_max} → {ncomm} communities in {:.3}s ({:.1} Medges/s)",
+        g.name,
+        g.n(),
+        g.m(),
+        r.elapsed.as_secs_f64(),
+        r.edges_per_sec() / 1e6
+    );
+    if args.flag("score") && !g.truth.is_empty() {
+        let truth = g.truth.to_labels(g.n());
+        println!(
+            "  F1={:.3} NMI={:.3} Q={:.3}",
+            metrics::f1::average_f1_labels(&labels, &truth),
+            metrics::nmi::nmi_labels(&labels, &truth),
+            metrics::modularity::modularity(g.n(), &g.edges.edges, &labels),
+        );
+    }
+    if let Some(out) = args.get("out") {
+        io::write_labels(out, &labels).map_err(|e| e.to_string())?;
+        println!("  labels → {out}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    let g = load_workload(args)?;
+    let base = args.u64_or("base", 4).map_err(|e| e.to_string())?;
+    let ladder = MultiSweep::geometric_ladder(base, 8);
+    let mut sweep = MultiSweep::new(g.n(), ladder.clone());
+    let mut meter = Meter::start();
+    sweep.process_chunk(&g.edges.edges);
+    meter.add_edges(sweep.edges_processed);
+    let r = meter.finish();
+
+    let engine_name = args.get_or("engine", "native");
+    let (winner, scores) = match engine_name {
+        "native" => select(&sweep, &mut NativeEngine, SelectionRule::DensityScore),
+        "pjrt" => {
+            let mut engine = streamcom::runtime::PjrtEngine::load_default()
+                .map_err(|e| format!("pjrt engine: {e}"))?;
+            select(&sweep, &mut engine, SelectionRule::DensityScore)
+        }
+        other => return Err(format!("unknown engine {other:?}")),
+    };
+
+    let mut t = report::Table::new(
+        &format!("sweep over {} ({} edges, {:.3}s, engine={engine_name})",
+            g.name, g.m(), r.elapsed.as_secs_f64()),
+        &["v_max", "H", "D", "balance", "ncomms", "score", "winner"],
+    );
+    for (a, &vm) in ladder.iter().enumerate() {
+        let s = &scores[a];
+        t.push_row(vec![
+            vm.to_string(),
+            format!("{:.3}", s.entropy),
+            format!("{:.4}", s.density),
+            format!("{:.4}", s.balance),
+            format!("{:.0}", s.ncomms),
+            format!("{:.4}", s.density_score),
+            if a == winner { "*".into() } else { "".into() },
+        ]);
+    }
+    println!("{}", t.render());
+    if !g.truth.is_empty() {
+        let truth = g.truth.to_labels(g.n());
+        let labels = sweep.labels(winner);
+        println!(
+            "winner v_max={} → F1={:.3} NMI={:.3}",
+            ladder[winner],
+            metrics::f1::average_f1_labels(&labels, &truth),
+            metrics::nmi::nmi_labels(&labels, &truth)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<(), String> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("table1");
+    let scale = args.f64_or("scale", workloads::DEFAULT_SCALE).map_err(|e| e.to_string())?;
+    match which {
+        "table1" => {
+            let cfg = table1::Table1Config { scale, ..Default::default() };
+            let (t, rows) = table1::run(&cfg);
+            println!("{}", t.render());
+            for r in &rows {
+                if let Some(s) = table1::speedup_vs_fastest_baseline(r) {
+                    println!("{:<16} STR speedup vs fastest baseline: {s:.1}x", r.name);
+                }
+            }
+        }
+        "table2" => {
+            let cfg = table2::Table2Config { scale, ..Default::default() };
+            let (t, _) = table2::run(&cfg);
+            println!("{}", t.render());
+        }
+        "memory" => {
+            let graphs = workloads::load_all(scale, None, true);
+            let mut t = report::Table::new(
+                &format!("Memory (§4.4, scale {scale})"),
+                &["dataset", "|V|", "|E|", "edge list", "STR sketch", "ratio"],
+            );
+            for g in &graphs {
+                let el = memory::edge_list_bytes(g.m() as u64);
+                let sk = memory::sketch_bytes(g.n() as u64);
+                t.push_row(vec![
+                    g.name.clone(),
+                    g.n().to_string(),
+                    g.m().to_string(),
+                    memory::fmt_bytes(el),
+                    memory::fmt_bytes(sk),
+                    format!("{:.1}x", el as f64 / sk as f64),
+                ]);
+            }
+            println!("{}", t.render());
+        }
+        other => return Err(format!("unknown bench {other:?} (table1|table2|memory)")),
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    use std::io::BufRead;
+    let v_max = args.u64_or("vmax", 64).map_err(|e| e.to_string())?;
+    let mut d = DynamicClusterer::new(0, StrConfig::new(v_max));
+    let stdin = std::io::stdin();
+    println!("streamcom serve: '+ u v' insert, '- u v' delete, '?' report, 'q' quit");
+    for line in stdin.lock().lines() {
+        let line = line.map_err(|e| e.to_string())?;
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        match toks.as_slice() {
+            ["+", u, v] => {
+                let (u, v) = parse_pair(u, v)?;
+                let _ = d.apply(Event::Insert(Edge::new(u, v)));
+            }
+            ["-", u, v] => {
+                let (u, v) = parse_pair(u, v)?;
+                if d.apply(Event::Delete(Edge::new(u, v))).is_err() {
+                    println!("! unknown edge {u} {v}");
+                }
+            }
+            ["?"] => {
+                let labels = d.labels();
+                let ncomm = metrics::labels_to_communities(&labels).len();
+                println!(
+                    "live_edges={} nodes={} communities={ncomm}",
+                    d.live_edges(),
+                    d.state().n()
+                );
+            }
+            ["q"] | ["quit"] => break,
+            [] => {}
+            _ => println!("! parse error: {line:?}"),
+        }
+    }
+    println!("bye: {} nodes, {} live edges", d.state().n(), d.live_edges());
+    Ok(())
+}
+
+fn parse_pair(u: &str, v: &str) -> Result<(u32, u32), String> {
+    Ok((
+        u.parse().map_err(|_| format!("bad node id {u:?}"))?,
+        v.parse().map_err(|_| format!("bad node id {v:?}"))?,
+    ))
+}

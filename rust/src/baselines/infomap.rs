@@ -1,0 +1,346 @@
+//! Infomap — two-level map-equation optimisation (Rosvall & Bergstrom
+//! 2008) — the paper's baseline **I**.
+//!
+//! For an undirected graph the random walk's stationary distribution is
+//! degree-proportional, so the two-level map equation reduces to the
+//! closed form over modules `m`:
+//!
+//!   L(M) = plogp(Σ_m q_m)  −  2 Σ_m plogp(q_m)
+//!          −  Σ_α plogp(p_α)  +  Σ_m plogp(p_m + q_m)
+//!
+//! with `p_α = deg(α)/2w` the node visit rates, `p_m` the sum over the
+//! module's nodes, `q_m = cut(m)/2w` the module exit probability, and
+//! `plogp(x) = x·log₂(x)`. (Standard formulation; the node-rate term is
+//! constant and kept only so L matches the published values.)
+//!
+//! Optimisation mirrors the reference implementation's core loop:
+//! Louvain-style local moving on ΔL with module aggregation between
+//! levels, seeded from singletons.
+
+use std::collections::HashMap;
+
+use crate::graph::csr::Csr;
+use crate::util::rng::Xoshiro256;
+
+use super::CommunityDetector;
+
+#[inline]
+fn plogp(x: f64) -> f64 {
+    if x > 0.0 {
+        x * x.log2()
+    } else {
+        0.0
+    }
+}
+
+/// Weighted graph view reused across aggregation levels.
+struct WGraph {
+    adj: Vec<Vec<(u32, f64)>>,
+    wdeg: Vec<f64>,
+    total: f64, // 2w
+}
+
+impl WGraph {
+    fn from_csr(g: &Csr) -> Self {
+        let mut adj = Vec::with_capacity(g.n);
+        let mut wdeg = vec![0.0; g.n];
+        for u in 0..g.n as u32 {
+            let mut run: Vec<(u32, f64)> = Vec::new();
+            for &v in g.neighbors(u) {
+                if let Some(last) = run.last_mut() {
+                    if last.0 == v {
+                        last.1 += 1.0;
+                        continue;
+                    }
+                }
+                run.push((v, 1.0));
+            }
+            wdeg[u as usize] = run.iter().map(|&(_, w)| w).sum();
+            adj.push(run);
+        }
+        let total = wdeg.iter().sum();
+        WGraph { adj, wdeg, total }
+    }
+
+    fn n(&self) -> usize {
+        self.adj.len()
+    }
+}
+
+/// Module statistics for the map equation.
+#[derive(Debug, Clone, Default)]
+struct Modules {
+    /// p_m — visit-rate mass per module.
+    p: Vec<f64>,
+    /// q_m — exit probability per module.
+    q: Vec<f64>,
+}
+
+impl Modules {
+    /// Map-equation value over current statistics (node term omitted as
+    /// a constant offset; relative comparisons are what the moves need,
+    /// `codelength` adds it back for reporting).
+    fn l_value(&self) -> f64 {
+        let sum_q: f64 = self.q.iter().sum();
+        let mut l = plogp(sum_q);
+        for m in 0..self.p.len() {
+            l -= 2.0 * plogp(self.q[m]);
+            l += plogp(self.p[m] + self.q[m]);
+        }
+        l
+    }
+}
+
+fn build_modules(g: &WGraph, comm: &[u32], k: usize) -> Modules {
+    let mut p = vec![0.0; k];
+    let mut cut = vec![0.0; k];
+    for u in 0..g.n() {
+        let cu = comm[u] as usize;
+        p[cu] += g.wdeg[u] / g.total;
+        for &(v, w) in &g.adj[u] {
+            if comm[v as usize] != comm[u] {
+                cut[cu] += w;
+            }
+        }
+    }
+    let q = cut.iter().map(|&c| c / g.total).collect();
+    Modules { p, q }
+}
+
+fn local_moving(g: &WGraph, rng: &mut Xoshiro256) -> (Vec<u32>, bool) {
+    let n = g.n();
+    let mut comm: Vec<u32> = (0..n as u32).collect();
+    let mut modules = build_modules(g, &comm, n);
+    let mut sum_q: f64 = modules.q.iter().sum();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+
+    let mut improved_any = false;
+    let mut neigh_w: HashMap<u32, f64> = HashMap::new();
+    for _pass in 0..16 {
+        let mut moved = 0usize;
+        for &u in &order {
+            let ui = u as usize;
+            let cu = comm[ui];
+            neigh_w.clear();
+            for &(v, w) in &g.adj[ui] {
+                if v == u {
+                    continue;
+                }
+                *neigh_w.entry(comm[v as usize]).or_insert(0.0) += w;
+            }
+            if neigh_w.is_empty() {
+                continue;
+            }
+            let deg_u = g.wdeg[ui];
+            let p_u = deg_u / g.total;
+            let w_to_cu = neigh_w.get(&cu).copied().unwrap_or(0.0);
+
+            // Moving u (cu → c) flips its w_to_cu internal edges into
+            // cut of cu and removes its (deg_u − w_to_cu) former cut
+            // contribution; the target symmetrically. Only the plogp
+            // terms of cu, c and Σq change, so ΔL is O(1):
+            //   L = plogp(Σq) − 2 Σ plogp(q_m) + Σ plogp(p_m + q_m)
+            let (p_cu, q_cu) = (modules.p[cu as usize], modules.q[cu as usize]);
+            let q_cu_new = q_cu + (w_to_cu - (deg_u - w_to_cu)) / g.total;
+            let old_terms_cu = -2.0 * plogp(q_cu) + plogp(p_cu + q_cu);
+            let new_terms_cu = -2.0 * plogp(q_cu_new) + plogp(p_cu - p_u + q_cu_new);
+
+            let mut best_c = cu;
+            let mut best_delta = 0.0;
+            let mut best_q_c_new = 0.0;
+            // sorted iteration for run-to-run determinism on ties
+            let mut cands: Vec<(u32, f64)> = neigh_w.iter().map(|(&c, &w)| (c, w)).collect();
+            cands.sort_unstable_by_key(|&(c, _)| c);
+            for (c, w_to_c) in cands {
+                if c == cu {
+                    continue;
+                }
+                let (p_c, q_c) = (modules.p[c as usize], modules.q[c as usize]);
+                let q_c_new = q_c + ((deg_u - w_to_c) - w_to_c) / g.total;
+                let sum_q_new = sum_q - q_cu - q_c + q_cu_new + q_c_new;
+                let delta = plogp(sum_q_new) - plogp(sum_q)
+                    + new_terms_cu - old_terms_cu
+                    + (-2.0 * plogp(q_c_new) + plogp(p_c + p_u + q_c_new))
+                    - (-2.0 * plogp(q_c) + plogp(p_c + q_c));
+                if delta < best_delta - 1e-12 {
+                    best_delta = delta;
+                    best_c = c;
+                    best_q_c_new = q_c_new;
+                }
+            }
+            if best_c != cu {
+                let c = best_c as usize;
+                sum_q += q_cu_new - q_cu + best_q_c_new - modules.q[c];
+                modules.p[cu as usize] -= p_u;
+                modules.p[c] += p_u;
+                modules.q[cu as usize] = q_cu_new;
+                modules.q[c] = best_q_c_new;
+                comm[ui] = best_c;
+                moved += 1;
+                improved_any = true;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+    (comm, improved_any)
+}
+
+fn aggregate(g: &WGraph, comm: &[u32]) -> (WGraph, Vec<u32>) {
+    let mut remap: HashMap<u32, u32> = HashMap::new();
+    let mut node_of = vec![0u32; g.n()];
+    for (u, &c) in comm.iter().enumerate() {
+        let next = remap.len() as u32;
+        node_of[u] = *remap.entry(c).or_insert(next);
+    }
+    let k = remap.len();
+    let mut maps: Vec<HashMap<u32, f64>> = vec![HashMap::new(); k];
+    for u in 0..g.n() {
+        for &(v, w) in &g.adj[u] {
+            *maps[node_of[u] as usize]
+                .entry(node_of[v as usize])
+                .or_insert(0.0) += w;
+        }
+    }
+    let mut adj = Vec::with_capacity(k);
+    let mut wdeg = vec![0.0; k];
+    for (u, map) in maps.into_iter().enumerate() {
+        let mut run: Vec<(u32, f64)> = map.into_iter().collect();
+        run.sort_unstable_by_key(|&(v, _)| v);
+        wdeg[u] = run.iter().map(|&(_, w)| w).sum();
+        adj.push(run);
+    }
+    let total = wdeg.iter().sum();
+    (WGraph { adj, wdeg, total }, node_of)
+}
+
+/// The paper's baseline **I**.
+pub struct Infomap {
+    pub seed: u64,
+    pub max_levels: usize,
+}
+
+impl Infomap {
+    pub fn new(seed: u64) -> Self {
+        Self { seed, max_levels: 16 }
+    }
+
+    pub fn run(&self, g: &Csr) -> Vec<u32> {
+        let mut rng = Xoshiro256::new(self.seed);
+        let mut graph = WGraph::from_csr(g);
+        let mut labels: Vec<u32> = (0..g.n as u32).collect();
+        for _ in 0..self.max_levels {
+            let (comm, improved) = local_moving(&graph, &mut rng);
+            if !improved {
+                break;
+            }
+            let (next, node_of) = aggregate(&graph, &comm);
+            for l in labels.iter_mut() {
+                *l = node_of[*l as usize];
+            }
+            if next.n() == graph.n() {
+                break;
+            }
+            graph = next;
+        }
+        super::normalize_labels(&mut labels);
+        labels
+    }
+
+    /// Full two-level codelength (bits/step) of a partition — for
+    /// reporting and the unit tests.
+    pub fn codelength(g: &Csr, labels: &[u32]) -> f64 {
+        let wg = WGraph::from_csr(g);
+        let k = labels.iter().copied().max().map(|x| x as usize + 1).unwrap_or(0);
+        let modules = build_modules(&wg, labels, k);
+        let node_term: f64 = (0..wg.n())
+            .map(|u| plogp(wg.wdeg[u] / wg.total))
+            .sum();
+        modules.l_value() - node_term
+    }
+}
+
+impl CommunityDetector for Infomap {
+    fn tag(&self) -> &'static str {
+        "I"
+    }
+
+    fn name(&self) -> &'static str {
+        "Infomap"
+    }
+
+    fn detect(&mut self, graph: &Csr) -> Vec<u32> {
+        self.run(graph)
+    }
+
+    fn practical_for(&self, _n: usize, m: usize) -> bool {
+        // mirrors Table 1: Infomap ran up to YouTube (~3M edges)
+        m <= 4_000_000
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::edge::{Edge, EdgeList};
+    use crate::graph::generators::sbm::{self, SbmConfig};
+    use crate::metrics::nmi::nmi_labels;
+
+    fn two_triangles_csr() -> Csr {
+        Csr::from_edge_list(&EdgeList::new(6, vec![
+            Edge::new(0, 1),
+            Edge::new(1, 2),
+            Edge::new(0, 2),
+            Edge::new(3, 4),
+            Edge::new(4, 5),
+            Edge::new(3, 5),
+            Edge::new(2, 3),
+        ]))
+    }
+
+    #[test]
+    fn splits_two_triangles() {
+        let g = two_triangles_csr();
+        let labels = Infomap::new(1).run(&g);
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[1], labels[2]);
+        assert_eq!(labels[3], labels[4]);
+        assert_eq!(labels[4], labels[5]);
+        assert_ne!(labels[0], labels[3]);
+    }
+
+    #[test]
+    fn good_partition_has_lower_codelength() {
+        let g = two_triangles_csr();
+        let good = vec![0, 0, 0, 1, 1, 1];
+        let all_one = vec![0; 6];
+        let singletons: Vec<u32> = (0..6).collect();
+        let l_good = Infomap::codelength(&g, &good);
+        let l_one = Infomap::codelength(&g, &all_one);
+        let l_single = Infomap::codelength(&g, &singletons);
+        assert!(l_good < l_one, "{l_good} !< {l_one}");
+        assert!(l_good < l_single, "{l_good} !< {l_single}");
+    }
+
+    #[test]
+    fn recovers_sbm_partition() {
+        let g = sbm::generate(&SbmConfig::equal(6, 40, 0.4, 0.005, 20));
+        let csr = Csr::from_edge_list(&g.edges);
+        let labels = Infomap::new(2).run(&csr);
+        let truth = g.truth.to_labels(g.n());
+        let nmi = nmi_labels(&labels, &truth);
+        assert!(nmi > 0.8, "nmi={nmi}");
+    }
+
+    #[test]
+    fn codelength_of_found_partition_beats_trivial() {
+        let g = sbm::generate(&SbmConfig::equal(5, 30, 0.4, 0.01, 21));
+        let csr = Csr::from_edge_list(&g.edges);
+        let labels = Infomap::new(1).run(&csr);
+        let l_found = Infomap::codelength(&csr, &labels);
+        let l_one = Infomap::codelength(&csr, &vec![0; csr.n]);
+        assert!(l_found < l_one);
+    }
+}

@@ -1,0 +1,118 @@
+//! Asynchronous label propagation (Raghavan et al. 2007).
+//!
+//! Not in the paper's table, but the standard near-linear sanity
+//! baseline: every node repeatedly adopts the majority label among its
+//! neighbours (ties broken randomly), in random asynchronous order,
+//! until labels stabilise or `max_iters` passes.
+
+use std::collections::HashMap;
+
+use crate::graph::csr::Csr;
+use crate::util::rng::Xoshiro256;
+
+use super::CommunityDetector;
+
+pub struct LabelProp {
+    pub seed: u64,
+    pub max_iters: usize,
+}
+
+impl LabelProp {
+    pub fn new(seed: u64) -> Self {
+        Self { seed, max_iters: 50 }
+    }
+
+    pub fn run(&self, g: &Csr) -> Vec<u32> {
+        let n = g.n;
+        let mut labels: Vec<u32> = (0..n as u32).collect();
+        let mut rng = Xoshiro256::new(self.seed);
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        let mut counts: HashMap<u32, u32> = HashMap::new();
+        for _ in 0..self.max_iters {
+            rng.shuffle(&mut order);
+            let mut changed = 0usize;
+            for &u in &order {
+                let neigh = g.neighbors(u);
+                if neigh.is_empty() {
+                    continue;
+                }
+                counts.clear();
+                for &v in neigh {
+                    *counts.entry(labels[v as usize]).or_insert(0) += 1;
+                }
+                let best = counts.values().copied().max().unwrap();
+                // collect argmax set (sorted — HashMap order is random
+                // per process), pick randomly among ties via our rng
+                let mut winners: Vec<u32> = counts
+                    .iter()
+                    .filter(|&(_, &c)| c == best)
+                    .map(|(&l, _)| l)
+                    .collect();
+                winners.sort_unstable();
+                let new = if winners.len() == 1 {
+                    winners[0]
+                } else {
+                    winners[rng.range(0, winners.len())]
+                };
+                if new != labels[u as usize] {
+                    labels[u as usize] = new;
+                    changed += 1;
+                }
+            }
+            if changed == 0 {
+                break;
+            }
+        }
+        super::normalize_labels(&mut labels);
+        labels
+    }
+}
+
+impl CommunityDetector for LabelProp {
+    fn tag(&self) -> &'static str {
+        "LP"
+    }
+
+    fn name(&self) -> &'static str {
+        "LabelProp"
+    }
+
+    fn detect(&mut self, graph: &Csr) -> Vec<u32> {
+        self.run(graph)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::edge::{Edge, EdgeList};
+    use crate::graph::generators::sbm::{self, SbmConfig};
+    use crate::metrics::nmi::nmi_labels;
+
+    #[test]
+    fn separates_clear_communities() {
+        let g = sbm::generate(&SbmConfig::equal(4, 40, 0.5, 0.002, 8));
+        let csr = Csr::from_edge_list(&g.edges);
+        let labels = LabelProp::new(1).run(&csr);
+        let truth = g.truth.to_labels(g.n());
+        let nmi = nmi_labels(&labels, &truth);
+        assert!(nmi > 0.8, "nmi={nmi}");
+    }
+
+    #[test]
+    fn isolated_nodes_keep_own_label() {
+        let csr = Csr::from_edge_list(&EdgeList::new(3, vec![Edge::new(0, 1)]));
+        let labels = LabelProp::new(2).run(&csr);
+        assert_eq!(labels[0], labels[1]);
+        assert_ne!(labels[2], labels[0]);
+    }
+
+    #[test]
+    fn terminates_on_cycle_graphs() {
+        // even cycles can oscillate in synchronous LPA; async must stop
+        let edges: Vec<Edge> = (0..100u32).map(|i| Edge::new(i, (i + 1) % 100)).collect();
+        let csr = Csr::from_edge_list(&EdgeList::new(100, edges));
+        let labels = LabelProp::new(3).run(&csr);
+        assert_eq!(labels.len(), 100);
+    }
+}

@@ -1,0 +1,317 @@
+//! Louvain modularity optimisation (Blondel et al. 2008) — the paper's
+//! baseline **L**.
+//!
+//! Standard two-phase loop: (1) local moving — each node greedily moves
+//! to the neighbouring community with the best modularity gain until no
+//! move improves; (2) aggregation — communities collapse into
+//! super-nodes (weighted multigraph, self-loops carry internal weight)
+//! and the process repeats on the smaller graph. Terminates when a full
+//! level yields no modularity improvement.
+//!
+//! ΔQ for moving node `i` (degree k_i) into community `C`:
+//!   ΔQ = k_{i,C}/m − k_i · Σ_tot(C) / (2 m²)
+//! (comparing against leaving `i` isolated; the implementation uses the
+//! standard remove-then-best-insert formulation).
+
+use std::collections::HashMap;
+
+use crate::graph::csr::Csr;
+use crate::util::rng::Xoshiro256;
+
+use super::CommunityDetector;
+
+/// Weighted adjacency used across aggregation levels.
+struct WGraph {
+    /// adj[u] = (v, weight); self-loop (u, u) holds internal weight ×2.
+    adj: Vec<Vec<(u32, f64)>>,
+    /// Weighted degree incl. self-loop weight.
+    wdeg: Vec<f64>,
+    /// Total edge weight m (sum of wdeg / 2).
+    m: f64,
+}
+
+impl WGraph {
+    fn from_csr(g: &Csr) -> Self {
+        let mut adj = Vec::with_capacity(g.n);
+        let mut wdeg = vec![0.0; g.n];
+        for u in 0..g.n as u32 {
+            // collapse parallel edges into weights
+            let mut run: Vec<(u32, f64)> = Vec::new();
+            for &v in g.neighbors(u) {
+                if let Some(last) = run.last_mut() {
+                    if last.0 == v {
+                        last.1 += 1.0;
+                        continue;
+                    }
+                }
+                run.push((v, 1.0));
+            }
+            wdeg[u as usize] = run.iter().map(|&(_, w)| w).sum();
+            adj.push(run);
+        }
+        let m = wdeg.iter().sum::<f64>() / 2.0;
+        WGraph { adj, wdeg, m }
+    }
+
+    fn n(&self) -> usize {
+        self.adj.len()
+    }
+}
+
+/// One level of local moving; returns (labels, improved?).
+fn local_moving(g: &WGraph, rng: &mut Xoshiro256, min_gain: f64) -> (Vec<u32>, bool) {
+    let n = g.n();
+    let mut comm: Vec<u32> = (0..n as u32).collect();
+    // Σ_tot per community (sum of weighted degrees of members)
+    let mut tot: Vec<f64> = g.wdeg.clone();
+    let two_m = 2.0 * g.m;
+    if two_m == 0.0 {
+        return (comm, false);
+    }
+
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+
+    let mut improved_any = false;
+    let mut neigh_w: HashMap<u32, f64> = HashMap::new();
+    loop {
+        let mut moved = 0usize;
+        for &u in &order {
+            let ui = u as usize;
+            let cu = comm[ui];
+            // weights to neighbouring communities (excluding self-loop)
+            neigh_w.clear();
+            for &(v, w) in &g.adj[ui] {
+                if v == u {
+                    continue;
+                }
+                *neigh_w.entry(comm[v as usize]).or_insert(0.0) += w;
+            }
+            // remove u from its community
+            tot[cu as usize] -= g.wdeg[ui];
+            let k_u = g.wdeg[ui];
+            let base = neigh_w.get(&cu).copied().unwrap_or(0.0);
+            let mut best_c = cu;
+            let mut best_gain = base - tot[cu as usize] * k_u / two_m;
+            // sorted iteration for run-to-run determinism on ties
+            let mut cands: Vec<(u32, f64)> = neigh_w.iter().map(|(&c, &w)| (c, w)).collect();
+            cands.sort_unstable_by_key(|&(c, _)| c);
+            for (c, k_uc) in cands {
+                if c == cu {
+                    continue;
+                }
+                let gain = k_uc - tot[c as usize] * k_u / two_m;
+                if gain > best_gain + min_gain {
+                    best_gain = gain;
+                    best_c = c;
+                }
+            }
+            tot[best_c as usize] += g.wdeg[ui];
+            if best_c != cu {
+                comm[ui] = best_c;
+                moved += 1;
+                improved_any = true;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+    (comm, improved_any)
+}
+
+/// Aggregate: communities become nodes; returns (new graph, mapping
+/// old-node → new-node).
+fn aggregate(g: &WGraph, comm: &[u32]) -> (WGraph, Vec<u32>) {
+    let mut remap: HashMap<u32, u32> = HashMap::new();
+    let mut node_of: Vec<u32> = vec![0; g.n()];
+    for (u, &c) in comm.iter().enumerate() {
+        let next = remap.len() as u32;
+        let id = *remap.entry(c).or_insert(next);
+        node_of[u] = id;
+    }
+    let k = remap.len();
+    let mut maps: Vec<HashMap<u32, f64>> = vec![HashMap::new(); k];
+    for u in 0..g.n() {
+        let cu = node_of[u];
+        for &(v, w) in &g.adj[u] {
+            let cv = node_of[v as usize];
+            *maps[cu as usize].entry(cv).or_insert(0.0) += w;
+        }
+    }
+    let mut adj = Vec::with_capacity(k);
+    let mut wdeg = vec![0.0; k];
+    for (u, map) in maps.into_iter().enumerate() {
+        let mut run: Vec<(u32, f64)> = map.into_iter().collect();
+        run.sort_unstable_by_key(|&(v, _)| v);
+        wdeg[u] = run.iter().map(|&(_, w)| w).sum();
+        adj.push(run);
+    }
+    let m = wdeg.iter().sum::<f64>() / 2.0;
+    (WGraph { adj, wdeg, m }, node_of)
+}
+
+/// The paper's baseline **L**.
+pub struct Louvain {
+    pub seed: u64,
+    /// Minimum per-move gain to accept (protects against float noise).
+    pub min_gain: f64,
+    /// Cap on aggregation levels.
+    pub max_levels: usize,
+}
+
+impl Louvain {
+    pub fn new(seed: u64) -> Self {
+        Self { seed, min_gain: 1e-9, max_levels: 32 }
+    }
+
+    /// Run and return final labels.
+    pub fn run(&self, g: &Csr) -> Vec<u32> {
+        let mut rng = Xoshiro256::new(self.seed);
+        let mut graph = WGraph::from_csr(g);
+        // labels[u] = community of original node u, refined per level
+        let mut labels: Vec<u32> = (0..g.n as u32).collect();
+        for _level in 0..self.max_levels {
+            let (comm, improved) = local_moving(&graph, &mut rng, self.min_gain);
+            if !improved {
+                break;
+            }
+            let (next, node_of) = aggregate(&graph, &comm);
+            for l in labels.iter_mut() {
+                *l = node_of[*l as usize];
+            }
+            if next.n() == graph.n() {
+                break;
+            }
+            graph = next;
+        }
+        let mut out = labels;
+        super::normalize_labels(&mut out);
+        out
+    }
+}
+
+/// Louvain over an explicit weighted adjacency (used by the two-pass
+/// streaming refinement in `coordinator::refine`, which clusters the
+/// *coarse community graph* rather than a node graph).
+///
+/// `adj[u]` lists `(v, w)` pairs; both directions must be present and a
+/// self-loop `(u, u)` carries 2× the internal weight, matching the
+/// aggregation convention above.
+pub fn cluster_weighted(adj: Vec<Vec<(u32, f64)>>, seed: u64) -> Vec<u32> {
+    let n = adj.len();
+    let mut wdeg = vec![0.0; n];
+    for (u, run) in adj.iter().enumerate() {
+        wdeg[u] = run.iter().map(|&(_, w)| w).sum();
+    }
+    let m = wdeg.iter().sum::<f64>() / 2.0;
+    let mut graph = WGraph { adj, wdeg, m };
+    let mut rng = Xoshiro256::new(seed);
+    let mut labels: Vec<u32> = (0..n as u32).collect();
+    for _ in 0..32 {
+        let (comm, improved) = local_moving(&graph, &mut rng, 1e-9);
+        if !improved {
+            break;
+        }
+        let (next, node_of) = aggregate(&graph, &comm);
+        for l in labels.iter_mut() {
+            *l = node_of[*l as usize];
+        }
+        if next.n() == graph.n() {
+            break;
+        }
+        graph = next;
+    }
+    super::normalize_labels(&mut labels);
+    labels
+}
+
+impl CommunityDetector for Louvain {
+    fn tag(&self) -> &'static str {
+        "L"
+    }
+
+    fn name(&self) -> &'static str {
+        "Louvain"
+    }
+
+    fn detect(&mut self, graph: &Csr) -> Vec<u32> {
+        self.run(graph)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::edge::{Edge, EdgeList};
+    use crate::graph::generators::sbm::{self, SbmConfig};
+    use crate::metrics::{modularity::modularity, nmi::nmi_labels};
+
+    fn two_triangles_csr() -> (Csr, Vec<Edge>) {
+        let edges = vec![
+            Edge::new(0, 1),
+            Edge::new(1, 2),
+            Edge::new(0, 2),
+            Edge::new(3, 4),
+            Edge::new(4, 5),
+            Edge::new(3, 5),
+            Edge::new(2, 3),
+        ];
+        (Csr::from_edge_list(&EdgeList::new(6, edges.clone())), edges)
+    }
+
+    #[test]
+    fn finds_two_triangles() {
+        let (g, _) = two_triangles_csr();
+        let labels = Louvain::new(1).run(&g);
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[1], labels[2]);
+        assert_eq!(labels[3], labels[4]);
+        assert_eq!(labels[4], labels[5]);
+        assert_ne!(labels[0], labels[3]);
+    }
+
+    #[test]
+    fn achieves_near_optimal_modularity_on_toy() {
+        let (g, edges) = two_triangles_csr();
+        let labels = Louvain::new(2).run(&g);
+        let q = modularity(6, &edges, &labels);
+        assert!((q - 5.0 / 14.0).abs() < 1e-9, "q={q}");
+    }
+
+    #[test]
+    fn recovers_sbm_partition() {
+        let g = sbm::generate(&SbmConfig::equal(8, 50, 0.3, 0.005, 33));
+        let csr = Csr::from_edge_list(&g.edges);
+        let labels = Louvain::new(3).run(&csr);
+        let truth = g.truth.to_labels(g.n());
+        let nmi = nmi_labels(&labels, &truth);
+        assert!(nmi > 0.9, "nmi={nmi}");
+    }
+
+    #[test]
+    fn modularity_beats_streaming_on_small_graph() {
+        // the paper's Table 2 shape: Louvain wins on small graphs
+        let g = sbm::generate(&SbmConfig::equal(6, 40, 0.3, 0.01, 44));
+        let csr = Csr::from_edge_list(&g.edges);
+        let lv = Louvain::new(1).run(&csr);
+        let st = crate::coordinator::algorithm::cluster_edges(g.n(), &g.edges.edges, 64);
+        let q_lv = modularity(g.n(), &g.edges.edges, &lv);
+        let q_st = modularity(g.n(), &g.edges.edges, &st);
+        assert!(q_lv >= q_st, "louvain {q_lv} < streaming {q_st}");
+    }
+
+    #[test]
+    fn empty_graph_is_fine() {
+        let csr = Csr::from_edge_list(&EdgeList::new(4, vec![]));
+        let labels = Louvain::new(1).run(&csr);
+        assert_eq!(labels.len(), 4);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let g = sbm::generate(&SbmConfig::equal(4, 30, 0.3, 0.01, 5));
+        let csr = Csr::from_edge_list(&g.edges);
+        assert_eq!(Louvain::new(9).run(&csr), Louvain::new(9).run(&csr));
+    }
+}

@@ -1,0 +1,210 @@
+//! Minimal benchmark runner (offline replacement for criterion).
+//!
+//! Usage from a `harness = false` bench target:
+//!
+//! ```ignore
+//! let stats = bench("str/amazon-s", Budget::default(), || {
+//!     run_the_thing();
+//! });
+//! println!("{}", stats);
+//! ```
+//!
+//! The runner warms up, then runs timed iterations until both a minimum
+//! iteration count and a minimum wall-clock budget are met, and reports
+//! robust statistics (median / mean / stddev / min / max).
+
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+/// Iteration budget.
+#[derive(Debug, Clone, Copy)]
+pub struct Budget {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_time: Duration,
+    pub max_time: Duration,
+}
+
+impl Default for Budget {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 100,
+            min_time: Duration::from_millis(200),
+            max_time: Duration::from_secs(10),
+        }
+    }
+}
+
+impl Budget {
+    /// Budget for expensive end-to-end runs (one warmup, few iters).
+    pub fn heavy() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 10,
+            min_time: Duration::from_millis(100),
+            max_time: Duration::from_secs(60),
+        }
+    }
+
+    /// Single-shot measurement (workloads too big to repeat).
+    pub fn once() -> Self {
+        Self {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 1,
+            min_time: Duration::ZERO,
+            max_time: Duration::from_secs(3600),
+        }
+    }
+}
+
+/// Robust statistics over the per-iteration times.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    fn from_samples(name: &str, mut samples: Vec<Duration>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_unstable();
+        let n = samples.len();
+        let median = samples[n / 2];
+        let sum: Duration = samples.iter().sum();
+        let mean = sum / n as u32;
+        let var = samples
+            .iter()
+            .map(|s| {
+                let d = s.as_secs_f64() - mean.as_secs_f64();
+                d * d
+            })
+            .sum::<f64>()
+            / n as f64;
+        Stats {
+            name: name.to_string(),
+            iters: n,
+            median,
+            mean,
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} {:>10} median  {:>10} mean  ±{:>9}  ({} iters)",
+            self.name,
+            fmt_duration(self.median),
+            fmt_duration(self.mean),
+            fmt_duration(self.stddev),
+            self.iters
+        )
+    }
+}
+
+/// Human-friendly duration.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+/// Run a closure under the budget and collect stats.
+pub fn bench<F: FnMut()>(name: &str, budget: Budget, mut f: F) -> Stats {
+    for _ in 0..budget.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        let done_iters = samples.len();
+        let elapsed = start.elapsed();
+        if done_iters >= budget.max_iters || elapsed >= budget.max_time {
+            break;
+        }
+        if done_iters >= budget.min_iters && elapsed >= budget.min_time {
+            break;
+        }
+    }
+    Stats::from_samples(name, samples)
+}
+
+/// Measure one run of a closure returning a value.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_respects_min_iters() {
+        let stats = bench(
+            "noop",
+            Budget { warmup_iters: 0, min_iters: 7, max_iters: 7, min_time: Duration::ZERO, max_time: Duration::from_secs(1) },
+            || {
+                black_box(1 + 1);
+            },
+        );
+        assert_eq!(stats.iters, 7);
+        assert!(stats.median <= stats.max);
+        assert!(stats.min <= stats.median);
+    }
+
+    #[test]
+    fn once_budget_single_iteration() {
+        let mut count = 0;
+        let stats = bench("one", Budget::once(), || {
+            count += 1;
+        });
+        assert_eq!(count, 1);
+        assert_eq!(stats.iters, 1);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(d >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with('s'));
+        assert!(fmt_duration(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_duration(Duration::from_micros(5)).contains("µs"));
+    }
+}

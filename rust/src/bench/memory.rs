@@ -1,0 +1,172 @@
+//! Memory accounting for the §4.4 memory-consumption experiment.
+//!
+//! Two complementary accountings:
+//!
+//! * **Analytic** — deterministic byte counts from the data-structure
+//!   definitions: the STR sketch is `16 B/node` (4+4+8), an edge list is
+//!   `16 B/edge` with 64-bit node ids exactly as the paper counts it
+//!   (its lower bound for the non-streaming algorithms).
+//! * **Allocator** — a counting global allocator
+//!   ([`CountingAllocator`]) that the bench binaries install to report
+//!   live/peak heap for whole runs, catching anything the analytic
+//!   model misses.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Paper's accounting: one edge = two 64-bit node ids.
+pub const BYTES_PER_EDGE_STORED: u64 = 16;
+/// STR sketch: degree u32 + community u32 + volume u64.
+pub const BYTES_PER_NODE_SKETCH: u64 = 16;
+
+/// Analytic footprint of storing the edge list (all baselines' floor).
+pub fn edge_list_bytes(m: u64) -> u64 {
+    m * BYTES_PER_EDGE_STORED
+}
+
+/// Analytic footprint of the streaming sketch.
+pub fn sketch_bytes(n: u64) -> u64 {
+    n * BYTES_PER_NODE_SKETCH
+}
+
+/// Human-readable bytes.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut x = b as f64;
+    let mut u = 0;
+    while x >= 1000.0 && u < UNITS.len() - 1 {
+        x /= 1000.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{x:.1} {}", UNITS[u])
+    }
+}
+
+/// Counting wrapper around the system allocator. Install in a bench
+/// binary with:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: CountingAllocator = CountingAllocator::new();
+/// ```
+pub struct CountingAllocator {
+    live: AtomicU64,
+    peak: AtomicU64,
+    total: AtomicU64,
+}
+
+impl CountingAllocator {
+    pub const fn new() -> Self {
+        Self {
+            live: AtomicU64::new(0),
+            peak: AtomicU64::new(0),
+            total: AtomicU64::new(0),
+        }
+    }
+
+    pub fn live_bytes(&self) -> u64 {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn total_allocated(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Reset the peak to the current live level (scoped measurements).
+    pub fn reset_peak(&self) {
+        self.peak.store(self.live_bytes(), Ordering::Relaxed);
+    }
+
+    fn on_alloc(&self, size: usize) {
+        let live = self.live.fetch_add(size as u64, Ordering::Relaxed) + size as u64;
+        self.total.fetch_add(size as u64, Ordering::Relaxed);
+        self.peak.fetch_max(live, Ordering::Relaxed);
+    }
+
+    fn on_dealloc(&self, size: usize) {
+        self.live.fetch_sub(size as u64, Ordering::Relaxed);
+    }
+}
+
+impl Default for CountingAllocator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = unsafe { System.alloc(layout) };
+        if !p.is_null() {
+            self.on_alloc(layout.size());
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) };
+        self.on_dealloc(layout.size());
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = unsafe { System.realloc(ptr, layout, new_size) };
+        if !p.is_null() {
+            self.on_dealloc(layout.size());
+            self.on_alloc(new_size);
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_matches_paper_scale() {
+        // paper: Amazon edge list 14.8 MB at 925_872 edges
+        let amazon = edge_list_bytes(925_872);
+        assert_eq!(amazon, 14_813_952);
+        // paper: Friendster edge list 28.9 GB
+        let friendster = edge_list_bytes(1_806_067_135);
+        assert!((28.8e9..29.1e9).contains(&(friendster as f64)));
+    }
+
+    #[test]
+    fn sketch_is_much_smaller_than_edges_on_snap_shapes() {
+        // Friendster: 65.6M nodes → ~1.05 GB sketch vs 28.9 GB edges
+        let sketch = sketch_bytes(65_608_366);
+        let edges = edge_list_bytes(1_806_067_135);
+        assert!(sketch * 20 < edges);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert!(fmt_bytes(14_813_952).contains("MB"));
+        assert!(fmt_bytes(28_897_074_160).contains("GB"));
+    }
+
+    #[test]
+    fn counting_allocator_tracks_alloc_dealloc() {
+        // not installed globally here; exercise the raw hooks
+        let a = CountingAllocator::new();
+        a.on_alloc(1000);
+        a.on_alloc(500);
+        assert_eq!(a.live_bytes(), 1500);
+        assert_eq!(a.peak_bytes(), 1500);
+        a.on_dealloc(1000);
+        assert_eq!(a.live_bytes(), 500);
+        assert_eq!(a.peak_bytes(), 1500);
+        a.reset_peak();
+        assert_eq!(a.peak_bytes(), 500);
+        assert_eq!(a.total_allocated(), 1500);
+    }
+}

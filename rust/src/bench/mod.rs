@@ -1,0 +1,23 @@
+//! Benchmark framework + the harnesses that regenerate the paper's
+//! evaluation (criterion is unavailable offline; [`framework`] provides
+//! the warmup/iterate/robust-stats loop the benches need).
+//!
+//! Experiment map (DESIGN.md §4):
+//!
+//! | exp | harness            | bench target                  |
+//! |-----|--------------------|-------------------------------|
+//! | T1  | [`table1`]         | `benches/table1_runtime.rs`   |
+//! | T1b | [`readonly`]       | part of T1                    |
+//! | M1  | [`memory`]         | `benches/memory_footprint.rs` |
+//! | T2  | [`table2`]         | `benches/table2_quality.rs`   |
+//! | S1  | sweep harness      | `benches/vmax_sweep.rs`       |
+//! | A1  | ablation harness   | `benches/ablations.rs`        |
+//! | P1  | throughput harness | `benches/str_throughput.rs`   |
+
+pub mod framework;
+pub mod memory;
+pub mod readonly;
+pub mod report;
+pub mod table1;
+pub mod table2;
+pub mod workloads;

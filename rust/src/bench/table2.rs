@@ -1,0 +1,173 @@
+//! Experiment T2 — the paper's Table 2: average F1 and NMI against
+//! ground truth for STR and the five baselines.
+//!
+//! Shape under test: Louvain/OSLOM lead on the small low-mixing graphs;
+//! STR ties or wins on the large high-mixing graphs (where most
+//! baselines no longer run at all).
+
+use crate::baselines::paper_suite;
+use crate::coordinator::algorithm::{StrConfig, StreamingClusterer};
+use crate::graph::csr::Csr;
+use crate::graph::generators::GeneratedGraph;
+use crate::metrics::f1::average_f1_labels;
+use crate::metrics::nmi::nmi_labels;
+
+use super::report::{fmt_score, Table};
+use super::table1::select_v_max;
+use super::workloads;
+
+/// One Table-2 row.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub name: String,
+    /// (F1, NMI) per baseline in suite order; None = skipped.
+    pub baseline_scores: Vec<Option<(f64, f64)>>,
+    pub str_scores: (f64, f64),
+    pub v_max: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Table2Config {
+    pub scale: f64,
+    pub baseline_edge_cap: usize,
+    pub seed: u64,
+    pub cache: bool,
+}
+
+impl Default for Table2Config {
+    fn default() -> Self {
+        Self {
+            scale: workloads::DEFAULT_SCALE,
+            baseline_edge_cap: 20_000_000,
+            seed: 7,
+            cache: true,
+        }
+    }
+}
+
+/// Score one label vector against a workload's ground truth.
+pub fn score(g: &GeneratedGraph, labels: &[u32]) -> (f64, f64) {
+    let truth = g.truth.to_labels(g.n());
+    (
+        average_f1_labels(labels, &truth),
+        nmi_labels(labels, &truth),
+    )
+}
+
+/// Run the full Table-2 grid.
+pub fn run(config: &Table2Config) -> (Table, Vec<Table2Row>) {
+    let graphs = workloads::load_all(config.scale, None, config.cache);
+    let mut rows = Vec::new();
+    for g in &graphs {
+        let v_max = select_v_max(g);
+        let mut c = StreamingClusterer::new(g.n(), StrConfig::new(v_max));
+        c.process_chunk(&g.edges.edges);
+        let str_scores = score(g, &c.labels());
+
+        let csr = if g.m() <= config.baseline_edge_cap {
+            Some(Csr::from_edge_list(&g.edges))
+        } else {
+            None
+        };
+        let mut baseline_scores = Vec::new();
+        for mut algo in paper_suite(config.seed) {
+            let run_it = csr.is_some()
+                && algo.practical_for(g.n(), g.m())
+                && g.m() <= config.baseline_edge_cap
+                && super::table1::baseline_available(&g.name, algo.tag());
+            if run_it {
+                let labels = algo.detect(csr.as_ref().unwrap());
+                baseline_scores.push(Some(score(g, &labels)));
+            } else {
+                baseline_scores.push(None);
+            }
+        }
+        rows.push(Table2Row {
+            name: g.name.clone(),
+            baseline_scores,
+            str_scores,
+            v_max,
+        });
+    }
+    (render(&rows, config.scale), rows)
+}
+
+/// Render in the paper's two-block layout (F1 block then NMI block).
+pub fn render(rows: &[Table2Row], scale: f64) -> Table {
+    let mut t = Table::new(
+        &format!("Table 2 — average F1 scores and NMI (scale {scale})"),
+        &[
+            "dataset", "F1:S", "F1:L", "F1:I", "F1:W", "F1:O", "F1:STR", "NMI:S", "NMI:L",
+            "NMI:I", "NMI:W", "NMI:O", "NMI:STR",
+        ],
+    );
+    for r in rows {
+        let mut cells = vec![r.name.clone()];
+        for s in &r.baseline_scores {
+            cells.push(fmt_score(s.map(|x| x.0)));
+        }
+        cells.push(fmt_score(Some(r.str_scores.0)));
+        for s in &r.baseline_scores {
+            cells.push(fmt_score(s.map(|x| x.1)));
+        }
+        cells.push(fmt_score(Some(r.str_scores.1)));
+        t.push_row(cells);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_runs_and_scores_are_probabilities() {
+        let cfg = Table2Config { scale: 0.01, cache: false, ..Default::default() };
+        let (_t, rows) = run(&cfg);
+        assert_eq!(rows.len(), 6);
+        for r in &rows {
+            let (f1, nmi) = r.str_scores;
+            assert!((0.0..=1.0).contains(&f1), "{}: f1={f1}", r.name);
+            assert!((0.0..=1.0).contains(&nmi), "{}: nmi={nmi}", r.name);
+            // STR must produce a non-trivial detection on every graph
+            assert!(f1 > 0.05, "{}: degenerate F1 {f1}", r.name);
+        }
+    }
+
+    #[test]
+    fn str_beats_louvain_on_large_high_mixing_rows() {
+        // The paper's reproduced quality crossover (Table 2): Louvain's
+        // resolution limit collapses on the large graphs with small
+        // ground-truth communities, while STR holds up. (SCD stays
+        // strong on our synthetic stand-ins because generated truth is
+        // triangle-aligned — divergence documented in EXPERIMENTS.md.)
+        let cfg = Table2Config { scale: 0.02, cache: false, ..Default::default() };
+        let (_t, rows) = run(&cfg);
+        // Louvain is suite index 1; it runs on youtube/livejournal/orkut.
+        // The resolution-limit gap widens with scale, so at this test
+        // scale we require STR to win the majority of the large rows
+        // (at the default bench scale it wins all three — see
+        // EXPERIMENTS.md T2).
+        let mut compared = 0;
+        let mut wins = 0;
+        for r in rows.iter().filter(|r| {
+            r.name == "livejournal-s" || r.name == "orkut-s" || r.name == "youtube-s"
+        }) {
+            if let Some((louvain_f1, _)) = r.baseline_scores[1] {
+                compared += 1;
+                if r.str_scores.0 > louvain_f1 {
+                    wins += 1;
+                }
+            }
+        }
+        assert!(compared >= 2, "expected Louvain on ≥2 large rows");
+        assert!(
+            wins * 2 > compared,
+            "STR beat Louvain on only {wins}/{compared} large rows"
+        );
+        // STR itself must stay non-degenerate on every large row
+        for r in &rows {
+            assert!(r.str_scores.0 > 0.1, "{}: STR F1 degenerate", r.name);
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Workload management for the experiment harnesses.
+//!
+//! Generates the six SNAP-shaped graphs (DESIGN.md §3) at a chosen
+//! scale, with optional on-disk caching so repeated bench invocations
+//! don't pay generation again: graphs are cached as binary edge files +
+//! ground-truth files under `target/workloads/`.
+
+use std::path::PathBuf;
+
+use crate::graph::generators::lfr;
+use crate::graph::generators::presets::{SnapPreset, SNAP_PRESETS};
+use crate::graph::generators::GeneratedGraph;
+use crate::graph::io;
+
+/// Default experiment scale: small enough that the full 6×6 grid
+/// finishes in CI-sized time, large enough to show the scaling shape.
+pub const DEFAULT_SCALE: f64 = 0.1;
+
+/// Deterministic workload seed (recorded in EXPERIMENTS.md).
+pub const WORKLOAD_SEED: u64 = 0x5EED_2017;
+
+/// Which presets to include (index into [`SNAP_PRESETS`]).
+pub fn preset_range(max_edges: Option<usize>, scale: f64) -> Vec<&'static SnapPreset> {
+    SNAP_PRESETS
+        .iter()
+        .filter(|p| {
+            let m_est = (p.nodes as f64 * scale * p.avg_deg / 2.0) as usize;
+            max_edges.map(|cap| m_est <= cap).unwrap_or(true)
+        })
+        .collect()
+}
+
+fn cache_dir() -> PathBuf {
+    PathBuf::from("target/workloads")
+}
+
+fn cache_paths(name: &str, scale: f64) -> (PathBuf, PathBuf) {
+    let d = cache_dir();
+    let tag = format!("{name}-s{:.4}-seed{WORKLOAD_SEED:x}", scale);
+    (d.join(format!("{tag}.bin")), d.join(format!("{tag}.cmty")))
+}
+
+/// Generate (or load from cache) one preset at the given scale.
+pub fn load_preset(preset: &SnapPreset, scale: f64, cache: bool) -> GeneratedGraph {
+    let (edge_path, gt_path) = cache_paths(preset.name, scale);
+    if cache && edge_path.is_file() && gt_path.is_file() {
+        if let (Ok(edges), Ok(truth)) =
+            (io::read_binary_edges(&edge_path), io::read_ground_truth(&gt_path))
+        {
+            return GeneratedGraph { name: preset.name.to_string(), edges, truth };
+        }
+    }
+    let cfg = preset.config(scale, WORKLOAD_SEED);
+    let g = lfr::generate(&cfg);
+    if cache {
+        let _ = std::fs::create_dir_all(cache_dir());
+        let _ = io::write_binary_edges(&edge_path, &g.edges);
+        let _ = io::write_ground_truth(&gt_path, &g.truth);
+    }
+    g
+}
+
+/// All presets fitting under `max_edges` at the given scale.
+pub fn load_all(scale: f64, max_edges: Option<usize>, cache: bool) -> Vec<GeneratedGraph> {
+    preset_range(max_edges, scale)
+        .into_iter()
+        .map(|p| load_preset(p, scale, cache))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_range_caps_by_edges() {
+        let all = preset_range(None, 1.0);
+        assert_eq!(all.len(), 6);
+        let small = preset_range(Some(200_000), 1.0);
+        assert!(small.len() < 6);
+        assert!(!small.is_empty());
+    }
+
+    #[test]
+    fn load_preset_without_cache_is_deterministic() {
+        let p = &SNAP_PRESETS[0];
+        let a = load_preset(p, 0.02, false);
+        let b = load_preset(p, 0.02, false);
+        assert_eq!(a.edges.edges, b.edges.edges);
+        assert!(a.m() > 500);
+    }
+
+    #[test]
+    fn cache_roundtrip_preserves_graph() {
+        let p = &SNAP_PRESETS[0];
+        let fresh = load_preset(p, 0.015, true); // writes cache
+        let cached = load_preset(p, 0.015, true); // reads cache
+        assert_eq!(fresh.edges.edges, cached.edges.edges);
+        assert_eq!(fresh.truth.communities, cached.truth.communities);
+        let (e, c) = cache_paths(p.name, 0.015);
+        std::fs::remove_file(e).ok();
+        std::fs::remove_file(c).ok();
+    }
+}

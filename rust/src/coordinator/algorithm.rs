@@ -1,0 +1,388 @@
+//! Algorithm 1 — the single-pass streaming decision rule.
+//!
+//! For each arriving edge `(i, j)`:
+//!
+//! 1. first-touch: unseen endpoints start in their own community;
+//! 2. `d_i += 1`, `d_j += 1`, `v[c_i] += 1`, `v[c_j] += 1`;
+//! 3. if `v[c_i] ≤ v_max` and `v[c_j] ≤ v_max`, the node whose community
+//!    has the *smaller* volume joins the other's community, moving its
+//!    degree of volume with it.
+//!
+//! Theorem 1 justifies the rule: when the threshold holds, the join
+//! increases the streaming modularity `Q_{t+1}`.
+//!
+//! [`StrConfig`] also exposes the ablation axes studied by
+//! `benches/ablations.rs`: the tie-break direction, the threshold form,
+//! and a size-based (rather than volume-based) condition — each a design
+//! choice the paper fixes; the ablations show the paper's choices are
+//! the right defaults.
+
+use crate::graph::edge::Edge;
+use crate::stream::source::EdgeSource;
+use crate::util::rng::Xoshiro256;
+
+use super::state::StreamState;
+
+/// Threshold predicate variants (ablation A1; `BothAtMost` is the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ThresholdRule {
+    /// Paper: `v[c_i] ≤ v_max && v[c_j] ≤ v_max`.
+    BothAtMost,
+    /// `v[c_i] + v[c_j] ≤ 2 v_max`.
+    SumAtMost,
+    /// Only the joining (smaller) side must satisfy `≤ v_max`.
+    SmallerAtMost,
+}
+
+/// Tie-break when `v[c_i] == v[c_j]` (paper: j joins i, i.e. [`JToI`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TieBreak {
+    /// Paper's arbitrary deterministic choice.
+    JToI,
+    IToJ,
+    /// The paper's suggested randomised variant.
+    Random,
+}
+
+/// Configuration for one streaming run.
+#[derive(Debug, Clone)]
+pub struct StrConfig {
+    /// The single parameter of the paper.
+    pub v_max: u64,
+    pub threshold: ThresholdRule,
+    pub tie_break: TieBreak,
+    /// Ablation: use community *size* (node count) instead of volume in
+    /// the threshold test (decisions still move volume).
+    pub size_condition: bool,
+    /// Seed for [`TieBreak::Random`].
+    pub seed: u64,
+}
+
+impl StrConfig {
+    pub fn new(v_max: u64) -> Self {
+        Self {
+            v_max,
+            threshold: ThresholdRule::BothAtMost,
+            tie_break: TieBreak::JToI,
+            size_condition: false,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-run decision counters (observability; negligible cost).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StrStats {
+    pub edges: u64,
+    pub joins: u64,
+    pub same_community: u64,
+    pub threshold_rejects: u64,
+    pub self_loops_skipped: u64,
+}
+
+/// Streaming clusterer: [`StreamState`] + the decision rule.
+#[derive(Debug, Clone)]
+pub struct StreamingClusterer {
+    pub state: StreamState,
+    pub config: StrConfig,
+    pub stats: StrStats,
+    /// Community sizes, maintained only under `size_condition` (the
+    /// paper's sketch does not need them).
+    sizes: Vec<u32>,
+    rng: Xoshiro256,
+}
+
+impl StreamingClusterer {
+    pub fn new(n: usize, config: StrConfig) -> Self {
+        let sizes = if config.size_condition { vec![0; n] } else { Vec::new() };
+        let rng = Xoshiro256::new(config.seed);
+        Self { state: StreamState::new(n), config, stats: StrStats::default(), sizes, rng }
+    }
+
+    /// Process a single edge (the paper's loop body).
+    ///
+    /// §Perf note: after `ensure(max(u, v))`, every index below is in
+    /// bounds by construction (`i, j < n`; community ids live in the
+    /// node-id space so `ci, cj < n` too). The accesses use
+    /// `get_unchecked` — measured ~15% of per-edge cost in the
+    /// bounds-checked version (EXPERIMENTS.md §Perf).
+    #[inline]
+    pub fn process_edge(&mut self, e: Edge) {
+        if e.is_self_loop() {
+            self.stats.self_loops_skipped += 1;
+            return;
+        }
+        let st = &mut self.state;
+        st.ensure(e.u.max(e.v));
+        if self.config.size_condition {
+            let need = st.n();
+            if self.sizes.len() < need {
+                self.sizes.resize(need, 0);
+            }
+        }
+        let (i, j) = (e.u as usize, e.v as usize);
+
+        // SAFETY: ensure() grew all three arrays to max(i, j) + 1, and
+        // community values are node ids < n (set only from e.u / e.v /
+        // prior community ids).
+        let (ci, cj, vi, vj) = unsafe {
+            // first touch: own community (size 1)
+            if *st.community.get_unchecked(i) == super::state::UNSEEN {
+                *st.community.get_unchecked_mut(i) = e.u;
+                if self.config.size_condition {
+                    self.sizes[i] = 1;
+                }
+            }
+            if *st.community.get_unchecked(j) == super::state::UNSEEN {
+                *st.community.get_unchecked_mut(j) = e.v;
+                if self.config.size_condition {
+                    self.sizes[j] = 1;
+                }
+            }
+
+            *st.degree.get_unchecked_mut(i) += 1;
+            *st.degree.get_unchecked_mut(j) += 1;
+            let ci = *st.community.get_unchecked(i) as usize;
+            let cj = *st.community.get_unchecked(j) as usize;
+            *st.volume.get_unchecked_mut(ci) += 1;
+            *st.volume.get_unchecked_mut(cj) += 1;
+            (ci, cj, *st.volume.get_unchecked(ci), *st.volume.get_unchecked(cj))
+        };
+        st.edges_processed += 1;
+        self.stats.edges += 1;
+
+        if ci == cj {
+            self.stats.same_community += 1;
+            return;
+        }
+
+        let (mi, mj) = if self.config.size_condition {
+            (self.sizes[ci] as u64, self.sizes[cj] as u64)
+        } else {
+            (vi, vj)
+        };
+        let vmax = self.config.v_max;
+        let pass = match self.config.threshold {
+            ThresholdRule::BothAtMost => mi <= vmax && mj <= vmax,
+            ThresholdRule::SumAtMost => mi + mj <= 2 * vmax,
+            ThresholdRule::SmallerAtMost => mi.min(mj) <= vmax,
+        };
+        if !pass {
+            self.stats.threshold_rejects += 1;
+            return;
+        }
+
+        // which endpoint moves? paper: smaller volume joins larger;
+        // equality resolved by the tie-break rule.
+        let i_joins = match vi.cmp(&vj) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            std::cmp::Ordering::Equal => match self.config.tie_break {
+                TieBreak::JToI => false,
+                TieBreak::IToJ => true,
+                TieBreak::Random => self.rng.bernoulli(0.5),
+            },
+        };
+
+        if i_joins {
+            let d = st.degree[i] as u64;
+            st.volume[cj] += d;
+            st.volume[ci] -= d;
+            st.community[i] = cj as u32;
+            if self.config.size_condition {
+                self.sizes[cj] += 1;
+                self.sizes[ci] -= 1;
+            }
+        } else {
+            let d = st.degree[j] as u64;
+            st.volume[ci] += d;
+            st.volume[cj] -= d;
+            st.community[j] = ci as u32;
+            if self.config.size_condition {
+                self.sizes[ci] += 1;
+                self.sizes[cj] -= 1;
+            }
+        }
+        self.stats.joins += 1;
+    }
+
+    /// Process a chunk (the hot loop of the chunked pipeline).
+    #[inline]
+    pub fn process_chunk(&mut self, chunk: &[Edge]) {
+        for &e in chunk {
+            self.process_edge(e);
+        }
+    }
+
+    /// Drain an entire source.
+    pub fn run<S: EdgeSource>(&mut self, source: &mut S, batch: usize) {
+        let mut buf = Vec::with_capacity(batch);
+        while source.next_batch(&mut buf) > 0 {
+            self.process_chunk(&buf);
+        }
+    }
+
+    /// Final community labels.
+    pub fn labels(&self) -> Vec<u32> {
+        self.state.labels()
+    }
+}
+
+/// One-call convenience over an in-memory edge slice.
+pub fn cluster_edges(n: usize, edges: &[Edge], v_max: u64) -> Vec<u32> {
+    let mut c = StreamingClusterer::new(n, StrConfig::new(v_max));
+    c.process_chunk(edges);
+    c.labels()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two triangles bridged by one edge — the canonical two-community
+    /// toy. Stream order: intra edges first (they are "early").
+    fn two_triangles() -> (usize, Vec<Edge>) {
+        let edges = vec![
+            Edge::new(0, 1),
+            Edge::new(1, 2),
+            Edge::new(0, 2),
+            Edge::new(3, 4),
+            Edge::new(4, 5),
+            Edge::new(3, 5),
+            Edge::new(2, 3), // bridge
+        ];
+        (6, edges)
+    }
+
+    #[test]
+    fn separates_two_triangles() {
+        let (n, edges) = two_triangles();
+        let labels = cluster_edges(n, &edges, 4);
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[1], labels[2]);
+        assert_eq!(labels[3], labels[4]);
+        assert_eq!(labels[4], labels[5]);
+        assert_ne!(labels[0], labels[3], "bridge must not merge: {labels:?}");
+    }
+
+    #[test]
+    fn huge_vmax_merges_aggressively() {
+        // STR moves *nodes*, never whole communities, so even with an
+        // unbounded threshold the bridge only pulls node 3 across — the
+        // partition coarsens but need not collapse to one label.
+        let (n, edges) = two_triangles();
+        let labels = cluster_edges(n, &edges, 1_000_000);
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[0], labels[2]);
+        assert_eq!(labels[0], labels[3], "bridge join must happen: {labels:?}");
+        let distinct: std::collections::HashSet<_> = labels.iter().collect();
+        assert!(distinct.len() <= 2, "{labels:?}");
+    }
+
+    #[test]
+    fn vmax_one_mostly_singletons() {
+        // v_max = 1: after the first update volumes are already 1 each,
+        // so the very first edge joins (1 <= 1) but later edges cannot.
+        let (n, edges) = two_triangles();
+        let labels = cluster_edges(n, &edges, 1);
+        // at least nodes of different triangles never merge
+        assert_ne!(labels[0], labels[3]);
+    }
+
+    #[test]
+    fn volume_conservation_invariant() {
+        let (n, edges) = two_triangles();
+        let mut c = StreamingClusterer::new(n, StrConfig::new(4));
+        for (t, &e) in edges.iter().enumerate() {
+            c.process_edge(e);
+            assert_eq!(
+                c.state.total_volume(),
+                2 * (t as u64 + 1),
+                "volume conservation broken at t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn paper_walkthrough_first_edge() {
+        // first edge (0,1): both unseen, d=1 each, v0=v1=1; 1<=vmax and
+        // tie → j joins i (paper line 15-18): c_1 = c_0 = 0,
+        // v0 = 1 + d_j = 2, v1 = 0.
+        let mut c = StreamingClusterer::new(2, StrConfig::new(8));
+        c.process_edge(Edge::new(0, 1));
+        assert_eq!(c.state.community, vec![0, 0]);
+        assert_eq!(c.state.volume, vec![2, 0]);
+        assert_eq!(c.state.degree, vec![1, 1]);
+    }
+
+    #[test]
+    fn tie_break_itoj_mirrors() {
+        let mut cfg = StrConfig::new(8);
+        cfg.tie_break = TieBreak::IToJ;
+        let mut c = StreamingClusterer::new(2, cfg);
+        c.process_edge(Edge::new(0, 1));
+        assert_eq!(c.state.community, vec![1, 1]);
+    }
+
+    #[test]
+    fn self_loops_are_skipped() {
+        let mut c = StreamingClusterer::new(2, StrConfig::new(8));
+        c.process_edge(Edge::new(1, 1));
+        assert_eq!(c.state.edges_processed, 0);
+        assert_eq!(c.stats.self_loops_skipped, 1);
+    }
+
+    #[test]
+    fn stats_partition_edge_outcomes() {
+        let (n, edges) = two_triangles();
+        let mut c = StreamingClusterer::new(n, StrConfig::new(4));
+        c.process_chunk(&edges);
+        let s = c.stats;
+        assert_eq!(s.edges, 7);
+        assert_eq!(s.joins + s.same_community + s.threshold_rejects, s.edges);
+    }
+
+    #[test]
+    fn parallel_edges_counted_independently() {
+        // multigraph: same edge twice — second is intra-community
+        let mut c = StreamingClusterer::new(2, StrConfig::new(8));
+        c.process_edge(Edge::new(0, 1));
+        c.process_edge(Edge::new(0, 1));
+        assert_eq!(c.state.edges_processed, 2);
+        assert_eq!(c.stats.same_community, 1);
+        assert_eq!(c.state.total_volume(), 4);
+    }
+
+    #[test]
+    fn grows_beyond_initial_n() {
+        let mut c = StreamingClusterer::new(0, StrConfig::new(8));
+        c.process_edge(Edge::new(100, 200));
+        assert_eq!(c.state.n(), 201);
+        assert_eq!(c.labels()[100], c.labels()[200]);
+    }
+
+    #[test]
+    fn sbm_recovers_planted_partition_decently() {
+        use crate::graph::generators::sbm::{self, SbmConfig};
+        let g = sbm::generate(&SbmConfig::equal(10, 50, 0.4, 0.002, 123));
+        let labels = cluster_edges(g.n(), &g.edges.edges, 64);
+        // measure purity: majority-truth fraction within detected comms
+        let truth = g.truth.to_labels(g.n());
+        let mut by_comm: std::collections::HashMap<u32, Vec<u32>> = Default::default();
+        for (i, &l) in labels.iter().enumerate() {
+            by_comm.entry(l).or_default().push(truth[i]);
+        }
+        let mut pure = 0usize;
+        let mut total = 0usize;
+        for (_, members) in by_comm {
+            let mut counts: std::collections::HashMap<u32, usize> = Default::default();
+            for t in &members {
+                *counts.entry(*t).or_default() += 1;
+            }
+            pure += counts.values().max().copied().unwrap_or(0);
+            total += members.len();
+        }
+        let purity = pure as f64 / total as f64;
+        assert!(purity > 0.8, "purity={purity}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Dynamic-graph extension (§5 future work): edge deletions.
+//!
+//! The paper's algorithm is insert-only; §5 notes that "modifications to
+//! the algorithm design could be made to handle events such as edge
+//! deletions". This module implements the natural such modification:
+//!
+//! * **Insert** — exactly Algorithm 1.
+//! * **Delete(i, j)** — reverse the sketch updates: `d_i -= 1`,
+//!   `d_j -= 1`, `v[c_i] -= 1`, `v[c_j] -= 1`. No community split is
+//!   attempted (splits need edge memory, which the 3-int sketch
+//!   deliberately lacks); instead a node whose degree returns to zero is
+//!   *evicted* to its own singleton community, and the eviction moves no
+//!   volume (its remaining volume contribution is zero by then).
+//!
+//! The sketch stays consistent: `Σ v_k = 2 · (inserts − deletes)` always
+//! holds, and a deleted edge that was never inserted is rejected.
+//! Deleting all edges returns every node to a singleton.
+//!
+//! The quality consequence of deletions-without-splits is measured by
+//! `benches/ablations.rs::dynamic_churn` (detection degrades gracefully
+//! with churn rate instead of collapsing).
+
+use crate::graph::edge::Edge;
+
+use super::algorithm::{StrConfig, StreamingClusterer};
+use super::state::UNSEEN;
+
+/// A dynamic stream event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    Insert(Edge),
+    Delete(Edge),
+}
+
+/// Errors from dynamic processing.
+#[derive(Debug, PartialEq, Eq)]
+pub enum DynamicError {
+    /// Deleting an edge whose endpoints were never seen / have no degree.
+    DeleteUnknown(Edge),
+}
+
+/// Insert-and-delete streaming clusterer.
+#[derive(Debug, Clone)]
+pub struct DynamicClusterer {
+    inner: StreamingClusterer,
+    pub inserts: u64,
+    pub deletes: u64,
+}
+
+impl DynamicClusterer {
+    pub fn new(n: usize, config: StrConfig) -> Self {
+        Self { inner: StreamingClusterer::new(n, config), inserts: 0, deletes: 0 }
+    }
+
+    pub fn state(&self) -> &super::state::StreamState {
+        &self.inner.state
+    }
+
+    pub fn labels(&self) -> Vec<u32> {
+        self.inner.labels()
+    }
+
+    /// Net edges currently in the graph.
+    pub fn live_edges(&self) -> u64 {
+        self.inserts - self.deletes
+    }
+
+    pub fn apply(&mut self, event: Event) -> Result<(), DynamicError> {
+        match event {
+            Event::Insert(e) => {
+                self.inner.process_edge(e);
+                if !e.is_self_loop() {
+                    self.inserts += 1;
+                }
+                Ok(())
+            }
+            Event::Delete(e) => self.delete(e),
+        }
+    }
+
+    fn delete(&mut self, e: Edge) -> Result<(), DynamicError> {
+        if e.is_self_loop() {
+            return Ok(());
+        }
+        let st = &mut self.inner.state;
+        let (i, j) = (e.u as usize, e.v as usize);
+        if i >= st.n()
+            || j >= st.n()
+            || st.degree[i] == 0
+            || st.degree[j] == 0
+            || st.community[i] == UNSEEN
+            || st.community[j] == UNSEEN
+        {
+            return Err(DynamicError::DeleteUnknown(e));
+        }
+        st.degree[i] -= 1;
+        st.degree[j] -= 1;
+        let ci = st.community[i] as usize;
+        let cj = st.community[j] as usize;
+        debug_assert!(st.volume[ci] > 0 && st.volume[cj] > 0);
+        st.volume[ci] = st.volume[ci].saturating_sub(1);
+        st.volume[cj] = st.volume[cj].saturating_sub(1);
+        st.edges_processed = st.edges_processed.saturating_sub(1);
+        self.deletes += 1;
+
+        // eviction: an isolated node returns to its own community
+        for (node, comm) in [(i, ci), (j, cj)] {
+            if st.degree[node] == 0 && comm != node {
+                st.community[node] = node as u32;
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply a batch of events, counting failures.
+    pub fn apply_all(&mut self, events: &[Event]) -> u64 {
+        let mut failures = 0;
+        for &ev in events {
+            if self.apply(ev).is_err() {
+                failures += 1;
+            }
+        }
+        failures
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle_events() -> Vec<Event> {
+        vec![
+            Event::Insert(Edge::new(0, 1)),
+            Event::Insert(Edge::new(1, 2)),
+            Event::Insert(Edge::new(0, 2)),
+        ]
+    }
+
+    #[test]
+    fn insert_then_delete_restores_volume_balance() {
+        let mut d = DynamicClusterer::new(3, StrConfig::new(8));
+        assert_eq!(d.apply_all(&triangle_events()), 0);
+        assert_eq!(d.state().total_volume(), 6);
+        d.apply(Event::Delete(Edge::new(0, 1))).unwrap();
+        assert_eq!(d.state().total_volume(), 4);
+        assert_eq!(d.live_edges(), 2);
+    }
+
+    #[test]
+    fn delete_unknown_edge_rejected() {
+        let mut d = DynamicClusterer::new(3, StrConfig::new(8));
+        assert_eq!(
+            d.apply(Event::Delete(Edge::new(0, 1))),
+            Err(DynamicError::DeleteUnknown(Edge::new(0, 1)))
+        );
+    }
+
+    #[test]
+    fn deleting_everything_leaves_singleton_volumes() {
+        let mut d = DynamicClusterer::new(3, StrConfig::new(8));
+        d.apply_all(&triangle_events());
+        for e in [Edge::new(0, 1), Edge::new(1, 2), Edge::new(0, 2)] {
+            d.apply(Event::Delete(e)).unwrap();
+        }
+        assert_eq!(d.state().total_volume(), 0);
+        assert_eq!(d.live_edges(), 0);
+        // all nodes isolated → all evicted to their own communities
+        let labels = d.labels();
+        assert_eq!(labels.len(), 3);
+        let set: std::collections::HashSet<_> = labels.iter().collect();
+        assert_eq!(set.len(), 3, "labels={labels:?}");
+    }
+
+    #[test]
+    fn churn_keeps_invariant() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(3);
+        let mut d = DynamicClusterer::new(64, StrConfig::new(16));
+        let mut live: Vec<Edge> = Vec::new();
+        for _ in 0..5000 {
+            if live.is_empty() || rng.bernoulli(0.7) {
+                let u = rng.range(0, 64) as u32;
+                let mut v = rng.range(0, 64) as u32;
+                if u == v {
+                    v = (v + 1) % 64;
+                }
+                let e = Edge::new(u, v);
+                d.apply(Event::Insert(e)).unwrap();
+                live.push(e);
+            } else {
+                let idx = rng.range(0, live.len());
+                let e = live.swap_remove(idx);
+                d.apply(Event::Delete(e)).unwrap();
+            }
+            assert_eq!(d.state().total_volume(), 2 * d.live_edges());
+        }
+    }
+
+    #[test]
+    fn self_loop_events_are_noops() {
+        let mut d = DynamicClusterer::new(2, StrConfig::new(8));
+        d.apply(Event::Insert(Edge::new(1, 1))).unwrap();
+        d.apply(Event::Delete(Edge::new(1, 1))).unwrap();
+        assert_eq!(d.live_edges(), 0);
+    }
+}

@@ -1,0 +1,24 @@
+//! The paper's contribution: the streaming clustering coordinator.
+//!
+//! * [`state`] — the three-integers-per-node sketch (degree, community,
+//!   community volume) of Algorithm 1.
+//! * [`algorithm`] — the single-pass edge-processing rule, plus the
+//!   ablation variants benchmarked by `benches/ablations.rs`.
+//! * [`sweep`] — the §2.5 multi-parameter run: one pass, `A` concurrent
+//!   `v_max` values sharing the degree table.
+//! * [`selection`] — sketch-only scoring of sweep results (entropy /
+//!   density, computed either natively or via the PJRT artifacts).
+//! * [`parallel`] — sharded leader/worker execution over the stream
+//!   substrate.
+//! * [`dynamic`] — the §5 future-work extension: edge deletions.
+
+pub mod algorithm;
+pub mod dynamic;
+pub mod parallel;
+pub mod refine;
+pub mod selection;
+pub mod state;
+pub mod sweep;
+
+pub use algorithm::{StreamingClusterer, StrConfig};
+pub use state::StreamState;

@@ -1,0 +1,401 @@
+//! Sharded leader/worker streaming execution.
+//!
+//! The single-pass algorithm is sequential by nature (each decision
+//! reads state written by earlier edges), but its state is *node-local*:
+//! a decision for edge `(i, j)` touches only the sketches of `i`, `j`
+//! and their communities. We exploit that with hash-sharding
+//! (`stream::shard`):
+//!
+//! * **Workers** — edges whose endpoints hash to the same shard are
+//!   processed by that shard's worker on its own [`StreamingClusterer`].
+//!   Workers never share nodes, so their community id spaces are
+//!   disjoint by construction (community ids are node ids).
+//! * **Leader** — cross-shard edges are buffered to the leader queue.
+//!   After the workers drain, their states are merged (disjoint array
+//!   union) and the leader replays the cross edges through the merged
+//!   state with the standard rule.
+//!
+//! This is *deferred cross-edge resolution*: intra-shard edges see
+//! exactly the sequential algorithm; cross-shard edges are processed
+//! late, as if they had arrived at the end of the stream. Under the
+//! paper's own intuition (intra-community edges arrive early,
+//! inter-community edges late) this reordering is benign — and the
+//! Table 2 parity test (`rust/tests/parallel_parity.rs`) verifies the
+//! detection quality matches the sequential run on SBM workloads.
+
+use crate::graph::edge::Edge;
+use crate::stream::shard::{route, Route};
+use crate::util::channel::Channel;
+
+use super::algorithm::{StrConfig, StreamingClusterer};
+use super::state::{StreamState, UNSEEN};
+
+/// Configuration for the parallel run.
+#[derive(Debug, Clone)]
+pub struct ParallelConfig {
+    pub shards: usize,
+    pub str_config: StrConfig,
+    /// Bounded queue depth per worker (chunks).
+    pub queue_depth: usize,
+    /// Edges per dispatched chunk.
+    pub chunk_size: usize,
+}
+
+impl ParallelConfig {
+    pub fn new(shards: usize, v_max: u64) -> Self {
+        Self {
+            shards,
+            str_config: StrConfig::new(v_max),
+            queue_depth: 8,
+            chunk_size: 16_384,
+        }
+    }
+}
+
+/// Outcome of a parallel run.
+#[derive(Debug)]
+pub struct ParallelResult {
+    pub state: StreamState,
+    pub local_edges: u64,
+    pub cross_edges: u64,
+}
+
+impl ParallelResult {
+    pub fn labels(&self) -> Vec<u32> {
+        self.state.labels()
+    }
+}
+
+/// Merge disjoint worker states (workers never touch the same node).
+fn merge_states(n: usize, states: Vec<StreamState>) -> StreamState {
+    let mut merged = StreamState::new(n);
+    for st in states {
+        for i in 0..st.n() {
+            if st.degree[i] > 0 || st.community[i] != UNSEEN {
+                debug_assert_eq!(merged.degree[i], 0, "shard overlap at node {i}");
+                merged.degree[i] = st.degree[i];
+                merged.community[i] = st.community[i];
+            }
+            if st.volume[i] > 0 {
+                merged.volume[i] += st.volume[i];
+            }
+        }
+        merged.edges_processed += st.edges_processed;
+    }
+    merged
+}
+
+/// Run the parallel coordinator over an in-memory stream.
+///
+/// The dispatcher thread shards the stream; `shards` workers consume
+/// their queues concurrently; the leader replays cross edges after the
+/// workers finish.
+pub fn run_parallel(n: usize, edges: &[Edge], config: &ParallelConfig) -> ParallelResult {
+    let shards = config.shards.max(1);
+    if shards == 1 {
+        let mut c = StreamingClusterer::new(n, config.str_config.clone());
+        c.process_chunk(edges);
+        return ParallelResult {
+            state: c.state,
+            local_edges: c.stats.edges,
+            cross_edges: 0,
+        };
+    }
+
+    let queues: Vec<Channel<Vec<Edge>>> =
+        (0..shards).map(|_| Channel::bounded(config.queue_depth)).collect();
+    let leader_queue: Channel<Vec<Edge>> = Channel::bounded(usize::MAX / 2);
+
+    let (states, local_edges, cross_edges) = std::thread::scope(|s| {
+        // workers
+        let handles: Vec<_> = (0..shards)
+            .map(|w| {
+                let q = queues[w].clone();
+                let cfg = config.str_config.clone();
+                s.spawn(move || {
+                    let mut c = StreamingClusterer::new(n, cfg);
+                    while let Some(chunk) = q.recv() {
+                        c.process_chunk(&chunk);
+                    }
+                    c.state
+                })
+            })
+            .collect();
+
+        // dispatcher (this thread)
+        let mut per_shard: Vec<Vec<Edge>> = (0..shards).map(|_| Vec::new()).collect();
+        let mut nlocal = 0u64;
+        let mut ncross = 0u64;
+        let mut cross_buf: Vec<Edge> = Vec::new();
+        for &e in edges {
+            match route(e, shards) {
+                Route::Local(w) => {
+                    nlocal += 1;
+                    per_shard[w].push(e);
+                    if per_shard[w].len() >= config.chunk_size {
+                        let batch = std::mem::take(&mut per_shard[w]);
+                        let _ = queues[w].send(batch);
+                    }
+                }
+                Route::Cross => {
+                    ncross += 1;
+                    cross_buf.push(e);
+                    if cross_buf.len() >= config.chunk_size {
+                        let batch = std::mem::take(&mut cross_buf);
+                        let _ = leader_queue.send(batch);
+                    }
+                }
+            }
+        }
+        for (w, batch) in per_shard.into_iter().enumerate() {
+            if !batch.is_empty() {
+                let _ = queues[w].send(batch);
+            }
+            queues[w].close();
+        }
+        if !cross_buf.is_empty() {
+            let _ = leader_queue.send(cross_buf);
+        }
+        leader_queue.close();
+
+        let states: Vec<StreamState> =
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect();
+        (states, nlocal, ncross)
+    });
+
+    // leader: merge and replay cross edges
+    let merged = merge_states(n, states);
+    let mut leader = StreamingClusterer::new(0, config.str_config.clone());
+    leader.state = merged;
+    while let Some(chunk) = leader_queue.recv() {
+        leader.process_chunk(&chunk);
+    }
+
+    ParallelResult {
+        state: leader.state,
+        local_edges,
+        cross_edges,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Concurrent mode: shared atomic sketch.
+// ---------------------------------------------------------------------
+
+use std::sync::atomic::{AtomicI64, AtomicU32, AtomicU64, Ordering};
+
+/// Shared-state concurrent execution (§Perf): the three per-node
+/// integers become atomics and all workers stream disjoint slices of
+/// the edge list against the *same* sketch with `Relaxed` operations.
+///
+/// Races are benign for this heuristic: a stale community/volume read
+/// can mis-route one join decision, but every volume update is a paired
+/// `fetch_add`/`fetch_sub`, so the conservation invariant
+/// `Σ v_k = 2·t` holds *exactly* even under contention (asserted by the
+/// tests), and detection quality matches the sequential run to within
+/// noise (see `parallel_quality` tests). This is the mode that actually
+/// speeds up wall-clock; the sharded leader/worker mode above is the
+/// distribution-shaped architecture (disjoint state, deterministic).
+pub struct AtomicSketch {
+    degree: Vec<AtomicU32>,
+    community: Vec<AtomicU32>,
+    volume: Vec<AtomicI64>,
+    edges: AtomicU64,
+}
+
+impl AtomicSketch {
+    pub fn new(n: usize) -> Self {
+        Self {
+            degree: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            community: (0..n).map(|_| AtomicU32::new(UNSEEN)).collect(),
+            volume: (0..n).map(|_| AtomicI64::new(0)).collect(),
+            edges: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn process_edge(&self, e: Edge, v_max: i64) {
+        if e.is_self_loop() {
+            return;
+        }
+        let (i, j) = (e.u as usize, e.v as usize);
+        debug_assert!(i < self.degree.len() && j < self.degree.len());
+
+        // first touch: own community
+        let _ = self.community[i].compare_exchange(
+            UNSEEN,
+            e.u,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        );
+        let _ = self.community[j].compare_exchange(
+            UNSEEN,
+            e.v,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        );
+
+        let di = self.degree[i].fetch_add(1, Ordering::Relaxed) as i64 + 1;
+        let dj = self.degree[j].fetch_add(1, Ordering::Relaxed) as i64 + 1;
+        let ci = self.community[i].load(Ordering::Relaxed) as usize;
+        let cj = self.community[j].load(Ordering::Relaxed) as usize;
+        let vi = self.volume[ci].fetch_add(1, Ordering::Relaxed) + 1;
+        let vj = self.volume[cj].fetch_add(1, Ordering::Relaxed) + 1;
+        self.edges.fetch_add(1, Ordering::Relaxed);
+
+        if ci == cj {
+            return;
+        }
+        if vi <= v_max && vj <= v_max {
+            // strict comparison = the paper's j-joins-i tie-break
+            if vi < vj {
+                self.volume[cj].fetch_add(di, Ordering::Relaxed);
+                self.volume[ci].fetch_sub(di, Ordering::Relaxed);
+                self.community[i].store(cj as u32, Ordering::Relaxed);
+            } else {
+                self.volume[ci].fetch_add(dj, Ordering::Relaxed);
+                self.volume[cj].fetch_sub(dj, Ordering::Relaxed);
+                self.community[j].store(ci as u32, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Snapshot the labels (unseen nodes as singletons).
+    pub fn labels(&self) -> Vec<u32> {
+        self.community
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let c = c.load(Ordering::Relaxed);
+                if c == UNSEEN {
+                    i as u32
+                } else {
+                    c
+                }
+            })
+            .collect()
+    }
+
+    pub fn total_volume(&self) -> i64 {
+        self.volume.iter().map(|v| v.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn edges_processed(&self) -> u64 {
+        self.edges.load(Ordering::Relaxed)
+    }
+}
+
+/// Stream `edges` through a shared atomic sketch with `threads` workers
+/// over disjoint slices. Node ids must be `< n` (callers stream
+/// pre-generated or pre-remapped graphs; grow-on-demand is incompatible
+/// with lock-free sharing).
+pub fn run_concurrent(n: usize, edges: &[Edge], v_max: u64, threads: usize) -> AtomicSketch {
+    let sketch = AtomicSketch::new(n);
+    let threads = threads.max(1);
+    let chunk = edges.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        for slice in edges.chunks(chunk.max(1)) {
+            let sketch = &sketch;
+            s.spawn(move || {
+                for &e in slice {
+                    sketch.process_edge(e, v_max as i64);
+                }
+            });
+        }
+    });
+    sketch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::sbm::{self, SbmConfig};
+    use crate::metrics;
+
+    #[test]
+    fn single_shard_equals_sequential() {
+        let g = sbm::generate(&SbmConfig::equal(6, 30, 0.4, 0.01, 5));
+        let seq = super::super::algorithm::cluster_edges(g.n(), &g.edges.edges, 32);
+        let par = run_parallel(g.n(), &g.edges.edges, &ParallelConfig::new(1, 32));
+        assert_eq!(par.labels(), seq);
+    }
+
+    #[test]
+    fn volume_conservation_after_merge_and_replay() {
+        let g = sbm::generate(&SbmConfig::equal(8, 40, 0.3, 0.01, 9));
+        let par = run_parallel(g.n(), &g.edges.edges, &ParallelConfig::new(4, 64));
+        assert_eq!(par.state.total_volume(), 2 * par.state.edges_processed);
+        assert_eq!(
+            par.state.edges_processed,
+            g.m() as u64,
+            "every edge must be processed exactly once"
+        );
+        assert_eq!(par.local_edges + par.cross_edges, g.m() as u64);
+    }
+
+    #[test]
+    fn parallel_quality_close_to_sequential_on_sbm() {
+        let g = sbm::generate(&SbmConfig::equal(10, 50, 0.35, 0.003, 13));
+        let truth = g.truth.to_labels(g.n());
+        let seq = super::super::algorithm::cluster_edges(g.n(), &g.edges.edges, 128);
+        let par = run_parallel(g.n(), &g.edges.edges, &ParallelConfig::new(4, 128));
+        let nmi_seq = metrics::nmi::nmi_labels(&seq, &truth);
+        let nmi_par = metrics::nmi::nmi_labels(&par.labels(), &truth);
+        assert!(
+            nmi_par > nmi_seq * 0.7,
+            "parallel NMI {nmi_par} too far below sequential {nmi_seq}"
+        );
+    }
+
+    #[test]
+    fn concurrent_conserves_volume_exactly() {
+        let g = sbm::generate(&SbmConfig::equal(10, 50, 0.3, 0.005, 23));
+        for threads in [1, 2, 4, 8] {
+            let sketch = run_concurrent(g.n(), &g.edges.edges, 128, threads);
+            assert_eq!(sketch.edges_processed(), g.m() as u64, "threads={threads}");
+            assert_eq!(
+                sketch.total_volume(),
+                2 * g.m() as i64,
+                "conservation broken at threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn concurrent_single_thread_matches_sequential() {
+        let g = sbm::generate(&SbmConfig::equal(6, 30, 0.35, 0.01, 29));
+        let seq = super::super::algorithm::cluster_edges(g.n(), &g.edges.edges, 64);
+        let conc = run_concurrent(g.n(), &g.edges.edges, 64, 1).labels();
+        assert_eq!(seq, conc);
+    }
+
+    #[test]
+    fn concurrent_quality_close_to_sequential() {
+        let g = sbm::generate(&SbmConfig::equal(10, 50, 0.35, 0.003, 31));
+        let truth = g.truth.to_labels(g.n());
+        let seq = super::super::algorithm::cluster_edges(g.n(), &g.edges.edges, 128);
+        let conc = run_concurrent(g.n(), &g.edges.edges, 128, 8).labels();
+        let nmi_seq = metrics::nmi::nmi_labels(&seq, &truth);
+        let nmi_conc = metrics::nmi::nmi_labels(&conc, &truth);
+        assert!(
+            nmi_conc > nmi_seq * 0.8,
+            "concurrent NMI {nmi_conc} vs sequential {nmi_seq}"
+        );
+    }
+
+    #[test]
+    fn concurrent_labels_are_valid() {
+        let g = sbm::generate(&SbmConfig::equal(8, 40, 0.3, 0.01, 37));
+        let labels = run_concurrent(g.n(), &g.edges.edges, 64, 4).labels();
+        assert!(labels.iter().all(|&l| (l as usize) < g.n()));
+    }
+
+    #[test]
+    fn workers_touch_disjoint_nodes() {
+        // merge_states debug-asserts disjointness; run a real workload
+        // under it
+        let g = sbm::generate(&SbmConfig::equal(5, 40, 0.3, 0.02, 17));
+        let par = run_parallel(g.n(), &g.edges.edges, &ParallelConfig::new(3, 64));
+        assert!(par.state.n() >= g.n());
+    }
+}

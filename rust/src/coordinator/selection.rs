@@ -1,0 +1,272 @@
+//! Sketch-only selection of the best sweep result (§2.5).
+//!
+//! The paper's constraint: the winner must be picked using only the
+//! `(c, v)` dictionaries — metrics like modularity that need the graph
+//! are off-limits. We score each sweep with entropy `H(v)` and average
+//! density `D(c, v)` (the two §2.5 metrics), computed by a
+//! [`MetricEngine`]:
+//!
+//! * [`NativeEngine`] — pure-Rust reference implementation;
+//! * `runtime::PjrtEngine` — the AOT-compiled JAX/Pallas artifact
+//!   (`sweep_metrics.hlo.txt`), same math, executed via PJRT. The two
+//!   are cross-checked by integration tests.
+//!
+//! Padding contract (DESIGN.md §7): per sweep, the top `K-1` communities
+//! by volume occupy buckets `0..K-1` and *all remaining* communities are
+//! merged into the tail bucket `K-1` (volumes summed, sizes summed — the
+//! entropy/balance of the tail is approximated as one community, which
+//! is exact whenever the sweep has ≤ K communities).
+
+use super::sweep::MultiSweep;
+
+/// Number of sweep rows the AOT artifact expects.
+pub const NUM_SWEEPS: usize = 8;
+/// Padded community buckets per sweep.
+pub const VOLUME_BUCKETS: usize = 4096;
+
+/// Scores for one sweep row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SweepScores {
+    pub entropy: f32,
+    pub density: f32,
+    pub balance: f32,
+    pub ncomms: f32,
+    /// density · log(1 + ncomms) — the default selector.
+    pub density_score: f32,
+    /// entropy − balance — the alternative selector.
+    pub balance_score: f32,
+}
+
+/// Strategy used to pick the winning sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectionRule {
+    /// argmax density_score (default; robust against the all-singleton
+    /// degenerate sketch).
+    DensityScore,
+    /// argmax balance_score.
+    BalanceScore,
+}
+
+/// Engine computing [`SweepScores`] from padded sketch tables.
+pub trait MetricEngine {
+    /// vols/sizes are `A × K` row-major; w is the per-row total weight.
+    fn sweep_metrics(
+        &mut self,
+        vols: &[f32],
+        sizes: &[f32],
+        w: &[f32],
+        a: usize,
+        k: usize,
+    ) -> Vec<SweepScores>;
+}
+
+/// Pure-Rust metric engine (bit-for-bit the ref.py math).
+#[derive(Debug, Default, Clone)]
+pub struct NativeEngine;
+
+impl MetricEngine for NativeEngine {
+    fn sweep_metrics(
+        &mut self,
+        vols: &[f32],
+        sizes: &[f32],
+        w: &[f32],
+        a: usize,
+        k: usize,
+    ) -> Vec<SweepScores> {
+        assert_eq!(vols.len(), a * k);
+        assert_eq!(sizes.len(), a * k);
+        assert_eq!(w.len(), a);
+        (0..a)
+            .map(|row| {
+                let vr = &vols[row * k..(row + 1) * k];
+                let sr = &sizes[row * k..(row + 1) * k];
+                let wt = w[row];
+                let mut h = 0.0f64;
+                let mut dnum = 0.0f64;
+                let mut bal = 0.0f64;
+                let mut nc = 0.0f64;
+                for i in 0..k {
+                    let v = vr[i] as f64;
+                    let s = sr[i] as f64;
+                    if wt > 0.0 && v > 0.0 {
+                        let p = v / wt as f64;
+                        h -= p * p.ln();
+                        bal += p * p;
+                    }
+                    if s > 1.0 {
+                        dnum += v / (s * (s - 1.0));
+                    }
+                    if s > 0.0 {
+                        nc += 1.0;
+                    }
+                }
+                let density = if nc > 0.0 { dnum / nc } else { 0.0 };
+                SweepScores {
+                    entropy: h as f32,
+                    density: density as f32,
+                    balance: bal as f32,
+                    ncomms: nc as f32,
+                    density_score: (density * (1.0 + nc).ln()) as f32,
+                    balance_score: (h - bal) as f32,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Padded tables ready for either engine.
+#[derive(Debug, Clone)]
+pub struct PaddedSketch {
+    pub vols: Vec<f32>,
+    pub sizes: Vec<f32>,
+    pub w: Vec<f32>,
+    pub a: usize,
+    pub k: usize,
+}
+
+/// Build the padded `(A, K)` tables from a finished [`MultiSweep`].
+/// Rows beyond the sweep count are zero (scored as empty).
+pub fn pad_sweep(sweep: &MultiSweep, a: usize, k: usize) -> PaddedSketch {
+    assert!(sweep.num_sweeps() <= a, "sweep count exceeds artifact rows");
+    let mut vols = vec![0f32; a * k];
+    let mut sizes = vec![0f32; a * k];
+    let mut w = vec![0f32; a];
+    for row in 0..sweep.num_sweeps() {
+        let cv = sweep.community_volumes(row);
+        w[row] = (2 * sweep.edges_processed) as f32;
+        let head = cv.len().min(k - 1);
+        for (b, &(vol, size)) in cv[..head].iter().enumerate() {
+            vols[row * k + b] = vol as f32;
+            sizes[row * k + b] = size as f32;
+        }
+        // tail bucket merges the rest
+        let (mut tv, mut ts) = (0u64, 0u64);
+        for &(vol, size) in &cv[head..] {
+            tv += vol;
+            ts += size as u64;
+        }
+        if ts > 0 {
+            vols[row * k + (k - 1)] = tv as f32;
+            sizes[row * k + (k - 1)] = ts as f32;
+        }
+    }
+    PaddedSketch { vols, sizes, w, a, k }
+}
+
+/// Score all sweeps and return `(winner index, scores)`.
+///
+/// A *fragmentation filter* runs before the argmax: sweeps whose
+/// community count exceeds `n / 3` (mean community size < 3 nodes) are
+/// excluded when any non-fragmented sweep exists. Density monotonically
+/// rewards fragmentation, so without the filter the smallest `v_max`
+/// always wins; the filter is still sketch-only (it needs only `n` and
+/// the community count).
+pub fn select(
+    sweep: &MultiSweep,
+    engine: &mut dyn MetricEngine,
+    rule: SelectionRule,
+) -> (usize, Vec<SweepScores>) {
+    let padded = pad_sweep(sweep, NUM_SWEEPS, VOLUME_BUCKETS);
+    let scores = engine.sweep_metrics(
+        &padded.vols,
+        &padded.sizes,
+        &padded.w,
+        padded.a,
+        padded.k,
+    );
+    let live = &scores[..sweep.num_sweeps()];
+    let key = |s: &SweepScores| match rule {
+        SelectionRule::DensityScore => s.density_score,
+        SelectionRule::BalanceScore => s.balance_score,
+    };
+    // the padded table caps its ncomms at K (tail merging), so the
+    // fragmentation filter uses the sketch's *true* community counts
+    let true_counts: Vec<usize> = (0..sweep.num_sweeps())
+        .map(|a| sweep.community_volumes(a).len())
+        .collect();
+    let frag_cap = sweep.n() / 3;
+    let unfragmented = true_counts.iter().any(|&c| c > 0 && c <= frag_cap);
+    let winner = live
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| !unfragmented || true_counts[i] <= frag_cap)
+        .max_by(|(_, x), (_, y)| key(x).partial_cmp(&key(y)).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    (winner, scores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::sbm::{self, SbmConfig};
+
+    fn run_sweep() -> MultiSweep {
+        let g = sbm::generate(&SbmConfig::equal(8, 40, 0.35, 0.005, 21));
+        let mut sweep = MultiSweep::new(g.n(), MultiSweep::geometric_ladder(2, 8));
+        sweep.process_chunk(&g.edges.edges);
+        sweep
+    }
+
+    #[test]
+    fn padding_conserves_volume_mass() {
+        let sweep = run_sweep();
+        let p = pad_sweep(&sweep, NUM_SWEEPS, VOLUME_BUCKETS);
+        for row in 0..sweep.num_sweeps() {
+            let total: f64 = p.vols[row * p.k..(row + 1) * p.k]
+                .iter()
+                .map(|&x| x as f64)
+                .sum();
+            assert_eq!(total as u64, 2 * sweep.edges_processed, "row {row}");
+        }
+    }
+
+    #[test]
+    fn tail_bucket_used_when_overflowing() {
+        let sweep = run_sweep();
+        // force a tiny K so the tail engages
+        let p = pad_sweep(&sweep, NUM_SWEEPS, 4);
+        let row0 = &p.sizes[0..4];
+        assert!(row0[3] > 0.0, "tail empty: {row0:?}");
+    }
+
+    #[test]
+    fn native_engine_entropy_of_uniform() {
+        let mut e = NativeEngine;
+        let k = 8;
+        let vols = vec![1.0f32; k];
+        let sizes = vec![2.0f32; k];
+        let w = vec![k as f32];
+        let s = e.sweep_metrics(&vols, &sizes, &w, 1, k);
+        assert!((s[0].entropy - (k as f32).ln()).abs() < 1e-5);
+        assert!((s[0].balance - 1.0 / k as f32).abs() < 1e-6);
+        assert_eq!(s[0].ncomms, k as f32);
+    }
+
+    #[test]
+    fn selection_picks_reasonable_vmax_on_sbm() {
+        // communities of 40 nodes, ~0.35 intra density → volume ≈
+        // 40 · 15 ≈ 600. The ladder 2..256: the winner should not be the
+        // tiny-v_max rows (all singletons) nor produce 1 giant community.
+        let sweep = run_sweep();
+        let (winner, scores) = select(&sweep, &mut NativeEngine, SelectionRule::DensityScore);
+        let nc = scores[winner].ncomms;
+        assert!(nc >= 2.0, "winner collapsed to {nc} communities");
+        assert!(
+            (scores[winner].ncomms as usize) < sweep.n(),
+            "winner is all singletons"
+        );
+    }
+
+    #[test]
+    fn zero_rows_scored_as_empty() {
+        let g = sbm::generate(&SbmConfig::equal(4, 20, 0.4, 0.01, 3));
+        let mut sweep = MultiSweep::new(g.n(), vec![8, 64]); // only 2 rows
+        sweep.process_chunk(&g.edges.edges);
+        let (winner, scores) = select(&sweep, &mut NativeEngine, SelectionRule::DensityScore);
+        assert!(winner < 2);
+        for s in &scores[2..] {
+            assert_eq!(s.ncomms, 0.0);
+        }
+    }
+}

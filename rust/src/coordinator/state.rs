@@ -1,0 +1,172 @@
+//! The paper's sketch: exactly three integers per node.
+//!
+//! Algorithm 1 keeps dictionaries `d` (degree), `c` (community) and `v`
+//! (community volume). Node ids here are dense `u32`, so the dictionaries
+//! become three flat arrays — the same representation the authors' C++
+//! implementation uses. Community ids live in the node-id space: a
+//! node's initial community is itself, so `v` is indexed by community id
+//! without a separate allocator (the paper's fresh-index counter `k` is
+//! an artifact of its dictionary formulation; using the node's own id is
+//! the standard equivalent choice and keeps `v` the same size as `c`).
+//!
+//! Memory: 4 + 4 + 8 bytes/node (volume is u64 so the billion-edge
+//! regime cannot overflow) — the paper's "three integers per node".
+
+/// Sketch state for one streaming run.
+#[derive(Debug, Clone)]
+pub struct StreamState {
+    /// d_i — degree observed so far.
+    pub degree: Vec<u32>,
+    /// c_i — current community (u32::MAX = node not yet seen).
+    pub community: Vec<u32>,
+    /// v_k — community volume, indexed by community id (= node id space).
+    pub volume: Vec<u64>,
+    /// Edges processed (t).
+    pub edges_processed: u64,
+}
+
+pub const UNSEEN: u32 = u32::MAX;
+
+impl StreamState {
+    /// Pre-sized for `n` nodes (grows on demand if the stream mentions
+    /// larger ids).
+    pub fn new(n: usize) -> Self {
+        Self {
+            degree: vec![0; n],
+            community: vec![UNSEEN; n],
+            volume: vec![0; n],
+            edges_processed: 0,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.degree.len()
+    }
+
+    /// Grow to hold node id `i`.
+    #[inline]
+    pub fn ensure(&mut self, i: u32) {
+        let need = i as usize + 1;
+        if need > self.degree.len() {
+            self.degree.resize(need, 0);
+            self.community.resize(need, UNSEEN);
+            self.volume.resize(need, 0);
+        }
+    }
+
+    /// First-touch initialisation: a node starts in its own community.
+    #[inline]
+    pub fn touch(&mut self, i: u32) {
+        if self.community[i as usize] == UNSEEN {
+            self.community[i as usize] = i;
+        }
+    }
+
+    /// Current community labels, with unseen nodes as singletons.
+    pub fn labels(&self) -> Vec<u32> {
+        self.community
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| if c == UNSEEN { i as u32 } else { c })
+            .collect()
+    }
+
+    /// Sketch bytes (the memory-consumption experiment, §4.4).
+    pub fn memory_bytes(&self) -> usize {
+        self.degree.len() * 4 + self.community.len() * 4 + self.volume.len() * 8
+    }
+
+    /// Sum of community volumes — must equal 2 · edges_processed
+    /// (invariant checked by the property tests).
+    pub fn total_volume(&self) -> u64 {
+        self.volume.iter().sum()
+    }
+
+    /// Number of non-empty communities.
+    pub fn community_count(&self) -> usize {
+        let mut seen = vec![false; self.n()];
+        let mut count = 0;
+        for (i, &c) in self.community.iter().enumerate() {
+            let c = if c == UNSEEN {
+                continue;
+            } else {
+                c as usize
+            };
+            if !seen[c] {
+                seen[c] = true;
+                count += 1;
+            }
+            let _ = i;
+        }
+        count
+    }
+
+    /// (volume, size) per non-empty community, sorted by volume
+    /// descending. Used by selection and reporting.
+    pub fn community_volumes(&self) -> Vec<(u32, u64, u32)> {
+        let n = self.n();
+        let mut size = vec![0u32; n];
+        for &c in &self.community {
+            if c != UNSEEN {
+                size[c as usize] += 1;
+            }
+        }
+        let mut out: Vec<(u32, u64, u32)> = (0..n)
+            .filter(|&k| size[k] > 0)
+            .map(|k| (k as u32, self.volume[k], size[k]))
+            .collect();
+        out.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn touch_initialises_own_community() {
+        let mut st = StreamState::new(4);
+        st.touch(2);
+        assert_eq!(st.community[2], 2);
+        st.community[2] = 0;
+        st.touch(2); // idempotent — must not reset
+        assert_eq!(st.community[2], 0);
+    }
+
+    #[test]
+    fn ensure_grows() {
+        let mut st = StreamState::new(2);
+        st.ensure(10);
+        assert_eq!(st.n(), 11);
+        assert_eq!(st.community[10], UNSEEN);
+    }
+
+    #[test]
+    fn labels_default_unseen_to_singletons() {
+        let mut st = StreamState::new(3);
+        st.touch(0);
+        st.community[0] = 2;
+        assert_eq!(st.labels(), vec![2, 1, 2]);
+    }
+
+    #[test]
+    fn memory_is_sixteen_bytes_per_node() {
+        let st = StreamState::new(1000);
+        assert_eq!(st.memory_bytes(), 16_000);
+    }
+
+    #[test]
+    fn community_volumes_sorted_desc() {
+        let mut st = StreamState::new(4);
+        for i in 0..4 {
+            st.touch(i);
+        }
+        st.community = vec![0, 0, 2, 3];
+        st.volume = vec![10, 0, 30, 5];
+        let cv = st.community_volumes();
+        assert_eq!(cv[0], (2, 30, 1));
+        assert_eq!(cv[1], (0, 10, 2));
+        assert_eq!(cv[2], (3, 5, 1));
+    }
+}

@@ -1,0 +1,230 @@
+//! §2.5 multi-parameter streaming: one pass, many `v_max` values.
+//!
+//! The degree table `d` is shared across all parameter values (degrees
+//! do not depend on `v_max`); only `c` and `v` are duplicated per sweep,
+//! exactly as the paper prescribes. The pass is still single-touch per
+//! edge: each arriving edge updates every sweep's sketch.
+//!
+//! After the pass, [`crate::coordinator::selection`] scores the sweeps
+//! from their sketches alone (no access to the graph) and picks the
+//! winner.
+
+use crate::graph::edge::Edge;
+use crate::stream::source::EdgeSource;
+
+use super::state::UNSEEN;
+
+/// One-pass, A-parameter streaming state.
+#[derive(Debug, Clone)]
+pub struct MultiSweep {
+    pub v_maxes: Vec<u64>,
+    /// Shared degree table.
+    pub degree: Vec<u32>,
+    /// Per-sweep community table, `community[a][i]`.
+    pub community: Vec<Vec<u32>>,
+    /// Per-sweep volume table, `volume[a][k]`.
+    pub volume: Vec<Vec<u64>>,
+    pub edges_processed: u64,
+}
+
+impl MultiSweep {
+    pub fn new(n: usize, v_maxes: Vec<u64>) -> Self {
+        assert!(!v_maxes.is_empty());
+        let a = v_maxes.len();
+        Self {
+            v_maxes,
+            degree: vec![0; n],
+            community: vec![vec![UNSEEN; n]; a],
+            volume: vec![vec![0; n]; a],
+            edges_processed: 0,
+        }
+    }
+
+    /// Geometric ladder `base · 2^i`, the standard sweep for the paper's
+    /// single integer parameter.
+    pub fn geometric_ladder(base: u64, count: usize) -> Vec<u64> {
+        (0..count).map(|i| base << i).collect()
+    }
+
+    pub fn num_sweeps(&self) -> usize {
+        self.v_maxes.len()
+    }
+
+    pub fn n(&self) -> usize {
+        self.degree.len()
+    }
+
+    #[inline]
+    fn ensure(&mut self, i: u32) {
+        let need = i as usize + 1;
+        if need > self.degree.len() {
+            self.degree.resize(need, 0);
+            for c in &mut self.community {
+                c.resize(need, UNSEEN);
+            }
+            for v in &mut self.volume {
+                v.resize(need, 0);
+            }
+        }
+    }
+
+    /// Process one edge across all sweeps (Algorithm 1 body, vectorised
+    /// over the parameter axis).
+    #[inline]
+    pub fn process_edge(&mut self, e: Edge) {
+        if e.is_self_loop() {
+            return;
+        }
+        self.ensure(e.u.max(e.v));
+        let (i, j) = (e.u as usize, e.v as usize);
+        self.degree[i] += 1;
+        self.degree[j] += 1;
+        let (di, dj) = (self.degree[i] as u64, self.degree[j] as u64);
+        self.edges_processed += 1;
+
+        for a in 0..self.v_maxes.len() {
+            let vmax = self.v_maxes[a];
+            let comm = &mut self.community[a];
+            let vol = &mut self.volume[a];
+            if comm[i] == UNSEEN {
+                comm[i] = e.u;
+            }
+            if comm[j] == UNSEEN {
+                comm[j] = e.v;
+            }
+            let ci = comm[i] as usize;
+            let cj = comm[j] as usize;
+            vol[ci] += 1;
+            vol[cj] += 1;
+            if ci == cj {
+                continue;
+            }
+            let (vi, vj) = (vol[ci], vol[cj]);
+            if vi <= vmax && vj <= vmax {
+                // strict: on equality j joins i (paper §2.3, TieBreak::JToI)
+                if vi < vj {
+                    vol[cj] += di;
+                    vol[ci] -= di;
+                    comm[i] = cj as u32;
+                } else {
+                    vol[ci] += dj;
+                    vol[cj] -= dj;
+                    comm[j] = ci as u32;
+                }
+            }
+        }
+    }
+
+    pub fn process_chunk(&mut self, chunk: &[Edge]) {
+        for &e in chunk {
+            self.process_edge(e);
+        }
+    }
+
+    pub fn run<S: EdgeSource>(&mut self, source: &mut S, batch: usize) {
+        let mut buf = Vec::with_capacity(batch);
+        while source.next_batch(&mut buf) > 0 {
+            self.process_chunk(&buf);
+        }
+    }
+
+    /// Labels of sweep `a`.
+    pub fn labels(&self, a: usize) -> Vec<u32> {
+        self.community[a]
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| if c == UNSEEN { i as u32 } else { c })
+            .collect()
+    }
+
+    /// (volume, size) pairs of non-empty communities of sweep `a`,
+    /// sorted by volume descending (selection input).
+    pub fn community_volumes(&self, a: usize) -> Vec<(u64, u32)> {
+        let n = self.n();
+        let mut size = vec![0u32; n];
+        for &c in &self.community[a] {
+            if c != UNSEEN {
+                size[c as usize] += 1;
+            }
+        }
+        let mut out: Vec<(u64, u32)> = (0..n)
+            .filter(|&k| size[k] > 0)
+            .map(|k| (self.volume[a][k], size[k]))
+            .collect();
+        out.sort_unstable_by(|x, y| y.0.cmp(&x.0));
+        out
+    }
+
+    /// Memory for the sweep: shared degrees + A · (c, v).
+    pub fn memory_bytes(&self) -> usize {
+        self.degree.len() * 4
+            + self.community.iter().map(|c| c.len() * 4).sum::<usize>()
+            + self.volume.iter().map(|v| v.len() * 8).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::algorithm::{cluster_edges, StrConfig, StreamingClusterer};
+
+    fn graph() -> (usize, Vec<Edge>) {
+        use crate::graph::generators::sbm::{self, SbmConfig};
+        let g = sbm::generate(&SbmConfig::equal(6, 30, 0.4, 0.01, 7));
+        (g.n(), g.edges.edges)
+    }
+
+    #[test]
+    fn sweep_matches_individual_runs() {
+        let (n, edges) = graph();
+        let v_maxes = vec![4u64, 32, 256];
+        let mut sweep = MultiSweep::new(n, v_maxes.clone());
+        sweep.process_chunk(&edges);
+        for (a, &vm) in v_maxes.iter().enumerate() {
+            let single = cluster_edges(n, &edges, vm);
+            assert_eq!(sweep.labels(a), single, "sweep {a} (v_max={vm}) diverged");
+        }
+    }
+
+    #[test]
+    fn volume_conservation_per_sweep() {
+        let (n, edges) = graph();
+        let mut sweep = MultiSweep::new(n, vec![2, 16, 128, 1024]);
+        sweep.process_chunk(&edges);
+        for a in 0..sweep.num_sweeps() {
+            let tot: u64 = sweep.volume[a].iter().sum();
+            assert_eq!(tot, 2 * sweep.edges_processed, "sweep {a}");
+        }
+    }
+
+    #[test]
+    fn geometric_ladder() {
+        assert_eq!(MultiSweep::geometric_ladder(4, 5), vec![4, 8, 16, 32, 64]);
+    }
+
+    #[test]
+    fn shared_degree_equals_single_run_degrees() {
+        let (n, edges) = graph();
+        let mut sweep = MultiSweep::new(n, vec![8, 64]);
+        sweep.process_chunk(&edges);
+        let mut single = StreamingClusterer::new(n, StrConfig::new(8));
+        single.process_chunk(&edges);
+        assert_eq!(sweep.degree, single.state.degree);
+    }
+
+    #[test]
+    fn larger_vmax_never_more_communities() {
+        let (n, edges) = graph();
+        let mut sweep = MultiSweep::new(n, MultiSweep::geometric_ladder(2, 8));
+        sweep.process_chunk(&edges);
+        let counts: Vec<usize> = (0..sweep.num_sweeps())
+            .map(|a| sweep.community_volumes(a).len())
+            .collect();
+        // not strictly monotone in theory, but over a geometric ladder on
+        // an SBM the trend must be decreasing from first to last
+        assert!(
+            counts.first().unwrap() >= counts.last().unwrap(),
+            "counts={counts:?}"
+        );
+    }
+}

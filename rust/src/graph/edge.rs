@@ -1,0 +1,126 @@
+//! Edge and edge-list types.
+//!
+//! Nodes are dense `u32` ids (the generators and the IO remapper
+//! guarantee density); an [`Edge`] is an unordered pair. The streaming
+//! layers move `Edge` values by the million, so it is `Copy`, 8 bytes,
+//! and `#[repr(C)]` for cheap binary IO.
+
+/// One undirected edge. Self-loops are forbidden at construction sites
+/// that matter (generators, IO ingest); streaming code tolerates and
+/// skips them defensively.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(C)]
+pub struct Edge {
+    pub u: u32,
+    pub v: u32,
+}
+
+impl Edge {
+    #[inline]
+    pub fn new(u: u32, v: u32) -> Self {
+        Self { u, v }
+    }
+
+    /// Canonical orientation (min, max) — used for dedup and tests.
+    #[inline]
+    pub fn canonical(self) -> Self {
+        if self.u <= self.v {
+            self
+        } else {
+            Edge { u: self.v, v: self.u }
+        }
+    }
+
+    #[inline]
+    pub fn is_self_loop(self) -> bool {
+        self.u == self.v
+    }
+}
+
+/// An in-memory edge multiset plus its node-count header.
+#[derive(Debug, Clone, Default)]
+pub struct EdgeList {
+    pub n: usize,
+    pub edges: Vec<Edge>,
+}
+
+impl EdgeList {
+    pub fn new(n: usize, edges: Vec<Edge>) -> Self {
+        Self { n, edges }
+    }
+
+    pub fn m(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Recompute `n` as 1 + max node id (0 for empty).
+    pub fn infer_n(edges: &[Edge]) -> usize {
+        edges
+            .iter()
+            .map(|e| e.u.max(e.v) as usize + 1)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Node degrees (each endpoint of each edge counts once).
+    pub fn degrees(&self) -> Vec<u32> {
+        let mut d = vec![0u32; self.n];
+        for e in &self.edges {
+            d[e.u as usize] += 1;
+            d[e.v as usize] += 1;
+        }
+        d
+    }
+
+    /// Total weight w = 2m.
+    pub fn total_weight(&self) -> u64 {
+        2 * self.edges.len() as u64
+    }
+
+    /// Remove self-loops and canonicalise+dedup parallel edges
+    /// (the generators already avoid both; IO ingest uses this).
+    pub fn simplify(&mut self) {
+        self.edges.retain(|e| !e.is_self_loop());
+        for e in &mut self.edges {
+            *e = e.canonical();
+        }
+        self.edges.sort_unstable_by_key(|e| (e.u, e.v));
+        self.edges.dedup();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_orders_endpoints() {
+        assert_eq!(Edge::new(5, 2).canonical(), Edge::new(2, 5));
+        assert_eq!(Edge::new(2, 5).canonical(), Edge::new(2, 5));
+    }
+
+    #[test]
+    fn degrees_count_both_endpoints() {
+        let el = EdgeList::new(4, vec![Edge::new(0, 1), Edge::new(1, 2), Edge::new(1, 3)]);
+        assert_eq!(el.degrees(), vec![1, 3, 1, 1]);
+        assert_eq!(el.total_weight(), 6);
+    }
+
+    #[test]
+    fn simplify_removes_loops_and_dups() {
+        let mut el = EdgeList::new(3, vec![
+            Edge::new(0, 1),
+            Edge::new(1, 0),
+            Edge::new(2, 2),
+            Edge::new(1, 2),
+        ]);
+        el.simplify();
+        assert_eq!(el.edges, vec![Edge::new(0, 1), Edge::new(1, 2)]);
+    }
+
+    #[test]
+    fn infer_n_from_max_id() {
+        assert_eq!(EdgeList::infer_n(&[Edge::new(0, 7), Edge::new(3, 2)]), 8);
+        assert_eq!(EdgeList::infer_n(&[]), 0);
+    }
+}

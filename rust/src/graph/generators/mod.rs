@@ -1,0 +1,77 @@
+//! Synthetic graph generators with ground-truth communities.
+//!
+//! These replace the SNAP datasets of the paper's evaluation (no network
+//! access in this environment — substitution documented in DESIGN.md §3).
+//! Two families:
+//!
+//! * [`sbm`] — planted partition / stochastic block model, sampled in
+//!   O(m) with Batagelj–Brandes geometric skipping. The cleanest
+//!   controlled workload: `p_in`/`p_out` directly set the
+//!   intra/inter-community edge ratio that drives the paper's Theorem 1
+//!   intuition.
+//! * [`lfr`] — LFR-style benchmark: power-law degrees, power-law
+//!   community sizes, mixing parameter μ, realised by a configuration
+//!   model (multigraph — exactly what the paper's streaming setting
+//!   expects: parallel edges streamed independently).
+//!
+//! [`presets`] instantiates LFR configs shaped like each SNAP dataset of
+//! Table 1, scaled to this testbed.
+
+pub mod lfr;
+pub mod presets;
+pub mod sbm;
+
+use crate::graph::edge::EdgeList;
+use crate::graph::ground_truth::GroundTruth;
+use crate::util::rng::Xoshiro256;
+
+/// A generated workload: graph + ground truth + provenance.
+#[derive(Debug, Clone)]
+pub struct GeneratedGraph {
+    pub name: String,
+    pub edges: EdgeList,
+    pub truth: GroundTruth,
+}
+
+impl GeneratedGraph {
+    /// Shuffle the edge arrival order (the paper's streaming model
+    /// assumes edges arrive in random order).
+    pub fn shuffle_stream(&mut self, seed: u64) {
+        let mut rng = Xoshiro256::new(seed);
+        rng.shuffle(&mut self.edges.edges);
+    }
+
+    pub fn n(&self) -> usize {
+        self.edges.n
+    }
+
+    pub fn m(&self) -> usize {
+        self.edges.m()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::edge::Edge;
+
+    #[test]
+    fn shuffle_preserves_multiset() {
+        let mut g = GeneratedGraph {
+            name: "t".into(),
+            edges: EdgeList::new(4, vec![
+                Edge::new(0, 1),
+                Edge::new(1, 2),
+                Edge::new(2, 3),
+                Edge::new(0, 3),
+            ]),
+            truth: GroundTruth::default(),
+        };
+        let before: std::collections::HashSet<_> =
+            g.edges.edges.iter().map(|e| e.canonical()).collect();
+        g.shuffle_stream(99);
+        let after: std::collections::HashSet<_> =
+            g.edges.edges.iter().map(|e| e.canonical()).collect();
+        assert_eq!(before, after);
+    }
+}

@@ -1,0 +1,222 @@
+//! Planted-partition / stochastic block model sampled in O(m).
+//!
+//! Intra-community edges: per community, Erdős–Rényi over the
+//! `s·(s-1)/2` pairs with probability `p_in`, enumerated with geometric
+//! skipping (Batagelj & Brandes 2005) so cost is proportional to the
+//! number of *realised* edges. Inter-community edges: geometric skipping
+//! over the full pair space with `p_out`, rejecting same-community
+//! pairs (exact, since intra pairs drawn this way are discarded).
+
+use crate::graph::edge::{Edge, EdgeList};
+use crate::graph::ground_truth::GroundTruth;
+use crate::util::rng::Xoshiro256;
+
+use super::GeneratedGraph;
+
+/// Planted-partition configuration.
+#[derive(Debug, Clone)]
+pub struct SbmConfig {
+    /// Community sizes (sum = n).
+    pub sizes: Vec<usize>,
+    /// Intra-community edge probability.
+    pub p_in: f64,
+    /// Inter-community edge probability.
+    pub p_out: f64,
+    pub seed: u64,
+}
+
+impl SbmConfig {
+    /// `k` equal communities of `size` nodes each.
+    pub fn equal(k: usize, size: usize, p_in: f64, p_out: f64, seed: u64) -> Self {
+        Self { sizes: vec![size; k], p_in, p_out, seed }
+    }
+
+    pub fn n(&self) -> usize {
+        self.sizes.iter().sum()
+    }
+}
+
+/// Enumerate pairs `(a, b)` with `a < b < len` by linear index, with
+/// geometric skipping at probability `p`; call `emit(a, b)` per hit.
+fn skip_pairs(
+    rng: &mut Xoshiro256,
+    len: u64,
+    p: f64,
+    mut emit: impl FnMut(u64, u64),
+) {
+    if len < 2 || p <= 0.0 {
+        return;
+    }
+    let total = len * (len - 1) / 2;
+    let mut idx: u64 = 0;
+    loop {
+        let skip = rng.geometric(p);
+        if skip >= total - idx {
+            break;
+        }
+        idx += skip;
+        // invert linear index -> (a, b), a < b, row-major over a
+        // idx = a*len - a*(a+1)/2 + (b - a - 1)
+        let a = {
+            // solve smallest a with cum(a+1) > idx where
+            // cum(a) = a*len - a*(a+1)/2
+            let mut lo = 0u64;
+            let mut hi = len - 1;
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                let cum = (mid + 1) * len - (mid + 1) * (mid + 2) / 2;
+                if cum > idx {
+                    hi = mid;
+                } else {
+                    lo = mid + 1;
+                }
+            }
+            lo
+        };
+        let cum_a = a * len - a * (a + 1) / 2;
+        let b = a + 1 + (idx - cum_a);
+        emit(a, b);
+        idx += 1;
+        if idx >= total {
+            break;
+        }
+    }
+}
+
+/// Generate a planted-partition graph with ground truth.
+pub fn generate(config: &SbmConfig) -> GeneratedGraph {
+    let n = config.n();
+    let mut rng = Xoshiro256::new(config.seed);
+
+    // node -> community labels; communities get contiguous id ranges and
+    // node ids are then permuted so block structure isn't positional.
+    let mut labels = vec![0u32; n];
+    let mut starts = Vec::with_capacity(config.sizes.len());
+    {
+        let mut cursor = 0usize;
+        for (k, &s) in config.sizes.iter().enumerate() {
+            starts.push(cursor);
+            for i in cursor..cursor + s {
+                labels[i] = k as u32;
+            }
+            cursor += s;
+        }
+    }
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut perm);
+
+    let mut edges = Vec::new();
+
+    // intra edges per community
+    for (k, &s) in config.sizes.iter().enumerate() {
+        let base = starts[k] as u64;
+        skip_pairs(&mut rng, s as u64, config.p_in, |a, b| {
+            edges.push(Edge::new(perm[(base + a) as usize], perm[(base + b) as usize]));
+        });
+    }
+
+    // inter edges: skip over the full pair space, keep only cross pairs
+    skip_pairs(&mut rng, n as u64, config.p_out, |a, b| {
+        if labels[a as usize] != labels[b as usize] {
+            edges.push(Edge::new(perm[a as usize], perm[b as usize]));
+        }
+    });
+
+    // ground truth in permuted id space
+    let mut truth_labels = vec![0u32; n];
+    for i in 0..n {
+        truth_labels[perm[i] as usize] = labels[i];
+    }
+
+    let mut g = GeneratedGraph {
+        name: format!("sbm-k{}-n{}", config.sizes.len(), n),
+        edges: EdgeList::new(n, edges),
+        truth: GroundTruth::from_labels(&truth_labels),
+    };
+    g.shuffle_stream(rng.next_u64());
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_counts_match_expectation() {
+        let cfg = SbmConfig::equal(10, 100, 0.1, 0.001, 42);
+        let g = generate(&cfg);
+        assert_eq!(g.n(), 1000);
+        // expected intra: 10 * C(100,2) * 0.1 = 4950; inter:
+        // (C(1000,2) - 10*C(100,2)) * 0.001 ≈ 450
+        let m = g.m() as f64;
+        assert!((4800.0..6200.0).contains(&m), "m={m}");
+        assert_eq!(g.truth.len(), 10);
+    }
+
+    #[test]
+    fn intra_fraction_dominates_for_assortative_params() {
+        let cfg = SbmConfig::equal(8, 64, 0.2, 0.002, 7);
+        let g = generate(&cfg);
+        let labels = g.truth.to_labels(g.n());
+        let intra = g
+            .edges
+            .edges
+            .iter()
+            .filter(|e| labels[e.u as usize] == labels[e.v as usize])
+            .count();
+        let frac = intra as f64 / g.m() as f64;
+        assert!(frac > 0.7, "intra fraction {frac}");
+    }
+
+    #[test]
+    fn no_self_loops_or_out_of_range() {
+        let g = generate(&SbmConfig::equal(4, 50, 0.15, 0.01, 3));
+        for e in &g.edges.edges {
+            assert!(!e.is_self_loop());
+            assert!((e.u as usize) < g.n() && (e.v as usize) < g.n());
+        }
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let a = generate(&SbmConfig::equal(4, 40, 0.2, 0.01, 11));
+        let b = generate(&SbmConfig::equal(4, 40, 0.2, 0.01, 11));
+        assert_eq!(a.edges.edges, b.edges.edges);
+        let c = generate(&SbmConfig::equal(4, 40, 0.2, 0.01, 12));
+        assert_ne!(a.edges.edges, c.edges.edges);
+    }
+
+    #[test]
+    fn skip_pairs_exhaustive_at_p1() {
+        let mut rng = Xoshiro256::new(1);
+        let mut got = Vec::new();
+        skip_pairs(&mut rng, 5, 1.0, |a, b| got.push((a, b)));
+        assert_eq!(got.len(), 10);
+        // all distinct ordered pairs a < b
+        let set: std::collections::HashSet<_> = got.iter().collect();
+        assert_eq!(set.len(), 10);
+        assert!(got.iter().all(|&(a, b)| a < b && b < 5));
+    }
+
+    #[test]
+    fn skip_pairs_rate_close_to_p() {
+        let mut rng = Xoshiro256::new(2);
+        let mut count = 0u64;
+        skip_pairs(&mut rng, 1000, 0.01, |_, _| count += 1);
+        let total = 1000u64 * 999 / 2;
+        let expected = total as f64 * 0.01;
+        assert!(
+            (count as f64 - expected).abs() < expected * 0.15,
+            "count={count} expected≈{expected}"
+        );
+    }
+
+    #[test]
+    fn unequal_sizes_respected() {
+        let cfg = SbmConfig { sizes: vec![10, 200, 30], p_in: 0.3, p_out: 0.0, seed: 5 };
+        let g = generate(&cfg);
+        let mut sizes: Vec<usize> = g.truth.communities.iter().map(|c| c.len()).collect();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![10, 30, 200]);
+    }
+}

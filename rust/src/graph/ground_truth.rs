@@ -1,0 +1,111 @@
+//! Ground-truth community storage, mirroring SNAP's `cmty` files:
+//! a list of node sets (possibly overlapping; our generators emit
+//! disjoint ones, but the scorers accept overlap like the paper's
+//! F1 scorer does).
+
+use std::collections::HashMap;
+
+/// Ground-truth communities over nodes `0..n`.
+#[derive(Debug, Clone, Default)]
+pub struct GroundTruth {
+    /// communities[k] = sorted node ids of community k
+    pub communities: Vec<Vec<u32>>,
+}
+
+impl GroundTruth {
+    pub fn new(mut communities: Vec<Vec<u32>>) -> Self {
+        for c in &mut communities {
+            c.sort_unstable();
+            c.dedup();
+        }
+        communities.retain(|c| !c.is_empty());
+        Self { communities }
+    }
+
+    /// Build from a disjoint label vector (label per node).
+    pub fn from_labels(labels: &[u32]) -> Self {
+        let mut map: HashMap<u32, Vec<u32>> = HashMap::new();
+        for (i, &l) in labels.iter().enumerate() {
+            map.entry(l).or_default().push(i as u32);
+        }
+        let mut communities: Vec<Vec<u32>> = map.into_values().collect();
+        communities.sort_unstable_by_key(|c| c[0]);
+        Self { communities }
+    }
+
+    /// Disjoint label vector (last community wins on overlap).
+    pub fn to_labels(&self, n: usize) -> Vec<u32> {
+        let mut labels = vec![u32::MAX; n];
+        for (k, c) in self.communities.iter().enumerate() {
+            for &i in c {
+                labels[i as usize] = k as u32;
+            }
+        }
+        // unassigned nodes become singletons with fresh labels
+        let mut next = self.communities.len() as u32;
+        for l in &mut labels {
+            if *l == u32::MAX {
+                *l = next;
+                next += 1;
+            }
+        }
+        labels
+    }
+
+    pub fn len(&self) -> usize {
+        self.communities.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.communities.is_empty()
+    }
+
+    /// Mean community size (nodes).
+    pub fn mean_size(&self) -> f64 {
+        if self.communities.is_empty() {
+            return 0.0;
+        }
+        self.communities.iter().map(|c| c.len()).sum::<usize>() as f64
+            / self.communities.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_labels_roundtrip() {
+        let labels = vec![0, 0, 1, 1, 2];
+        let gt = GroundTruth::from_labels(&labels);
+        assert_eq!(gt.len(), 3);
+        let back = gt.to_labels(5);
+        // same partition up to renaming
+        assert_eq!(back[0], back[1]);
+        assert_eq!(back[2], back[3]);
+        assert_ne!(back[0], back[2]);
+        assert_ne!(back[0], back[4]);
+    }
+
+    #[test]
+    fn new_sorts_dedups_drops_empty() {
+        let gt = GroundTruth::new(vec![vec![3, 1, 3], vec![], vec![2]]);
+        assert_eq!(gt.len(), 2);
+        assert_eq!(gt.communities[0], vec![1, 3]);
+    }
+
+    #[test]
+    fn unassigned_nodes_become_singletons() {
+        let gt = GroundTruth::new(vec![vec![0, 1]]);
+        let labels = gt.to_labels(4);
+        assert_eq!(labels[0], labels[1]);
+        assert_ne!(labels[2], labels[3]);
+        assert_ne!(labels[2], labels[0]);
+    }
+
+    #[test]
+    fn mean_size() {
+        let gt = GroundTruth::new(vec![vec![0, 1], vec![2, 3, 4, 5]]);
+        assert!((gt.mean_size() - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,18 @@
+//! Graph substrate: edge types, CSR adjacency, IO, ground truth,
+//! generators.
+//!
+//! The streaming algorithm itself never needs adjacency — it touches an
+//! edge once and forgets it. Everything *around* it does: the baselines
+//! (Louvain, SCD, …) operate on a [`csr::Csr`]; the scorers need
+//! [`ground_truth::GroundTruth`]; the experiments need the
+//! [`generators`] that produce SNAP-shaped workloads.
+
+pub mod csr;
+pub mod edge;
+pub mod generators;
+pub mod ground_truth;
+pub mod io;
+
+pub use csr::Csr;
+pub use edge::{Edge, EdgeList};
+pub use ground_truth::GroundTruth;

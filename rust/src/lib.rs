@@ -1,0 +1,38 @@
+//! # streamcom — streaming graph clustering
+//!
+//! Production-grade reproduction of Hollocou, Maudet, Bonald & Lelarge,
+//! *"A Streaming Algorithm for Graph Clustering"* (2017), as a
+//! three-layer Rust + JAX/Pallas system:
+//!
+//! * **L3 (this crate)** — the streaming coordinator: the paper's
+//!   Algorithm 1 ([`coordinator`]), the edge-stream substrate
+//!   ([`stream`]), all five comparison baselines ([`baselines`]), the
+//!   scoring metrics ([`metrics`]), SNAP-shaped workload generators
+//!   ([`graph::generators`]) and the benchmark framework ([`bench`]).
+//! * **L2/L1 (python/compile, build-time only)** — the sketch-scoring
+//!   metric engine as JAX + Pallas kernels, AOT-lowered to HLO text and
+//!   executed from [`runtime`] via PJRT. Python never runs on the
+//!   streaming path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use streamcom::coordinator::algorithm::cluster_edges;
+//! use streamcom::graph::generators::sbm::{self, SbmConfig};
+//!
+//! let g = sbm::generate(&SbmConfig::equal(10, 100, 0.1, 0.001, 42));
+//! let labels = cluster_edges(g.n(), &g.edges.edges, 64);
+//! println!("{} communities", streamcom::metrics::labels_to_communities(&labels).len());
+//! ```
+//!
+//! See `examples/` for end-to-end drivers and `DESIGN.md` for the
+//! paper-to-module map.
+
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod graph;
+pub mod metrics;
+pub mod runtime;
+pub mod stream;
+pub mod util;

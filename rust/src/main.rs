@@ -1,0 +1,15 @@
+//! `streamcom` CLI — leader entrypoint.
+//!
+//! Subcommands (see `streamcom help`):
+//!   generate   produce a SNAP-shaped workload (edges + ground truth)
+//!   run        stream-cluster an edge file / preset with one v_max
+//!   sweep      §2.5 multi-parameter run + sketch-only selection
+//!   bench      regenerate the paper's tables (table1 | table2 | memory)
+//!   serve      long-running streaming service over stdin events
+
+mod app;
+
+fn main() {
+    let code = app::main_with_args(std::env::args().skip(1).collect());
+    std::process::exit(code);
+}

@@ -1,0 +1,146 @@
+//! Average F1 score between detected and ground-truth communities.
+//!
+//! The paper uses the SCD authors' definition (Prat-Pérez et al. 2014,
+//! also Yang & Leskovec 2013): for each detected community take the F1
+//! of its best-matching ground-truth community, and vice versa; the
+//! score is the average of the two directional means:
+//!
+//!   F1 = ½ ( 1/|D| Σ_{d∈D} max_{g∈G} F1(d, g)
+//!          + 1/|G| Σ_{g∈G} max_{d∈D} F1(g, d) ).
+//!
+//! Computed with an inverted index (node → communities) so each
+//! direction is O(Σ overlaps), not O(|D|·|G|).
+
+use std::collections::HashMap;
+
+/// F1 of two node sets given their intersection size.
+#[inline]
+fn f1(inter: usize, a: usize, b: usize) -> f64 {
+    if inter == 0 {
+        return 0.0;
+    }
+    let p = inter as f64 / a as f64;
+    let r = inter as f64 / b as f64;
+    2.0 * p * r / (p + r)
+}
+
+/// One directional mean: for each community in `from`, the best F1
+/// against `to`.
+fn directional(from: &[Vec<u32>], to: &[Vec<u32>], node_to_to: &HashMap<u32, Vec<u32>>) -> f64 {
+    if from.is_empty() {
+        return 0.0;
+    }
+    let mut sum = 0.0;
+    let mut overlap: HashMap<u32, usize> = HashMap::new();
+    for d in from {
+        overlap.clear();
+        for node in d {
+            if let Some(gs) = node_to_to.get(node) {
+                for &g in gs {
+                    *overlap.entry(g).or_insert(0) += 1;
+                }
+            }
+        }
+        let best = overlap
+            .iter()
+            .map(|(&g, &inter)| f1(inter, d.len(), to[g as usize].len()))
+            .fold(0.0, f64::max);
+        sum += best;
+    }
+    sum / from.len() as f64
+}
+
+fn invert(comms: &[Vec<u32>]) -> HashMap<u32, Vec<u32>> {
+    let mut idx: HashMap<u32, Vec<u32>> = HashMap::new();
+    for (k, c) in comms.iter().enumerate() {
+        for &node in c {
+            idx.entry(node).or_default().push(k as u32);
+        }
+    }
+    idx
+}
+
+/// Average F1 between two covers (sets of node sets; overlap allowed).
+pub fn average_f1(detected: &[Vec<u32>], truth: &[Vec<u32>]) -> f64 {
+    if detected.is_empty() || truth.is_empty() {
+        return 0.0;
+    }
+    let inv_truth = invert(truth);
+    let inv_det = invert(detected);
+    0.5 * (directional(detected, truth, &inv_truth) + directional(truth, detected, &inv_det))
+}
+
+/// Convenience over label vectors.
+pub fn average_f1_labels(detected: &[u32], truth: &[u32]) -> f64 {
+    let d = super::labels_to_communities(detected);
+    let t = super::labels_to_communities(truth);
+    average_f1(&d, &t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_partitions_score_one() {
+        let a = vec![vec![0, 1, 2], vec![3, 4]];
+        assert!((average_f1(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_covers_score_zero() {
+        let a = vec![vec![0, 1]];
+        let b = vec![vec![2, 3]];
+        assert_eq!(average_f1(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn pairwise_f1_formula() {
+        // d = {0,1,2,3}, g = {2,3,4} → inter 2, p = 0.5, r = 2/3,
+        // F1 = 2·0.5·(2/3)/(0.5+2/3) = 4/7
+        let d = vec![vec![0, 1, 2, 3]];
+        let g = vec![vec![2, 3, 4]];
+        let expected = 4.0 / 7.0;
+        assert!((average_f1(&d, &g) - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn asymmetric_split_detection() {
+        // truth one community; detection splits it in half:
+        // direction D→G: each half has F1 = 2·1·0.5/1.5 = 2/3 → mean 2/3
+        // direction G→D: best match also 2/3
+        let g = vec![vec![0, 1, 2, 3]];
+        let d = vec![vec![0, 1], vec![2, 3]];
+        let expected = 2.0 / 3.0;
+        assert!((average_f1(&d, &g) - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn label_interface_matches_cover_interface() {
+        let det = vec![0, 0, 1, 1, 2];
+        let tru = vec![7, 7, 7, 9, 9];
+        let a = average_f1_labels(&det, &tru);
+        let b = average_f1(
+            &super::super::labels_to_communities(&det),
+            &super::super::labels_to_communities(&tru),
+        );
+        assert_eq!(a, b);
+        assert!(a > 0.0 && a < 1.0);
+    }
+
+    #[test]
+    fn more_accurate_detection_scores_higher() {
+        let truth = vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]];
+        let good = vec![vec![0, 1, 2, 3], vec![4, 5, 6], vec![7]];
+        let bad = vec![vec![0, 4], vec![1, 5], vec![2, 6], vec![3, 7]];
+        assert!(average_f1(&good, &truth) > average_f1(&bad, &truth));
+    }
+
+    #[test]
+    fn overlapping_truth_accepted() {
+        let truth = vec![vec![0, 1, 2], vec![2, 3, 4]]; // node 2 in both
+        let det = vec![vec![0, 1, 2], vec![3, 4]];
+        let s = average_f1(&det, &truth);
+        assert!(s > 0.7 && s <= 1.0);
+    }
+}

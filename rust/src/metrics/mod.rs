@@ -1,0 +1,42 @@
+//! Scoring: the paper's two benchmark metrics (average F1, NMI) plus
+//! modularity and the sketch-only metrics (entropy, density,
+//! conductance).
+//!
+//! Rust implementations are the reference used by the harnesses; the
+//! NMI and modularity paths also exist as PJRT artifacts
+//! (`runtime::PjrtEngine`) and the integration tests cross-check the
+//! two.
+
+pub mod f1;
+pub mod modularity;
+pub mod nmi;
+pub mod quality;
+
+/// Convert a label vector into a community → members map with dense
+/// community indices (helper shared by the scorers).
+pub fn labels_to_communities(labels: &[u32]) -> Vec<Vec<u32>> {
+    use std::collections::HashMap;
+    let mut index: HashMap<u32, usize> = HashMap::new();
+    let mut comms: Vec<Vec<u32>> = Vec::new();
+    for (i, &l) in labels.iter().enumerate() {
+        let k = *index.entry(l).or_insert_with(|| {
+            comms.push(Vec::new());
+            comms.len() - 1
+        });
+        comms[k].push(i as u32);
+    }
+    comms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_to_communities_groups() {
+        let comms = labels_to_communities(&[5, 5, 9, 5, 9]);
+        assert_eq!(comms.len(), 2);
+        assert_eq!(comms[0], vec![0, 1, 3]);
+        assert_eq!(comms[1], vec![2, 4]);
+    }
+}

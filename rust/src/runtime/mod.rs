@@ -1,0 +1,202 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` runs Python **once** to lower the L2 model to HLO
+//! text (`artifacts/*.hlo.txt`); this module is the only consumer. The
+//! [`PjrtRuntime`] compiles each module on the CPU PJRT client at
+//! start-up and keeps the loaded executables; per-call cost is one
+//! host-literal round-trip. Python never runs on the streaming path.
+//!
+//! [`PjrtEngine`] implements [`MetricEngine`] so
+//! `coordinator::selection` can score sweeps through the compiled
+//! kernels; [`NativeEngine`](crate::coordinator::selection::NativeEngine)
+//! is the drop-in pure-Rust twin, and `rust/tests/runtime_integration.rs`
+//! cross-checks the two.
+
+pub mod artifacts;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::selection::{MetricEngine, SweepScores};
+use artifacts::{ArtifactSet, CONTINGENCY, EDGE_BLOCK, NUM_SWEEPS, VOLUME_BUCKETS};
+
+/// Compiled PJRT executables for every artifact.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    sweep_metrics: xla::PjRtLoadedExecutable,
+    modularity: xla::PjRtLoadedExecutable,
+    nmi: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtRuntime {
+    /// Compile all artifacts from the given set.
+    pub fn load(set: &ArtifactSet) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let compile = |path: &std::path::Path| -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
+        };
+        Ok(Self {
+            sweep_metrics: compile(&set.sweep_metrics)?,
+            modularity: compile(&set.modularity)?,
+            nmi: compile(&set.nmi)?,
+            client,
+        })
+    }
+
+    /// Locate artifacts via `STREAMCOM_ARTIFACTS` or `./artifacts` and load.
+    pub fn load_default() -> Result<Self> {
+        let set = ArtifactSet::discover().context("artifacts not found — run `make artifacts`")?;
+        Self::load(&set)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn run1(exe: &xla::PjRtLoadedExecutable, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // lowered with return_tuple=True → 1-tuple
+        let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Execute `sweep_metrics.hlo.txt`: `(A·K, A·K, A)` → `A × 6` scores.
+    pub fn sweep_metrics(&self, vols: &[f32], sizes: &[f32], w: &[f32]) -> Result<Vec<[f32; 6]>> {
+        let (a, k) = (NUM_SWEEPS, VOLUME_BUCKETS);
+        if vols.len() != a * k || sizes.len() != a * k || w.len() != a {
+            return Err(anyhow!(
+                "sweep_metrics shape mismatch: vols={} sizes={} w={}",
+                vols.len(),
+                sizes.len(),
+                w.len()
+            ));
+        }
+        let lv = xla::Literal::vec1(vols).reshape(&[a as i64, k as i64])?;
+        let ls = xla::Literal::vec1(sizes).reshape(&[a as i64, k as i64])?;
+        let lw = xla::Literal::vec1(w);
+        let flat = Self::run1(&self.sweep_metrics, &[lv, ls, lw])?;
+        if flat.len() != a * 6 {
+            return Err(anyhow!("sweep_metrics output len {}", flat.len()));
+        }
+        Ok((0..a)
+            .map(|r| {
+                let mut row = [0f32; 6];
+                row.copy_from_slice(&flat[r * 6..(r + 1) * 6]);
+                row
+            })
+            .collect())
+    }
+
+    /// Execute `modularity.hlo.txt` over one padded edge block:
+    /// returns `(intra, Σ vol²)`.
+    pub fn modularity_partials(
+        &self,
+        ci: &[i32],
+        cj: &[i32],
+        mask: &[f32],
+        vols: &[f32],
+    ) -> Result<(f64, f64)> {
+        if ci.len() != EDGE_BLOCK
+            || cj.len() != EDGE_BLOCK
+            || mask.len() != EDGE_BLOCK
+            || vols.len() != VOLUME_BUCKETS
+        {
+            return Err(anyhow!("modularity shape mismatch"));
+        }
+        let out = Self::run1(
+            &self.modularity,
+            &[
+                xla::Literal::vec1(ci),
+                xla::Literal::vec1(cj),
+                xla::Literal::vec1(mask),
+                xla::Literal::vec1(vols),
+            ],
+        )?;
+        Ok((out[0] as f64, out[1] as f64))
+    }
+
+    /// Execute `nmi.hlo.txt` on a `C × C` contingency table:
+    /// returns `(mi, h_u, h_v)` in nats.
+    pub fn nmi_terms(&self, cont: &[f32]) -> Result<(f64, f64, f64)> {
+        if cont.len() != CONTINGENCY * CONTINGENCY {
+            return Err(anyhow!("nmi shape mismatch: {}", cont.len()));
+        }
+        let lc = xla::Literal::vec1(cont)
+            .reshape(&[CONTINGENCY as i64, CONTINGENCY as i64])?;
+        let out = Self::run1(&self.nmi, &[lc])?;
+        Ok((out[0] as f64, out[1] as f64, out[2] as f64))
+    }
+
+    /// Avg-normalised NMI via the artifact.
+    pub fn nmi(&self, cont: &[f32]) -> Result<f64> {
+        let (mi, hu, hv) = self.nmi_terms(cont)?;
+        let denom = 0.5 * (hu + hv);
+        Ok(if denom <= 0.0 {
+            if hu == hv {
+                1.0
+            } else {
+                0.0
+            }
+        } else {
+            (mi / denom).clamp(0.0, 1.0)
+        })
+    }
+}
+
+/// [`MetricEngine`] backed by the PJRT sweep-metrics executable.
+pub struct PjrtEngine {
+    runtime: PjrtRuntime,
+    /// Calls made (observability for the §Perf budget checks).
+    pub calls: u64,
+}
+
+impl PjrtEngine {
+    pub fn new(runtime: PjrtRuntime) -> Self {
+        Self { runtime, calls: 0 }
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Ok(Self::new(PjrtRuntime::load_default()?))
+    }
+
+    pub fn runtime(&self) -> &PjrtRuntime {
+        &self.runtime
+    }
+}
+
+impl MetricEngine for PjrtEngine {
+    fn sweep_metrics(
+        &mut self,
+        vols: &[f32],
+        sizes: &[f32],
+        w: &[f32],
+        a: usize,
+        k: usize,
+    ) -> Vec<SweepScores> {
+        assert_eq!(a, NUM_SWEEPS, "PjrtEngine is compiled for A={NUM_SWEEPS}");
+        assert_eq!(k, VOLUME_BUCKETS, "PjrtEngine is compiled for K={VOLUME_BUCKETS}");
+        self.calls += 1;
+        let rows = self
+            .runtime
+            .sweep_metrics(vols, sizes, w)
+            .expect("pjrt sweep_metrics failed");
+        rows.into_iter()
+            .map(|r| SweepScores {
+                entropy: r[0],
+                density: r[1],
+                balance: r[2],
+                ncomms: r[3],
+                density_score: r[4],
+                balance_score: r[5],
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,24 @@
+//! Edge-streaming substrate.
+//!
+//! The paper's model is an *insert-only edge stream*: each edge is seen
+//! exactly once, in arbitrary order, and may never be stored. This
+//! module provides that stream as infrastructure:
+//!
+//! * [`source`] — [`source::EdgeSource`]: pull-based edge producers
+//!   (in-memory, text file, binary file, synthetic generator-backed).
+//! * [`chunk`] — chunked pipelining of a source through a bounded
+//!   channel: a producer thread reads ahead while the consumer
+//!   processes, with backpressure when the consumer lags.
+//! * [`shard`] — hash-sharding an edge stream across worker queues for
+//!   the parallel coordinator; edges whose endpoints map to different
+//!   shards are routed to the *leader* queue (cross-shard edges need
+//!   global state — see `coordinator/parallel.rs`).
+//! * [`meter`] — throughput metering (edges/s, bytes/s) for the
+//!   Table 1 harness and the §Perf pass.
+
+pub mod chunk;
+pub mod meter;
+pub mod shard;
+pub mod source;
+
+pub use source::EdgeSource;

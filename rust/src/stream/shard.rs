@@ -1,0 +1,151 @@
+//! Hash-sharding of an edge stream for the parallel coordinator.
+//!
+//! Node space is split across `shards` by multiplicative hashing.
+//! An edge whose endpoints fall in the same shard is routed to that
+//! shard's queue; a *cross-shard* edge goes to the leader queue, because
+//! its decision needs both shards' community state (see
+//! `coordinator/parallel.rs` for how the leader resolves them).
+
+use crate::graph::edge::Edge;
+use crate::util::channel::Channel;
+
+/// Multiplicative (Fibonacci) hash of a node id into `shards` buckets.
+#[inline]
+pub fn shard_of(node: u32, shards: usize) -> usize {
+    debug_assert!(shards > 0);
+    let h = (node as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    ((h >> 32) as usize * shards) >> 32
+}
+
+/// Routing decision for one edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Both endpoints in shard `i`.
+    Local(usize),
+    /// Endpoints in different shards → leader.
+    Cross,
+}
+
+#[inline]
+pub fn route(edge: Edge, shards: usize) -> Route {
+    let a = shard_of(edge.u, shards);
+    let b = shard_of(edge.v, shards);
+    if a == b {
+        Route::Local(a)
+    } else {
+        Route::Cross
+    }
+}
+
+/// Fan a chunk out to per-shard queues + leader queue. Returns
+/// (local count, cross count).
+pub fn dispatch_chunk(
+    chunk: &[Edge],
+    shards: usize,
+    local_queues: &[Channel<Vec<Edge>>],
+    leader_queue: &Channel<Vec<Edge>>,
+) -> (usize, usize) {
+    debug_assert_eq!(local_queues.len(), shards);
+    let mut per_shard: Vec<Vec<Edge>> = (0..shards).map(|_| Vec::new()).collect();
+    let mut cross = Vec::new();
+    for &e in chunk {
+        match route(e, shards) {
+            Route::Local(s) => per_shard[s].push(e),
+            Route::Cross => cross.push(e),
+        }
+    }
+    let mut nlocal = 0;
+    for (s, batch) in per_shard.into_iter().enumerate() {
+        if !batch.is_empty() {
+            nlocal += batch.len();
+            // a closed queue means the worker aborted; drop silently,
+            // the coordinator surfaces the error
+            let _ = local_queues[s].send(batch);
+        }
+    }
+    let ncross = cross.len();
+    if !cross.is_empty() {
+        let _ = leader_queue.send(cross);
+    }
+    (nlocal, ncross)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_of_is_stable_and_in_range() {
+        for shards in [1, 2, 3, 8, 16] {
+            for node in 0..1000u32 {
+                let s = shard_of(node, shards);
+                assert!(s < shards);
+                assert_eq!(s, shard_of(node, shards));
+            }
+        }
+    }
+
+    #[test]
+    fn shard_of_is_roughly_balanced() {
+        let shards = 8;
+        let mut counts = vec![0usize; shards];
+        for node in 0..80_000u32 {
+            counts[shard_of(node, shards)] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn route_classification() {
+        let shards = 4;
+        // find a same-shard pair and a cross pair deterministically
+        let mut same = None;
+        let mut cross = None;
+        'outer: for u in 0..100u32 {
+            for v in (u + 1)..100u32 {
+                let e = Edge::new(u, v);
+                match route(e, shards) {
+                    Route::Local(_) if same.is_none() => same = Some(e),
+                    Route::Cross if cross.is_none() => cross = Some(e),
+                    _ => {}
+                }
+                if same.is_some() && cross.is_some() {
+                    break 'outer;
+                }
+            }
+        }
+        assert!(same.is_some() && cross.is_some());
+    }
+
+    #[test]
+    fn dispatch_partitions_every_edge_exactly_once() {
+        let shards = 4;
+        let queues: Vec<Channel<Vec<Edge>>> =
+            (0..shards).map(|_| Channel::bounded(64)).collect();
+        let leader = Channel::bounded(64);
+        let chunk: Vec<Edge> = (0..1000u32).map(|i| Edge::new(i, (i * 7) % 500)).collect();
+        let chunk: Vec<Edge> = chunk.into_iter().filter(|e| !e.is_self_loop()).collect();
+        let (nlocal, ncross) = dispatch_chunk(&chunk, shards, &queues, &leader);
+        assert_eq!(nlocal + ncross, chunk.len());
+        let mut delivered = 0;
+        for q in &queues {
+            q.close();
+            while let Some(batch) = q.try_recv() {
+                for e in &batch {
+                    assert!(matches!(route(*e, shards), Route::Local(_)));
+                }
+                delivered += batch.len();
+            }
+        }
+        leader.close();
+        while let Some(batch) = leader.try_recv() {
+            for e in &batch {
+                assert_eq!(route(*e, shards), Route::Cross);
+            }
+            delivered += batch.len();
+        }
+        assert_eq!(delivered, chunk.len());
+    }
+}

@@ -1,0 +1,318 @@
+//! Pull-based edge sources.
+//!
+//! A source yields edges *once*, in stream order, in batches (batching
+//! amortises per-edge dispatch without violating the single-pass
+//! contract — the paper's algorithm still touches each edge exactly
+//! once). `len_hint` lets harnesses pre-size reports, not algorithms.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+
+use crate::graph::edge::Edge;
+use crate::graph::io::parse_edge_line;
+
+/// A single-pass edge stream.
+pub trait EdgeSource: Send {
+    /// Fill `buf` with up to `buf.capacity()` edges; returns the number
+    /// written. 0 = stream exhausted. `buf` is cleared first.
+    fn next_batch(&mut self, buf: &mut Vec<Edge>) -> usize;
+
+    /// Optional total edge count (for reporting only).
+    fn len_hint(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Stream over an in-memory edge slice (the common bench path).
+pub struct MemorySource<'a> {
+    edges: &'a [Edge],
+    pos: usize,
+}
+
+impl<'a> MemorySource<'a> {
+    pub fn new(edges: &'a [Edge]) -> Self {
+        Self { edges, pos: 0 }
+    }
+}
+
+impl<'a> EdgeSource for MemorySource<'a> {
+    fn next_batch(&mut self, buf: &mut Vec<Edge>) -> usize {
+        buf.clear();
+        let take = buf.capacity().min(self.edges.len() - self.pos);
+        buf.extend_from_slice(&self.edges[self.pos..self.pos + take]);
+        self.pos += take;
+        take
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.edges.len())
+    }
+}
+
+/// Owned variant of [`MemorySource`] (for moving across threads).
+pub struct OwnedMemorySource {
+    edges: Vec<Edge>,
+    pos: usize,
+}
+
+impl OwnedMemorySource {
+    pub fn new(edges: Vec<Edge>) -> Self {
+        Self { edges, pos: 0 }
+    }
+}
+
+impl EdgeSource for OwnedMemorySource {
+    fn next_batch(&mut self, buf: &mut Vec<Edge>) -> usize {
+        buf.clear();
+        let take = buf.capacity().min(self.edges.len() - self.pos);
+        buf.extend_from_slice(&self.edges[self.pos..self.pos + take]);
+        self.pos += take;
+        take
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.edges.len())
+    }
+}
+
+/// Stream a SNAP-style text edge file. Node ids must already be dense
+/// u32 (the harness writes files that way); sparse-id files should go
+/// through `graph::io::read_text_edges` instead.
+///
+/// §Perf: this is a streaming-path transport, so parsing is byte-level
+/// — `read_until` into a byte buffer (no UTF-8 validation) and a
+/// hand-rolled decimal scanner instead of `split_whitespace` + `parse`.
+/// This took STR-from-text from 4.7× the `cat` bound to ~2× (the
+/// paper's Friendster ratio); see EXPERIMENTS.md §Perf.
+pub struct TextFileSource {
+    reader: BufReader<File>,
+    /// carry for a line spanning a buffer refill boundary
+    carry: Vec<u8>,
+    bytes_read: u64,
+    eof: bool,
+}
+
+/// Scan one text line as two decimal ids; `None` for comments/blank/
+/// malformed lines. Byte-level twin of `graph::io::parse_edge_line`.
+#[inline]
+fn parse_edge_bytes(line: &[u8]) -> Option<(u64, u64)> {
+    let mut i = 0;
+    let n = line.len();
+    // skip leading whitespace
+    while i < n && (line[i] == b' ' || line[i] == b'\t' || line[i] == b'\r' || line[i] == b'\n') {
+        i += 1;
+    }
+    if i >= n || line[i] == b'#' || line[i] == b'%' {
+        return None;
+    }
+    let mut scan_int = |i: &mut usize| -> Option<u64> {
+        let start = *i;
+        let mut x: u64 = 0;
+        while *i < n && line[*i].is_ascii_digit() {
+            x = x.wrapping_mul(10).wrapping_add((line[*i] - b'0') as u64);
+            *i += 1;
+        }
+        if *i == start {
+            None
+        } else {
+            Some(x)
+        }
+    };
+    let u = scan_int(&mut i)?;
+    while i < n && (line[i] == b' ' || line[i] == b'\t') {
+        i += 1;
+    }
+    let v = scan_int(&mut i)?;
+    Some((u, v))
+}
+
+impl TextFileSource {
+    pub fn open<P: AsRef<Path>>(path: P) -> std::io::Result<Self> {
+        Ok(Self {
+            reader: BufReader::with_capacity(1 << 20, File::open(path)?),
+            carry: Vec::with_capacity(64),
+            bytes_read: 0,
+            eof: false,
+        })
+    }
+
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read
+    }
+
+    #[inline]
+    fn emit(line: &[u8], buf: &mut Vec<Edge>) {
+        if let Some((u, v)) = parse_edge_bytes(line) {
+            if u != v {
+                buf.push(Edge::new(u as u32, v as u32));
+            }
+        }
+    }
+}
+
+impl EdgeSource for TextFileSource {
+    fn next_batch(&mut self, buf: &mut Vec<Edge>) -> usize {
+        use std::io::BufRead;
+        buf.clear();
+        while buf.len() < buf.capacity() && !self.eof {
+            // scan lines directly in the reader's internal buffer —
+            // no per-line copy (§Perf)
+            let chunk = match self.reader.fill_buf() {
+                Ok(c) => c,
+                Err(_) => break,
+            };
+            if chunk.is_empty() {
+                self.eof = true;
+                if !self.carry.is_empty() {
+                    let carry = std::mem::take(&mut self.carry);
+                    Self::emit(&carry, buf);
+                }
+                break;
+            }
+            let mut start = 0usize;
+            let mut consumed = 0usize;
+            while let Some(pos) = chunk[start..].iter().position(|&b| b == b'\n') {
+                let line = &chunk[start..start + pos];
+                if self.carry.is_empty() {
+                    Self::emit(line, buf);
+                } else {
+                    self.carry.extend_from_slice(line);
+                    let carry = std::mem::take(&mut self.carry);
+                    Self::emit(&carry, buf);
+                    self.carry = carry;
+                    self.carry.clear();
+                }
+                start += pos + 1;
+                consumed = start;
+                if buf.len() >= buf.capacity() {
+                    break;
+                }
+            }
+            if consumed == 0 && start == 0 && buf.len() < buf.capacity() {
+                // no newline in the whole chunk: stash and refill
+                self.carry.extend_from_slice(chunk);
+                consumed = chunk.len();
+            } else if buf.len() < buf.capacity() && consumed < chunk.len() {
+                // trailing partial line: stash it
+                self.carry.extend_from_slice(&chunk[consumed..]);
+                consumed = chunk.len();
+            }
+            self.bytes_read += consumed as u64;
+            self.reader.consume(consumed);
+        }
+        buf.len()
+    }
+}
+
+/// Stream the compact binary format written by `graph::io`.
+///
+/// §Perf: the read buffer is owned and reused across batches — a fresh
+/// `vec![0; want*8]` per batch cost ~25% of streaming throughput
+/// (EXPERIMENTS.md §Perf).
+pub struct BinaryFileSource {
+    reader: BufReader<File>,
+    remaining: u64,
+    scratch: Vec<u8>,
+}
+
+impl BinaryFileSource {
+    pub fn open<P: AsRef<Path>>(path: P) -> std::io::Result<Self> {
+        let mut reader = BufReader::with_capacity(1 << 20, File::open(path)?);
+        let mut head = [0u8; 16];
+        reader.read_exact(&mut head)?;
+        let m = u64::from_le_bytes(head[8..16].try_into().unwrap());
+        Ok(Self { reader, remaining: m, scratch: Vec::new() })
+    }
+}
+
+impl EdgeSource for BinaryFileSource {
+    fn next_batch(&mut self, buf: &mut Vec<Edge>) -> usize {
+        buf.clear();
+        let want = (buf.capacity() as u64).min(self.remaining) as usize;
+        if want == 0 {
+            return 0;
+        }
+        self.scratch.resize(want * 8, 0);
+        match self.reader.read_exact(&mut self.scratch) {
+            Ok(()) => {}
+            Err(_) => return 0,
+        }
+        for c in self.scratch.chunks_exact(8) {
+            buf.push(Edge::new(
+                u32::from_le_bytes(c[0..4].try_into().unwrap()),
+                u32::from_le_bytes(c[4..8].try_into().unwrap()),
+            ));
+        }
+        self.remaining -= want as u64;
+        want
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.remaining as usize)
+    }
+}
+
+/// Drain a source into a Vec (tests/harness convenience).
+pub fn collect(source: &mut dyn EdgeSource, batch: usize) -> Vec<Edge> {
+    let mut out = Vec::new();
+    let mut buf = Vec::with_capacity(batch);
+    while source.next_batch(&mut buf) > 0 {
+        out.extend_from_slice(&buf);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::edge::EdgeList;
+    use crate::graph::io;
+
+    fn edges() -> Vec<Edge> {
+        (0..100u32).map(|i| Edge::new(i, i + 1)).collect()
+    }
+
+    #[test]
+    fn memory_source_batches_exactly() {
+        let es = edges();
+        let mut src = MemorySource::new(&es);
+        let mut buf = Vec::with_capacity(32);
+        assert_eq!(src.next_batch(&mut buf), 32);
+        assert_eq!(src.next_batch(&mut buf), 32);
+        assert_eq!(src.next_batch(&mut buf), 32);
+        assert_eq!(src.next_batch(&mut buf), 4);
+        assert_eq!(src.next_batch(&mut buf), 0);
+    }
+
+    #[test]
+    fn collect_roundtrips_memory() {
+        let es = edges();
+        let mut src = MemorySource::new(&es);
+        assert_eq!(collect(&mut src, 7), es);
+    }
+
+    #[test]
+    fn text_file_source_streams() {
+        let p = std::env::temp_dir().join(format!("sc_src_{}.txt", std::process::id()));
+        let el = EdgeList::new(101, edges());
+        io::write_text_edges(&p, &el).unwrap();
+        let mut src = TextFileSource::open(&p).unwrap();
+        let got = collect(&mut src, 13);
+        assert_eq!(got, el.edges);
+        assert!(src.bytes_read() > 0);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn binary_file_source_streams() {
+        let p = std::env::temp_dir().join(format!("sc_src_{}.bin", std::process::id()));
+        let el = EdgeList::new(101, edges());
+        io::write_binary_edges(&p, &el).unwrap();
+        let mut src = BinaryFileSource::open(&p).unwrap();
+        assert_eq!(src.len_hint(), Some(100));
+        let got = collect(&mut src, 13);
+        assert_eq!(got, el.edges);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,266 @@
+//! Bounded MPMC channel with blocking backpressure.
+//!
+//! This is the streaming substrate's transport: producers (edge sources,
+//! shard routers) block when the queue is full — that *is* the
+//! backpressure mechanism the DESIGN.md stream layer calls for — and
+//! consumers block when it is empty. Built on `Mutex` + `Condvar`
+//! (no crossbeam available offline). Close semantics: any handle can
+//! `close()`; receivers drain remaining items then see `None`.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Inner<T> {
+    queue: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+struct State<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    closed: bool,
+    /// high-water mark, for observability/tests
+    peak: usize,
+    pushed: u64,
+    popped: u64,
+}
+
+/// Sender/receiver handle (clonable; MPMC).
+pub struct Channel<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for Channel<T> {
+    fn clone(&self) -> Self {
+        Self { inner: Arc::clone(&self.inner) }
+    }
+}
+
+/// Error returned when sending into a closed channel.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError;
+
+impl<T> Channel<T> {
+    pub fn bounded(cap: usize) -> Self {
+        assert!(cap > 0, "channel capacity must be > 0");
+        Self {
+            inner: Arc::new(Inner {
+                queue: Mutex::new(State {
+                    // don't pre-reserve unbounded capacities
+                    buf: VecDeque::with_capacity(cap.min(1024)),
+                    cap,
+                    closed: false,
+                    peak: 0,
+                    pushed: 0,
+                    popped: 0,
+                }),
+                not_full: Condvar::new(),
+                not_empty: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Blocking send; applies backpressure when full.
+    pub fn send(&self, item: T) -> Result<(), SendError> {
+        let mut st = self.inner.queue.lock().unwrap();
+        while st.buf.len() >= st.cap && !st.closed {
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return Err(SendError);
+        }
+        st.buf.push_back(item);
+        st.pushed += 1;
+        let len = st.buf.len();
+        if len > st.peak {
+            st.peak = len;
+        }
+        drop(st);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking send; `Ok(false)` when full.
+    pub fn try_send(&self, item: T) -> Result<bool, SendError> {
+        let mut st = self.inner.queue.lock().unwrap();
+        if st.closed {
+            return Err(SendError);
+        }
+        if st.buf.len() >= st.cap {
+            return Ok(false);
+        }
+        st.buf.push_back(item);
+        st.pushed += 1;
+        let len = st.buf.len();
+        if len > st.peak {
+            st.peak = len;
+        }
+        drop(st);
+        self.inner.not_empty.notify_one();
+        Ok(true)
+    }
+
+    /// Blocking receive; `None` once the channel is closed *and* drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.buf.pop_front() {
+                st.popped += 1;
+                drop(st);
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        let item = st.buf.pop_front();
+        if item.is_some() {
+            st.popped += 1;
+            drop(st);
+            self.inner.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Close the channel; wakes all waiters. Idempotent.
+    pub fn close(&self) {
+        let mut st = self.inner.queue.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.queue.lock().unwrap().closed
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (peak occupancy, total pushed, total popped) — backpressure stats.
+    pub fn stats(&self) -> (usize, u64, u64) {
+        let st = self.inner.queue.lock().unwrap();
+        (st.peak, st.pushed, st.popped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let ch = Channel::bounded(8);
+        for i in 0..5 {
+            ch.send(i).unwrap();
+        }
+        ch.close();
+        let got: Vec<i32> = std::iter::from_fn(|| ch.recv()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn backpressure_blocks_until_drained() {
+        let ch = Channel::bounded(2);
+        ch.send(1).unwrap();
+        ch.send(2).unwrap();
+        assert_eq!(ch.try_send(3).unwrap(), false); // full
+
+        let tx = ch.clone();
+        let producer = thread::spawn(move || {
+            tx.send(3).unwrap(); // blocks until a recv
+            tx.close();
+        });
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(ch.recv(), Some(1));
+        producer.join().unwrap();
+        assert_eq!(ch.recv(), Some(2));
+        assert_eq!(ch.recv(), Some(3));
+        assert_eq!(ch.recv(), None);
+    }
+
+    #[test]
+    fn close_unblocks_receivers() {
+        let ch: Channel<u32> = Channel::bounded(1);
+        let rx = ch.clone();
+        let consumer = thread::spawn(move || rx.recv());
+        thread::sleep(Duration::from_millis(20));
+        ch.close();
+        assert_eq!(consumer.join().unwrap(), None);
+    }
+
+    #[test]
+    fn send_to_closed_errors() {
+        let ch = Channel::bounded(1);
+        ch.close();
+        assert_eq!(ch.send(1), Err(SendError));
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_exactly_once() {
+        let ch = Channel::bounded(16);
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let tx = ch.clone();
+                thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        tx.send(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let rx = ch.clone();
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(x) = rx.recv() {
+                        got.push(x);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        ch.close();
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all.len(), 4000);
+        all.dedup();
+        assert_eq!(all.len(), 4000, "duplicates detected");
+    }
+
+    #[test]
+    fn stats_track_peak() {
+        let ch = Channel::bounded(4);
+        ch.send(1).unwrap();
+        ch.send(2).unwrap();
+        ch.send(3).unwrap();
+        ch.recv();
+        let (peak, pushed, popped) = ch.stats();
+        assert_eq!(peak, 3);
+        assert_eq!(pushed, 3);
+        assert_eq!(popped, 1);
+    }
+}

@@ -1,0 +1,189 @@
+//! Minimal, dependency-free CLI argument parser.
+//!
+//! The offline build has no `clap`; this module provides the small
+//! subset the `streamcom` binary and the bench harnesses need:
+//! subcommands, `--flag`, `--key value` / `--key=value`, positional
+//! arguments, typed accessors with defaults, and generated help text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declarative description of one option (for help text + validation).
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cli error: {}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse `argv[1..]`. The first non-option token becomes the
+    /// subcommand; later non-option tokens are positional.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, CliError> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` ends option parsing
+                    out.positional.extend(iter);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| CliError(format!("invalid value for --{name}: {s:?}"))),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        Ok(self.get_parse::<usize>(name)?.unwrap_or(default))
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        Ok(self.get_parse::<u64>(name)?.unwrap_or(default))
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        Ok(self.get_parse::<f64>(name)?.unwrap_or(default))
+    }
+
+    /// Error on options not present in `specs` (typo protection).
+    pub fn validate(&self, specs: &[OptSpec]) -> Result<(), CliError> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !specs.iter().any(|s| s.name == k) {
+                return Err(CliError(format!("unknown option --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Render help text for a subcommand.
+pub fn render_help(command: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{command} — {about}\n\nOptions:");
+    for spec in specs {
+        let default = spec
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        let val = if spec.is_flag { "" } else { " <value>" };
+        let _ = writeln!(s, "  --{}{val}\n      {}{default}", spec.name, spec.help);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NB: a bare `--flag` followed by a non-option token would bind
+        // as `--flag token`; flags therefore go last or use `=`.
+        let a = parse(&["run", "--nodes", "100", "--vmax=8", "input.txt", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.get("nodes"), Some("100"));
+        assert_eq!(a.get("vmax"), Some("8"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["input.txt"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["x", "--n", "42", "--p", "0.5"]);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 42);
+        assert_eq!(a.f64_or("p", 0.0).unwrap(), 0.5);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert!(a.get_parse::<usize>("p").is_err());
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["x", "--quiet"]);
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("loud"));
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse(&["x", "--", "--not-an-option"]);
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn validate_rejects_unknown() {
+        let a = parse(&["x", "--bogus", "1"]);
+        let specs = [OptSpec { name: "nodes", help: "", default: None, is_flag: false }];
+        assert!(a.validate(&specs).is_err());
+    }
+
+    #[test]
+    fn help_renders() {
+        let specs = [OptSpec { name: "nodes", help: "node count", default: Some("1000"), is_flag: false }];
+        let h = render_help("run", "run the thing", &specs);
+        assert!(h.contains("--nodes"));
+        assert!(h.contains("default: 1000"));
+    }
+}

@@ -1,0 +1,16 @@
+//! From-scratch substrates: everything the offline build cannot pull
+//! from crates.io.
+//!
+//! * [`rng`] — SplitMix64 / xoshiro256** PRNGs (no `rand`)
+//! * [`cli`] — argument parser (no `clap`)
+//! * [`channel`] — bounded MPMC channel with backpressure (no `crossbeam`)
+//! * [`pool`] — thread pool + scoped fork/join (no `rayon`)
+//! * [`union_find`] — disjoint-set forest
+//! * [`proptest`] — tiny property-testing harness (no `proptest` crate)
+
+pub mod channel;
+pub mod cli;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod union_find;

@@ -1,0 +1,136 @@
+//! Minimal thread pool for the parallel coordinator and bench harness.
+//!
+//! No rayon offline; this pool provides the two shapes we need:
+//! fire-and-forget task execution and `scope`-style fork/join over
+//! closures that return values.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    tx: Option<mpsc::Sender<Job>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                thread::spawn(move || loop {
+                    let job = rx.lock().unwrap().recv();
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        Self { workers, tx: Some(tx) }
+    }
+
+    /// Number of logical CPUs (fallback 4).
+    pub fn default_threads() -> usize {
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Run `f(i)` for `i in 0..n` across the pool, collecting results in
+    /// index order. Blocks until all complete.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let (tx, rx) = mpsc::channel::<(usize, T)>();
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            self.execute(move || {
+                let out = f(i);
+                let _ = tx.send((i, out));
+            });
+        }
+        drop(tx);
+        let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, v) in rx {
+            results[i] = Some(v);
+        }
+        results.into_iter().map(|o| o.expect("worker panicked")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close channel → workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// One-shot fork/join without keeping a pool alive: spawn `n` scoped
+/// threads running `f(i)` and collect results in index order.
+pub fn scoped_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Send + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    thread::scope(|s| {
+        let handles: Vec<_> = (0..n).map(|i| s.spawn({ let f = &f; move || f(i) })).collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            out[i] = Some(h.join().expect("scoped worker panicked"));
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn pool_executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // joins workers
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_index_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map(20, |i| i * i);
+        assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_map_borrows_environment() {
+        let data: Vec<u64> = (0..16).collect();
+        let out = scoped_map(4, |i| data[i * 4..(i + 1) * 4].iter().sum::<u64>());
+        assert_eq!(out.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+}

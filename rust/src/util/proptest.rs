@@ -1,0 +1,134 @@
+//! Tiny property-testing harness (the `proptest` crate is unavailable
+//! offline).
+//!
+//! Provides the shape our invariant tests need: run a property over many
+//! seeded random cases, and on failure *shrink* the failing case by
+//! retrying with smaller size parameters, reporting the smallest
+//! reproduction seed/size found.
+//!
+//! ```ignore
+//! property("volumes conserved", 100, |rng, size| {
+//!     let g = random_graph(rng, size);
+//!     ...check...
+//! });
+//! ```
+
+use super::rng::Xoshiro256;
+
+/// Outcome of a single case.
+pub type CaseResult = Result<(), String>;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub max_size: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 100, max_size: 200, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop(rng, size)` for `config.cases` random `(seed, size)` pairs.
+/// On failure, attempt to shrink `size` downwards and panic with the
+/// smallest failing case.
+pub fn check<F>(name: &str, config: Config, prop: F)
+where
+    F: Fn(&mut Xoshiro256, usize) -> CaseResult,
+{
+    let mut meta = Xoshiro256::new(config.seed);
+    for case in 0..config.cases {
+        let case_seed = meta.next_u64();
+        // sizes sweep from small to max over the run so early failures
+        // are already small
+        let size = 1 + (config.max_size * (case + 1)) / config.cases;
+        let mut rng = Xoshiro256::new(case_seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // shrink: same seed, smaller sizes
+            let mut best = (size, msg);
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Xoshiro256::new(case_seed);
+                match prop(&mut rng, s) {
+                    Err(m) => {
+                        best = (s, m);
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, \
+                 shrunk size {}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Convenience: run with default config.
+pub fn property<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Xoshiro256, usize) -> CaseResult,
+{
+    check(name, Config { cases, ..Config::default() }, prop);
+}
+
+/// Assert helper producing `CaseResult`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::cell::Cell::new(0usize);
+        property("always true", 50, |_rng, _size| {
+            count.set(count.get() + 1);
+            Ok(())
+        });
+        assert_eq!(count.get(), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails at size >= 3'")]
+    fn failing_property_shrinks() {
+        property("fails at size >= 3", 50, |_rng, size| {
+            if size >= 3 {
+                Err(format!("size {size} too big"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn rng_is_deterministic_per_case() {
+        // same config → same sequence of cases
+        let collect = |cfg: Config| {
+            let v = std::cell::RefCell::new(Vec::new());
+            check("det", cfg, |rng, size| {
+                v.borrow_mut().push((rng.next_u64(), size));
+                Ok(())
+            });
+            v.into_inner()
+        };
+        let a = collect(Config { cases: 10, ..Config::default() });
+        let b = collect(Config { cases: 10, ..Config::default() });
+        assert_eq!(a, b);
+    }
+}

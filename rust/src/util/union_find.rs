@@ -1,0 +1,127 @@
+//! Union–find (disjoint set union) with path halving + union by size.
+//!
+//! Used by the graph generators (connectivity checks), Walktrap's
+//! agglomerative merge tracking, and the test suite's partition
+//! invariants.
+
+/// Disjoint-set forest over `0..n`.
+#[derive(Debug, Clone)]
+pub struct UnionFind {
+    parent: Vec<u32>,
+    size: Vec<u32>,
+    components: usize,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> Self {
+        Self {
+            parent: (0..n as u32).collect(),
+            size: vec![1; n],
+            components: n,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Number of disjoint components.
+    pub fn components(&self) -> usize {
+        self.components
+    }
+
+    /// Find with path halving (iterative, allocation-free).
+    pub fn find(&mut self, mut x: usize) -> usize {
+        while self.parent[x] as usize != x {
+            let gp = self.parent[self.parent[x] as usize];
+            self.parent[x] = gp;
+            x = gp as usize;
+        }
+        x
+    }
+
+    /// Union by size; returns `true` if the two sets were merged.
+    pub fn union(&mut self, a: usize, b: usize) -> bool {
+        let (mut ra, mut rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        if self.size[ra] < self.size[rb] {
+            std::mem::swap(&mut ra, &mut rb);
+        }
+        self.parent[rb] = ra as u32;
+        self.size[ra] += self.size[rb];
+        self.components -= 1;
+        true
+    }
+
+    /// Size of the set containing `x`.
+    pub fn set_size(&mut self, x: usize) -> usize {
+        let r = self.find(x);
+        self.size[r] as usize
+    }
+
+    pub fn same_set(&mut self, a: usize, b: usize) -> bool {
+        self.find(a) == self.find(b)
+    }
+
+    /// Canonical labels: `labels[i]` = smallest member of i's set.
+    pub fn labels(&mut self) -> Vec<u32> {
+        let n = self.len();
+        let mut canon = vec![u32::MAX; n];
+        let mut labels = vec![0u32; n];
+        for i in 0..n {
+            let r = self.find(i);
+            if canon[r] == u32::MAX {
+                canon[r] = i as u32;
+            }
+            labels[i] = canon[r];
+        }
+        labels
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_union_find() {
+        let mut uf = UnionFind::new(10);
+        assert_eq!(uf.components(), 10);
+        assert!(uf.union(0, 1));
+        assert!(uf.union(1, 2));
+        assert!(!uf.union(0, 2));
+        assert_eq!(uf.components(), 8);
+        assert!(uf.same_set(0, 2));
+        assert!(!uf.same_set(0, 3));
+        assert_eq!(uf.set_size(1), 3);
+    }
+
+    #[test]
+    fn labels_are_canonical_min() {
+        let mut uf = UnionFind::new(6);
+        uf.union(3, 5);
+        uf.union(5, 1);
+        let labels = uf.labels();
+        assert_eq!(labels[1], labels[3]);
+        assert_eq!(labels[3], labels[5]);
+        assert_eq!(labels[1], 1); // min member
+        assert_eq!(labels[0], 0);
+    }
+
+    #[test]
+    fn chain_unions_single_component() {
+        let n = 1000;
+        let mut uf = UnionFind::new(n);
+        for i in 0..n - 1 {
+            uf.union(i, i + 1);
+        }
+        assert_eq!(uf.components(), 1);
+        assert_eq!(uf.set_size(0), n);
+    }
+}

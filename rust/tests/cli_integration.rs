@@ -1,0 +1,117 @@
+//! CLI integration: drive the `streamcom` binary end-to-end
+//! (generate → run → sweep → bench memory) through real process spawns.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn exe() -> PathBuf {
+    // target/<profile>/streamcom next to the test executable
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // <profile>/
+    p.push("streamcom");
+    p
+}
+
+fn run(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(exe())
+        .args(args)
+        .current_dir(std::env::temp_dir())
+        .output()
+        .expect("spawn streamcom");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn help_lists_commands() {
+    let (stdout, _, ok) = run(&["help"]);
+    assert!(ok);
+    for cmd in ["generate", "run", "sweep", "bench", "serve"] {
+        assert!(stdout.contains(cmd), "missing {cmd} in help");
+    }
+}
+
+#[test]
+fn unknown_command_fails_with_message() {
+    let (_, stderr, ok) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown command"));
+}
+
+#[test]
+fn generate_then_run_then_score() {
+    let dir = std::env::temp_dir();
+    let bin = dir.join(format!("sc_cli_{}.bin", std::process::id()));
+    let bin_str = bin.to_str().unwrap();
+
+    let (stdout, stderr, ok) = run(&[
+        "generate",
+        "--preset",
+        "amazon-s",
+        "--scale",
+        "0.02",
+        "--out",
+        bin_str,
+    ]);
+    assert!(ok, "generate failed: {stderr}");
+    assert!(stdout.contains("generated"));
+    assert!(bin.is_file());
+
+    let labels = dir.join(format!("sc_cli_{}.labels", std::process::id()));
+    let (stdout, stderr, ok) = run(&[
+        "run",
+        "--input",
+        bin_str,
+        "--vmax",
+        "32",
+        "--out",
+        labels.to_str().unwrap(),
+        "--score",
+    ]);
+    assert!(ok, "run failed: {stderr}");
+    assert!(stdout.contains("communities"), "{stdout}");
+    assert!(stdout.contains("F1="), "score missing: {stdout}");
+    assert!(labels.is_file());
+
+    // parallel run on the same input
+    let (stdout, stderr, ok) = run(&["run", "--input", bin_str, "--vmax", "32", "--parallel", "4"]);
+    assert!(ok, "parallel run failed: {stderr}");
+    assert!(stdout.contains("communities"));
+
+    std::fs::remove_file(&bin).ok();
+    std::fs::remove_file(&labels).ok();
+    // generate also wrote .cmty and .txt siblings
+    let stem = bin_str.trim_end_matches(".bin");
+    std::fs::remove_file(format!("{stem}.cmty")).ok();
+    std::fs::remove_file(format!("{stem}.txt")).ok();
+}
+
+#[test]
+fn sweep_prints_ladder_and_winner() {
+    let (stdout, stderr, ok) = run(&[
+        "sweep",
+        "--preset",
+        "dblp-s",
+        "--scale",
+        "0.02",
+        "--engine",
+        "native",
+    ]);
+    assert!(ok, "sweep failed: {stderr}");
+    assert!(stdout.contains("v_max"));
+    assert!(stdout.contains("*"), "winner marker missing:\n{stdout}");
+    assert!(stdout.contains("F1="));
+}
+
+#[test]
+fn bench_memory_prints_ratio_table() {
+    let (stdout, stderr, ok) = run(&["bench", "memory", "--scale", "0.01"]);
+    assert!(ok, "bench memory failed: {stderr}");
+    assert!(stdout.contains("edge list"));
+    assert!(stdout.contains("STR sketch"));
+    assert!(stdout.contains('x'));
+}

@@ -1,0 +1,73 @@
+//! Detection-quality parity between the sequential algorithm and the
+//! sharded leader/worker coordinator (DESIGN.md: deferred cross-edge
+//! resolution must not cost detection quality on SBM workloads).
+
+use streamcom::coordinator::algorithm::cluster_edges;
+use streamcom::coordinator::parallel::{run_parallel, ParallelConfig};
+use streamcom::graph::generators::sbm::{self, SbmConfig};
+use streamcom::metrics::{f1::average_f1_labels, nmi::nmi_labels};
+
+fn parity_case(shards: usize, seed: u64) {
+    let g = sbm::generate(&SbmConfig::equal(12, 60, 0.3, 0.002, seed));
+    let truth = g.truth.to_labels(g.n());
+    let v_max = 128;
+
+    let seq = cluster_edges(g.n(), &g.edges.edges, v_max);
+    let par = run_parallel(g.n(), &g.edges.edges, &ParallelConfig::new(shards, v_max));
+    let par_labels = par.labels();
+
+    let (nmi_s, nmi_p) = (nmi_labels(&seq, &truth), nmi_labels(&par_labels, &truth));
+    let (f1_s, f1_p) = (
+        average_f1_labels(&seq, &truth),
+        average_f1_labels(&par_labels, &truth),
+    );
+    assert!(
+        nmi_p >= nmi_s - 0.15,
+        "shards={shards}: NMI {nmi_p:.3} vs sequential {nmi_s:.3}"
+    );
+    assert!(
+        f1_p >= f1_s * 0.7,
+        "shards={shards}: F1 {f1_p:.3} vs sequential {f1_s:.3}"
+    );
+    // every edge must be processed exactly once
+    assert_eq!(par.local_edges + par.cross_edges, g.m() as u64);
+}
+
+#[test]
+fn parity_two_shards() {
+    parity_case(2, 101);
+}
+
+#[test]
+fn parity_four_shards() {
+    parity_case(4, 102);
+}
+
+#[test]
+fn parity_eight_shards() {
+    parity_case(8, 103);
+}
+
+#[test]
+fn cross_edge_fraction_grows_with_shards() {
+    let g = sbm::generate(&SbmConfig::equal(8, 50, 0.3, 0.01, 7));
+    let frac = |shards: usize| {
+        let par = run_parallel(g.n(), &g.edges.edges, &ParallelConfig::new(shards, 64));
+        par.cross_edges as f64 / g.m() as f64
+    };
+    let f2 = frac(2);
+    let f8 = frac(8);
+    assert!(f2 < f8, "cross fraction {f2} !< {f8}");
+    // expectation: 1 - 1/s
+    assert!((f2 - 0.5).abs() < 0.1, "f2={f2}");
+    assert!((f8 - 0.875).abs() < 0.08, "f8={f8}");
+}
+
+#[test]
+fn parallel_is_deterministic_given_config() {
+    let g = sbm::generate(&SbmConfig::equal(6, 40, 0.3, 0.01, 11));
+    let cfg = ParallelConfig::new(4, 64);
+    let a = run_parallel(g.n(), &g.edges.edges, &cfg);
+    let b = run_parallel(g.n(), &g.edges.edges, &cfg);
+    assert_eq!(a.labels(), b.labels());
+}

@@ -1,0 +1,120 @@
+//! End-to-end integration across the stream substrate + coordinator +
+//! metrics: file → chunked pipeline → clustering → scoring, and the
+//! multi-parameter sweep → selection path.
+
+use streamcom::bench::workloads;
+use streamcom::coordinator::algorithm::{StrConfig, StreamingClusterer};
+use streamcom::coordinator::selection::{select, NativeEngine, SelectionRule};
+use streamcom::coordinator::sweep::MultiSweep;
+use streamcom::graph::generators::presets::SNAP_PRESETS;
+use streamcom::graph::generators::sbm::{self, SbmConfig};
+use streamcom::graph::io;
+use streamcom::metrics::{f1, modularity, nmi};
+use streamcom::stream::chunk::{ChunkConfig, ChunkStream};
+use streamcom::stream::source::{BinaryFileSource, TextFileSource};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("sc_it_{}_{name}", std::process::id()))
+}
+
+#[test]
+fn file_to_clustering_to_scores_binary() {
+    let g = sbm::generate(&SbmConfig::equal(8, 40, 0.35, 0.005, 42));
+    let path = tmp("pipe.bin");
+    io::write_binary_edges(&path, &g.edges).unwrap();
+
+    let source = BinaryFileSource::open(&path).unwrap();
+    let stream = ChunkStream::spawn(source, ChunkConfig { chunk_size: 1000, depth: 3 });
+    let mut c = StreamingClusterer::new(g.n(), StrConfig::new(64));
+    while let Some(chunk) = stream.next_chunk() {
+        c.process_chunk(&chunk);
+    }
+    assert_eq!(c.state.edges_processed, g.m() as u64);
+
+    let labels = c.labels();
+    let truth = g.truth.to_labels(g.n());
+    let f1 = f1::average_f1_labels(&labels, &truth);
+    let nmi = nmi::nmi_labels(&labels, &truth);
+    let q = modularity::modularity(g.n(), &g.edges.edges, &labels);
+    assert!(f1 > 0.3, "f1={f1}");
+    assert!(nmi > 0.5, "nmi={nmi}");
+    assert!(q > 0.2, "q={q}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn file_to_clustering_text_roundtrip_matches_memory_run() {
+    let g = sbm::generate(&SbmConfig::equal(5, 30, 0.4, 0.01, 17));
+    let path = tmp("pipe.txt");
+    io::write_text_edges(&path, &g.edges).unwrap();
+
+    let mut from_file = StreamingClusterer::new(g.n(), StrConfig::new(32));
+    let mut source = TextFileSource::open(&path).unwrap();
+    from_file.run(&mut source, 512);
+
+    let mut from_mem = StreamingClusterer::new(g.n(), StrConfig::new(32));
+    from_mem.process_chunk(&g.edges.edges);
+
+    assert_eq!(from_file.labels(), from_mem.labels());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn sweep_selection_end_to_end_beats_fixed_extremes() {
+    let g = sbm::generate(&SbmConfig::equal(10, 40, 0.35, 0.004, 99));
+    let truth = g.truth.to_labels(g.n());
+    // the production ladder anchors at the average degree (volumes
+    // scale with degree — see bench::table1::select_v_max)
+    let avg_deg = (2 * g.m() / g.n()).max(4) as u64;
+    let ladder = MultiSweep::geometric_ladder(avg_deg, 8);
+    let mut sweep = MultiSweep::new(g.n(), ladder.clone());
+    sweep.process_chunk(&g.edges.edges);
+    let (winner, _) = select(&sweep, &mut NativeEngine, SelectionRule::DensityScore);
+
+    let f1_of = |labels: &Vec<u32>| f1::average_f1_labels(labels, &truth);
+    let f1_winner = f1_of(&sweep.labels(winner));
+    let f1_first = f1_of(&sweep.labels(0));
+    let f1_last = f1_of(&sweep.labels(ladder.len() - 1));
+    // the sketch-only selection must not pick something much worse than
+    // either extreme of its own ladder
+    assert!(
+        f1_winner >= f1_first.max(f1_last) * 0.8,
+        "winner {f1_winner} vs extremes {f1_first}/{f1_last}"
+    );
+}
+
+#[test]
+fn workload_presets_have_expected_shape() {
+    // the two smallest presets at tiny scale: ground truth present,
+    // mixing ordered as configured
+    let a = workloads::load_preset(&SNAP_PRESETS[0], 0.01, false);
+    assert!(a.truth.len() > 2);
+    let intra_frac = |g: &streamcom::graph::generators::GeneratedGraph| {
+        let t = g.truth.to_labels(g.n());
+        g.edges
+            .edges
+            .iter()
+            .filter(|e| t[e.u as usize] == t[e.v as usize])
+            .count() as f64
+            / g.m() as f64
+    };
+    let fa = intra_frac(&a);
+    let f = workloads::load_preset(&SNAP_PRESETS[5], 0.001, false);
+    let ff = intra_frac(&f);
+    assert!(
+        fa > ff,
+        "amazon-s intra {fa} should exceed friendster-s intra {ff}"
+    );
+}
+
+#[test]
+fn parallel_pipeline_with_backpressure_processes_everything() {
+    use streamcom::coordinator::parallel::{run_parallel, ParallelConfig};
+    let g = sbm::generate(&SbmConfig::equal(8, 50, 0.3, 0.01, 3));
+    let mut cfg = ParallelConfig::new(4, 64);
+    cfg.queue_depth = 2; // force backpressure
+    cfg.chunk_size = 64;
+    let res = run_parallel(g.n(), &g.edges.edges, &cfg);
+    assert_eq!(res.state.edges_processed, g.m() as u64);
+    assert_eq!(res.state.total_volume(), 2 * g.m() as u64);
+}

@@ -1,0 +1,189 @@
+//! Property-based invariant tests over the coordinator, using the
+//! from-scratch shrinker harness in `util::proptest`.
+//!
+//! Invariants pinned here are the ones the paper's correctness rests on:
+//! volume conservation (Σ v_k = 2t), label validity, sweep/single-run
+//! equivalence, order-independence of the sketch *totals*, and the
+//! dynamic extension's reversibility.
+
+use streamcom::coordinator::algorithm::{cluster_edges, StrConfig, StreamingClusterer};
+use streamcom::coordinator::dynamic::{DynamicClusterer, Event};
+use streamcom::coordinator::sweep::MultiSweep;
+use streamcom::graph::edge::Edge;
+use streamcom::util::proptest::{property, CaseResult};
+use streamcom::util::rng::Xoshiro256;
+
+/// Random multigraph edge stream over `size` nodes.
+fn random_stream(rng: &mut Xoshiro256, size: usize) -> (usize, Vec<Edge>) {
+    let n = size.max(2);
+    let m = size * 4;
+    let edges = (0..m)
+        .map(|_| {
+            let u = rng.range(0, n) as u32;
+            let mut v = rng.range(0, n) as u32;
+            if u == v {
+                v = (v + 1) % n as u32;
+            }
+            Edge::new(u, v)
+        })
+        .collect();
+    (n, edges)
+}
+
+fn prop_assert(cond: bool, msg: String) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg)
+    }
+}
+
+#[test]
+fn volume_conservation_holds_for_any_stream_and_vmax() {
+    property("volume conservation", 60, |rng, size| {
+        let (n, edges) = random_stream(rng, size);
+        let v_max = 1 + rng.next_below(1000);
+        let mut c = StreamingClusterer::new(n, StrConfig::new(v_max));
+        for (t, &e) in edges.iter().enumerate() {
+            c.process_edge(e);
+            if c.state.total_volume() != 2 * (t as u64 + 1) {
+                return Err(format!(
+                    "Σv = {} ≠ {} at t={t} (v_max={v_max})",
+                    c.state.total_volume(),
+                    2 * (t + 1)
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn labels_are_always_valid_node_ids() {
+    property("label validity", 60, |rng, size| {
+        let (n, edges) = random_stream(rng, size);
+        let labels = cluster_edges(n, &edges, 1 + rng.next_below(500));
+        prop_assert(
+            labels.iter().all(|&l| (l as usize) < n),
+            format!("label out of range in {labels:?}"),
+        )
+    });
+}
+
+#[test]
+fn community_members_share_label_transitively() {
+    // a community label must itself carry that label or be a node whose
+    // community id equals the label (community ids are node ids)
+    property("label closure", 40, |rng, size| {
+        let (n, edges) = random_stream(rng, size);
+        let labels = cluster_edges(n, &edges, 1 + rng.next_below(200));
+        // every label must be used by at least its own node or belong to
+        // a nonempty class
+        let mut class_count = vec![0usize; n];
+        for &l in &labels {
+            class_count[l as usize] += 1;
+        }
+        prop_assert(
+            labels.iter().all(|&l| class_count[l as usize] > 0),
+            "empty community referenced".into(),
+        )
+    });
+}
+
+#[test]
+fn sweep_equals_individual_runs_for_every_ladder() {
+    property("sweep/single equivalence", 25, |rng, size| {
+        let (n, edges) = random_stream(rng, size);
+        let base = 1 + rng.next_below(16);
+        let ladder = MultiSweep::geometric_ladder(base, 4);
+        let mut sweep = MultiSweep::new(n, ladder.clone());
+        sweep.process_chunk(&edges);
+        for (a, &vm) in ladder.iter().enumerate() {
+            let single = cluster_edges(n, &edges, vm);
+            if sweep.labels(a) != single {
+                return Err(format!("sweep row {a} (v_max={vm}) diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn degrees_match_stream_counts_regardless_of_order() {
+    property("degree totals order-independent", 30, |rng, size| {
+        let (n, edges) = random_stream(rng, size);
+        let mut shuffled = edges.clone();
+        rng.shuffle(&mut shuffled);
+        let mut a = StreamingClusterer::new(n, StrConfig::new(64));
+        let mut b = StreamingClusterer::new(n, StrConfig::new(64));
+        a.process_chunk(&edges);
+        b.process_chunk(&shuffled);
+        prop_assert(
+            a.state.degree == b.state.degree,
+            "degree tables differ under reordering".into(),
+        )
+    });
+}
+
+#[test]
+fn insert_delete_roundtrip_restores_sketch_totals() {
+    property("dynamic reversibility", 30, |rng, size| {
+        let (n, edges) = random_stream(rng, size);
+        let mut d = DynamicClusterer::new(n, StrConfig::new(32));
+        for &e in &edges {
+            d.apply(Event::Insert(e)).map_err(|e| format!("{e:?}"))?;
+        }
+        // delete in random order
+        let mut order = edges.clone();
+        rng.shuffle(&mut order);
+        for &e in &order {
+            d.apply(Event::Delete(e)).map_err(|e| format!("{e:?}"))?;
+        }
+        if d.state().total_volume() != 0 {
+            return Err(format!("residual volume {}", d.state().total_volume()));
+        }
+        prop_assert(
+            d.state().degree.iter().all(|&x| x == 0),
+            "residual degree after full deletion".into(),
+        )
+    });
+}
+
+#[test]
+fn threshold_rejection_monotone_in_vmax() {
+    // a larger v_max can only accept a superset of joins *on the same
+    // prefix-free first decision*; globally we check the weaker but
+    // stable invariant: community count is non-increasing from the
+    // smallest to the largest v_max on SBM-like streams
+    property("community count trend", 20, |rng, size| {
+        use streamcom::graph::generators::sbm::{self, SbmConfig};
+        let k = 2 + size / 40;
+        let g = sbm::generate(&SbmConfig::equal(k, 20, 0.4, 0.02, rng.next_u64()));
+        let small = cluster_edges(g.n(), &g.edges.edges, 2);
+        let large = cluster_edges(g.n(), &g.edges.edges, 1_000_000);
+        let count = |labels: &[u32]| {
+            let mut c = vec![false; labels.len()];
+            for &l in labels {
+                c[l as usize] = true;
+            }
+            c.iter().filter(|&&x| x).count()
+        };
+        prop_assert(
+            count(&small) >= count(&large),
+            format!("count(v=2)={} < count(v=∞)={}", count(&small), count(&large)),
+        )
+    });
+}
+
+#[test]
+fn memory_is_exactly_sixteen_bytes_per_node() {
+    property("sketch memory bound", 20, |rng, size| {
+        let (n, edges) = random_stream(rng, size);
+        let mut c = StreamingClusterer::new(n, StrConfig::new(64));
+        c.process_chunk(&edges);
+        prop_assert(
+            c.state.memory_bytes() == 16 * c.state.n(),
+            format!("{} bytes for {} nodes", c.state.memory_bytes(), c.state.n()),
+        )
+    });
+}

@@ -1,0 +1,133 @@
+//! Integration: the PJRT-executed AOT artifacts must agree with the
+//! native Rust implementations of the same math.
+//!
+//! Requires `make artifacts` to have run (the Makefile `test` target
+//! guarantees it); if the artifacts are missing the tests fail with a
+//! clear message rather than being skipped, because a silently-skipped
+//! runtime path defeats the point of the three-layer architecture.
+
+use streamcom::coordinator::selection::{
+    pad_sweep, select, MetricEngine, NativeEngine, SelectionRule, NUM_SWEEPS, VOLUME_BUCKETS,
+};
+use streamcom::coordinator::sweep::MultiSweep;
+use streamcom::graph::generators::sbm::{self, SbmConfig};
+use streamcom::metrics::modularity;
+use streamcom::metrics::nmi::{contingency_table, nmi_from_table, NmiNorm};
+use streamcom::runtime::{PjrtEngine, PjrtRuntime};
+use streamcom::util::rng::Xoshiro256;
+
+fn runtime() -> PjrtRuntime {
+    PjrtRuntime::load_default().expect(
+        "PJRT runtime failed to load — run `make artifacts` before `cargo test`",
+    )
+}
+
+fn finished_sweep() -> MultiSweep {
+    let g = sbm::generate(&SbmConfig::equal(12, 40, 0.3, 0.004, 77));
+    let mut sweep = MultiSweep::new(g.n(), MultiSweep::geometric_ladder(4, 8));
+    sweep.process_chunk(&g.edges.edges);
+    sweep
+}
+
+#[test]
+fn pjrt_sweep_metrics_match_native() {
+    let sweep = finished_sweep();
+    let padded = pad_sweep(&sweep, NUM_SWEEPS, VOLUME_BUCKETS);
+    let native = NativeEngine.sweep_metrics(
+        &padded.vols,
+        &padded.sizes,
+        &padded.w,
+        padded.a,
+        padded.k,
+    );
+    let mut engine = PjrtEngine::new(runtime());
+    let pjrt = engine.sweep_metrics(&padded.vols, &padded.sizes, &padded.w, padded.a, padded.k);
+    assert_eq!(native.len(), pjrt.len());
+    for (i, (n, p)) in native.iter().zip(&pjrt).enumerate() {
+        let close = |a: f32, b: f32, tol: f32| (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()));
+        assert!(close(n.entropy, p.entropy, 1e-4), "row {i} entropy {n:?} vs {p:?}");
+        assert!(close(n.density, p.density, 1e-4), "row {i} density {n:?} vs {p:?}");
+        assert!(close(n.balance, p.balance, 1e-4), "row {i} balance {n:?} vs {p:?}");
+        assert_eq!(n.ncomms, p.ncomms, "row {i} ncomms");
+        assert!(close(n.density_score, p.density_score, 1e-4), "row {i} dscore");
+        assert!(close(n.balance_score, p.balance_score, 1e-4), "row {i} bscore");
+    }
+}
+
+#[test]
+fn pjrt_selection_agrees_with_native() {
+    let sweep = finished_sweep();
+    let (w_native, _) = select(&sweep, &mut NativeEngine, SelectionRule::DensityScore);
+    let mut engine = PjrtEngine::new(runtime());
+    let (w_pjrt, _) = select(&sweep, &mut engine, SelectionRule::DensityScore);
+    assert_eq!(w_native, w_pjrt);
+    assert_eq!(engine.calls, 1);
+}
+
+#[test]
+fn pjrt_modularity_matches_native_partials() {
+    let rt = runtime();
+    let g = sbm::generate(&SbmConfig::equal(6, 30, 0.35, 0.01, 5));
+    let labels = streamcom::coordinator::algorithm::cluster_edges(g.n(), &g.edges.edges, 64);
+
+    // build one padded block (graph is small enough to fit)
+    const B: usize = 4096;
+    const K: usize = 4096;
+    assert!(g.m() <= B);
+    let mut ci = vec![0i32; B];
+    let mut cj = vec![0i32; B];
+    let mut mask = vec![0f32; B];
+    // labels are node-id-space; remap to dense < K
+    let mut dense = labels.clone();
+    streamcom::baselines::normalize_labels(&mut dense);
+    for (b, e) in g.edges.edges.iter().enumerate() {
+        ci[b] = dense[e.u as usize] as i32;
+        cj[b] = dense[e.v as usize] as i32;
+        mask[b] = 1.0;
+    }
+    let mut vols = vec![0f32; K];
+    for e in &g.edges.edges {
+        vols[dense[e.u as usize] as usize] += 1.0;
+        vols[dense[e.v as usize] as usize] += 1.0;
+    }
+    let (intra, volsq) = rt.modularity_partials(&ci, &cj, &mask, &vols).unwrap();
+    let (n_intra, n_volsq) = modularity::partials(&g.edges.edges, &labels);
+    assert!((intra - n_intra).abs() < 1e-3, "{intra} vs {n_intra}");
+    assert!(
+        (volsq - n_volsq).abs() / n_volsq.max(1.0) < 1e-5,
+        "{volsq} vs {n_volsq}"
+    );
+    let q_pjrt = modularity::combine_partials(intra, volsq, g.m() as u64);
+    let q_native = modularity::modularity(g.n(), &g.edges.edges, &labels);
+    assert!((q_pjrt - q_native).abs() < 1e-5, "{q_pjrt} vs {q_native}");
+}
+
+#[test]
+fn pjrt_nmi_matches_native() {
+    let rt = runtime();
+    let mut rng = Xoshiro256::new(9);
+    let n = 3000;
+    let a: Vec<u32> = (0..n).map(|_| rng.range(0, 40) as u32).collect();
+    let b: Vec<u32> = a
+        .iter()
+        .map(|&x| if rng.bernoulli(0.75) { x } else { rng.range(0, 40) as u32 })
+        .collect();
+    let table = contingency_table(&a, &b, 256);
+    let native = nmi_from_table(&table, 256, NmiNorm::Avg);
+    let pjrt = rt.nmi(&table).unwrap();
+    assert!((native - pjrt).abs() < 1e-4, "{native} vs {pjrt}");
+}
+
+#[test]
+fn pjrt_runtime_reports_cpu_platform() {
+    let rt = runtime();
+    let platform = rt.platform().to_lowercase();
+    assert!(platform.contains("cpu") || platform.contains("host"), "{platform}");
+}
+
+#[test]
+fn pjrt_rejects_wrong_shapes() {
+    let rt = runtime();
+    assert!(rt.sweep_metrics(&[0.0; 8], &[0.0; 8], &[0.0; 8]).is_err());
+    assert!(rt.nmi(&[0.0; 4]).is_err());
+}
