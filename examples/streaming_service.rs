@@ -1,85 +1,101 @@
-//! Streaming-service scenario: edges arrive continuously through the
-//! backpressured pipeline while the coordinator maintains the
-//! multi-parameter sketch; every `report_every` edges the §2.5
-//! selection runs (through the PJRT metric engine when artifacts are
-//! built, else the native engine) and the service reports the current
-//! best clustering — exactly the "graphs are fundamentally dynamic and
-//! edges naturally arrive in a streaming fashion" deployment the
-//! paper's introduction motivates.
+//! Streaming-service scenario: edges arrive continuously at a
+//! [`ClusterService`] — N shard workers behind bounded mailboxes, with
+//! periodic cross-edge drains — while a *concurrent* query thread keeps
+//! asking for point lookups (`community_of`), top-k community
+//! summaries, and operational stats. Exactly the "graphs are
+//! fundamentally dynamic and edges naturally arrive in a streaming
+//! fashion" deployment the paper's introduction motivates, now as a
+//! long-lived subsystem instead of a batch run.
+//!
+//! At the end the service's partition is scored against ground truth
+//! and against the batch parallel coordinator on the same stream — the
+//! two are the same algorithm (deferred cross-edge resolution), so the
+//! quality must match.
 //!
 //!     cargo run --release --example streaming_service
 
-use streamcom::coordinator::selection::{select, MetricEngine, NativeEngine, SelectionRule};
-use streamcom::coordinator::sweep::MultiSweep;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use streamcom::coordinator::parallel::{run_parallel, ParallelConfig};
 use streamcom::graph::generators::presets::SNAP_PRESETS;
 use streamcom::metrics::f1::average_f1_labels;
-use streamcom::runtime::PjrtEngine;
-use streamcom::stream::chunk::{ChunkConfig, ChunkStream};
-use streamcom::stream::meter::Meter;
+use streamcom::metrics::nmi::nmi_labels;
+use streamcom::service::{ClusterService, ServiceConfig};
 use streamcom::stream::source::OwnedMemorySource;
 
 fn main() {
     // livejournal-shaped workload arriving as a live stream
-    let g = streamcom::bench::workloads::load_preset(&SNAP_PRESETS[3], 0.25, true);
+    let g = streamcom::bench::workloads::load_preset(&SNAP_PRESETS[3], 0.2, true);
     let truth = g.truth.to_labels(g.n());
-    println!("service: streaming {} (n={} m={})", g.name, g.n(), g.m());
-
-    let mut pjrt = PjrtEngine::load_default().ok();
+    let shards = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let v_max = (2 * g.m() / g.n()).max(4) as u64 * 8;
     println!(
-        "metric engine: {}",
-        if pjrt.is_some() { "pjrt (AOT JAX/Pallas artifacts)" } else { "native fallback" }
+        "service: streaming {} (n={} m={}) across {shards} shards, v_max={v_max}",
+        g.name,
+        g.n(),
+        g.m()
     );
 
-    let avg_deg = (2 * g.m() / g.n()).max(4) as u64;
-    let ladder = MultiSweep::geometric_ladder(avg_deg, 8);
-    let mut sweep = MultiSweep::new(0, ladder.clone());
+    let mut config = ServiceConfig::new(shards, v_max);
+    config.drain_every = (g.m() as u64 / 20).max(4_096);
+    let mut service = ClusterService::start(config);
+    let queries = service.handle();
 
-    let source = OwnedMemorySource::new(g.edges.edges.clone());
-    let stream = ChunkStream::spawn(source, ChunkConfig { chunk_size: 16_384, depth: 4 });
-
-    let report_every = (g.m() / 5).max(1) as u64;
-    let mut next_report = report_every;
-    let mut meter = Meter::start();
-    let mut selection_time = std::time::Duration::ZERO;
-
-    while let Some(chunk) = stream.next_chunk() {
-        sweep.process_chunk(&chunk);
-        meter.add_edges(chunk.len() as u64);
-
-        if sweep.edges_processed >= next_report {
-            next_report += report_every;
-            let t0 = std::time::Instant::now();
-            let engine: &mut dyn MetricEngine = match &mut pjrt {
-                Some(e) => e,
-                None => &mut NativeEngine,
-            };
-            let (winner, scores) = select(&sweep, engine, SelectionRule::DensityScore);
-            selection_time += t0.elapsed();
-            let snap = meter.snapshot();
-            println!(
-                "t={:>9} edges  {:>6.1} Medges/s  selected v_max={:<6} ncomms={:<7.0} H={:.2}",
-                sweep.edges_processed,
-                snap.edges_per_sec() / 1e6,
-                ladder[winner],
-                scores[winner].ncomms,
-                scores[winner].entropy,
-            );
+    // concurrent read traffic: sample a point lookup + stats 20×/s
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let n = g.n() as u32;
+    let reader = std::thread::spawn(move || {
+        let mut probes = 0u64;
+        while !stop2.load(Ordering::Relaxed) {
+            let s = queries.stats();
+            let node = (probes * 7919) as u32 % n.max(1);
+            let comm = queries.community_of(node);
+            if probes % 10 == 0 {
+                println!(
+                    "  [query] t={:>9} edges  {:>6.2} Medges/s  lag={:>7}  \
+                     node {node} → {comm}  queues={:?}",
+                    s.edges_ingested,
+                    s.edges_per_sec / 1e6,
+                    s.edges_ingested.saturating_sub(s.snapshot_edges),
+                    s.queue_depths,
+                );
+            }
+            probes += 1;
+            std::thread::sleep(Duration::from_millis(50));
         }
-    }
+        probes
+    });
 
-    let report = meter.finish();
-    let engine: &mut dyn MetricEngine = match &mut pjrt {
-        Some(e) => e,
-        None => &mut NativeEngine,
-    };
-    let (winner, _) = select(&sweep, engine, SelectionRule::DensityScore);
-    let labels = sweep.labels(winner);
+    // ingest the full stream (push blocks on hot shards: backpressure)
+    let mut source = OwnedMemorySource::new(g.edges.edges.clone());
+    service.ingest(&mut source, 8_192);
+    let result = service.finish();
+    stop.store(true, Ordering::Relaxed);
+    let probes = reader.join().expect("query thread panicked");
+
+    let labels = result.snapshot.labels_padded(g.n());
     println!(
-        "\nfinal: v_max={} F1={:.3} | stream {:.2}s total, selection {:.1}ms total ({:.2}% of stream time)",
-        ladder[winner],
+        "\nfinal: {} edges ({} cross) in {:.2}s ({:.2} Medges/s) with {probes} live probes",
+        result.edges_ingested,
+        result.cross_edges,
+        result.elapsed.as_secs_f64(),
+        result.edges_ingested as f64 / result.elapsed.as_secs_f64().max(1e-12) / 1e6,
+    );
+    println!(
+        "service : F1={:.3} NMI={:.3}",
         average_f1_labels(&labels, &truth),
-        report.elapsed.as_secs_f64(),
-        selection_time.as_secs_f64() * 1e3,
-        100.0 * selection_time.as_secs_f64() / report.elapsed.as_secs_f64(),
+        nmi_labels(&labels, &truth)
+    );
+
+    // parity: the batch coordinator on the same stream
+    let par = run_parallel(g.n(), &g.edges.edges, &ParallelConfig::new(shards, v_max));
+    let par_labels = par.labels();
+    println!(
+        "batch   : F1={:.3} NMI={:.3} (same sharding, run offline)",
+        average_f1_labels(&par_labels, &truth),
+        nmi_labels(&par_labels, &truth)
     );
 }

@@ -17,9 +17,11 @@ use streamcom::coordinator::selection::{select, NativeEngine, SelectionRule};
 use streamcom::coordinator::sweep::MultiSweep;
 use streamcom::graph::edge::Edge;
 use streamcom::graph::generators::presets;
+use streamcom::graph::generators::sbm::{self, SbmConfig};
 use streamcom::graph::generators::{lfr, GeneratedGraph};
 use streamcom::graph::io;
 use streamcom::metrics;
+use streamcom::service::{ClusterService, ServiceConfig};
 use streamcom::stream::meter::Meter;
 use streamcom::util::cli::Args;
 
@@ -47,11 +49,20 @@ COMMANDS:
                --engine <native|pjrt>  metric engine [default native]
   bench      regenerate the paper's tables
                table1|table2|memory  --scale <f>
-  serve      dynamic stream service: reads events from stdin
-               ('+ u v' insert, '- u v' delete, '?' report), writes reports
+  serve      long-lived sharded clustering service: ingests the workload
+             while answering queries on stdin
+               --preset/--scale/--input as above, or --sbm <k>x<size>
+               --vmax <u64>         threshold parameter [default 64]
+               --shards <k>         shard workers [default 4]
+               --drain-every <t>    edges between snapshot refreshes [default 65536, 0 = off]
+               --pace <e/s>         throttle ingest, edges/s (0 = full speed)
+               queries: '? <node>' community, 'top <k>' largest, 'stats', 'q'
+               --dynamic            legacy event mode ('+ u v' insert,
+                                    '- u v' delete, '?' report on stdin)
   help       this text
 ";
 
+/// Run the CLI with `argv` (without the program name); returns the exit code.
 pub fn main_with_args(argv: Vec<String>) -> i32 {
     let args = match Args::parse(argv) {
         Ok(a) => a,
@@ -264,7 +275,159 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `serve` workload: explicit SBM spec, else the shared preset/input
+/// loading (the SBM path is the paper's planted-partition stream and
+/// the parity workload of `rust/tests/parallel_parity.rs`).
+fn load_serve_workload(args: &Args) -> Result<GeneratedGraph, String> {
+    if let Some(spec) = args.get("sbm") {
+        let (k, size) = spec
+            .split_once('x')
+            .ok_or_else(|| format!("--sbm expects <communities>x<size>, got {spec:?}"))?;
+        let k: usize = k.parse().map_err(|_| format!("bad community count {k:?}"))?;
+        let size: usize = size.parse().map_err(|_| format!("bad community size {size:?}"))?;
+        let seed = args.u64_or("seed", 42).map_err(|e| e.to_string())?;
+        return Ok(sbm::generate(&SbmConfig::equal(k, size, 0.3, 0.002, seed)));
+    }
+    load_workload(args)
+}
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
+    use std::io::BufRead;
+    if args.flag("dynamic") {
+        return cmd_serve_dynamic(args);
+    }
+    let v_max = args.u64_or("vmax", 64).map_err(|e| e.to_string())?;
+    let shards = args.usize_or("shards", 4).map_err(|e| e.to_string())?;
+    let pace = args.u64_or("pace", 0).map_err(|e| e.to_string())?;
+    let mut g = load_serve_workload(args)?;
+    let truth = if g.truth.is_empty() { None } else { Some(g.truth.to_labels(g.n())) };
+
+    let mut config = ServiceConfig::new(shards, v_max);
+    config.drain_every = args.u64_or("drain-every", 65_536).map_err(|e| e.to_string())?;
+    let mut service = ClusterService::start(config);
+    let queries = service.handle();
+    println!(
+        "serve: streaming {} (n={} m={}) across {shards} shards (v_max={v_max})",
+        g.name,
+        g.n(),
+        g.m()
+    );
+    println!("queries on stdin: '? <node>' community, 'top <k>' largest, 'stats', 'q' quit");
+
+    // ingest runs in the background; this thread answers queries.
+    // 'q' raises the stop flag so quitting doesn't wait out a paced
+    // (potentially hours-long) stream
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let stop_ingest = std::sync::Arc::clone(&stop);
+    let edges = std::mem::take(&mut g.edges.edges);
+    let ingest = std::thread::spawn(move || {
+        'stream: for chunk in edges.chunks(8_192) {
+            if stop_ingest.load(std::sync::atomic::Ordering::Relaxed) {
+                break;
+            }
+            service.push_chunk(chunk);
+            if pace > 0 {
+                // sleep in short slices so 'q' interrupts a slow pace
+                // within ~100 ms instead of a full chunk interval
+                let mut left = chunk.len() as f64 / pace as f64;
+                while left > 0.0 {
+                    if stop_ingest.load(std::sync::atomic::Ordering::Relaxed) {
+                        break 'stream;
+                    }
+                    let slice = left.min(0.1);
+                    std::thread::sleep(std::time::Duration::from_secs_f64(slice));
+                    left -= slice;
+                }
+            }
+        }
+        service.finish()
+    });
+
+    let stdin = std::io::stdin();
+    for line in stdin.lock().lines() {
+        let line = line.map_err(|e| e.to_string())?;
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        match toks.as_slice() {
+            ["?", node] => {
+                // a typo'd query must not kill the serving process
+                let Ok(node) = node.parse::<u32>() else {
+                    println!("! bad node id {node:?}");
+                    continue;
+                };
+                let snap = queries.snapshot();
+                println!(
+                    "node {node} → community {} (snapshot at t={} edges)",
+                    snap.community_of(node),
+                    snap.edges()
+                );
+            }
+            ["top", k] => {
+                let Ok(k) = k.parse::<usize>() else {
+                    println!("! bad count {k:?}");
+                    continue;
+                };
+                let snap = queries.snapshot();
+                println!(
+                    "top {k} of {} communities at t={} edges:",
+                    snap.community_count(),
+                    snap.edges()
+                );
+                for c in snap.top_communities(k) {
+                    println!(
+                        "  community {:>9}  volume {:>9}  size {:>8}",
+                        c.id, c.volume, c.size
+                    );
+                }
+            }
+            ["stats"] => {
+                let s = queries.stats();
+                println!(
+                    "shards={} ingested={} ({:.2} Medges/s) snapshot_lag={} \
+                     cross_pending={} queues={:?} peaks={:?} sketch={} B ({:.1} B/node)",
+                    s.shards,
+                    s.edges_ingested,
+                    s.edges_per_sec / 1e6,
+                    s.edges_ingested.saturating_sub(s.snapshot_edges),
+                    s.cross_pending,
+                    s.queue_depths,
+                    s.queue_peaks,
+                    s.memory_bytes,
+                    s.bytes_per_node(),
+                );
+            }
+            ["q"] | ["quit"] => {
+                // explicit quit aborts the remainder of the stream;
+                // plain EOF lets the ingest run to completion
+                stop.store(true, std::sync::atomic::Ordering::Relaxed);
+                break;
+            }
+            [] => {}
+            _ => println!("! unknown query {line:?} (try '? <node>', 'top <k>', 'stats', 'q')"),
+        }
+    }
+
+    let result = ingest.join().map_err(|_| "ingest thread panicked".to_string())?;
+    let labels = result.labels();
+    let ncomm = metrics::labels_to_communities(&labels).len();
+    println!(
+        "final: {} edges ({} cross) → {ncomm} communities in {:.3}s ({:.2} Medges/s)",
+        result.edges_ingested,
+        result.cross_edges,
+        result.elapsed.as_secs_f64(),
+        result.edges_ingested as f64 / result.elapsed.as_secs_f64().max(1e-12) / 1e6
+    );
+    if let Some(truth) = truth {
+        let full = result.snapshot.labels_padded(g.n());
+        println!(
+            "  F1={:.3} NMI={:.3}",
+            metrics::f1::average_f1_labels(&full, &truth),
+            metrics::nmi::nmi_labels(&full, &truth)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve_dynamic(args: &Args) -> Result<(), String> {
     use std::io::BufRead;
     let v_max = args.u64_or("vmax", 64).map_err(|e| e.to_string())?;
     let mut d = DynamicClusterer::new(0, StrConfig::new(v_max));

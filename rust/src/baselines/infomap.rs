@@ -218,15 +218,19 @@ fn aggregate(g: &WGraph, comm: &[u32]) -> (WGraph, Vec<u32>) {
 
 /// The paper's baseline **I**.
 pub struct Infomap {
+    /// RNG seed.
     pub seed: u64,
+    /// Cap on aggregation levels.
     pub max_levels: usize,
 }
 
 impl Infomap {
+    /// Defaults: 16 aggregation levels.
     pub fn new(seed: u64) -> Self {
         Self { seed, max_levels: 16 }
     }
 
+    /// Detect communities; returns per-node labels.
     pub fn run(&self, g: &Csr) -> Vec<u32> {
         let mut rng = Xoshiro256::new(self.seed);
         let mut graph = WGraph::from_csr(g);

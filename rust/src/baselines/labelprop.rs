@@ -12,16 +12,21 @@ use crate::util::rng::Xoshiro256;
 
 use super::CommunityDetector;
 
+/// Asynchronous label-propagation baseline.
 pub struct LabelProp {
+    /// RNG seed.
     pub seed: u64,
+    /// Propagation iteration cap.
     pub max_iters: usize,
 }
 
 impl LabelProp {
+    /// Defaults: 50 propagation iterations.
     pub fn new(seed: u64) -> Self {
         Self { seed, max_iters: 50 }
     }
 
+    /// Detect communities; returns per-node labels.
     pub fn run(&self, g: &Csr) -> Vec<u32> {
         let n = g.n;
         let mut labels: Vec<u32> = (0..n as u32).collect();

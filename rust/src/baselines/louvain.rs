@@ -153,6 +153,7 @@ fn aggregate(g: &WGraph, comm: &[u32]) -> (WGraph, Vec<u32>) {
 
 /// The paper's baseline **L**.
 pub struct Louvain {
+    /// RNG seed.
     pub seed: u64,
     /// Minimum per-move gain to accept (protects against float noise).
     pub min_gain: f64,
@@ -161,6 +162,7 @@ pub struct Louvain {
 }
 
 impl Louvain {
+    /// Defaults: 1e-9 gain cutoff, 32 levels.
     pub fn new(seed: u64) -> Self {
         Self { seed, min_gain: 1e-9, max_levels: 32 }
     }

@@ -29,7 +29,9 @@ use crate::util::rng::Xoshiro256;
 use super::louvain::Louvain;
 use super::CommunityDetector;
 
+/// OSLOM-style significance-based baseline (lite).
 pub struct OslomLite {
+    /// RNG seed.
     pub seed: u64,
     /// Significance threshold for *moving into* a community (p-value).
     pub p_threshold: f64,
@@ -38,10 +40,12 @@ pub struct OslomLite {
     /// asymmetry replaces OSLOM's order-statistics correction, which
     /// similarly protects existing members on small communities.
     pub evict_threshold: f64,
+    /// Refinement iteration cap.
     pub max_iters: usize,
 }
 
 impl OslomLite {
+    /// Reference thresholds (p=0.1, evict=0.5, 6 iterations).
     pub fn new(seed: u64) -> Self {
         Self { seed, p_threshold: 0.1, evict_threshold: 0.5, max_iters: 6 }
     }
@@ -74,6 +78,7 @@ impl OslomLite {
         tail.min(1.0)
     }
 
+    /// Detect communities; returns per-node labels.
     pub fn run(&self, g: &Csr) -> Vec<u32> {
         let n = g.n;
         let two_m = g.total_weight() as f64;

@@ -26,12 +26,16 @@ use crate::util::rng::Xoshiro256;
 
 use super::CommunityDetector;
 
+/// SCD-style baseline: triangle-seeded greedy refinement.
 pub struct Scd {
+    /// RNG seed.
     pub seed: u64,
+    /// Refinement iteration cap.
     pub max_iters: usize,
 }
 
 impl Scd {
+    /// Defaults: 8 refinement iterations.
     pub fn new(seed: u64) -> Self {
         Self { seed, max_iters: 8 }
     }
@@ -102,6 +106,7 @@ impl Scd {
         (t_in / t_all) * (k_in / degree)
     }
 
+    /// Detect communities; returns per-node labels.
     pub fn run(&self, g: &Csr) -> Vec<u32> {
         let mut rng = Xoshiro256::new(self.seed);
         let cc = Self::clustering_coefficients(g);

@@ -61,12 +61,14 @@ impl Ord for Cand {
     }
 }
 
+/// Walktrap-style agglomerative baseline.
 pub struct Walktrap {
     /// Walk length t (the reference default is 4).
     pub t: usize,
 }
 
 impl Walktrap {
+    /// Walktrap with walk length `t`.
     pub fn new(t: usize) -> Self {
         Self { t }
     }
@@ -104,6 +106,7 @@ impl Walktrap {
         rows
     }
 
+    /// Detect communities; returns per-node labels.
     pub fn run(&self, g: &Csr) -> Vec<u32> {
         let n = g.n;
         if n == 0 {

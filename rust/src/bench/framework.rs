@@ -20,10 +20,15 @@ pub use std::hint::black_box;
 /// Iteration budget.
 #[derive(Debug, Clone, Copy)]
 pub struct Budget {
+    /// Warm-up iterations (untimed).
     pub warmup_iters: usize,
+    /// Minimum timed iterations.
     pub min_iters: usize,
+    /// Maximum timed iterations.
     pub max_iters: usize,
+    /// Minimum total measurement time.
     pub min_time: Duration,
+    /// Overall time budget cap.
     pub max_time: Duration,
 }
 
@@ -66,12 +71,19 @@ impl Budget {
 /// Robust statistics over the per-iteration times.
 #[derive(Debug, Clone)]
 pub struct Stats {
+    /// Benchmark name.
     pub name: String,
+    /// Timed iterations.
     pub iters: usize,
+    /// Median duration.
     pub median: Duration,
+    /// Mean duration.
     pub mean: Duration,
+    /// Standard deviation.
     pub stddev: Duration,
+    /// Fastest sample.
     pub min: Duration,
+    /// Slowest sample.
     pub max: Duration,
 }
 
@@ -102,6 +114,7 @@ impl Stats {
         }
     }
 
+    /// Median sample in seconds.
     pub fn median_secs(&self) -> f64 {
         self.median.as_secs_f64()
     }

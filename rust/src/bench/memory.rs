@@ -59,6 +59,7 @@ pub struct CountingAllocator {
 }
 
 impl CountingAllocator {
+    /// Zeroed counters (const so it can back a `#[global_allocator]`).
     pub const fn new() -> Self {
         Self {
             live: AtomicU64::new(0),
@@ -67,14 +68,17 @@ impl CountingAllocator {
         }
     }
 
+    /// Bytes currently allocated.
     pub fn live_bytes(&self) -> u64 {
         self.live.load(Ordering::Relaxed)
     }
 
+    /// High-water mark of live bytes.
     pub fn peak_bytes(&self) -> u64 {
         self.peak.load(Ordering::Relaxed)
     }
 
+    /// Cumulative bytes ever allocated.
     pub fn total_allocated(&self) -> u64 {
         self.total.load(Ordering::Relaxed)
     }

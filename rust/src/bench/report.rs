@@ -4,12 +4,16 @@
 /// A simple aligned text table.
 #[derive(Debug, Default)]
 pub struct Table {
+    /// Table caption.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Row cells.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Self {
             title: title.to_string(),
@@ -18,11 +22,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn push_row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
         self.rows.push(cells);
     }
 
+    /// Render as aligned monospace text.
     pub fn render(&self) -> String {
         let ncols = self.headers.len();
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();

@@ -22,13 +22,18 @@ use super::workloads;
 /// One Table-1 row.
 #[derive(Debug, Clone)]
 pub struct Table1Row {
+    /// Dataset name.
     pub name: String,
+    /// Node count.
     pub n: usize,
+    /// Edge count.
     pub m: usize,
     /// Baseline times in suite order (None = skipped, like the paper's
     /// blank cells).
     pub baseline_secs: Vec<Option<f64>>,
+    /// STR wall-clock seconds.
     pub str_secs: f64,
+    /// Read-only pass seconds (lower bound).
     pub readonly_secs: f64,
     /// v_max used for the timed STR run (sweep-selected).
     pub v_max: u64,
@@ -37,12 +42,15 @@ pub struct Table1Row {
 /// Configuration for the harness.
 #[derive(Debug, Clone)]
 pub struct Table1Config {
+    /// Workload scale factor.
     pub scale: f64,
     /// Skip any baseline whose `practical_for` rejects the graph or
     /// whose estimated cost exceeds this many edges·passes (mirrors the
     /// paper's 6-hour timeout policy, scaled).
     pub baseline_edge_cap: usize,
+    /// Workload seed.
     pub seed: u64,
+    /// Reuse cached workloads.
     pub cache: bool,
 }
 

@@ -19,18 +19,26 @@ use super::workloads;
 /// One Table-2 row.
 #[derive(Debug, Clone)]
 pub struct Table2Row {
+    /// Dataset name.
     pub name: String,
     /// (F1, NMI) per baseline in suite order; None = skipped.
     pub baseline_scores: Vec<Option<(f64, f64)>>,
+    /// `(F1, NMI)` of the streaming algorithm.
     pub str_scores: (f64, f64),
+    /// Selected `v_max`.
     pub v_max: u64,
 }
 
 #[derive(Debug, Clone)]
+/// Configuration for the Table 2 (quality) harness.
 pub struct Table2Config {
+    /// Workload scale factor.
     pub scale: f64,
+    /// Skip baselines above this edge count.
     pub baseline_edge_cap: usize,
+    /// Workload seed.
     pub seed: u64,
+    /// Reuse cached workloads.
     pub cache: bool,
 }
 

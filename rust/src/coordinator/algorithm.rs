@@ -39,6 +39,7 @@ pub enum ThresholdRule {
 pub enum TieBreak {
     /// Paper's arbitrary deterministic choice.
     JToI,
+    /// Mirror image of the paper's choice (i joins j).
     IToJ,
     /// The paper's suggested randomised variant.
     Random,
@@ -49,7 +50,9 @@ pub enum TieBreak {
 pub struct StrConfig {
     /// The single parameter of the paper.
     pub v_max: u64,
+    /// Threshold predicate (ablation axis).
     pub threshold: ThresholdRule,
+    /// Tie-break rule on equal volumes.
     pub tie_break: TieBreak,
     /// Ablation: use community *size* (node count) instead of volume in
     /// the threshold test (decisions still move volume).
@@ -59,6 +62,7 @@ pub struct StrConfig {
 }
 
 impl StrConfig {
+    /// Paper defaults for threshold `v_max` (BothAtMost, JToI, volume-based).
     pub fn new(v_max: u64) -> Self {
         Self {
             v_max,
@@ -73,18 +77,42 @@ impl StrConfig {
 /// Per-run decision counters (observability; negligible cost).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StrStats {
+    /// Edges processed.
     pub edges: u64,
+    /// Accepted joins.
     pub joins: u64,
+    /// Edges arriving within one community.
     pub same_community: u64,
+    /// Joins rejected by the threshold.
     pub threshold_rejects: u64,
+    /// Self-loops ignored.
     pub self_loops_skipped: u64,
 }
 
 /// Streaming clusterer: [`StreamState`] + the decision rule.
+///
+/// One instance is one pass of the paper's Algorithm 1: feed it each
+/// edge exactly once (in stream order) and read the partition off the
+/// sketch at any point.
+///
+/// ```
+/// use streamcom::coordinator::algorithm::{StrConfig, StreamingClusterer};
+/// use streamcom::graph::edge::Edge;
+///
+/// let mut c = StreamingClusterer::new(2, StrConfig::new(8));
+/// c.process_edge(Edge::new(0, 1));
+/// // first edge: both endpoints unseen, volumes tie → j joins i
+/// assert_eq!(c.labels(), vec![0, 0]);
+/// // the conservation invariant Σ v_k = 2t holds after every edge
+/// assert_eq!(c.state.total_volume(), 2 * c.state.edges_processed);
+/// ```
 #[derive(Debug, Clone)]
 pub struct StreamingClusterer {
+    /// The three-integers-per-node sketch.
     pub state: StreamState,
+    /// The run's configuration (threshold, tie-break, ablation axes).
     pub config: StrConfig,
+    /// Per-run decision counters.
     pub stats: StrStats,
     /// Community sizes, maintained only under `size_condition` (the
     /// paper's sketch does not need them).
@@ -93,6 +121,7 @@ pub struct StreamingClusterer {
 }
 
 impl StreamingClusterer {
+    /// Fresh sketch over `n` pre-sized nodes (grows on demand).
     pub fn new(n: usize, config: StrConfig) -> Self {
         let sizes = if config.size_condition { vec![0; n] } else { Vec::new() };
         let rng = Xoshiro256::new(config.seed);

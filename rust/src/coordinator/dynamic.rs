@@ -28,7 +28,9 @@ use super::state::UNSEEN;
 /// A dynamic stream event.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Event {
+    /// Add one edge (exactly Algorithm 1).
     Insert(Edge),
+    /// Remove one previously-inserted edge.
     Delete(Edge),
 }
 
@@ -43,19 +45,24 @@ pub enum DynamicError {
 #[derive(Debug, Clone)]
 pub struct DynamicClusterer {
     inner: StreamingClusterer,
+    /// Insert events applied.
     pub inserts: u64,
+    /// Delete events applied.
     pub deletes: u64,
 }
 
 impl DynamicClusterer {
+    /// Empty dynamic clusterer over `n` pre-sized nodes.
     pub fn new(n: usize, config: StrConfig) -> Self {
         Self { inner: StreamingClusterer::new(n, config), inserts: 0, deletes: 0 }
     }
 
+    /// The underlying sketch.
     pub fn state(&self) -> &super::state::StreamState {
         &self.inner.state
     }
 
+    /// Current community labels (unseen nodes as singletons).
     pub fn labels(&self) -> Vec<u32> {
         self.inner.labels()
     }
@@ -65,6 +72,7 @@ impl DynamicClusterer {
         self.inserts - self.deletes
     }
 
+    /// Apply one insert/delete event.
     pub fn apply(&mut self, event: Event) -> Result<(), DynamicError> {
         match event {
             Event::Insert(e) => {

@@ -31,9 +31,22 @@ use super::algorithm::{StrConfig, StreamingClusterer};
 use super::state::{StreamState, UNSEEN};
 
 /// Configuration for the parallel run.
+///
+/// ```
+/// use streamcom::coordinator::parallel::{run_parallel, ParallelConfig};
+/// use streamcom::graph::edge::Edge;
+///
+/// let edges = vec![Edge::new(0, 1), Edge::new(1, 2), Edge::new(3, 4)];
+/// let result = run_parallel(5, &edges, &ParallelConfig::new(2, 8));
+/// // every edge is processed exactly once, locally or by the leader
+/// assert_eq!(result.local_edges + result.cross_edges, 3);
+/// assert_eq!(result.state.total_volume(), 2 * 3);
+/// ```
 #[derive(Debug, Clone)]
 pub struct ParallelConfig {
+    /// Number of shard workers.
     pub shards: usize,
+    /// Per-worker streaming configuration (the paper's `v_max` etc.).
     pub str_config: StrConfig,
     /// Bounded queue depth per worker (chunks).
     pub queue_depth: usize,
@@ -42,6 +55,7 @@ pub struct ParallelConfig {
 }
 
 impl ParallelConfig {
+    /// Defaults: queue depth 8, chunk size 16 Ki edges.
     pub fn new(shards: usize, v_max: u64) -> Self {
         Self {
             shards,
@@ -55,19 +69,36 @@ impl ParallelConfig {
 /// Outcome of a parallel run.
 #[derive(Debug)]
 pub struct ParallelResult {
+    /// Final merged sketch.
     pub state: StreamState,
+    /// Intra-shard edges processed by workers.
     pub local_edges: u64,
+    /// Cross-shard edges replayed by the leader.
     pub cross_edges: u64,
 }
 
 impl ParallelResult {
+    /// Final community labels (unseen nodes as singletons).
     pub fn labels(&self) -> Vec<u32> {
         self.state.labels()
     }
 }
 
-/// Merge disjoint worker states (workers never touch the same node).
-fn merge_states(n: usize, states: Vec<StreamState>) -> StreamState {
+/// Merge shard-disjoint worker states into one sketch (disjoint array
+/// union).
+///
+/// Hash-sharding guarantees no two workers ever touch the same node, so
+/// degrees and communities copy over and volumes add. The result is
+/// sized to `max(n, largest worker state)` — workers that grew on
+/// demand beyond the pre-sized `n` (the service starts them at 0) are
+/// handled transparently. Shared by the batch leader ([`run_parallel`])
+/// and the long-lived service's copy-on-read snapshots
+/// ([`crate::service::Snapshot`]).
+///
+/// Debug builds assert the disjointness invariant; a violation means
+/// the caller routed one node's edges to two different workers.
+pub fn merge_disjoint_states(n: usize, states: &[StreamState]) -> StreamState {
+    let n = states.iter().map(|st| st.n()).fold(n, usize::max);
     let mut merged = StreamState::new(n);
     for st in states {
         for i in 0..st.n() {
@@ -164,7 +195,7 @@ pub fn run_parallel(n: usize, edges: &[Edge], config: &ParallelConfig) -> Parall
     });
 
     // leader: merge and replay cross edges
-    let merged = merge_states(n, states);
+    let merged = merge_disjoint_states(n, &states);
     let mut leader = StreamingClusterer::new(0, config.str_config.clone());
     leader.state = merged;
     while let Some(chunk) = leader_queue.recv() {
@@ -204,6 +235,7 @@ pub struct AtomicSketch {
 }
 
 impl AtomicSketch {
+    /// Zeroed shared sketch over `n` nodes.
     pub fn new(n: usize) -> Self {
         Self {
             degree: (0..n).map(|_| AtomicU32::new(0)).collect(),
@@ -276,10 +308,12 @@ impl AtomicSketch {
             .collect()
     }
 
+    /// Sum of community volumes (= 2·edges when quiescent).
     pub fn total_volume(&self) -> i64 {
         self.volume.iter().map(|v| v.load(Ordering::Relaxed)).sum()
     }
 
+    /// Edges processed so far.
     pub fn edges_processed(&self) -> u64 {
         self.edges.load(Ordering::Relaxed)
     }

@@ -27,9 +27,13 @@ pub const VOLUME_BUCKETS: usize = 4096;
 /// Scores for one sweep row.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SweepScores {
+    /// Volume entropy `H(v)`.
     pub entropy: f32,
+    /// Average intra-community density `D`.
     pub density: f32,
+    /// Balance term `Σ p²`.
     pub balance: f32,
+    /// Non-empty community count.
     pub ncomms: f32,
     /// density · log(1 + ncomms) — the default selector.
     pub density_score: f32,
@@ -117,10 +121,15 @@ impl MetricEngine for NativeEngine {
 /// Padded tables ready for either engine.
 #[derive(Debug, Clone)]
 pub struct PaddedSketch {
+    /// Row-major `A × K` community volumes.
     pub vols: Vec<f32>,
+    /// Row-major `A × K` community sizes.
     pub sizes: Vec<f32>,
+    /// Per-row total weight `2t`.
     pub w: Vec<f32>,
+    /// Row count `A`.
     pub a: usize,
+    /// Bucket count `K`.
     pub k: usize,
 }
 

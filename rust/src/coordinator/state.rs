@@ -25,6 +25,7 @@ pub struct StreamState {
     pub edges_processed: u64,
 }
 
+/// Sentinel community id for nodes the stream has not mentioned.
 pub const UNSEEN: u32 = u32::MAX;
 
 impl StreamState {
@@ -39,6 +40,7 @@ impl StreamState {
         }
     }
 
+    /// Current node-space size.
     pub fn n(&self) -> usize {
         self.degree.len()
     }

@@ -17,6 +17,7 @@ use super::state::UNSEEN;
 /// One-pass, A-parameter streaming state.
 #[derive(Debug, Clone)]
 pub struct MultiSweep {
+    /// The sweep's `v_max` ladder.
     pub v_maxes: Vec<u64>,
     /// Shared degree table.
     pub degree: Vec<u32>,
@@ -24,10 +25,12 @@ pub struct MultiSweep {
     pub community: Vec<Vec<u32>>,
     /// Per-sweep volume table, `volume[a][k]`.
     pub volume: Vec<Vec<u64>>,
+    /// Edges processed (`t`).
     pub edges_processed: u64,
 }
 
 impl MultiSweep {
+    /// Sweep over `v_maxes` with `n` pre-sized nodes.
     pub fn new(n: usize, v_maxes: Vec<u64>) -> Self {
         assert!(!v_maxes.is_empty());
         let a = v_maxes.len();
@@ -46,10 +49,12 @@ impl MultiSweep {
         (0..count).map(|i| base << i).collect()
     }
 
+    /// Number of parameter values `A`.
     pub fn num_sweeps(&self) -> usize {
         self.v_maxes.len()
     }
 
+    /// Current node-space size.
     pub fn n(&self) -> usize {
         self.degree.len()
     }
@@ -115,12 +120,14 @@ impl MultiSweep {
         }
     }
 
+    /// Process a chunk of edges across all sweeps.
     pub fn process_chunk(&mut self, chunk: &[Edge]) {
         for &e in chunk {
             self.process_edge(e);
         }
     }
 
+    /// Drain an entire source through the sweep.
     pub fn run<S: EdgeSource>(&mut self, source: &mut S, batch: usize) {
         let mut buf = Vec::with_capacity(batch);
         while source.next_batch(&mut buf) > 0 {

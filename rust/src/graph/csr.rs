@@ -14,16 +14,21 @@ use super::edge::{Edge, EdgeList};
 pub struct Csr {
     /// offsets[i]..offsets[i+1] indexes `neighbors` for node i.
     pub offsets: Vec<u64>,
+    /// Flattened neighbor array.
     pub neighbors: Vec<u32>,
+    /// Node count.
     pub n: usize,
+    /// Edge count.
     pub m: usize,
 }
 
 impl Csr {
+    /// Build adjacency from an edge list.
     pub fn from_edge_list(el: &EdgeList) -> Self {
         Self::from_edges(el.n, &el.edges)
     }
 
+    /// Build adjacency from raw edges over `n` nodes.
     pub fn from_edges(n: usize, edges: &[Edge]) -> Self {
         let mut deg = vec![0u64; n + 1];
         for e in edges {
@@ -51,6 +56,7 @@ impl Csr {
     }
 
     #[inline]
+    /// Neighbors of `u` as a slice.
     pub fn neighbors(&self, u: u32) -> &[u32] {
         let (a, b) = (
             self.offsets[u as usize] as usize,
@@ -60,6 +66,7 @@ impl Csr {
     }
 
     #[inline]
+    /// Degree of `u`.
     pub fn degree(&self, u: u32) -> usize {
         (self.offsets[u as usize + 1] - self.offsets[u as usize]) as usize
     }

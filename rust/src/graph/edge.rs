@@ -11,12 +11,15 @@
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 #[repr(C)]
 pub struct Edge {
+    /// First endpoint.
     pub u: u32,
+    /// Second endpoint.
     pub v: u32,
 }
 
 impl Edge {
     #[inline]
+    /// Edge between `u` and `v` (order preserved as given).
     pub fn new(u: u32, v: u32) -> Self {
         Self { u, v }
     }
@@ -32,6 +35,7 @@ impl Edge {
     }
 
     #[inline]
+    /// True when both endpoints coincide.
     pub fn is_self_loop(self) -> bool {
         self.u == self.v
     }
@@ -40,15 +44,19 @@ impl Edge {
 /// An in-memory edge multiset plus its node-count header.
 #[derive(Debug, Clone, Default)]
 pub struct EdgeList {
+    /// Node count header.
     pub n: usize,
+    /// The edge multiset.
     pub edges: Vec<Edge>,
 }
 
 impl EdgeList {
+    /// Edge list with an explicit node-count header.
     pub fn new(n: usize, edges: Vec<Edge>) -> Self {
         Self { n, edges }
     }
 
+    /// Number of edges.
     pub fn m(&self) -> usize {
         self.edges.len()
     }

@@ -22,6 +22,7 @@ use super::GeneratedGraph;
 /// LFR-style configuration.
 #[derive(Debug, Clone)]
 pub struct LfrConfig {
+    /// Node count.
     pub n: usize,
     /// Mean target degree.
     pub avg_deg: f64,
@@ -31,16 +32,20 @@ pub struct LfrConfig {
     pub gamma: f64,
     /// Community-size power-law exponent (1 < beta <= 2 typical).
     pub beta: f64,
+    /// Smallest community size.
     pub min_comm: usize,
+    /// Largest community size.
     pub max_comm: usize,
     /// Mixing: fraction of each node's edges leaving its community.
     pub mu: f64,
+    /// RNG seed.
     pub seed: u64,
     /// Graph name for reports.
     pub name: String,
 }
 
 impl LfrConfig {
+    /// LFR config with reference exponents (γ=2.5, β=1.5) and a display name.
     pub fn named(name: &str, n: usize, avg_deg: f64, mu: f64, seed: u64) -> Self {
         Self {
             n,

@@ -28,8 +28,11 @@ use crate::util::rng::Xoshiro256;
 /// A generated workload: graph + ground truth + provenance.
 #[derive(Debug, Clone)]
 pub struct GeneratedGraph {
+    /// Workload name.
     pub name: String,
+    /// The edge list.
     pub edges: EdgeList,
+    /// Planted ground truth.
     pub truth: GroundTruth,
 }
 
@@ -41,10 +44,12 @@ impl GeneratedGraph {
         rng.shuffle(&mut self.edges.edges);
     }
 
+    /// Node count.
     pub fn n(&self) -> usize {
         self.edges.n
     }
 
+    /// Edge count.
     pub fn m(&self) -> usize {
         self.edges.m()
     }

@@ -20,6 +20,7 @@ pub struct SnapPreset {
     pub name: &'static str,
     /// Paper |V|, |E| (for the report).
     pub paper_nodes: u64,
+    /// Edge count of the real SNAP graph.
     pub paper_edges: u64,
     /// Stand-in node count at scale 1.
     pub nodes: usize,
@@ -33,6 +34,7 @@ pub struct SnapPreset {
     /// resolution limit bites and the paper's STR pulls ahead; the
     /// large-graph presets mirror that.
     pub min_comm: usize,
+    /// Largest community size.
     pub max_comm: usize,
     /// Which baselines the paper's Table 1 reports on this dataset
     /// (the rest hit the 6-hour timeout or crashed): subset of "SLIWO".

@@ -22,6 +22,7 @@ pub struct SbmConfig {
     pub p_in: f64,
     /// Inter-community edge probability.
     pub p_out: f64,
+    /// RNG seed.
     pub seed: u64,
 }
 
@@ -31,6 +32,7 @@ impl SbmConfig {
         Self { sizes: vec![size; k], p_in, p_out, seed }
     }
 
+    /// Total node count (sum of community sizes).
     pub fn n(&self) -> usize {
         self.sizes.iter().sum()
     }

@@ -13,6 +13,7 @@ pub struct GroundTruth {
 }
 
 impl GroundTruth {
+    /// Ground truth from explicit community memberships.
     pub fn new(mut communities: Vec<Vec<u32>>) -> Self {
         for c in &mut communities {
             c.sort_unstable();
@@ -52,10 +53,12 @@ impl GroundTruth {
         labels
     }
 
+    /// Number of communities.
     pub fn len(&self) -> usize {
         self.communities.len()
     }
 
+    /// True when no communities are recorded.
     pub fn is_empty(&self) -> bool {
         self.communities.is_empty()
     }

@@ -6,13 +6,16 @@
 //!
 //! * **L3 (this crate)** — the streaming coordinator: the paper's
 //!   Algorithm 1 ([`coordinator`]), the edge-stream substrate
-//!   ([`stream`]), all five comparison baselines ([`baselines`]), the
+//!   ([`stream`]), the long-lived sharded clustering service
+//!   ([`service`]), all five comparison baselines ([`baselines`]), the
 //!   scoring metrics ([`metrics`]), SNAP-shaped workload generators
 //!   ([`graph::generators`]) and the benchmark framework ([`bench`]).
 //! * **L2/L1 (python/compile, build-time only)** — the sketch-scoring
 //!   metric engine as JAX + Pallas kernels, AOT-lowered to HLO text and
 //!   executed from [`runtime`] via PJRT. Python never runs on the
-//!   streaming path.
+//!   streaming path. The default build is offline and dependency-free;
+//!   the PJRT loader is gated behind the `pjrt` feature and stubs out
+//!   to the native engine otherwise.
 //!
 //! ## Quickstart
 //!
@@ -25,8 +28,12 @@
 //! println!("{} communities", streamcom::metrics::labels_to_communities(&labels).len());
 //! ```
 //!
-//! See `examples/` for end-to-end drivers and `DESIGN.md` for the
-//! paper-to-module map.
+//! For the online form — ingest while answering queries — see
+//! [`service::ClusterService`]. See `examples/` for end-to-end drivers
+//! and `docs/ARCHITECTURE.md` for the paper-to-module map and the
+//! service dataflow.
+
+#![warn(missing_docs)]
 
 pub mod baselines;
 pub mod bench;
@@ -34,5 +41,6 @@ pub mod coordinator;
 pub mod graph;
 pub mod metrics;
 pub mod runtime;
+pub mod service;
 pub mod stream;
 pub mod util;

@@ -5,7 +5,8 @@
 //!   run        stream-cluster an edge file / preset with one v_max
 //!   sweep      §2.5 multi-parameter run + sketch-only selection
 //!   bench      regenerate the paper's tables (table1 | table2 | memory)
-//!   serve      long-running streaming service over stdin events
+//!   serve      long-lived sharded clustering service (queries on stdin;
+//!              `--dynamic` for the legacy insert/delete event mode)
 
 mod app;
 

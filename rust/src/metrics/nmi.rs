@@ -13,7 +13,9 @@ use std::collections::HashMap;
 /// Normalisation variant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum NmiNorm {
+    /// Normalise by the mean of the two entropies.
     Avg,
+    /// Normalise by the larger entropy.
     Max,
 }
 

@@ -7,7 +7,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Result};
+use super::{Result, RuntimeError};
 
 /// A — sweep rows.
 pub const NUM_SWEEPS: usize = 8;
@@ -21,9 +21,13 @@ pub const CONTINGENCY: usize = 256;
 /// Paths of the three artifacts.
 #[derive(Debug, Clone)]
 pub struct ArtifactSet {
+    /// Artifact directory.
     pub dir: PathBuf,
+    /// Path to `sweep_metrics.hlo.txt`.
     pub sweep_metrics: PathBuf,
+    /// Path to `modularity.hlo.txt`.
     pub modularity: PathBuf,
+    /// Path to `nmi.hlo.txt`.
     pub nmi: PathBuf,
 }
 
@@ -39,7 +43,7 @@ impl ArtifactSet {
         };
         for p in [&set.sweep_metrics, &set.modularity, &set.nmi] {
             if !p.is_file() {
-                return Err(anyhow!("missing artifact {}", p.display()));
+                return Err(RuntimeError::new(format!("missing artifact {}", p.display())));
             }
         }
         set.validate_manifest()?;
@@ -59,7 +63,7 @@ impl ArtifactSet {
                 }
             }
         }
-        Err(anyhow!("no artifact directory found"))
+        Err(RuntimeError::new("no artifact directory found"))
     }
 
     /// Check the manifest shape lines match this build's constants.
@@ -82,11 +86,11 @@ impl ArtifactSet {
             let line = text
                 .lines()
                 .find(|l| l.starts_with(name))
-                .ok_or_else(|| anyhow!("manifest missing entry {name}"))?;
+                .ok_or_else(|| RuntimeError::new(format!("manifest missing entry {name}")))?;
             if !line.contains(&shape) {
-                return Err(anyhow!(
+                return Err(RuntimeError::new(format!(
                     "manifest shape drift for {name}: expected {shape} in {line:?}"
-                ));
+                )));
             }
         }
         Ok(())

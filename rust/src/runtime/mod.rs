@@ -11,192 +11,344 @@
 //! kernels; [`NativeEngine`](crate::coordinator::selection::NativeEngine)
 //! is the drop-in pure-Rust twin, and `rust/tests/runtime_integration.rs`
 //! cross-checks the two.
+//!
+//! ## Offline builds (`pjrt` feature)
+//!
+//! The PJRT client comes from the `xla` bindings, which are not part of
+//! the default (offline, dependency-free) build. The real runtime is
+//! gated behind `--features pjrt`; enabling it additionally requires
+//! adding the `xla` dependency to `Cargo.toml` in an environment that
+//! has it. Without the feature this module compiles a stub whose
+//! constructors return [`RuntimeError`], so every caller falls back to
+//! the native engine gracefully.
 
 pub mod artifacts;
 
-use anyhow::{anyhow, Context, Result};
-
 use crate::coordinator::selection::{MetricEngine, SweepScores};
-use artifacts::{ArtifactSet, CONTINGENCY, EDGE_BLOCK, NUM_SWEEPS, VOLUME_BUCKETS};
 
-/// Compiled PJRT executables for every artifact.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    sweep_metrics: xla::PjRtLoadedExecutable,
-    modularity: xla::PjRtLoadedExecutable,
-    nmi: xla::PjRtLoadedExecutable,
+/// Error type for artifact discovery and runtime execution (the default
+/// build carries no `anyhow`; this is the crate-local equivalent).
+#[derive(Debug)]
+pub struct RuntimeError(String);
+
+impl RuntimeError {
+    /// Build an error from any printable message.
+    pub fn new(msg: impl Into<String>) -> Self {
+        Self(msg.into())
+    }
 }
 
-impl PjrtRuntime {
-    /// Compile all artifacts from the given set.
-    pub fn load(set: &ArtifactSet) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        let compile = |path: &std::path::Path| -> Result<xla::PjRtLoadedExecutable> {
-            let proto = xla::HloModuleProto::from_text_file(path)
-                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
-        };
-        Ok(Self {
-            sweep_metrics: compile(&set.sweep_metrics)?,
-            modularity: compile(&set.modularity)?,
-            nmi: compile(&set.nmi)?,
-            client,
-        })
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> Self {
+        Self(e.to_string())
+    }
+}
+
+/// Result alias used throughout the runtime layer.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    //! Featureless stand-ins: constructors fail cleanly so callers fall
+    //! back to [`NativeEngine`](crate::coordinator::selection::NativeEngine).
+
+    use super::*;
+
+    const UNAVAILABLE: &str =
+        "PJRT runtime unavailable: built without the `pjrt` feature (offline \
+         default). Metric selection uses the native engine instead.";
+
+    /// Stub runtime (real implementation requires `--features pjrt`).
+    pub struct PjrtRuntime {
+        _private: (),
     }
 
-    /// Locate artifacts via `STREAMCOM_ARTIFACTS` or `./artifacts` and load.
-    pub fn load_default() -> Result<Self> {
-        let set = ArtifactSet::discover().context("artifacts not found — run `make artifacts`")?;
-        Self::load(&set)
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn run1(exe: &xla::PjRtLoadedExecutable, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        // lowered with return_tuple=True → 1-tuple
-        let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
-        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
-    }
-
-    /// Execute `sweep_metrics.hlo.txt`: `(A·K, A·K, A)` → `A × 6` scores.
-    pub fn sweep_metrics(&self, vols: &[f32], sizes: &[f32], w: &[f32]) -> Result<Vec<[f32; 6]>> {
-        let (a, k) = (NUM_SWEEPS, VOLUME_BUCKETS);
-        if vols.len() != a * k || sizes.len() != a * k || w.len() != a {
-            return Err(anyhow!(
-                "sweep_metrics shape mismatch: vols={} sizes={} w={}",
-                vols.len(),
-                sizes.len(),
-                w.len()
-            ));
+    impl PjrtRuntime {
+        /// Always fails in the stub build.
+        pub fn load(_set: &artifacts::ArtifactSet) -> Result<Self> {
+            Err(RuntimeError::new(UNAVAILABLE))
         }
-        let lv = xla::Literal::vec1(vols).reshape(&[a as i64, k as i64])?;
-        let ls = xla::Literal::vec1(sizes).reshape(&[a as i64, k as i64])?;
-        let lw = xla::Literal::vec1(w);
-        let flat = Self::run1(&self.sweep_metrics, &[lv, ls, lw])?;
-        if flat.len() != a * 6 {
-            return Err(anyhow!("sweep_metrics output len {}", flat.len()));
+
+        /// Always fails in the stub build.
+        pub fn load_default() -> Result<Self> {
+            Err(RuntimeError::new(UNAVAILABLE))
         }
-        Ok((0..a)
-            .map(|r| {
-                let mut row = [0f32; 6];
-                row.copy_from_slice(&flat[r * 6..(r + 1) * 6]);
-                row
+
+        /// Platform name of the PJRT client (unreachable in the stub).
+        pub fn platform(&self) -> String {
+            unreachable!("stub PjrtRuntime cannot be constructed")
+        }
+    }
+
+    /// Stub engine; [`PjrtEngine::load_default`] always errs, so the
+    /// [`MetricEngine`] impl below is never reachable at runtime.
+    pub struct PjrtEngine {
+        _runtime: PjrtRuntime,
+        /// Calls made (observability parity with the real engine).
+        pub calls: u64,
+    }
+
+    impl PjrtEngine {
+        /// Wrap a loaded runtime (unreachable in the stub build).
+        pub fn new(runtime: PjrtRuntime) -> Self {
+            Self { _runtime: runtime, calls: 0 }
+        }
+
+        /// Always fails in the stub build.
+        pub fn load_default() -> Result<Self> {
+            Err(RuntimeError::new(UNAVAILABLE))
+        }
+    }
+
+    impl MetricEngine for PjrtEngine {
+        fn sweep_metrics(
+            &mut self,
+            _vols: &[f32],
+            _sizes: &[f32],
+            _w: &[f32],
+            _a: usize,
+            _k: usize,
+        ) -> Vec<SweepScores> {
+            unreachable!("stub PjrtEngine cannot be constructed")
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{PjrtEngine, PjrtRuntime};
+
+#[cfg(feature = "pjrt")]
+mod real {
+    use super::artifacts::{ArtifactSet, CONTINGENCY, EDGE_BLOCK, NUM_SWEEPS, VOLUME_BUCKETS};
+    use super::*;
+
+    /// Compiled PJRT executables for every artifact.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        sweep_metrics: xla::PjRtLoadedExecutable,
+        modularity: xla::PjRtLoadedExecutable,
+        nmi: xla::PjRtLoadedExecutable,
+    }
+
+    impl PjrtRuntime {
+        /// Compile all artifacts from the given set.
+        pub fn load(set: &ArtifactSet) -> Result<Self> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| RuntimeError::new(format!("pjrt cpu client: {e:?}")))?;
+            let compile = |path: &std::path::Path| -> Result<xla::PjRtLoadedExecutable> {
+                let proto = xla::HloModuleProto::from_text_file(path)
+                    .map_err(|e| RuntimeError::new(format!("parse {}: {e:?}", path.display())))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                client
+                    .compile(&comp)
+                    .map_err(|e| RuntimeError::new(format!("compile {}: {e:?}", path.display())))
+            };
+            Ok(Self {
+                sweep_metrics: compile(&set.sweep_metrics)?,
+                modularity: compile(&set.modularity)?,
+                nmi: compile(&set.nmi)?,
+                client,
             })
-            .collect())
-    }
-
-    /// Execute `modularity.hlo.txt` over one padded edge block:
-    /// returns `(intra, Σ vol²)`.
-    pub fn modularity_partials(
-        &self,
-        ci: &[i32],
-        cj: &[i32],
-        mask: &[f32],
-        vols: &[f32],
-    ) -> Result<(f64, f64)> {
-        if ci.len() != EDGE_BLOCK
-            || cj.len() != EDGE_BLOCK
-            || mask.len() != EDGE_BLOCK
-            || vols.len() != VOLUME_BUCKETS
-        {
-            return Err(anyhow!("modularity shape mismatch"));
         }
-        let out = Self::run1(
-            &self.modularity,
-            &[
-                xla::Literal::vec1(ci),
-                xla::Literal::vec1(cj),
-                xla::Literal::vec1(mask),
-                xla::Literal::vec1(vols),
-            ],
-        )?;
-        Ok((out[0] as f64, out[1] as f64))
-    }
 
-    /// Execute `nmi.hlo.txt` on a `C × C` contingency table:
-    /// returns `(mi, h_u, h_v)` in nats.
-    pub fn nmi_terms(&self, cont: &[f32]) -> Result<(f64, f64, f64)> {
-        if cont.len() != CONTINGENCY * CONTINGENCY {
-            return Err(anyhow!("nmi shape mismatch: {}", cont.len()));
+        /// Locate artifacts via `STREAMCOM_ARTIFACTS` or `./artifacts` and load.
+        pub fn load_default() -> Result<Self> {
+            let set = ArtifactSet::discover().map_err(|e| {
+                RuntimeError::new(format!("artifacts not found — run `make artifacts`: {e}"))
+            })?;
+            Self::load(&set)
         }
-        let lc = xla::Literal::vec1(cont)
-            .reshape(&[CONTINGENCY as i64, CONTINGENCY as i64])?;
-        let out = Self::run1(&self.nmi, &[lc])?;
-        Ok((out[0] as f64, out[1] as f64, out[2] as f64))
-    }
 
-    /// Avg-normalised NMI via the artifact.
-    pub fn nmi(&self, cont: &[f32]) -> Result<f64> {
-        let (mi, hu, hv) = self.nmi_terms(cont)?;
-        let denom = 0.5 * (hu + hv);
-        Ok(if denom <= 0.0 {
-            if hu == hv {
-                1.0
-            } else {
-                0.0
+        /// Platform name of the PJRT client.
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        fn run1(exe: &xla::PjRtLoadedExecutable, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+            let result = exe
+                .execute::<xla::Literal>(inputs)
+                .map_err(|e| RuntimeError::new(format!("execute: {e:?}")))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| RuntimeError::new(format!("to_literal: {e:?}")))?;
+            // lowered with return_tuple=True → 1-tuple
+            let out = result
+                .to_tuple1()
+                .map_err(|e| RuntimeError::new(format!("tuple: {e:?}")))?;
+            out.to_vec::<f32>()
+                .map_err(|e| RuntimeError::new(format!("to_vec: {e:?}")))
+        }
+
+        /// Execute `sweep_metrics.hlo.txt`: `(A·K, A·K, A)` → `A × 6` scores.
+        pub fn sweep_metrics(&self, vols: &[f32], sizes: &[f32], w: &[f32]) -> Result<Vec<[f32; 6]>> {
+            let (a, k) = (NUM_SWEEPS, VOLUME_BUCKETS);
+            if vols.len() != a * k || sizes.len() != a * k || w.len() != a {
+                return Err(RuntimeError::new(format!(
+                    "sweep_metrics shape mismatch: vols={} sizes={} w={}",
+                    vols.len(),
+                    sizes.len(),
+                    w.len()
+                )));
             }
-        } else {
-            (mi / denom).clamp(0.0, 1.0)
-        })
-    }
-}
+            let lv = xla::Literal::vec1(vols)
+                .reshape(&[a as i64, k as i64])
+                .map_err(|e| RuntimeError::new(format!("reshape vols: {e:?}")))?;
+            let ls = xla::Literal::vec1(sizes)
+                .reshape(&[a as i64, k as i64])
+                .map_err(|e| RuntimeError::new(format!("reshape sizes: {e:?}")))?;
+            let lw = xla::Literal::vec1(w);
+            let flat = Self::run1(&self.sweep_metrics, &[lv, ls, lw])?;
+            if flat.len() != a * 6 {
+                return Err(RuntimeError::new(format!(
+                    "sweep_metrics output len {}",
+                    flat.len()
+                )));
+            }
+            Ok((0..a)
+                .map(|r| {
+                    let mut row = [0f32; 6];
+                    row.copy_from_slice(&flat[r * 6..(r + 1) * 6]);
+                    row
+                })
+                .collect())
+        }
 
-/// [`MetricEngine`] backed by the PJRT sweep-metrics executable.
-pub struct PjrtEngine {
-    runtime: PjrtRuntime,
-    /// Calls made (observability for the §Perf budget checks).
-    pub calls: u64,
-}
+        /// Execute `modularity.hlo.txt` over one padded edge block:
+        /// returns `(intra, Σ vol²)`.
+        pub fn modularity_partials(
+            &self,
+            ci: &[i32],
+            cj: &[i32],
+            mask: &[f32],
+            vols: &[f32],
+        ) -> Result<(f64, f64)> {
+            if ci.len() != EDGE_BLOCK
+                || cj.len() != EDGE_BLOCK
+                || mask.len() != EDGE_BLOCK
+                || vols.len() != VOLUME_BUCKETS
+            {
+                return Err(RuntimeError::new("modularity shape mismatch"));
+            }
+            let out = Self::run1(
+                &self.modularity,
+                &[
+                    xla::Literal::vec1(ci),
+                    xla::Literal::vec1(cj),
+                    xla::Literal::vec1(mask),
+                    xla::Literal::vec1(vols),
+                ],
+            )?;
+            Ok((out[0] as f64, out[1] as f64))
+        }
 
-impl PjrtEngine {
-    pub fn new(runtime: PjrtRuntime) -> Self {
-        Self { runtime, calls: 0 }
-    }
+        /// Execute `nmi.hlo.txt` on a `C × C` contingency table:
+        /// returns `(mi, h_u, h_v)` in nats.
+        pub fn nmi_terms(&self, cont: &[f32]) -> Result<(f64, f64, f64)> {
+            if cont.len() != CONTINGENCY * CONTINGENCY {
+                return Err(RuntimeError::new(format!("nmi shape mismatch: {}", cont.len())));
+            }
+            let lc = xla::Literal::vec1(cont)
+                .reshape(&[CONTINGENCY as i64, CONTINGENCY as i64])
+                .map_err(|e| RuntimeError::new(format!("reshape cont: {e:?}")))?;
+            let out = Self::run1(&self.nmi, &[lc])?;
+            Ok((out[0] as f64, out[1] as f64, out[2] as f64))
+        }
 
-    pub fn load_default() -> Result<Self> {
-        Ok(Self::new(PjrtRuntime::load_default()?))
-    }
-
-    pub fn runtime(&self) -> &PjrtRuntime {
-        &self.runtime
-    }
-}
-
-impl MetricEngine for PjrtEngine {
-    fn sweep_metrics(
-        &mut self,
-        vols: &[f32],
-        sizes: &[f32],
-        w: &[f32],
-        a: usize,
-        k: usize,
-    ) -> Vec<SweepScores> {
-        assert_eq!(a, NUM_SWEEPS, "PjrtEngine is compiled for A={NUM_SWEEPS}");
-        assert_eq!(k, VOLUME_BUCKETS, "PjrtEngine is compiled for K={VOLUME_BUCKETS}");
-        self.calls += 1;
-        let rows = self
-            .runtime
-            .sweep_metrics(vols, sizes, w)
-            .expect("pjrt sweep_metrics failed");
-        rows.into_iter()
-            .map(|r| SweepScores {
-                entropy: r[0],
-                density: r[1],
-                balance: r[2],
-                ncomms: r[3],
-                density_score: r[4],
-                balance_score: r[5],
+        /// Avg-normalised NMI via the artifact.
+        pub fn nmi(&self, cont: &[f32]) -> Result<f64> {
+            let (mi, hu, hv) = self.nmi_terms(cont)?;
+            let denom = 0.5 * (hu + hv);
+            Ok(if denom <= 0.0 {
+                if hu == hv {
+                    1.0
+                } else {
+                    0.0
+                }
+            } else {
+                (mi / denom).clamp(0.0, 1.0)
             })
-            .collect()
+        }
+    }
+
+    /// [`MetricEngine`] backed by the PJRT sweep-metrics executable.
+    pub struct PjrtEngine {
+        runtime: PjrtRuntime,
+        /// Calls made (observability for the §Perf budget checks).
+        pub calls: u64,
+    }
+
+    impl PjrtEngine {
+        /// Wrap a loaded runtime.
+        pub fn new(runtime: PjrtRuntime) -> Self {
+            Self { runtime, calls: 0 }
+        }
+
+        /// Load artifacts from the default location.
+        pub fn load_default() -> Result<Self> {
+            Ok(Self::new(PjrtRuntime::load_default()?))
+        }
+
+        /// Access the underlying runtime.
+        pub fn runtime(&self) -> &PjrtRuntime {
+            &self.runtime
+        }
+    }
+
+    impl MetricEngine for PjrtEngine {
+        fn sweep_metrics(
+            &mut self,
+            vols: &[f32],
+            sizes: &[f32],
+            w: &[f32],
+            a: usize,
+            k: usize,
+        ) -> Vec<SweepScores> {
+            assert_eq!(a, NUM_SWEEPS, "PjrtEngine is compiled for A={NUM_SWEEPS}");
+            assert_eq!(k, VOLUME_BUCKETS, "PjrtEngine is compiled for K={VOLUME_BUCKETS}");
+            self.calls += 1;
+            let rows = self
+                .runtime
+                .sweep_metrics(vols, sizes, w)
+                .expect("pjrt sweep_metrics failed");
+            rows.into_iter()
+                .map(|r| SweepScores {
+                    entropy: r[0],
+                    density: r[1],
+                    balance: r[2],
+                    ncomms: r[3],
+                    density_score: r[4],
+                    balance_score: r[5],
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use real::{PjrtEngine, PjrtRuntime};
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn stub_engine_fails_cleanly() {
+        let err = super::PjrtEngine::load_default().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        let err = super::PjrtRuntime::load_default().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn runtime_error_wraps_io() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: super::RuntimeError = io.into();
+        assert!(e.to_string().contains("gone"));
     }
 }

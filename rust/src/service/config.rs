@@ -1,0 +1,78 @@
+//! Service configuration.
+//!
+//! The knobs mirror [`crate::coordinator::parallel::ParallelConfig`]
+//! (the batch twin) plus the service-only drain cadence. Defaults are
+//! tuned for "ingest a few million edges/s on a laptop while staying
+//! queryable": deep enough mailboxes to ride out query-induced stalls,
+//! a drain interval short enough that mid-stream answers lag the stream
+//! by well under a second.
+
+use crate::coordinator::algorithm::StrConfig;
+
+/// Configuration for a [`crate::service::ClusterService`].
+///
+/// ```
+/// use streamcom::service::ServiceConfig;
+///
+/// let mut cfg = ServiceConfig::new(4, 64);
+/// cfg.chunk_size = 1024; // smaller dispatch batches, lower latency
+/// assert_eq!(cfg.shards, 4);
+/// assert_eq!(cfg.str_config.v_max, 64);
+/// ```
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Number of shard workers (clamped to ≥ 1 at start-up).
+    pub shards: usize,
+    /// Per-worker streaming configuration (the paper's `v_max` etc.).
+    pub str_config: StrConfig,
+    /// Bounded mailbox depth per shard, in chunks. When a shard's
+    /// mailbox is full, `push` **blocks** — backpressure, never drops.
+    pub mailbox_depth: usize,
+    /// Edges per dispatched chunk (router-side batching).
+    pub chunk_size: usize,
+    /// Edges between automatic cross-edge drains: every `drain_every`
+    /// pushed edges the service rebuilds its copy-on-read snapshot so
+    /// queries see fresh assignments mid-stream. `0` or `u64::MAX`
+    /// disables automatic drains (snapshots then only refresh on
+    /// demand).
+    pub drain_every: u64,
+}
+
+impl ServiceConfig {
+    /// Service over `shards` workers with the paper's `v_max` threshold
+    /// and default batching/drain cadence.
+    pub fn new(shards: usize, v_max: u64) -> Self {
+        Self {
+            shards: shards.max(1),
+            str_config: StrConfig::new(v_max),
+            mailbox_depth: 8,
+            chunk_size: 4_096,
+            drain_every: 262_144,
+        }
+    }
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self::new(4, 64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let cfg = ServiceConfig::default();
+        assert!(cfg.shards >= 1);
+        assert!(cfg.mailbox_depth >= 1);
+        assert!(cfg.chunk_size >= 1);
+        assert!(cfg.drain_every > cfg.chunk_size as u64);
+    }
+
+    #[test]
+    fn zero_shards_clamped() {
+        assert_eq!(ServiceConfig::new(0, 8).shards, 1);
+    }
+}

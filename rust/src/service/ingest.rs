@@ -1,0 +1,499 @@
+//! The service core: shard workers, bounded mailboxes, and the router.
+//!
+//! Mirrors the sneldb-style shard-worker design on top of the existing
+//! stream substrate:
+//!
+//! * **Router** (the [`ClusterService`] handle itself) — classifies each
+//!   pushed edge with `stream::shard::route`; intra-shard edges batch
+//!   into per-shard chunks, cross-shard edges append to the deferred
+//!   buffer.
+//! * **Shard worker** — long-lived thread owning one
+//!   [`StreamingClusterer`] behind a mutex; drains its bounded mailbox
+//!   chunk by chunk. Workers never share nodes (hash-sharding), so they
+//!   run the exact sequential algorithm on their slice of the node
+//!   space.
+//! * **Backpressure** — each mailbox is a bounded [`Channel`]; when a
+//!   hot shard falls behind, `push` **blocks** on that mailbox until the
+//!   worker catches up. Edges are never dropped, and cold shards are
+//!   unaffected.
+//! * **Drains** — every `drain_every` pushed edges the router rebuilds
+//!   the copy-on-read [`Snapshot`] (merge + cross replay), which is what
+//!   makes `community_of` answerable mid-stream.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::algorithm::StreamingClusterer;
+use crate::coordinator::state::StreamState;
+use crate::graph::edge::Edge;
+use crate::stream::meter::Meter;
+use crate::stream::shard::{route, Route};
+use crate::stream::source::EdgeSource;
+use crate::util::channel::Channel;
+
+use super::config::ServiceConfig;
+use super::query::QueryHandle;
+use super::snapshot::Snapshot;
+
+/// State shared between the router, the shard workers, and every
+/// [`QueryHandle`].
+pub(crate) struct Shared {
+    pub(crate) config: ServiceConfig,
+    pub(crate) mailboxes: Vec<Channel<Vec<Edge>>>,
+    pub(crate) states: Vec<Mutex<StreamingClusterer>>,
+    pub(crate) cross: Mutex<Vec<Edge>>,
+    /// Edges accepted by `push` (including cross and self-loops).
+    pub(crate) ingested: AtomicU64,
+    /// Cross-shard edges buffered for deferred replay.
+    pub(crate) cross_count: AtomicU64,
+    /// Local edges handed to mailboxes.
+    pub(crate) dispatched: AtomicU64,
+    /// Local edges the workers have finished processing.
+    pub(crate) processed: AtomicU64,
+    /// Latest copy-on-read snapshot (swap-on-drain).
+    pub(crate) snapshot: RwLock<Arc<Snapshot>>,
+    /// Ingest throughput meter (fed at chunk granularity).
+    pub(crate) meter: Mutex<Meter>,
+}
+
+/// Rebuild the copy-on-read snapshot from the current shard states and
+/// cross buffer, publish it, and return it.
+pub(crate) fn rebuild_snapshot(shared: &Shared) -> Arc<Snapshot> {
+    let states: Vec<StreamState> = shared
+        .states
+        .iter()
+        .map(|m| m.lock().unwrap().state.clone())
+        .collect();
+    let cross = shared.cross.lock().unwrap().clone();
+    let snap = Arc::new(Snapshot::build(&shared.config.str_config, &states, &cross));
+    // concurrent rebuilds (router drain vs. QueryHandle::refresh) may
+    // finish out of order; never let the published snapshot go
+    // backwards in time
+    {
+        let mut slot = shared.snapshot.write().unwrap();
+        if snap.edges() >= slot.edges() {
+            *slot = Arc::clone(&snap);
+        }
+    }
+    snap
+}
+
+fn worker_loop(shared: &Shared, w: usize) {
+    // close the mailbox on the way out — including on panic — so a dead
+    // worker turns the router's blocked sends into errors instead of a
+    // permanent hang; finish() then surfaces the panic via join()
+    struct CloseOnExit<'a>(&'a Channel<Vec<Edge>>);
+    impl Drop for CloseOnExit<'_> {
+        fn drop(&mut self) {
+            self.0.close();
+        }
+    }
+    let mailbox = &shared.mailboxes[w];
+    let _guard = CloseOnExit(mailbox);
+    while let Some(chunk) = mailbox.recv() {
+        {
+            let mut clusterer = shared.states[w].lock().unwrap();
+            clusterer.process_chunk(&chunk);
+        }
+        shared.processed.fetch_add(chunk.len() as u64, Ordering::SeqCst);
+    }
+}
+
+/// Final outcome of a service run (after [`ClusterService::finish`]).
+#[derive(Debug)]
+pub struct ServiceResult {
+    /// The final partition (all local edges processed, all cross edges
+    /// replayed) — identical to what the batch parallel coordinator
+    /// produces for the same stream and configuration.
+    pub snapshot: Arc<Snapshot>,
+    /// Total edges pushed over the service's lifetime.
+    pub edges_ingested: u64,
+    /// Cross-shard edges resolved by deferred replay.
+    pub cross_edges: u64,
+    /// Wall-clock ingest time.
+    pub elapsed: Duration,
+}
+
+impl ServiceResult {
+    /// Final community labels (unseen nodes as singletons).
+    pub fn labels(&self) -> Vec<u32> {
+        self.snapshot.labels()
+    }
+
+    /// The final merged sketch.
+    pub fn state(&self) -> &StreamState {
+        self.snapshot.state()
+    }
+}
+
+/// A long-lived sharded clustering service.
+///
+/// Owns `shards` worker threads; `push` routes edges to them with
+/// blocking backpressure, queries are served from copy-on-read
+/// snapshots via [`QueryHandle`]s. See the [module docs](self) and
+/// `docs/ARCHITECTURE.md` for the dataflow.
+pub struct ClusterService {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    /// Router-side per-shard batch buffers (not yet dispatched).
+    pending: Vec<Vec<Edge>>,
+    /// Router-side cross-edge batch (flushed to the shared buffer in
+    /// chunks — one lock per chunk instead of one per edge).
+    cross_pending: Vec<Edge>,
+    since_drain: u64,
+    /// Edges (local *and* cross) not yet reported to the shared meter.
+    unmetered: u64,
+}
+
+impl ClusterService {
+    /// Spawn the shard workers and return the router handle.
+    pub fn start(config: ServiceConfig) -> Self {
+        let mut config = config;
+        config.shards = config.shards.max(1);
+        config.mailbox_depth = config.mailbox_depth.max(1);
+        config.chunk_size = config.chunk_size.max(1);
+        if config.drain_every == 0 {
+            // match the CLI's "0 = disabled" convention — a drain after
+            // every edge would collapse throughput
+            config.drain_every = u64::MAX;
+        }
+        let shards = config.shards;
+
+        let shared = Arc::new(Shared {
+            mailboxes: (0..shards)
+                .map(|_| Channel::bounded(config.mailbox_depth))
+                .collect(),
+            states: (0..shards)
+                .map(|_| Mutex::new(StreamingClusterer::new(0, config.str_config.clone())))
+                .collect(),
+            cross: Mutex::new(Vec::new()),
+            ingested: AtomicU64::new(0),
+            cross_count: AtomicU64::new(0),
+            dispatched: AtomicU64::new(0),
+            processed: AtomicU64::new(0),
+            snapshot: RwLock::new(Arc::new(Snapshot::empty())),
+            meter: Mutex::new(Meter::start()),
+            config,
+        });
+
+        let workers = (0..shards)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("shard-{w}"))
+                    .spawn(move || worker_loop(&shared, w))
+                    .expect("spawn shard worker")
+            })
+            .collect();
+
+        Self {
+            shared,
+            workers,
+            pending: (0..shards).map(|_| Vec::new()).collect(),
+            cross_pending: Vec::new(),
+            since_drain: 0,
+            unmetered: 0,
+        }
+    }
+
+    /// A cloneable query handle sharing this service's state. Handles
+    /// stay valid after [`finish`](Self::finish) and keep serving the
+    /// final snapshot.
+    pub fn handle(&self) -> QueryHandle {
+        QueryHandle::new(Arc::clone(&self.shared))
+    }
+
+    /// Route one edge. Blocks when the target shard's mailbox is full
+    /// (backpressure); triggers an automatic drain every
+    /// `config.drain_every` edges.
+    pub fn push(&mut self, e: Edge) {
+        match route(e, self.shared.config.shards) {
+            Route::Local(w) => {
+                self.pending[w].push(e);
+                if self.pending[w].len() >= self.shared.config.chunk_size {
+                    self.dispatch(w);
+                }
+            }
+            Route::Cross => {
+                self.cross_pending.push(e);
+                if self.cross_pending.len() >= self.shared.config.chunk_size {
+                    self.flush_cross();
+                }
+            }
+        }
+        self.shared.ingested.fetch_add(1, Ordering::Relaxed);
+        self.unmetered += 1;
+        if self.unmetered >= 1024 {
+            self.meter_flush();
+        }
+        self.since_drain += 1;
+        if self.since_drain >= self.shared.config.drain_every {
+            self.refresh();
+        }
+    }
+
+    /// Route a chunk of edges.
+    pub fn push_chunk(&mut self, chunk: &[Edge]) {
+        for &e in chunk {
+            self.push(e);
+        }
+    }
+
+    /// Drain an entire [`EdgeSource`] through the service; returns the
+    /// number of edges ingested from it.
+    pub fn ingest<S: EdgeSource>(&mut self, source: &mut S, batch: usize) -> u64 {
+        let mut buf = Vec::with_capacity(batch.max(1));
+        let mut total = 0u64;
+        while source.next_batch(&mut buf) > 0 {
+            total += buf.len() as u64;
+            self.push_chunk(&buf);
+        }
+        total
+    }
+
+    fn dispatch(&mut self, w: usize) {
+        if self.pending[w].is_empty() {
+            return;
+        }
+        let batch = std::mem::take(&mut self.pending[w]);
+        let len = batch.len() as u64;
+        // a mailbox only closes mid-run when its worker died; fail fast
+        // rather than silently discarding this shard's edges for the
+        // rest of a long-lived run ("edges are never dropped")
+        match self.shared.mailboxes[w].send(batch) {
+            Ok(()) => {
+                self.shared.dispatched.fetch_add(len, Ordering::SeqCst);
+            }
+            Err(_) => panic!("shard worker {w} died; its mailbox is closed mid-stream"),
+        }
+    }
+
+    /// Report batched edge counts (local and cross) to the throughput
+    /// meter behind `QueryHandle::stats`.
+    fn meter_flush(&mut self) {
+        if self.unmetered > 0 {
+            self.shared.meter.lock().unwrap().add_edges(self.unmetered);
+            self.unmetered = 0;
+        }
+    }
+
+    /// Append the router-local cross batch to the shared deferred
+    /// buffer — one lock per chunk, not per edge.
+    fn flush_cross(&mut self) {
+        if self.cross_pending.is_empty() {
+            return;
+        }
+        let k = self.cross_pending.len() as u64;
+        self.shared.cross.lock().unwrap().append(&mut self.cross_pending);
+        self.shared.cross_count.fetch_add(k, Ordering::Relaxed);
+    }
+
+    /// Dispatch all partially-filled router buffers (local and cross).
+    pub fn flush(&mut self) {
+        for w in 0..self.pending.len() {
+            self.dispatch(w);
+        }
+        self.flush_cross();
+        self.meter_flush();
+    }
+
+    /// Flush and rebuild the copy-on-read snapshot *now* (without
+    /// waiting for the workers to drain their mailboxes — the snapshot
+    /// covers whatever they have processed so far, plus all buffered
+    /// cross edges).
+    pub fn refresh(&mut self) -> Arc<Snapshot> {
+        self.flush();
+        self.since_drain = 0;
+        rebuild_snapshot(&self.shared)
+    }
+
+    /// Flush, wait until the workers have processed every dispatched
+    /// edge, then rebuild the snapshot. The result covers *exactly* the
+    /// edges pushed so far — the strongest mid-stream consistency the
+    /// service offers.
+    pub fn quiesce(&mut self) -> Arc<Snapshot> {
+        self.flush();
+        let mut spins = 0u32;
+        while self.shared.processed.load(Ordering::SeqCst)
+            < self.shared.dispatched.load(Ordering::SeqCst)
+        {
+            // a mailbox only closes mid-run when its worker died — a
+            // recv'd-but-unprocessed chunk would make this wait eternal
+            if self.shared.mailboxes.iter().any(|m| m.is_closed()) {
+                panic!("shard worker died mid-stream; sketch state is incomplete");
+            }
+            // short yield phase for the common fast drain, then back off
+            // to sleeps so a long wait doesn't burn a core
+            spins += 1;
+            if spins < 64 {
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        self.since_drain = 0;
+        rebuild_snapshot(&self.shared)
+    }
+
+    /// End of stream: flush, close the mailboxes, join the workers, and
+    /// build the final partition.
+    pub fn finish(mut self) -> ServiceResult {
+        self.flush();
+        for mb in &self.shared.mailboxes {
+            mb.close();
+        }
+        for h in std::mem::take(&mut self.workers) {
+            h.join().expect("shard worker panicked");
+        }
+        let snapshot = rebuild_snapshot(&self.shared);
+        let report = self.shared.meter.lock().unwrap().snapshot();
+        ServiceResult {
+            snapshot,
+            edges_ingested: self.shared.ingested.load(Ordering::Relaxed),
+            cross_edges: self.shared.cross_count.load(Ordering::Relaxed),
+            elapsed: report.elapsed,
+        }
+    }
+}
+
+impl Drop for ClusterService {
+    /// Abort semantics: close mailboxes (workers drain what was already
+    /// dispatched and exit) and join. Router-buffered edges are
+    /// discarded — call [`finish`](Self::finish) for a clean shutdown.
+    fn drop(&mut self) {
+        for mb in &self.shared.mailboxes {
+            mb.close();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::parallel::{run_parallel, ParallelConfig};
+    use crate::graph::generators::sbm::{self, SbmConfig};
+
+    fn small_config(shards: usize, v_max: u64) -> ServiceConfig {
+        let mut cfg = ServiceConfig::new(shards, v_max);
+        cfg.chunk_size = 64;
+        cfg.drain_every = u64::MAX;
+        cfg
+    }
+
+    #[test]
+    fn every_pushed_edge_reaches_the_final_partition() {
+        let g = sbm::generate(&SbmConfig::equal(6, 30, 0.4, 0.01, 5));
+        let mut svc = ClusterService::start(small_config(3, 64));
+        for &e in &g.edges.edges {
+            svc.push(e);
+        }
+        let res = svc.finish();
+        assert_eq!(res.edges_ingested, g.m() as u64);
+        assert_eq!(res.snapshot.edges(), g.m() as u64);
+        assert_eq!(res.snapshot.local_edges + res.snapshot.cross_edges, g.m() as u64);
+        assert_eq!(res.state().total_volume(), 2 * g.m() as u64);
+    }
+
+    #[test]
+    fn final_partition_identical_to_batch_parallel_coordinator() {
+        // same hash-sharding, same per-shard order, same deferred cross
+        // replay → bit-identical labels, not just similar quality
+        let g = sbm::generate(&SbmConfig::equal(8, 40, 0.3, 0.01, 9));
+        let shards = 4;
+        let v_max = 64;
+
+        let par = run_parallel(g.n(), &g.edges.edges, &ParallelConfig::new(shards, v_max));
+        let par_labels = par.labels();
+
+        let mut svc = ClusterService::start(small_config(shards, v_max));
+        svc.push_chunk(&g.edges.edges);
+        let svc_labels = svc.finish().labels();
+
+        // the service sizes its sketch to the max touched id; the batch
+        // run pre-sizes to n — compare on the service's node range
+        assert!(svc_labels.len() <= par_labels.len());
+        assert_eq!(svc_labels[..], par_labels[..svc_labels.len()]);
+    }
+
+    #[test]
+    fn snapshot_during_ingest_is_a_valid_partition() {
+        let g = sbm::generate(&SbmConfig::equal(8, 40, 0.35, 0.005, 11));
+        let half = g.m() / 2;
+        let mut svc = ClusterService::start(small_config(4, 64));
+
+        svc.push_chunk(&g.edges.edges[..half]);
+        let snap = svc.quiesce();
+        // exactly the pushed prefix, with all stream-end invariants
+        assert_eq!(snap.edges(), half as u64);
+        assert_eq!(snap.state().total_volume(), 2 * half as u64);
+        let n = snap.state().n();
+        assert!(snap.labels().iter().all(|&l| (l as usize) < n));
+
+        // ingest continues unaffected after the snapshot
+        svc.push_chunk(&g.edges.edges[half..]);
+        let res = svc.finish();
+        assert_eq!(res.snapshot.edges(), g.m() as u64);
+        assert_eq!(res.state().total_volume(), 2 * g.m() as u64);
+    }
+
+    #[test]
+    fn backpressure_blocks_rather_than_drops() {
+        use std::sync::atomic::AtomicUsize;
+
+        let mut cfg = ServiceConfig::new(1, 8);
+        cfg.chunk_size = 1;
+        cfg.mailbox_depth = 1;
+        cfg.drain_every = u64::MAX;
+        let mut svc = ClusterService::start(cfg);
+        let shared = Arc::clone(&svc.shared);
+
+        // stall the single worker by holding its state lock
+        let stall = shared.states[0].lock().unwrap();
+
+        let progress = Arc::new(AtomicUsize::new(0));
+        let progress2 = Arc::clone(&progress);
+        let pusher = std::thread::spawn(move || {
+            for i in 0..6u32 {
+                svc.push(Edge::new(2 * i, 2 * i + 1));
+                progress2.store(i as usize + 1, Ordering::SeqCst);
+            }
+            svc.finish()
+        });
+
+        // with depth 1 and the worker stalled, at most ~3 pushes can
+        // complete (one chunk in the worker's hands, one queued, one
+        // blocked in send); the pusher must NOT finish all 6
+        std::thread::sleep(Duration::from_millis(150));
+        let made = progress.load(Ordering::SeqCst);
+        assert!(made < 6, "pusher should be blocked, got {made}/6 pushes");
+
+        drop(stall); // release the worker → everything drains
+        let res = pusher.join().expect("pusher panicked");
+        assert_eq!(res.edges_ingested, 6, "blocked edges must not be dropped");
+        assert_eq!(res.snapshot.edges(), 6);
+    }
+
+    #[test]
+    fn automatic_drains_keep_snapshot_fresh() {
+        let g = sbm::generate(&SbmConfig::equal(5, 30, 0.4, 0.01, 13));
+        let mut cfg = ServiceConfig::new(2, 64);
+        cfg.chunk_size = 32;
+        cfg.drain_every = 100; // force many automatic drains
+        let mut svc = ClusterService::start(cfg);
+        let handle = svc.handle();
+
+        assert_eq!(handle.snapshot().edges(), 0);
+        svc.push_chunk(&g.edges.edges);
+        // at least one drain fired, so the cached snapshot is non-empty
+        assert!(handle.snapshot().edges() > 0);
+        let res = svc.finish();
+        assert_eq!(res.snapshot.edges(), g.m() as u64);
+        // the handle now serves the final snapshot
+        assert_eq!(handle.snapshot().edges(), g.m() as u64);
+    }
+}

@@ -1,0 +1,52 @@
+//! Long-lived sharded clustering service.
+//!
+//! The paper's algorithm stores three integers per node and touches
+//! each edge once — the ideal shape for an *ingestion service*, not
+//! just a batch CLI. This module promotes the batch parallel
+//! coordinator into exactly that:
+//!
+//! * [`ingest`] — N shard workers behind bounded mailboxes (sneldb-style
+//!   shard/mailbox/backpressure design) fed by a router built on
+//!   `stream::shard`; `push` blocks when a shard lags, never drops.
+//! * [`snapshot`] — copy-on-read [`Snapshot`]s: merge the disjoint
+//!   shard sketches and replay buffered cross edges, producing a valid
+//!   partition *mid-stream* (periodic drains keep it fresh).
+//! * [`query`] — cloneable [`QueryHandle`]s serving `community_of`
+//!   point lookups, top-k community summaries, and an operational
+//!   stats endpoint (edges/s, queue depths, memory per node).
+//! * [`config`] — [`ServiceConfig`] knobs (shards, `v_max`, mailbox
+//!   depth, chunk size, drain cadence).
+//!
+//! The final partition after [`ClusterService::finish`] is
+//! **bit-identical** to `coordinator::parallel::run_parallel` on the
+//! same stream — the service is the online form of the same
+//! deferred-cross-edge design. See `docs/ARCHITECTURE.md` for the full
+//! dataflow and invariants.
+//!
+//! ```
+//! use streamcom::graph::edge::Edge;
+//! use streamcom::service::{ClusterService, ServiceConfig};
+//!
+//! let mut service = ClusterService::start(ServiceConfig::new(2, 8));
+//! let queries = service.handle();
+//!
+//! // a triangle arrives on the stream...
+//! service.push_chunk(&[Edge::new(0, 1), Edge::new(1, 2), Edge::new(0, 2)]);
+//! // ...and is queryable mid-stream after a drain
+//! let snap = service.quiesce();
+//! assert_eq!(snap.edges(), 3);
+//! assert_eq!(queries.community_of(0), queries.community_of(1));
+//!
+//! let result = service.finish();
+//! assert_eq!(result.edges_ingested, 3);
+//! ```
+
+pub mod config;
+pub mod ingest;
+pub mod query;
+pub mod snapshot;
+
+pub use config::ServiceConfig;
+pub use ingest::{ClusterService, ServiceResult};
+pub use query::{QueryHandle, ServiceStats};
+pub use snapshot::{CommunitySummary, Snapshot};

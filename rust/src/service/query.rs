@@ -1,0 +1,178 @@
+//! Read path: point lookups, top-k summaries, and the stats endpoint.
+//!
+//! A [`QueryHandle`] is a cheap cloneable reference into the service's
+//! shared state. Queries read the latest copy-on-read [`Snapshot`] —
+//! they never touch the shard workers' hot loop, so read traffic cannot
+//! slow ingestion (the only shared-state contact is one `RwLock` read
+//! of an `Arc`). Stats follow the same rule: memory figures come from
+//! the published snapshot, queue depths from the mailbox channels, and
+//! throughput from the `stream::meter` instance the router feeds —
+//! never from the workers' own state locks.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::ingest::{rebuild_snapshot, Shared};
+use super::snapshot::{CommunitySummary, Snapshot};
+
+/// Cloneable read handle onto a running (or finished) service.
+#[derive(Clone)]
+pub struct QueryHandle {
+    shared: Arc<Shared>,
+}
+
+/// Point-in-time operational statistics.
+#[derive(Debug, Clone)]
+pub struct ServiceStats {
+    /// Shard worker count.
+    pub shards: usize,
+    /// Edges accepted by the router so far.
+    pub edges_ingested: u64,
+    /// Cross-shard edges buffered for deferred replay.
+    pub cross_pending: u64,
+    /// Ingest throughput over the service lifetime (edges/s).
+    pub edges_per_sec: f64,
+    /// Time since the service started.
+    pub uptime: Duration,
+    /// Current chunks queued per shard mailbox.
+    pub queue_depths: Vec<usize>,
+    /// High-water mark of each shard mailbox (backpressure indicator).
+    pub queue_peaks: Vec<usize>,
+    /// Edges covered by the currently-published snapshot (query lag =
+    /// `edges_ingested - snapshot_edges`).
+    pub snapshot_edges: u64,
+    /// Sketch bytes of the published snapshot's merged state (the live
+    /// shard states hold roughly the same again, split across workers).
+    pub memory_bytes: usize,
+    /// Node-id space size of the published snapshot.
+    pub nodes: usize,
+}
+
+impl ServiceStats {
+    /// Snapshot sketch bytes per node of id space (the paper's "three
+    /// integers per node": 16 B).
+    pub fn bytes_per_node(&self) -> f64 {
+        if self.nodes == 0 {
+            0.0
+        } else {
+            self.memory_bytes as f64 / self.nodes as f64
+        }
+    }
+}
+
+impl QueryHandle {
+    pub(crate) fn new(shared: Arc<Shared>) -> Self {
+        Self { shared }
+    }
+
+    /// The latest published snapshot (copy-on-read: an `Arc` clone, no
+    /// data copy, no contact with the ingest path).
+    pub fn snapshot(&self) -> Arc<Snapshot> {
+        Arc::clone(&self.shared.snapshot.read().unwrap())
+    }
+
+    /// Force a snapshot rebuild from the live shard states. Unlike
+    /// `ClusterService::refresh`, this cannot flush the router's batch
+    /// buffers (it has no access to them), so it covers dispatched
+    /// edges only.
+    pub fn refresh(&self) -> Arc<Snapshot> {
+        rebuild_snapshot(&self.shared)
+    }
+
+    /// Community of `node` in the latest snapshot.
+    pub fn community_of(&self, node: u32) -> u32 {
+        self.snapshot().community_of(node)
+    }
+
+    /// The `k` largest communities in the latest snapshot.
+    pub fn top_communities(&self, k: usize) -> Vec<CommunitySummary> {
+        self.snapshot().top_communities(k)
+    }
+
+    /// Sample the service's operational stats.
+    pub fn stats(&self) -> ServiceStats {
+        let report = self.shared.meter.lock().unwrap().snapshot();
+        let snap = self.snapshot();
+        let queue_depths: Vec<usize> =
+            self.shared.mailboxes.iter().map(|m| m.len()).collect();
+        let queue_peaks: Vec<usize> =
+            self.shared.mailboxes.iter().map(|m| m.stats().0).collect();
+        // memory comes from the published snapshot, not the live shard
+        // states — stats must never contend with the workers' hot loop
+        let memory_bytes = snap.memory_bytes();
+        let nodes = snap.state().n();
+        ServiceStats {
+            shards: self.shared.config.shards,
+            edges_ingested: self.shared.ingested.load(Ordering::Relaxed),
+            cross_pending: self.shared.cross_count.load(Ordering::Relaxed),
+            edges_per_sec: report.edges_per_sec(),
+            uptime: report.elapsed,
+            queue_depths,
+            queue_peaks,
+            snapshot_edges: snap.edges(),
+            memory_bytes,
+            nodes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::config::ServiceConfig;
+    use super::super::ingest::ClusterService;
+    use crate::graph::generators::sbm::{self, SbmConfig};
+
+    #[test]
+    fn stats_reflect_ingest_and_queues() {
+        let g = sbm::generate(&SbmConfig::equal(6, 30, 0.4, 0.01, 17));
+        let mut cfg = ServiceConfig::new(3, 64);
+        cfg.chunk_size = 64;
+        cfg.drain_every = u64::MAX;
+        let mut svc = ClusterService::start(cfg);
+        let handle = svc.handle();
+
+        svc.push_chunk(&g.edges.edges);
+        svc.quiesce();
+        let s = handle.stats();
+        assert_eq!(s.shards, 3);
+        assert_eq!(s.edges_ingested, g.m() as u64);
+        assert_eq!(s.queue_depths.len(), 3);
+        assert_eq!(s.snapshot_edges, g.m() as u64);
+        assert!(s.memory_bytes > 0);
+        assert!(s.bytes_per_node() >= 16.0, "{}", s.bytes_per_node());
+        assert!(s.uptime.as_nanos() > 0);
+        svc.finish();
+    }
+
+    #[test]
+    fn community_of_matches_snapshot_labels() {
+        let g = sbm::generate(&SbmConfig::equal(5, 30, 0.4, 0.01, 19));
+        let mut cfg = ServiceConfig::new(2, 64);
+        cfg.chunk_size = 32;
+        let mut svc = ClusterService::start(cfg);
+        let handle = svc.handle();
+        svc.push_chunk(&g.edges.edges);
+        svc.quiesce();
+        let snap = handle.snapshot();
+        let labels = snap.labels();
+        for (i, &l) in labels.iter().enumerate() {
+            assert_eq!(handle.community_of(i as u32), l, "node {i}");
+        }
+        // unseen ids beyond the sketch are singletons
+        let big = (labels.len() as u32) + 1000;
+        assert_eq!(handle.community_of(big), big);
+        svc.finish();
+    }
+
+    #[test]
+    fn handles_survive_finish() {
+        let g = sbm::generate(&SbmConfig::equal(4, 25, 0.4, 0.01, 23));
+        let mut svc = ClusterService::start(ServiceConfig::new(2, 64));
+        let handle = svc.handle();
+        svc.push_chunk(&g.edges.edges);
+        let res = svc.finish();
+        assert_eq!(handle.snapshot().edges(), res.snapshot.edges());
+        assert_eq!(handle.stats().edges_ingested, g.m() as u64);
+    }
+}

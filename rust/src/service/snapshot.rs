@@ -1,0 +1,181 @@
+//! Copy-on-read snapshots: consistent, queryable partitions mid-stream.
+//!
+//! The batch parallel coordinator only materialises a partition after a
+//! final barrier (workers drain → merge → cross-edge replay). The
+//! service needs answers *while* the stream is still flowing, so it
+//! periodically builds a [`Snapshot`]: clone each shard's sketch under
+//! its lock (three flat arrays — cheap), merge the disjoint clones with
+//! [`merge_disjoint_states`], and replay the cross-edge buffer through
+//! the merged clone exactly as the batch leader would. The live shard
+//! states are never blocked for longer than one `memcpy`, and the
+//! snapshot is immutable afterwards — readers share it via `Arc` with
+//! no further coordination.
+//!
+//! A snapshot is therefore *exactly* the partition the batch coordinator
+//! would have produced had the stream ended at the drain point: every
+//! invariant that holds at a stream end (volume conservation
+//! `Σ v_k = 2t`, labels in node-id space) holds for every snapshot.
+
+use crate::coordinator::algorithm::{StrConfig, StreamingClusterer};
+use crate::coordinator::parallel::merge_disjoint_states;
+use crate::coordinator::state::{StreamState, UNSEEN};
+use crate::graph::edge::Edge;
+
+/// One row of a top-k community report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CommunitySummary {
+    /// Community id (lives in the node-id space).
+    pub id: u32,
+    /// Community volume `v_k` (sum of member degrees).
+    pub volume: u64,
+    /// Member count.
+    pub size: u32,
+}
+
+/// An immutable, point-in-time partition of the ingested stream.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    state: StreamState,
+    /// Intra-shard edges covered by this snapshot.
+    pub local_edges: u64,
+    /// Cross-shard edges replayed into this snapshot.
+    pub cross_edges: u64,
+}
+
+impl Snapshot {
+    /// The before-any-edges snapshot: every node is its own singleton.
+    pub(crate) fn empty() -> Self {
+        Self { state: StreamState::new(0), local_edges: 0, cross_edges: 0 }
+    }
+
+    /// Merge shard sketches and replay the pending cross edges, exactly
+    /// the batch leader's final step (`coordinator::parallel`).
+    pub(crate) fn build(
+        config: &StrConfig,
+        shard_states: &[StreamState],
+        cross: &[Edge],
+    ) -> Self {
+        let merged = merge_disjoint_states(0, shard_states);
+        let local_edges = merged.edges_processed;
+        let mut leader = StreamingClusterer::new(0, config.clone());
+        leader.state = merged;
+        leader.process_chunk(cross);
+        Self { state: leader.state, local_edges, cross_edges: cross.len() as u64 }
+    }
+
+    /// The merged sketch behind this snapshot.
+    pub fn state(&self) -> &StreamState {
+        &self.state
+    }
+
+    /// Edges covered by this snapshot (`t` in the paper).
+    pub fn edges(&self) -> u64 {
+        self.state.edges_processed
+    }
+
+    /// Current community of `node`. Nodes the stream has not mentioned
+    /// yet (including ids beyond the sketch) are their own singleton.
+    pub fn community_of(&self, node: u32) -> u32 {
+        let i = node as usize;
+        if i >= self.state.n() {
+            return node;
+        }
+        let c = self.state.community[i];
+        if c == UNSEEN {
+            node
+        } else {
+            c
+        }
+    }
+
+    /// Full label vector (unseen nodes as singletons).
+    pub fn labels(&self) -> Vec<u32> {
+        self.state.labels()
+    }
+
+    /// Label vector padded to `n` entries: the sketch only grows to the
+    /// largest streamed id, so trailing never-seen nodes are filled in
+    /// as their own singletons (for scoring against ground truth of a
+    /// known node count).
+    pub fn labels_padded(&self, n: usize) -> Vec<u32> {
+        let mut labels = self.state.labels();
+        while labels.len() < n {
+            labels.push(labels.len() as u32);
+        }
+        labels
+    }
+
+    /// Number of non-empty communities.
+    pub fn community_count(&self) -> usize {
+        self.state.community_count()
+    }
+
+    /// The `k` largest communities by volume.
+    pub fn top_communities(&self, k: usize) -> Vec<CommunitySummary> {
+        self.state
+            .community_volumes()
+            .into_iter()
+            .take(k)
+            .map(|(id, volume, size)| CommunitySummary { id, volume, size })
+            .collect()
+    }
+
+    /// Sketch bytes held by this snapshot (16 bytes/node).
+    pub fn memory_bytes(&self) -> usize {
+        self.state.memory_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_snapshot_is_all_singletons() {
+        let s = Snapshot::empty();
+        assert_eq!(s.edges(), 0);
+        assert_eq!(s.community_of(0), 0);
+        assert_eq!(s.community_of(12345), 12345);
+        assert!(s.top_communities(4).is_empty());
+        assert_eq!(s.community_count(), 0);
+    }
+
+    #[test]
+    fn build_merges_disjoint_shards_and_replays_cross() {
+        let cfg = StrConfig::new(8);
+        // shard 0 owns nodes {0, 1}, shard 1 owns {5, 6}
+        let mut a = StreamingClusterer::new(0, cfg.clone());
+        a.process_edge(Edge::new(0, 1));
+        let mut b = StreamingClusterer::new(0, cfg.clone());
+        b.process_edge(Edge::new(5, 6));
+        let cross = vec![Edge::new(1, 5)];
+        let snap = Snapshot::build(&cfg, &[a.state.clone(), b.state.clone()], &cross);
+
+        assert_eq!(snap.local_edges, 2);
+        assert_eq!(snap.cross_edges, 1);
+        assert_eq!(snap.edges(), 3);
+        // stream-end invariant holds mid-stream
+        assert_eq!(snap.state().total_volume(), 2 * snap.edges());
+        // intra-shard joins survive the merge
+        assert_eq!(snap.community_of(0), snap.community_of(1));
+        assert_eq!(snap.community_of(5), snap.community_of(6));
+    }
+
+    #[test]
+    fn top_communities_sorted_by_volume() {
+        let cfg = StrConfig::new(64);
+        let mut a = StreamingClusterer::new(0, cfg.clone());
+        // triangle on {0,1,2} (volume 6) vs single edge {4,5} (volume 2)
+        for e in [Edge::new(0, 1), Edge::new(1, 2), Edge::new(0, 2), Edge::new(4, 5)] {
+            a.process_edge(e);
+        }
+        let snap = Snapshot::build(&cfg, &[a.state.clone()], &[]);
+        let top = snap.top_communities(10);
+        assert!(!top.is_empty());
+        for w in top.windows(2) {
+            assert!(w[0].volume >= w[1].volume, "{top:?}");
+        }
+        let total: u64 = top.iter().map(|c| c.volume).sum();
+        assert_eq!(total, 2 * snap.edges());
+    }
+}

@@ -20,22 +20,28 @@ pub struct Meter {
 /// A finished measurement.
 #[derive(Debug, Clone, Copy)]
 pub struct MeterReport {
+    /// Edges counted.
     pub edges: u64,
+    /// Bytes counted.
     pub bytes: u64,
+    /// Wall-clock measured.
     pub elapsed: Duration,
 }
 
 impl MeterReport {
+    /// Edge throughput over the measured interval.
     pub fn edges_per_sec(&self) -> f64 {
         self.edges as f64 / self.elapsed.as_secs_f64().max(1e-12)
     }
 
+    /// Byte throughput in MB/s.
     pub fn mbytes_per_sec(&self) -> f64 {
         self.bytes as f64 / 1e6 / self.elapsed.as_secs_f64().max(1e-12)
     }
 }
 
 impl Meter {
+    /// Start measuring now.
     pub fn start() -> Self {
         Self {
             start: Instant::now(),
@@ -53,11 +59,13 @@ impl Meter {
     }
 
     #[inline]
+    /// Record `k` more edges.
     pub fn add_edges(&mut self, k: u64) {
         self.edges += k;
     }
 
     #[inline]
+    /// Record `k` more bytes.
     pub fn add_bytes(&mut self, k: u64) {
         self.bytes += k;
     }
@@ -73,6 +81,7 @@ impl Meter {
         }
     }
 
+    /// Current counters against elapsed time.
     pub fn snapshot(&self) -> MeterReport {
         MeterReport {
             edges: self.edges,
@@ -81,6 +90,7 @@ impl Meter {
         }
     }
 
+    /// Consume the meter and return the final report.
     pub fn finish(self) -> MeterReport {
         self.snapshot()
     }

@@ -27,6 +27,7 @@ pub enum Route {
 }
 
 #[inline]
+/// Classify an edge: same-shard (`Local`) or leader-bound (`Cross`).
 pub fn route(edge: Edge, shards: usize) -> Route {
     let a = shard_of(edge.u, shards);
     let b = shard_of(edge.v, shards);

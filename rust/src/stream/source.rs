@@ -31,6 +31,7 @@ pub struct MemorySource<'a> {
 }
 
 impl<'a> MemorySource<'a> {
+    /// Stream over a borrowed edge slice.
     pub fn new(edges: &'a [Edge]) -> Self {
         Self { edges, pos: 0 }
     }
@@ -57,6 +58,7 @@ pub struct OwnedMemorySource {
 }
 
 impl OwnedMemorySource {
+    /// Stream over an owned edge vector.
     pub fn new(edges: Vec<Edge>) -> Self {
         Self { edges, pos: 0 }
     }
@@ -128,6 +130,7 @@ fn parse_edge_bytes(line: &[u8]) -> Option<(u64, u64)> {
 }
 
 impl TextFileSource {
+    /// Open a SNAP-style text edge file for streaming.
     pub fn open<P: AsRef<Path>>(path: P) -> std::io::Result<Self> {
         Ok(Self {
             reader: BufReader::with_capacity(1 << 20, File::open(path)?),
@@ -137,6 +140,7 @@ impl TextFileSource {
         })
     }
 
+    /// Bytes consumed from the file so far.
     pub fn bytes_read(&self) -> u64 {
         self.bytes_read
     }
@@ -217,6 +221,7 @@ pub struct BinaryFileSource {
 }
 
 impl BinaryFileSource {
+    /// Open a binary edge file (validates the header).
     pub fn open<P: AsRef<Path>>(path: P) -> std::io::Result<Self> {
         let mut reader = BufReader::with_capacity(1 << 20, File::open(path)?);
         let mut head = [0u8; 16];

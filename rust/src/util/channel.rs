@@ -42,6 +42,7 @@ impl<T> Clone for Channel<T> {
 pub struct SendError;
 
 impl<T> Channel<T> {
+    /// Create a channel holding at most `cap` items.
     pub fn bounded(cap: usize) -> Self {
         assert!(cap > 0, "channel capacity must be > 0");
         Self {
@@ -139,14 +140,17 @@ impl<T> Channel<T> {
         self.inner.not_full.notify_all();
     }
 
+    /// True once any handle has called `close`.
     pub fn is_closed(&self) -> bool {
         self.inner.queue.lock().unwrap().closed
     }
 
+    /// Items currently queued.
     pub fn len(&self) -> usize {
         self.inner.queue.lock().unwrap().buf.len()
     }
 
+    /// True when no items are queued.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -11,22 +11,29 @@ use std::fmt::Write as _;
 /// Declarative description of one option (for help text + validation).
 #[derive(Debug, Clone)]
 pub struct OptSpec {
+    /// Option name (without `--`).
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
+    /// Default value shown in help.
     pub default: Option<&'static str>,
+    /// True for boolean flags (no value).
     pub is_flag: bool,
 }
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// Subcommand (first non-option token).
     pub command: Option<String>,
+    /// Positional arguments.
     pub positional: Vec<String>,
     options: BTreeMap<String, String>,
     flags: Vec<String>,
 }
 
 #[derive(Debug)]
+/// Parse/validation error with a human-readable message.
 pub struct CliError(pub String);
 
 impl std::fmt::Display for CliError {
@@ -70,18 +77,22 @@ impl Args {
         Ok(out)
     }
 
+    /// True when `--name` was passed bare or as `--name=true`.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name) || self.options.get(name).map(|v| v == "true").unwrap_or(false)
     }
 
+    /// Raw value of `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Value of `--name`, or `default` when absent.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Parse `--name` into `T`; `Ok(None)` when absent.
     pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError> {
         match self.get(name) {
             None => Ok(None),
@@ -92,14 +103,17 @@ impl Args {
         }
     }
 
+    /// `--name` as `usize`, or `default` when absent.
     pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
         Ok(self.get_parse::<usize>(name)?.unwrap_or(default))
     }
 
+    /// `--name` as `u64`, or `default` when absent.
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
         Ok(self.get_parse::<u64>(name)?.unwrap_or(default))
     }
 
+    /// `--name` as `f64`, or `default` when absent.
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
         Ok(self.get_parse::<f64>(name)?.unwrap_or(default))
     }

@@ -17,6 +17,7 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
+    /// Spawn a pool of `threads` workers.
     pub fn new(threads: usize) -> Self {
         assert!(threads > 0);
         let (tx, rx) = mpsc::channel::<Job>();
@@ -41,6 +42,7 @@ impl ThreadPool {
         thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
     }
 
+    /// Run `f` on an idle worker (FIFO dispatch).
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.tx
             .as_ref()

@@ -21,8 +21,11 @@ pub type CaseResult = Result<(), String>;
 /// Configuration for a property run.
 #[derive(Debug, Clone)]
 pub struct Config {
+    /// Number of random cases.
     pub cases: usize,
+    /// Largest size parameter generated.
     pub max_size: usize,
+    /// Meta-seed for case generation.
     pub seed: u64,
 }
 

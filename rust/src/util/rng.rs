@@ -16,11 +16,13 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Start the sequence at `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
     #[inline]
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;
@@ -46,6 +48,7 @@ impl Xoshiro256 {
     }
 
     #[inline]
+    /// Next raw 64-bit output (xoshiro256**).
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
         let t = self.s[1] << 17;

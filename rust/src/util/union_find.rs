@@ -13,6 +13,7 @@ pub struct UnionFind {
 }
 
 impl UnionFind {
+    /// Disjoint-set over `n` singleton elements.
     pub fn new(n: usize) -> Self {
         Self {
             parent: (0..n as u32).collect(),
@@ -21,10 +22,12 @@ impl UnionFind {
         }
     }
 
+    /// Number of elements.
     pub fn len(&self) -> usize {
         self.parent.len()
     }
 
+    /// True when the structure holds no elements.
     pub fn is_empty(&self) -> bool {
         self.parent.is_empty()
     }
@@ -65,6 +68,7 @@ impl UnionFind {
         self.size[r] as usize
     }
 
+    /// True when `a` and `b` are in the same set.
     pub fn same_set(&mut self, a: usize, b: usize) -> bool {
         self.find(a) == self.find(b)
     }

@@ -26,6 +26,31 @@ fn run(args: &[&str]) -> (String, String, bool) {
     )
 }
 
+fn run_with_stdin(args: &[&str], input: &str) -> (String, String, bool) {
+    use std::io::Write;
+    use std::process::Stdio;
+    let mut child = Command::new(exe())
+        .args(args)
+        .current_dir(std::env::temp_dir())
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn streamcom");
+    child
+        .stdin
+        .take()
+        .expect("child stdin")
+        .write_all(input.as_bytes())
+        .expect("write stdin");
+    let out = child.wait_with_output().expect("wait streamcom");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
 #[test]
 fn help_lists_commands() {
     let (stdout, _, ok) = run(&["help"]);
@@ -105,6 +130,35 @@ fn sweep_prints_ladder_and_winner() {
     assert!(stdout.contains("v_max"));
     assert!(stdout.contains("*"), "winner marker missing:\n{stdout}");
     assert!(stdout.contains("F1="));
+}
+
+#[test]
+fn serve_answers_queries_and_scores_final_partition() {
+    // SBM edge stream through the sharded service; queries piped on
+    // stdin are answered against the evolving snapshot, and closing
+    // stdin lets the ingest finish and print the scored partition
+    let (stdout, stderr, ok) = run_with_stdin(
+        &["serve", "--sbm", "6x40", "--shards", "2", "--vmax", "64", "--drain-every", "500"],
+        "? 0\n? notanode\ntop 3\nstats\n",
+    );
+    assert!(ok, "serve failed: {stderr}");
+    assert!(stdout.contains("node 0 → community"), "{stdout}");
+    assert!(stdout.contains("! bad node id"), "typo must not kill serve: {stdout}");
+    assert!(stdout.contains("shards=2"), "{stdout}");
+    assert!(stdout.contains("final:"), "{stdout}");
+    assert!(stdout.contains("F1="), "final score missing: {stdout}");
+}
+
+#[test]
+fn serve_dynamic_mode_still_speaks_event_protocol() {
+    let (stdout, _, ok) = run_with_stdin(
+        &["serve", "--dynamic", "--vmax", "8"],
+        "+ 0 1\n+ 1 2\n?\n- 0 1\n?\nq\n",
+    );
+    assert!(ok);
+    assert!(stdout.contains("live_edges=2"), "{stdout}");
+    assert!(stdout.contains("live_edges=1"), "{stdout}");
+    assert!(stdout.contains("bye:"), "{stdout}");
 }
 
 #[test]

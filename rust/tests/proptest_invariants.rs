@@ -176,6 +176,98 @@ fn threshold_rejection_monotone_in_vmax() {
 }
 
 #[test]
+fn shard_of_distributes_uniformly() {
+    // the service's scaling story rests on balanced shards: for any
+    // shard count, hashing a dense id range must land within ±30% of
+    // the uniform share on every shard
+    use streamcom::stream::shard::shard_of;
+    property("shard uniformity", 25, |rng, size| {
+        let shards = 2 + rng.next_below(14) as usize;
+        let n = 4_000 + size * 50;
+        let mut counts = vec![0usize; shards];
+        for node in 0..n {
+            counts[shard_of(node as u32, shards)] += 1;
+        }
+        let expect = n as f64 / shards as f64;
+        for (s, &c) in counts.iter().enumerate() {
+            if (c as f64) < expect * 0.7 || (c as f64) > expect * 1.3 {
+                return Err(format!(
+                    "shard {s}/{shards}: {c} nodes vs uniform {expect:.0} (n={n})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn route_is_consistent_with_shard_of() {
+    use streamcom::stream::shard::{route, shard_of, Route};
+    property("route/shard_of consistency", 40, |rng, size| {
+        let shards = 1 + rng.next_below(16) as usize;
+        let (_, edges) = random_stream(rng, size);
+        for e in edges {
+            match route(e, shards) {
+                Route::Local(s) => {
+                    if shard_of(e.u, shards) != s || shard_of(e.v, shards) != s {
+                        return Err(format!("{e:?} routed Local({s}) across shards"));
+                    }
+                }
+                Route::Cross => {
+                    if shard_of(e.u, shards) == shard_of(e.v, shards) {
+                        return Err(format!("{e:?} routed Cross within one shard"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn service_snapshot_conserves_volume_for_any_stream() {
+    use streamcom::service::{ClusterService, ServiceConfig};
+    property("service snapshot conservation", 15, |rng, size| {
+        let (_, edges) = random_stream(rng, size);
+        let shards = 1 + rng.next_below(6) as usize;
+        let v_max = 1 + rng.next_below(500);
+        let mut cfg = ServiceConfig::new(shards, v_max);
+        cfg.chunk_size = 1 + rng.next_below(64) as usize;
+        let mut svc = ClusterService::start(cfg);
+
+        // snapshot halfway through, then at the end; both must satisfy
+        // the stream-end invariant Σ v_k = 2t
+        let half = edges.len() / 2;
+        svc.push_chunk(&edges[..half]);
+        let snap = svc.quiesce();
+        if snap.state().total_volume() != 2 * snap.edges() {
+            return Err(format!(
+                "mid-stream: Σv = {} ≠ 2·{}",
+                snap.state().total_volume(),
+                snap.edges()
+            ));
+        }
+        svc.push_chunk(&edges[half..]);
+        let res = svc.finish();
+        if res.state().total_volume() != 2 * res.snapshot.edges() {
+            return Err(format!(
+                "final: Σv = {} ≠ 2·{}",
+                res.state().total_volume(),
+                res.snapshot.edges()
+            ));
+        }
+        if res.edges_ingested != edges.len() as u64 {
+            return Err(format!(
+                "ingested {} of {} edges",
+                res.edges_ingested,
+                edges.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn memory_is_exactly_sixteen_bytes_per_node() {
     property("sketch memory bound", 20, |rng, size| {
         let (n, edges) = random_stream(rng, size);

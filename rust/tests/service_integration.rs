@@ -1,0 +1,142 @@
+//! Service semantics end-to-end: snapshot-during-ingest validity,
+//! backpressure (block, never drop), and detection-quality parity with
+//! the batch parallel coordinator on the Table 2 parity workload —
+//! same workload shape and tolerances as `parallel_parity.rs`.
+
+use streamcom::coordinator::algorithm::cluster_edges;
+use streamcom::coordinator::parallel::{run_parallel, ParallelConfig};
+use streamcom::graph::generators::sbm::{self, SbmConfig};
+use streamcom::metrics::{f1::average_f1_labels, nmi::nmi_labels};
+use streamcom::service::{ClusterService, ServiceConfig};
+
+#[test]
+fn service_parity_with_sequential_on_table2_workload() {
+    // the parallel_parity.rs workload and tolerances, served online
+    for (shards, seed) in [(2usize, 101u64), (4, 102), (8, 103)] {
+        let g = sbm::generate(&SbmConfig::equal(12, 60, 0.3, 0.002, seed));
+        let truth = g.truth.to_labels(g.n());
+        let v_max = 128;
+
+        let seq = cluster_edges(g.n(), &g.edges.edges, v_max);
+
+        let mut svc = ClusterService::start(ServiceConfig::new(shards, v_max));
+        svc.push_chunk(&g.edges.edges);
+        let res = svc.finish();
+        let svc_labels = res.snapshot.labels_padded(g.n());
+
+        let (nmi_s, nmi_v) = (nmi_labels(&seq, &truth), nmi_labels(&svc_labels, &truth));
+        let (f1_s, f1_v) = (
+            average_f1_labels(&seq, &truth),
+            average_f1_labels(&svc_labels, &truth),
+        );
+        assert!(
+            nmi_v >= nmi_s - 0.15,
+            "shards={shards}: NMI {nmi_v:.3} vs sequential {nmi_s:.3}"
+        );
+        assert!(
+            f1_v >= f1_s * 0.7,
+            "shards={shards}: F1 {f1_v:.3} vs sequential {f1_s:.3}"
+        );
+        // every edge processed exactly once
+        assert_eq!(res.snapshot.local_edges + res.snapshot.cross_edges, g.m() as u64);
+        assert_eq!(res.snapshot.edges(), g.m() as u64);
+    }
+}
+
+#[test]
+fn service_final_partition_equals_batch_coordinator() {
+    let g = sbm::generate(&SbmConfig::equal(12, 60, 0.3, 0.002, 104));
+    let v_max = 128;
+    let shards = 4;
+
+    let par = run_parallel(g.n(), &g.edges.edges, &ParallelConfig::new(shards, v_max));
+    let par_labels = par.labels();
+
+    let mut svc = ClusterService::start(ServiceConfig::new(shards, v_max));
+    svc.push_chunk(&g.edges.edges);
+    let svc_labels = svc.finish().snapshot.labels_padded(g.n());
+
+    assert_eq!(
+        svc_labels, par_labels,
+        "online service must replay to the batch coordinator's partition"
+    );
+}
+
+#[test]
+fn snapshots_answer_queries_mid_stream() {
+    let g = sbm::generate(&SbmConfig::equal(10, 50, 0.35, 0.003, 42));
+    let mut cfg = ServiceConfig::new(4, 128);
+    cfg.chunk_size = 256;
+    let mut svc = ClusterService::start(cfg);
+    let handle = svc.handle();
+
+    let quarter = g.m() / 4;
+    let mut last_edges = 0u64;
+    for q in 0..4 {
+        let lo = q * quarter;
+        let hi = if q == 3 { g.m() } else { (q + 1) * quarter };
+        svc.push_chunk(&g.edges.edges[lo..hi]);
+        let snap = svc.quiesce();
+
+        // each snapshot covers exactly the pushed prefix...
+        assert_eq!(snap.edges(), hi as u64, "quarter {q}");
+        // ...is a valid partition (stream-end invariants mid-stream)...
+        assert_eq!(snap.state().total_volume(), 2 * snap.edges(), "quarter {q}");
+        let n = snap.state().n();
+        assert!(snap.labels().iter().all(|&l| (l as usize) < n), "quarter {q}");
+        // ...and is monotonically fresher through the shared handle
+        let seen = handle.snapshot().edges();
+        assert!(seen >= last_edges, "quarter {q}: snapshot went backwards");
+        last_edges = seen;
+
+        // point lookups agree with the snapshot's own labels
+        let labels = snap.labels();
+        for probe in [0usize, n / 2, n.saturating_sub(1)] {
+            assert_eq!(snap.community_of(probe as u32), labels[probe], "quarter {q}");
+        }
+    }
+
+    let res = svc.finish();
+    assert_eq!(res.snapshot.edges(), g.m() as u64);
+}
+
+#[test]
+fn tiny_mailboxes_backpressure_without_losing_edges() {
+    // depth-1 mailboxes and tiny chunks force constant blocking on the
+    // push path; the stream must still be processed exactly once
+    let g = sbm::generate(&SbmConfig::equal(8, 40, 0.3, 0.01, 7));
+    let mut cfg = ServiceConfig::new(4, 64);
+    cfg.mailbox_depth = 1;
+    cfg.chunk_size = 16;
+    let mut svc = ClusterService::start(cfg);
+    let handle = svc.handle();
+    svc.push_chunk(&g.edges.edges);
+    let stats = handle.stats();
+    let res = svc.finish();
+
+    assert_eq!(res.edges_ingested, g.m() as u64);
+    assert_eq!(res.snapshot.edges(), g.m() as u64);
+    assert_eq!(res.state().total_volume(), 2 * g.m() as u64);
+    // the bounded mailbox never exceeded its depth
+    for &peak in &stats.queue_peaks {
+        assert!(peak <= 1, "peaks={:?}", stats.queue_peaks);
+    }
+}
+
+#[test]
+fn stats_endpoint_tracks_ingest() {
+    let g = sbm::generate(&SbmConfig::equal(6, 30, 0.4, 0.01, 3));
+    let mut svc = ClusterService::start(ServiceConfig::new(2, 64));
+    let handle = svc.handle();
+    svc.push_chunk(&g.edges.edges);
+    svc.quiesce();
+
+    let s = handle.stats();
+    assert_eq!(s.edges_ingested, g.m() as u64);
+    assert_eq!(s.snapshot_edges, g.m() as u64);
+    assert_eq!(s.queue_depths.len(), 2);
+    assert_eq!(s.queue_peaks.len(), 2);
+    assert!(s.edges_per_sec > 0.0);
+    assert!(s.memory_bytes >= 16 * s.nodes, "sketch below 16 B/node");
+    svc.finish();
+}
