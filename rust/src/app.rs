@@ -383,11 +383,17 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                 let s = queries.stats();
                 println!(
                     "shards={} ingested={} ({:.2} Medges/s) snapshot_lag={} \
-                     cross_pending={} queues={:?} peaks={:?} sketch={} B ({:.1} B/node)",
+                     drains={} replay_last={} replay_total={} \
+                     cross drained/pending={}/{} queues={:?} peaks={:?} \
+                     sketch={} B ({:.1} B/node)",
                     s.shards,
                     s.edges_ingested,
                     s.edges_per_sec / 1e6,
                     s.edges_ingested.saturating_sub(s.snapshot_edges),
+                    s.drains,
+                    s.cross_replayed_last_drain,
+                    s.cross_replayed_total,
+                    s.cross_drained,
                     s.cross_pending,
                     s.queue_depths,
                     s.queue_peaks,

@@ -123,9 +123,28 @@ pub struct StreamingClusterer {
 impl StreamingClusterer {
     /// Fresh sketch over `n` pre-sized nodes (grows on demand).
     pub fn new(n: usize, config: StrConfig) -> Self {
-        let sizes = if config.size_condition { vec![0; n] } else { Vec::new() };
+        Self::with_state(StreamState::new(n), config)
+    }
+
+    /// Resume the decision rule on an existing sketch — the leader's
+    /// entry point: merge shard states (or restore a persisted sketch),
+    /// then keep streaming through it. Under `size_condition` the
+    /// community sizes are rebuilt from membership in one pass; decision
+    /// counters start fresh.
+    pub fn with_state(state: StreamState, config: StrConfig) -> Self {
+        let sizes = if config.size_condition {
+            let mut sizes = vec![0u32; state.n()];
+            for &c in &state.community {
+                if c != super::state::UNSEEN {
+                    sizes[c as usize] += 1;
+                }
+            }
+            sizes
+        } else {
+            Vec::new()
+        };
         let rng = Xoshiro256::new(config.seed);
-        Self { state: StreamState::new(n), config, stats: StrStats::default(), sizes, rng }
+        Self { state, config, stats: StrStats::default(), sizes, rng }
     }
 
     /// Process a single edge (the paper's loop body).
@@ -351,6 +370,22 @@ mod tests {
         let mut c = StreamingClusterer::new(2, cfg);
         c.process_edge(Edge::new(0, 1));
         assert_eq!(c.state.community, vec![1, 1]);
+    }
+
+    #[test]
+    fn with_state_resumes_exactly_where_the_sketch_left_off() {
+        let mut a = StreamingClusterer::new(2, StrConfig::new(8));
+        a.process_edge(Edge::new(0, 1));
+        let mut resumed = StreamingClusterer::with_state(a.state.clone(), StrConfig::new(8));
+        resumed.process_edge(Edge::new(1, 2));
+
+        let mut oneshot = StreamingClusterer::new(3, StrConfig::new(8));
+        oneshot.process_edge(Edge::new(0, 1));
+        oneshot.process_edge(Edge::new(1, 2));
+
+        assert_eq!(resumed.state.community, oneshot.state.community);
+        assert_eq!(resumed.state.volume, oneshot.state.volume);
+        assert_eq!(resumed.state.edges_processed, oneshot.state.edges_processed);
     }
 
     #[test]

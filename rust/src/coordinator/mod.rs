@@ -8,8 +8,9 @@
 //!   `v_max` values sharing the degree table.
 //! * [`selection`] — sketch-only scoring of sweep results (entropy /
 //!   density, computed either natively or via the PJRT artifacts).
-//! * [`parallel`] — sharded leader/worker execution over the stream
-//!   substrate.
+//! * [`parallel`] — sharded batch execution: the batch preset of the
+//!   clustering service (one routing core, see `service::router`),
+//!   plus the shared-atomic-sketch concurrent mode.
 //! * [`dynamic`] — the §5 future-work extension: edge deletions.
 
 pub mod algorithm;

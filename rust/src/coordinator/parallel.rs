@@ -1,4 +1,4 @@
-//! Sharded leader/worker streaming execution.
+//! Sharded batch execution — a preset over the service's routing core.
 //!
 //! The single-pass algorithm is sequential by nature (each decision
 //! reads state written by earlier edges), but its state is *node-local*:
@@ -7,13 +7,21 @@
 //! (`stream::shard`):
 //!
 //! * **Workers** — edges whose endpoints hash to the same shard are
-//!   processed by that shard's worker on its own [`StreamingClusterer`].
+//!   processed by that shard's worker on its own `StreamingClusterer`.
 //!   Workers never share nodes, so their community id spaces are
 //!   disjoint by construction (community ids are node ids).
-//! * **Leader** — cross-shard edges are buffered to the leader queue.
-//!   After the workers drain, their states are merged (disjoint array
-//!   union) and the leader replays the cross edges through the merged
-//!   state with the standard rule.
+//! * **Leader** — cross-shard edges are buffered. At the end of the
+//!   stream the worker states are merged (disjoint array union) and
+//!   the cross edges are replayed through the merged state with the
+//!   standard rule.
+//!
+//! This module used to carry its own dispatcher implementing that
+//! pipeline; it was a line-for-line twin of the service's router and
+//! has been deleted. [`run_parallel`] is now the **batch preset of
+//! [`ClusterService`]** ([`ServiceConfig::batch`]): the same routing
+//! core (`service::router`), the same workers, the same terminal
+//! replay — one code path for every execution mode, which is what
+//! makes "service ≡ batch" true by construction rather than by test.
 //!
 //! This is *deferred cross-edge resolution*: intra-shard edges see
 //! exactly the sequential algorithm; cross-shard edges are processed
@@ -24,11 +32,12 @@
 //! detection quality matches the sequential run on SBM workloads.
 
 use crate::graph::edge::Edge;
-use crate::stream::shard::{route, Route};
-use crate::util::channel::Channel;
+use crate::service::{ClusterService, ServiceConfig};
 
-use super::algorithm::{StrConfig, StreamingClusterer};
+use super::algorithm::StrConfig;
 use super::state::{StreamState, UNSEEN};
+
+pub use crate::service::router::merge_disjoint_states;
 
 /// Configuration for the parallel run.
 ///
@@ -71,7 +80,8 @@ impl ParallelConfig {
 pub struct ParallelResult {
     /// Final merged sketch.
     pub state: StreamState,
-    /// Intra-shard edges processed by workers.
+    /// Intra-shard edges processed by workers (self-loops excluded —
+    /// the decision rule skips them).
     pub local_edges: u64,
     /// Cross-shard edges replayed by the leader.
     pub cross_edges: u64,
@@ -84,128 +94,32 @@ impl ParallelResult {
     }
 }
 
-/// Merge shard-disjoint worker states into one sketch (disjoint array
-/// union).
-///
-/// Hash-sharding guarantees no two workers ever touch the same node, so
-/// degrees and communities copy over and volumes add. The result is
-/// sized to `max(n, largest worker state)` — workers that grew on
-/// demand beyond the pre-sized `n` (the service starts them at 0) are
-/// handled transparently. Shared by the batch leader ([`run_parallel`])
-/// and the long-lived service's copy-on-read snapshots
-/// ([`crate::service::Snapshot`]).
-///
-/// Debug builds assert the disjointness invariant; a violation means
-/// the caller routed one node's edges to two different workers.
-pub fn merge_disjoint_states(n: usize, states: &[StreamState]) -> StreamState {
-    let n = states.iter().map(|st| st.n()).fold(n, usize::max);
-    let mut merged = StreamState::new(n);
-    for st in states {
-        for i in 0..st.n() {
-            if st.degree[i] > 0 || st.community[i] != UNSEEN {
-                debug_assert_eq!(merged.degree[i], 0, "shard overlap at node {i}");
-                merged.degree[i] = st.degree[i];
-                merged.community[i] = st.community[i];
-            }
-            if st.volume[i] > 0 {
-                merged.volume[i] += st.volume[i];
-            }
-        }
-        merged.edges_processed += st.edges_processed;
-    }
-    merged
-}
-
-/// Run the parallel coordinator over an in-memory stream.
-///
-/// The dispatcher thread shards the stream; `shards` workers consume
-/// their queues concurrently; the leader replays cross edges after the
-/// workers finish.
+/// Run the batch coordinator over an in-memory stream: the service in
+/// its batch preset. Edges are routed through the shared core
+/// (`service::router`), `shards` workers consume their mailboxes
+/// concurrently, and `finish` merges the worker sketches and replays
+/// the cross edges in arrival order.
 pub fn run_parallel(n: usize, edges: &[Edge], config: &ParallelConfig) -> ParallelResult {
-    let shards = config.shards.max(1);
-    if shards == 1 {
-        let mut c = StreamingClusterer::new(n, config.str_config.clone());
-        c.process_chunk(edges);
-        return ParallelResult {
-            state: c.state,
-            local_edges: c.stats.edges,
-            cross_edges: 0,
-        };
+    let mut cfg = ServiceConfig::batch(config.shards.max(1), config.str_config.v_max);
+    cfg.str_config = config.str_config.clone();
+    cfg.mailbox_depth = config.queue_depth.max(1);
+    cfg.chunk_size = config.chunk_size.max(1);
+
+    let mut service = ClusterService::start(cfg);
+    service.push_chunk(edges);
+    let result = service.finish();
+
+    // the service sizes its sketch to the max streamed id; batch callers
+    // pass an explicit n — pad so labels() covers [0, n) like the
+    // pre-sized sequential run does
+    let mut state = result.state().clone();
+    if n > 0 {
+        state.ensure((n - 1) as u32);
     }
-
-    let queues: Vec<Channel<Vec<Edge>>> =
-        (0..shards).map(|_| Channel::bounded(config.queue_depth)).collect();
-    let leader_queue: Channel<Vec<Edge>> = Channel::bounded(usize::MAX / 2);
-
-    let (states, local_edges, cross_edges) = std::thread::scope(|s| {
-        // workers
-        let handles: Vec<_> = (0..shards)
-            .map(|w| {
-                let q = queues[w].clone();
-                let cfg = config.str_config.clone();
-                s.spawn(move || {
-                    let mut c = StreamingClusterer::new(n, cfg);
-                    while let Some(chunk) = q.recv() {
-                        c.process_chunk(&chunk);
-                    }
-                    c.state
-                })
-            })
-            .collect();
-
-        // dispatcher (this thread)
-        let mut per_shard: Vec<Vec<Edge>> = (0..shards).map(|_| Vec::new()).collect();
-        let mut nlocal = 0u64;
-        let mut ncross = 0u64;
-        let mut cross_buf: Vec<Edge> = Vec::new();
-        for &e in edges {
-            match route(e, shards) {
-                Route::Local(w) => {
-                    nlocal += 1;
-                    per_shard[w].push(e);
-                    if per_shard[w].len() >= config.chunk_size {
-                        let batch = std::mem::take(&mut per_shard[w]);
-                        let _ = queues[w].send(batch);
-                    }
-                }
-                Route::Cross => {
-                    ncross += 1;
-                    cross_buf.push(e);
-                    if cross_buf.len() >= config.chunk_size {
-                        let batch = std::mem::take(&mut cross_buf);
-                        let _ = leader_queue.send(batch);
-                    }
-                }
-            }
-        }
-        for (w, batch) in per_shard.into_iter().enumerate() {
-            if !batch.is_empty() {
-                let _ = queues[w].send(batch);
-            }
-            queues[w].close();
-        }
-        if !cross_buf.is_empty() {
-            let _ = leader_queue.send(cross_buf);
-        }
-        leader_queue.close();
-
-        let states: Vec<StreamState> =
-            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect();
-        (states, nlocal, ncross)
-    });
-
-    // leader: merge and replay cross edges
-    let merged = merge_disjoint_states(n, &states);
-    let mut leader = StreamingClusterer::new(0, config.str_config.clone());
-    leader.state = merged;
-    while let Some(chunk) = leader_queue.recv() {
-        leader.process_chunk(&chunk);
-    }
-
     ParallelResult {
-        state: leader.state,
-        local_edges,
-        cross_edges,
+        state,
+        local_edges: result.snapshot.local_edges,
+        cross_edges: result.snapshot.cross_edges,
     }
 }
 
@@ -426,10 +340,20 @@ mod tests {
 
     #[test]
     fn workers_touch_disjoint_nodes() {
-        // merge_states debug-asserts disjointness; run a real workload
-        // under it
+        // merge_disjoint_states debug-asserts disjointness; run a real
+        // workload under it
         let g = sbm::generate(&SbmConfig::equal(5, 40, 0.3, 0.02, 17));
         let par = run_parallel(g.n(), &g.edges.edges, &ParallelConfig::new(3, 64));
         assert!(par.state.n() >= g.n());
+    }
+
+    #[test]
+    fn batch_preset_result_is_padded_to_n() {
+        // callers score labels against ground truth of a known node
+        // count; the wrapper must deliver the pre-sized-run shape
+        let edges = vec![Edge::new(0, 1), Edge::new(1, 2)];
+        let par = run_parallel(10, &edges, &ParallelConfig::new(2, 8));
+        assert_eq!(par.labels().len(), 10);
+        assert_eq!(par.labels()[9], 9, "trailing unseen node is a singleton");
     }
 }

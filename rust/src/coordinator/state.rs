@@ -84,6 +84,26 @@ impl StreamState {
         self.volume.iter().sum()
     }
 
+    /// Recompute every community volume from membership:
+    /// `v_k = Σ_{i : c_i = k} d_i`.
+    ///
+    /// This equality is an invariant of the decision rule (each degree
+    /// increment is paired with a volume increment on the node's current
+    /// community, and a join moves exactly the joining node's degree),
+    /// and it survives disjoint merges. The service's incremental drain
+    /// relies on it: after folding fresh shard degrees and the frozen
+    /// cross-edge decisions into one sketch, the volumes are *derived*
+    /// in one O(n) pass instead of being replayed edge by edge.
+    pub fn recompute_volumes(&mut self) {
+        self.volume.iter_mut().for_each(|v| *v = 0);
+        for i in 0..self.community.len() {
+            let c = self.community[i];
+            if c != UNSEEN {
+                self.volume[c as usize] += self.degree[i] as u64;
+            }
+        }
+    }
+
     /// Number of non-empty communities.
     pub fn community_count(&self) -> usize {
         let mut seen = vec![false; self.n()];
@@ -150,6 +170,17 @@ mod tests {
         st.touch(0);
         st.community[0] = 2;
         assert_eq!(st.labels(), vec![2, 1, 2]);
+    }
+
+    #[test]
+    fn recompute_volumes_matches_membership_sums() {
+        let mut st = StreamState::new(5);
+        st.degree = vec![3, 1, 2, 0, 4];
+        st.community = vec![0, 0, 2, UNSEEN, 2];
+        st.volume = vec![99, 99, 99, 99, 99]; // garbage in
+        st.recompute_volumes();
+        assert_eq!(st.volume, vec![4, 0, 6, 0, 0]);
+        assert_eq!(st.total_volume(), 10);
     }
 
     #[test]

@@ -50,6 +50,16 @@ impl ServiceConfig {
             drain_every: 262_144,
         }
     }
+
+    /// Batch preset: automatic drains disabled, so the terminal replay
+    /// in `ClusterService::finish` is the only merge — exactly the
+    /// one-shot semantics of `coordinator::parallel::run_parallel`,
+    /// which is implemented as this preset over the service.
+    pub fn batch(shards: usize, v_max: u64) -> Self {
+        let mut cfg = Self::new(shards, v_max);
+        cfg.drain_every = 0; // 0 = disabled (normalised at start-up)
+        cfg
+    }
 }
 
 impl Default for ServiceConfig {
@@ -74,5 +84,13 @@ mod tests {
     #[test]
     fn zero_shards_clamped() {
         assert_eq!(ServiceConfig::new(0, 8).shards, 1);
+    }
+
+    #[test]
+    fn batch_preset_disables_automatic_drains() {
+        let cfg = ServiceConfig::batch(4, 64);
+        assert_eq!(cfg.drain_every, 0);
+        assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.str_config.v_max, 64);
     }
 }

@@ -1,12 +1,12 @@
-//! The service core: shard workers, bounded mailboxes, and the router.
+//! The service core: shard workers, bounded mailboxes, and the drains.
 //!
 //! Mirrors the sneldb-style shard-worker design on top of the existing
 //! stream substrate:
 //!
-//! * **Router** (the [`ClusterService`] handle itself) — classifies each
-//!   pushed edge with `stream::shard::route`; intra-shard edges batch
-//!   into per-shard chunks, cross-shard edges append to the deferred
-//!   buffer.
+//! * **Router** — `super::router::Router`, the single routing core
+//!   (also the batch path's core via `coordinator::parallel`):
+//!   intra-shard edges batch into per-shard chunks, cross-shard edges
+//!   append to the retained deferred buffer.
 //! * **Shard worker** — long-lived thread owning one
 //!   [`StreamingClusterer`] behind a mutex; drains its bounded mailbox
 //!   chunk by chunk. Workers never share nodes (hash-sharding), so they
@@ -16,11 +16,18 @@
 //!   hot shard falls behind, `push` **blocks** on that mailbox until the
 //!   worker catches up. Edges are never dropped, and cold shards are
 //!   unaffected.
-//! * **Drains** — every `drain_every` pushed edges the router rebuilds
-//!   the copy-on-read [`Snapshot`] (merge + cross replay), which is what
-//!   makes `community_of` answerable mid-stream.
+//! * **Drains** — every `drain_every` pushed edges the persistent
+//!   `LeaderState` folds its frozen history over a fresh shard merge
+//!   and replays **only the cross edges that arrived since the previous
+//!   drain** — `O(n + new cross)` per drain, each cross edge replayed
+//!   exactly once by the snapshot path.
+//! * **Terminal replay** — [`ClusterService::finish`] merges the final
+//!   shard sketches and replays the *full* retained cross buffer in
+//!   arrival order (a fresh leader). That is the batch leader's pass,
+//!   which is why the final partition is bit-identical to
+//!   `run_parallel` and independent of the drain cadence.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -29,13 +36,13 @@ use crate::coordinator::algorithm::StreamingClusterer;
 use crate::coordinator::state::StreamState;
 use crate::graph::edge::Edge;
 use crate::stream::meter::Meter;
-use crate::stream::shard::{route, Route};
 use crate::stream::source::EdgeSource;
 use crate::util::channel::Channel;
 
 use super::config::ServiceConfig;
 use super::query::QueryHandle;
-use super::snapshot::Snapshot;
+use super::router::Router;
+use super::snapshot::{LeaderState, Snapshot};
 
 /// State shared between the router, the shard workers, and every
 /// [`QueryHandle`].
@@ -43,7 +50,11 @@ pub(crate) struct Shared {
     pub(crate) config: ServiceConfig,
     pub(crate) mailboxes: Vec<Channel<Vec<Edge>>>,
     pub(crate) states: Vec<Mutex<StreamingClusterer>>,
+    /// Retained cross-shard edges in arrival order (append-only until
+    /// shutdown; the leader's cursor marks the drained prefix).
     pub(crate) cross: Mutex<Vec<Edge>>,
+    /// The persistent incremental-drain leader.
+    pub(crate) leader: Mutex<LeaderState>,
     /// Edges accepted by `push` (including cross and self-loops).
     pub(crate) ingested: AtomicU64,
     /// Cross-shard edges buffered for deferred replay.
@@ -52,31 +63,66 @@ pub(crate) struct Shared {
     pub(crate) dispatched: AtomicU64,
     /// Local edges the workers have finished processing.
     pub(crate) processed: AtomicU64,
+    /// Snapshot drains performed so far.
+    pub(crate) drains: AtomicU64,
+    /// Cross edges replayed by the most recent drain.
+    pub(crate) replayed_last: AtomicU64,
+    /// Σ cross edges replayed across all snapshot drains (stays equal
+    /// to the drained cursor: each cross edge is replayed exactly once).
+    pub(crate) replayed_total: AtomicU64,
+    /// Cross edges integrated into the published snapshot.
+    pub(crate) cross_drained: AtomicU64,
+    /// Set by `finish`: the published snapshot is the terminal replay
+    /// and must never be overwritten by a late mid-stream drain.
+    pub(crate) finished: AtomicBool,
     /// Latest copy-on-read snapshot (swap-on-drain).
     pub(crate) snapshot: RwLock<Arc<Snapshot>>,
     /// Ingest throughput meter (fed at chunk granularity).
     pub(crate) meter: Mutex<Meter>,
 }
 
-/// Rebuild the copy-on-read snapshot from the current shard states and
-/// cross buffer, publish it, and return it.
+/// Publish a snapshot into the shared slot. Mid-stream drains respect
+/// both monotonicity (concurrent rebuilds may finish out of order —
+/// never let the published snapshot go backwards in time) and the
+/// `finished` flag (never clobber the terminal replay); the terminal
+/// replay itself writes unconditionally.
+pub(crate) fn publish_snapshot(shared: &Shared, snap: &Arc<Snapshot>, is_final: bool) {
+    let mut slot = shared.snapshot.write().unwrap();
+    if is_final
+        || (!shared.finished.load(Ordering::SeqCst) && snap.edges() >= slot.edges())
+    {
+        *slot = Arc::clone(snap);
+    }
+}
+
+/// Incremental snapshot drain: under the leader lock, clone the shard
+/// sketches, slice the cross buffer at the drained cursor, and let the
+/// persistent `LeaderState` replay only the new suffix. Publishes and
+/// returns the resulting snapshot. After `finish` this is a no-op that
+/// returns the terminal snapshot.
 pub(crate) fn rebuild_snapshot(shared: &Shared) -> Arc<Snapshot> {
+    if shared.finished.load(Ordering::SeqCst) {
+        return Arc::clone(&shared.snapshot.read().unwrap());
+    }
+    let mut leader = shared.leader.lock().unwrap();
     let states: Vec<StreamState> = shared
         .states
         .iter()
         .map(|m| m.lock().unwrap().state.clone())
         .collect();
-    let cross = shared.cross.lock().unwrap().clone();
-    let snap = Arc::new(Snapshot::build(&shared.config.str_config, &states, &cross));
-    // concurrent rebuilds (router drain vs. QueryHandle::refresh) may
-    // finish out of order; never let the published snapshot go
-    // backwards in time
-    {
-        let mut slot = shared.snapshot.write().unwrap();
-        if snap.edges() >= slot.edges() {
-            *slot = Arc::clone(&snap);
-        }
-    }
+    let new_cross: Vec<Edge> = {
+        let buf = shared.cross.lock().unwrap();
+        buf[leader.drained()..].to_vec()
+    };
+    let snap = Arc::new(leader.drain(&shared.config.str_config, &states, &new_cross));
+    shared.drains.fetch_add(1, Ordering::Relaxed);
+    shared.replayed_last.store(new_cross.len() as u64, Ordering::Relaxed);
+    shared
+        .replayed_total
+        .fetch_add(new_cross.len() as u64, Ordering::Relaxed);
+    shared.cross_drained.store(leader.drained_m(), Ordering::Relaxed);
+    drop(leader);
+    publish_snapshot(shared, &snap, false);
     snap
 }
 
@@ -104,9 +150,10 @@ fn worker_loop(shared: &Shared, w: usize) {
 /// Final outcome of a service run (after [`ClusterService::finish`]).
 #[derive(Debug)]
 pub struct ServiceResult {
-    /// The final partition (all local edges processed, all cross edges
-    /// replayed) — identical to what the batch parallel coordinator
-    /// produces for the same stream and configuration.
+    /// The final partition (all local edges processed, the full cross
+    /// buffer replayed in arrival order) — identical to what the batch
+    /// coordinator produces for the same stream and configuration,
+    /// whatever the drain cadence was.
     pub snapshot: Arc<Snapshot>,
     /// Total edges pushed over the service's lifetime.
     pub edges_ingested: u64,
@@ -137,14 +184,9 @@ impl ServiceResult {
 pub struct ClusterService {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
-    /// Router-side per-shard batch buffers (not yet dispatched).
-    pending: Vec<Vec<Edge>>,
-    /// Router-side cross-edge batch (flushed to the shared buffer in
-    /// chunks — one lock per chunk instead of one per edge).
-    cross_pending: Vec<Edge>,
-    since_drain: u64,
-    /// Edges (local *and* cross) not yet reported to the shared meter.
-    unmetered: u64,
+    /// The write-side routing core (shared with the batch path, which
+    /// is a preset over this service).
+    router: Router,
 }
 
 impl ClusterService {
@@ -169,10 +211,16 @@ impl ClusterService {
                 .map(|_| Mutex::new(StreamingClusterer::new(0, config.str_config.clone())))
                 .collect(),
             cross: Mutex::new(Vec::new()),
+            leader: Mutex::new(LeaderState::new()),
             ingested: AtomicU64::new(0),
             cross_count: AtomicU64::new(0),
             dispatched: AtomicU64::new(0),
             processed: AtomicU64::new(0),
+            drains: AtomicU64::new(0),
+            replayed_last: AtomicU64::new(0),
+            replayed_total: AtomicU64::new(0),
+            cross_drained: AtomicU64::new(0),
+            finished: AtomicBool::new(false),
             snapshot: RwLock::new(Arc::new(Snapshot::empty())),
             meter: Mutex::new(Meter::start()),
             config,
@@ -188,14 +236,8 @@ impl ClusterService {
             })
             .collect();
 
-        Self {
-            shared,
-            workers,
-            pending: (0..shards).map(|_| Vec::new()).collect(),
-            cross_pending: Vec::new(),
-            since_drain: 0,
-            unmetered: 0,
-        }
+        let router = Router::new(Arc::clone(&shared));
+        Self { shared, workers, router }
     }
 
     /// A cloneable query handle sharing this service's state. Handles
@@ -206,30 +248,10 @@ impl ClusterService {
     }
 
     /// Route one edge. Blocks when the target shard's mailbox is full
-    /// (backpressure); triggers an automatic drain every
+    /// (backpressure); triggers an automatic incremental drain every
     /// `config.drain_every` edges.
     pub fn push(&mut self, e: Edge) {
-        match route(e, self.shared.config.shards) {
-            Route::Local(w) => {
-                self.pending[w].push(e);
-                if self.pending[w].len() >= self.shared.config.chunk_size {
-                    self.dispatch(w);
-                }
-            }
-            Route::Cross => {
-                self.cross_pending.push(e);
-                if self.cross_pending.len() >= self.shared.config.chunk_size {
-                    self.flush_cross();
-                }
-            }
-        }
-        self.shared.ingested.fetch_add(1, Ordering::Relaxed);
-        self.unmetered += 1;
-        if self.unmetered >= 1024 {
-            self.meter_flush();
-        }
-        self.since_drain += 1;
-        if self.since_drain >= self.shared.config.drain_every {
+        if self.router.push(e) {
             self.refresh();
         }
     }
@@ -253,50 +275,9 @@ impl ClusterService {
         total
     }
 
-    fn dispatch(&mut self, w: usize) {
-        if self.pending[w].is_empty() {
-            return;
-        }
-        let batch = std::mem::take(&mut self.pending[w]);
-        let len = batch.len() as u64;
-        // a mailbox only closes mid-run when its worker died; fail fast
-        // rather than silently discarding this shard's edges for the
-        // rest of a long-lived run ("edges are never dropped")
-        match self.shared.mailboxes[w].send(batch) {
-            Ok(()) => {
-                self.shared.dispatched.fetch_add(len, Ordering::SeqCst);
-            }
-            Err(_) => panic!("shard worker {w} died; its mailbox is closed mid-stream"),
-        }
-    }
-
-    /// Report batched edge counts (local and cross) to the throughput
-    /// meter behind `QueryHandle::stats`.
-    fn meter_flush(&mut self) {
-        if self.unmetered > 0 {
-            self.shared.meter.lock().unwrap().add_edges(self.unmetered);
-            self.unmetered = 0;
-        }
-    }
-
-    /// Append the router-local cross batch to the shared deferred
-    /// buffer — one lock per chunk, not per edge.
-    fn flush_cross(&mut self) {
-        if self.cross_pending.is_empty() {
-            return;
-        }
-        let k = self.cross_pending.len() as u64;
-        self.shared.cross.lock().unwrap().append(&mut self.cross_pending);
-        self.shared.cross_count.fetch_add(k, Ordering::Relaxed);
-    }
-
     /// Dispatch all partially-filled router buffers (local and cross).
     pub fn flush(&mut self) {
-        for w in 0..self.pending.len() {
-            self.dispatch(w);
-        }
-        self.flush_cross();
-        self.meter_flush();
+        self.router.flush();
     }
 
     /// Flush and rebuild the copy-on-read snapshot *now* (without
@@ -305,7 +286,7 @@ impl ClusterService {
     /// cross edges).
     pub fn refresh(&mut self) -> Arc<Snapshot> {
         self.flush();
-        self.since_drain = 0;
+        self.router.reset_drain_clock();
         rebuild_snapshot(&self.shared)
     }
 
@@ -333,26 +314,45 @@ impl ClusterService {
                 std::thread::sleep(Duration::from_micros(200));
             }
         }
-        self.since_drain = 0;
+        self.router.reset_drain_clock();
         rebuild_snapshot(&self.shared)
     }
 
     /// End of stream: flush, close the mailboxes, join the workers, and
-    /// build the final partition.
+    /// run the terminal replay — merge the final shard sketches and
+    /// replay the **full** retained cross buffer in arrival order (a
+    /// fresh leader, i.e. the batch coordinator's own final pass). The
+    /// result is bit-identical to `run_parallel` on the same stream and
+    /// independent of how many incremental drains happened mid-stream.
     pub fn finish(mut self) -> ServiceResult {
-        self.flush();
+        self.router.flush();
         for mb in &self.shared.mailboxes {
             mb.close();
         }
         for h in std::mem::take(&mut self.workers) {
             h.join().expect("shard worker panicked");
         }
-        let snapshot = rebuild_snapshot(&self.shared);
+        let states: Vec<StreamState> = self
+            .shared
+            .states
+            .iter()
+            .map(|m| m.lock().unwrap().state.clone())
+            .collect();
+        let cross: Vec<Edge> = self.shared.cross.lock().unwrap().clone();
+        // raise the flag first so a racing mid-stream drain cannot
+        // overwrite the terminal snapshot we are about to publish
+        self.shared.finished.store(true, Ordering::SeqCst);
+        let snapshot = Arc::new(Snapshot::build(
+            &self.shared.config.str_config,
+            &states,
+            &cross,
+        ));
+        publish_snapshot(&self.shared, &snapshot, true);
         let report = self.shared.meter.lock().unwrap().snapshot();
         ServiceResult {
             snapshot,
             edges_ingested: self.shared.ingested.load(Ordering::Relaxed),
-            cross_edges: self.shared.cross_count.load(Ordering::Relaxed),
+            cross_edges: cross.len() as u64,
             elapsed: report.elapsed,
         }
     }
@@ -401,8 +401,9 @@ mod tests {
 
     #[test]
     fn final_partition_identical_to_batch_parallel_coordinator() {
-        // same hash-sharding, same per-shard order, same deferred cross
-        // replay → bit-identical labels, not just similar quality
+        // the batch path IS this service in the batch preset, so this
+        // pins the preset wiring: same hash-sharding, same per-shard
+        // order, same terminal replay → bit-identical labels
         let g = sbm::generate(&SbmConfig::equal(8, 40, 0.3, 0.01, 9));
         let shards = 4;
         let v_max = 64;
@@ -415,7 +416,7 @@ mod tests {
         let svc_labels = svc.finish().labels();
 
         // the service sizes its sketch to the max touched id; the batch
-        // run pre-sizes to n — compare on the service's node range
+        // wrapper pads to n — compare on the service's node range
         assert!(svc_labels.len() <= par_labels.len());
         assert_eq!(svc_labels[..], par_labels[..svc_labels.len()]);
     }
@@ -495,5 +496,20 @@ mod tests {
         assert_eq!(res.snapshot.edges(), g.m() as u64);
         // the handle now serves the final snapshot
         assert_eq!(handle.snapshot().edges(), g.m() as u64);
+    }
+
+    #[test]
+    fn refresh_after_finish_serves_the_terminal_snapshot() {
+        let g = sbm::generate(&SbmConfig::equal(4, 25, 0.4, 0.01, 15));
+        let mut cfg = ServiceConfig::new(2, 64);
+        cfg.drain_every = 50;
+        let mut svc = ClusterService::start(cfg);
+        let handle = svc.handle();
+        svc.push_chunk(&g.edges.edges);
+        let res = svc.finish();
+        // a late refresh must not clobber (or diverge from) the final
+        let snap = handle.refresh();
+        assert_eq!(snap.labels(), res.snapshot.labels());
+        assert_eq!(handle.snapshot().labels(), res.snapshot.labels());
     }
 }

@@ -1,27 +1,37 @@
-//! Long-lived sharded clustering service.
+//! Long-lived sharded clustering service — and the one routing core.
 //!
 //! The paper's algorithm stores three integers per node and touches
 //! each edge once — the ideal shape for an *ingestion service*, not
-//! just a batch CLI. This module promotes the batch parallel
-//! coordinator into exactly that:
+//! just a batch CLI. This module is that service, and since the batch
+//! coordinator (`coordinator::parallel::run_parallel`) is now a thin
+//! preset over it, it is also the **only** route/batch/merge/replay
+//! pipeline in the repo:
 //!
+//! * [`router`] — the single routing/merge core: per-shard batching
+//!   with blocking backpressure, the deferred cross buffer, and the
+//!   disjoint shard-sketch merge.
 //! * [`ingest`] — N shard workers behind bounded mailboxes (sneldb-style
-//!   shard/mailbox/backpressure design) fed by a router built on
-//!   `stream::shard`; `push` blocks when a shard lags, never drops.
-//! * [`snapshot`] — copy-on-read [`Snapshot`]s: merge the disjoint
-//!   shard sketches and replay buffered cross edges, producing a valid
-//!   partition *mid-stream* (periodic drains keep it fresh).
+//!   shard/mailbox/backpressure design); `push` blocks when a shard
+//!   lags, never drops.
+//! * [`snapshot`] — copy-on-read [`Snapshot`]s plus the persistent
+//!   drain leader: each drain folds the frozen effects of previously
+//!   replayed cross edges over a fresh shard merge and replays **only
+//!   the cross edges that arrived since the last drain** — `O(n + new
+//!   cross)` instead of `O(all cross)`.
 //! * [`query`] — cloneable [`QueryHandle`]s serving `community_of`
 //!   point lookups, top-k community summaries, and an operational
-//!   stats endpoint (edges/s, queue depths, memory per node).
+//!   stats endpoint (edges/s, queue depths, drain/replay counters,
+//!   memory per node).
 //! * [`config`] — [`ServiceConfig`] knobs (shards, `v_max`, mailbox
-//!   depth, chunk size, drain cadence).
+//!   depth, chunk size, drain cadence) plus the
+//!   [`batch`](ServiceConfig::batch) preset.
 //!
 //! The final partition after [`ClusterService::finish`] is
 //! **bit-identical** to `coordinator::parallel::run_parallel` on the
-//! same stream — the service is the online form of the same
-//! deferred-cross-edge design. See `docs/ARCHITECTURE.md` for the full
-//! dataflow and invariants.
+//! same stream — by construction, since both are the same code — and
+//! independent of the drain cadence, because `finish` always runs the
+//! terminal full replay of the retained cross buffer. See
+//! `docs/ARCHITECTURE.md` for the full dataflow and invariants.
 //!
 //! ```
 //! use streamcom::graph::edge::Edge;
@@ -44,9 +54,11 @@
 pub mod config;
 pub mod ingest;
 pub mod query;
+pub mod router;
 pub mod snapshot;
 
 pub use config::ServiceConfig;
 pub use ingest::{ClusterService, ServiceResult};
 pub use query::{QueryHandle, ServiceStats};
+pub use router::merge_disjoint_states;
 pub use snapshot::{CommunitySummary, Snapshot};

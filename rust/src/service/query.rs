@@ -5,9 +5,10 @@
 //! they never touch the shard workers' hot loop, so read traffic cannot
 //! slow ingestion (the only shared-state contact is one `RwLock` read
 //! of an `Arc`). Stats follow the same rule: memory figures come from
-//! the published snapshot, queue depths from the mailbox channels, and
-//! throughput from the `stream::meter` instance the router feeds —
-//! never from the workers' own state locks.
+//! the published snapshot, queue depths from the mailbox channels,
+//! throughput from the `stream::meter` instance the router feeds, and
+//! the drain counters from atomics the drain path maintains — never
+//! from the workers' own state locks.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -29,8 +30,26 @@ pub struct ServiceStats {
     pub shards: usize,
     /// Edges accepted by the router so far.
     pub edges_ingested: u64,
-    /// Cross-shard edges buffered for deferred replay.
+    /// Cross-shard edges buffered over the service's lifetime.
+    pub cross_total: u64,
+    /// Cross edges not yet integrated into the published snapshot
+    /// (awaiting the next incremental drain).
     pub cross_pending: u64,
+    /// Cross edges the drains have integrated so far (the persistent
+    /// leader's cursor into the retained buffer).
+    pub cross_drained: u64,
+    /// Snapshot drains performed so far.
+    pub drains: u64,
+    /// Cross edges replayed by the most recent drain — with the
+    /// incremental leader this is only what arrived since the previous
+    /// drain, not the whole buffer.
+    pub cross_replayed_last_drain: u64,
+    /// Σ cross edges replayed across all snapshot drains. The
+    /// incremental-replay guarantee is `cross_replayed_total ==
+    /// cross_drained`: every cross edge is replayed exactly once by the
+    /// snapshot path, however many drains happen (asserted by the
+    /// service test-suite).
+    pub cross_replayed_total: u64,
     /// Ingest throughput over the service lifetime (edges/s).
     pub edges_per_sec: f64,
     /// Time since the service started.
@@ -72,10 +91,11 @@ impl QueryHandle {
         Arc::clone(&self.shared.snapshot.read().unwrap())
     }
 
-    /// Force a snapshot rebuild from the live shard states. Unlike
+    /// Force an incremental drain from the live shard states. Unlike
     /// `ClusterService::refresh`, this cannot flush the router's batch
     /// buffers (it has no access to them), so it covers dispatched
-    /// edges only.
+    /// edges only. After `finish` it simply returns the terminal
+    /// snapshot.
     pub fn refresh(&self) -> Arc<Snapshot> {
         rebuild_snapshot(&self.shared)
     }
@@ -102,10 +122,17 @@ impl QueryHandle {
         // states — stats must never contend with the workers' hot loop
         let memory_bytes = snap.memory_bytes();
         let nodes = snap.state().n();
+        let cross_total = self.shared.cross_count.load(Ordering::Relaxed);
+        let cross_drained = self.shared.cross_drained.load(Ordering::Relaxed);
         ServiceStats {
             shards: self.shared.config.shards,
             edges_ingested: self.shared.ingested.load(Ordering::Relaxed),
-            cross_pending: self.shared.cross_count.load(Ordering::Relaxed),
+            cross_total,
+            cross_pending: cross_total.saturating_sub(cross_drained),
+            cross_drained,
+            drains: self.shared.drains.load(Ordering::Relaxed),
+            cross_replayed_last_drain: self.shared.replayed_last.load(Ordering::Relaxed),
+            cross_replayed_total: self.shared.replayed_total.load(Ordering::Relaxed),
             edges_per_sec: report.edges_per_sec(),
             uptime: report.elapsed,
             queue_depths,
@@ -139,6 +166,10 @@ mod tests {
         assert_eq!(s.edges_ingested, g.m() as u64);
         assert_eq!(s.queue_depths.len(), 3);
         assert_eq!(s.snapshot_edges, g.m() as u64);
+        // the quiesce drained everything that was buffered
+        assert_eq!(s.cross_pending, 0);
+        assert_eq!(s.cross_drained, s.cross_total);
+        assert!(s.drains >= 1);
         assert!(s.memory_bytes > 0);
         assert!(s.bytes_per_node() >= 16.0, "{}", s.bytes_per_node());
         assert!(s.uptime.as_nanos() > 0);

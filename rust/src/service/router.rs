@@ -1,0 +1,176 @@
+//! The single routing/merge core behind every execution path.
+//!
+//! Until this module existed the repo carried **two** copies of the
+//! route/batch/merge/replay pipeline: one inside the batch dispatcher
+//! (`coordinator::parallel::run_parallel`) and one inside the service's
+//! ingest path — bit-identical in behaviour, duplicated in code. Both
+//! now go through here:
+//!
+//! * `Router` — the write-side core: classify each edge with
+//!   `stream::shard::route`, batch same-shard edges into per-shard
+//!   chunks bound for the workers' bounded mailboxes (blocking
+//!   backpressure, never drops), and append cross-shard edges to the
+//!   shared deferred buffer. `ClusterService` owns one; `run_parallel`
+//!   is a thin batch preset over `ClusterService` and therefore uses
+//!   the same instance type, the same code, the same semantics.
+//! * [`merge_disjoint_states`] — the merge half of the core: the
+//!   conflict-free array union of shard sketches that every drain and
+//!   the terminal replay build on.
+//!
+//! One core means one place where the paper's "every edge exactly once"
+//! accounting lives, and one place the golden/property suites have to
+//! pin down.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use crate::coordinator::state::{StreamState, UNSEEN};
+use crate::graph::edge::Edge;
+use crate::stream::shard::{route, Route};
+
+use super::ingest::Shared;
+
+/// Merge shard-disjoint worker states into one sketch (disjoint array
+/// union).
+///
+/// Hash-sharding guarantees no two workers ever touch the same node, so
+/// degrees and communities copy over and volumes add. The result is
+/// sized to `max(n, largest worker state)` — workers that grew on
+/// demand beyond the pre-sized `n` (the service starts them at 0) are
+/// handled transparently. Shared by every snapshot drain and by the
+/// terminal replay in `ClusterService::finish` (and therefore by the
+/// batch path, `coordinator::parallel::run_parallel`).
+///
+/// Debug builds assert the disjointness invariant; a violation means
+/// the caller routed one node's edges to two different workers.
+pub fn merge_disjoint_states(n: usize, states: &[StreamState]) -> StreamState {
+    let n = states.iter().map(|st| st.n()).fold(n, usize::max);
+    let mut merged = StreamState::new(n);
+    for st in states {
+        for i in 0..st.n() {
+            if st.degree[i] > 0 || st.community[i] != UNSEEN {
+                debug_assert_eq!(merged.degree[i], 0, "shard overlap at node {i}");
+                merged.degree[i] = st.degree[i];
+                merged.community[i] = st.community[i];
+            }
+            if st.volume[i] > 0 {
+                merged.volume[i] += st.volume[i];
+            }
+        }
+        merged.edges_processed += st.edges_processed;
+    }
+    merged
+}
+
+/// The write-side routing core: per-shard batch buffers plus the
+/// deferred cross-edge batch, all draining into the `Shared` service
+/// state. Owned by `ClusterService`; not thread-safe by itself (one
+/// router per ingest thread, backed by thread-safe `Shared`).
+pub(crate) struct Router {
+    shared: Arc<Shared>,
+    /// Per-shard batch buffers (not yet dispatched to mailboxes).
+    pending: Vec<Vec<Edge>>,
+    /// Cross-edge batch (flushed to the shared deferred buffer in
+    /// chunks — one lock per chunk instead of one per edge).
+    cross_pending: Vec<Edge>,
+    /// Edges routed since the last snapshot drain.
+    since_drain: u64,
+    /// Edges (local *and* cross) not yet reported to the shared meter.
+    unmetered: u64,
+}
+
+impl Router {
+    pub(crate) fn new(shared: Arc<Shared>) -> Self {
+        let shards = shared.config.shards;
+        Self {
+            shared,
+            pending: (0..shards).map(|_| Vec::new()).collect(),
+            cross_pending: Vec::new(),
+            since_drain: 0,
+            unmetered: 0,
+        }
+    }
+
+    /// Route one edge. Blocks when the target shard's mailbox is full
+    /// (backpressure). Returns `true` when `config.drain_every` edges
+    /// have accumulated since the last drain — the caller owns the
+    /// drain itself (and must call [`reset_drain_clock`](Self::reset_drain_clock)
+    /// when it drains for any other reason).
+    pub(crate) fn push(&mut self, e: Edge) -> bool {
+        match route(e, self.shared.config.shards) {
+            Route::Local(w) => {
+                self.pending[w].push(e);
+                if self.pending[w].len() >= self.shared.config.chunk_size {
+                    self.dispatch(w);
+                }
+            }
+            Route::Cross => {
+                self.cross_pending.push(e);
+                if self.cross_pending.len() >= self.shared.config.chunk_size {
+                    self.flush_cross();
+                }
+            }
+        }
+        self.shared.ingested.fetch_add(1, Ordering::Relaxed);
+        self.unmetered += 1;
+        if self.unmetered >= 1024 {
+            self.meter_flush();
+        }
+        self.since_drain += 1;
+        self.since_drain >= self.shared.config.drain_every
+    }
+
+    /// Restart the automatic-drain countdown (called after any drain).
+    pub(crate) fn reset_drain_clock(&mut self) {
+        self.since_drain = 0;
+    }
+
+    /// Send shard `w`'s pending batch to its mailbox (blocking when the
+    /// mailbox is full — that *is* the backpressure).
+    fn dispatch(&mut self, w: usize) {
+        if self.pending[w].is_empty() {
+            return;
+        }
+        let batch = std::mem::take(&mut self.pending[w]);
+        let len = batch.len() as u64;
+        // a mailbox only closes mid-run when its worker died; fail fast
+        // rather than silently discarding this shard's edges for the
+        // rest of a long-lived run ("edges are never dropped")
+        match self.shared.mailboxes[w].send(batch) {
+            Ok(()) => {
+                self.shared.dispatched.fetch_add(len, Ordering::SeqCst);
+            }
+            Err(_) => panic!("shard worker {w} died; its mailbox is closed mid-stream"),
+        }
+    }
+
+    /// Append the router-local cross batch to the shared deferred
+    /// buffer — one lock per chunk, not per edge.
+    fn flush_cross(&mut self) {
+        if self.cross_pending.is_empty() {
+            return;
+        }
+        let k = self.cross_pending.len() as u64;
+        self.shared.cross.lock().unwrap().append(&mut self.cross_pending);
+        self.shared.cross_count.fetch_add(k, Ordering::Relaxed);
+    }
+
+    /// Report batched edge counts (local and cross) to the throughput
+    /// meter behind `QueryHandle::stats`.
+    fn meter_flush(&mut self) {
+        if self.unmetered > 0 {
+            self.shared.meter.lock().unwrap().add_edges(self.unmetered);
+            self.unmetered = 0;
+        }
+    }
+
+    /// Dispatch all partially-filled buffers (local and cross) and
+    /// flush the meter.
+    pub(crate) fn flush(&mut self) {
+        for w in 0..self.pending.len() {
+            self.dispatch(w);
+        }
+        self.flush_cross();
+        self.meter_flush();
+    }
+}

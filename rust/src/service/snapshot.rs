@@ -1,25 +1,49 @@
-//! Copy-on-read snapshots: consistent, queryable partitions mid-stream.
+//! Copy-on-read snapshots and the persistent drain leader.
 //!
-//! The batch parallel coordinator only materialises a partition after a
-//! final barrier (workers drain → merge → cross-edge replay). The
-//! service needs answers *while* the stream is still flowing, so it
-//! periodically builds a [`Snapshot`]: clone each shard's sketch under
-//! its lock (three flat arrays — cheap), merge the disjoint clones with
-//! [`merge_disjoint_states`], and replay the cross-edge buffer through
-//! the merged clone exactly as the batch leader would. The live shard
-//! states are never blocked for longer than one `memcpy`, and the
-//! snapshot is immutable afterwards — readers share it via `Arc` with
-//! no further coordination.
+//! The service needs valid partitions *while* the stream is still
+//! flowing. Originally every drain rebuilt the queryable partition from
+//! scratch: clone the shard sketches, merge, and replay the **entire**
+//! cross-edge buffer — cost `O(all cross edges)`, growing with the
+//! cross fraction `≈ 1 − 1/shards` of everything ever streamed. A
+//! service that drains often would spend its life re-deciding old cross
+//! edges.
 //!
-//! A snapshot is therefore *exactly* the partition the batch coordinator
-//! would have produced had the stream ended at the drain point: every
-//! invariant that holds at a stream end (volume conservation
-//! `Σ v_k = 2t`, labels in node-id space) holds for every snapshot.
+//! `LeaderState` replaces that with an **incremental** drain. It
+//! persists two facts between drains:
+//!
+//! * `cross_degree[i]` — how much degree node `i` has accumulated from
+//!   already-drained cross edges, and
+//! * `cross_community[i]` — the community the last drained cross-edge
+//!   decision left node `i` in (its decisions are *frozen*: a drained
+//!   cross edge is never re-decided).
+//!
+//! A drain then costs `O(n)` to fold those frozen effects over a fresh
+//! merge of the shard sketches — volumes are *derived* in one pass via
+//! [`StreamState::recompute_volumes`], which is sound because
+//! `v_k = Σ_{i∈k} d_i` is an invariant of the decision rule — plus
+//! `O(new cross edges)` to replay only what arrived since the previous
+//! drain. Amortised over a run, every cross edge is replayed **exactly
+//! once** by the snapshot path (asserted via the drain counters in
+//! `QueryHandle::stats`).
+//!
+//! Two consistency notes, both pinned by tests:
+//!
+//! * A fresh leader draining the whole buffer is *exactly* the old
+//!   full-buffer rebuild — `Snapshot::build` is implemented that way,
+//!   and it is what `ClusterService::finish` runs as the terminal
+//!   replay. The **final** partition therefore never depends on how
+//!   many mid-stream drains happened (golden + property suites).
+//! * Mid-stream snapshots keep every stream-end invariant (volume
+//!   conservation `Σ v_k = 2t`, labels in node-id space), but between
+//!   drains the frozen decisions may differ from what a from-scratch
+//!   replay would decide against the newer shard volumes — the view is
+//!   cheap because history is not re-litigated.
 
 use crate::coordinator::algorithm::{StrConfig, StreamingClusterer};
-use crate::coordinator::parallel::merge_disjoint_states;
 use crate::coordinator::state::{StreamState, UNSEEN};
 use crate::graph::edge::Edge;
+
+use super::router::merge_disjoint_states;
 
 /// One row of a top-k community report.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -30,6 +54,108 @@ pub struct CommunitySummary {
     pub volume: u64,
     /// Member count.
     pub size: u32,
+}
+
+/// The persistent drain leader: the frozen effects of every
+/// already-drained cross edge, plus the cursor into the retained
+/// cross-edge buffer. Lives in the service's shared state behind a
+/// mutex; a fresh instance draining a full buffer reproduces the
+/// from-scratch rebuild bit for bit.
+pub(crate) struct LeaderState {
+    /// Degree contributed to each node by drained cross edges.
+    cross_degree: Vec<u32>,
+    /// Community each node was left in by its last drained cross-edge
+    /// decision (`UNSEEN` = no cross edge has touched this node).
+    cross_community: Vec<u32>,
+    /// Cursor into the retained cross buffer: edges `[0, drained)` have
+    /// been replayed by some earlier drain.
+    drained: usize,
+    /// Drained cross edges that entered `edges_processed` (self-loops
+    /// never route cross, so this equals `drained` in practice; kept
+    /// separate so the accounting cannot drift if that ever changes).
+    drained_m: u64,
+}
+
+impl LeaderState {
+    pub(crate) fn new() -> Self {
+        Self {
+            cross_degree: Vec::new(),
+            cross_community: Vec::new(),
+            drained: 0,
+            drained_m: 0,
+        }
+    }
+
+    /// Buffer positions already replayed (the caller slices the shared
+    /// cross buffer at this cursor before draining).
+    pub(crate) fn drained(&self) -> usize {
+        self.drained
+    }
+
+    /// Drained cross edges counted into snapshot coverage.
+    pub(crate) fn drained_m(&self) -> u64 {
+        self.drained_m
+    }
+
+    /// Incremental drain: fold the frozen cross effects over a fresh
+    /// merge of `shard_states`, derive the volumes, then replay only
+    /// `new_cross` (the buffer suffix past [`drained`](Self::drained)).
+    pub(crate) fn drain(
+        &mut self,
+        config: &StrConfig,
+        shard_states: &[StreamState],
+        new_cross: &[Edge],
+    ) -> Snapshot {
+        let mut base = merge_disjoint_states(0, shard_states);
+        let local_edges = base.edges_processed;
+        if !self.cross_degree.is_empty() {
+            // frozen effects may reference ids no shard has seen yet
+            base.ensure((self.cross_degree.len() - 1) as u32);
+            for i in 0..self.cross_degree.len() {
+                base.degree[i] += self.cross_degree[i];
+                let c = self.cross_community[i];
+                if c != UNSEEN {
+                    base.community[i] = c;
+                }
+            }
+        }
+        base.edges_processed += self.drained_m;
+        base.recompute_volumes();
+
+        let mut leader = StreamingClusterer::with_state(base, config.clone());
+        for &e in new_cross {
+            debug_assert!(!e.is_self_loop(), "self-loops must never route cross");
+            if e.is_self_loop() {
+                continue;
+            }
+            leader.process_edge(e);
+            self.freeze(e, &leader.state);
+            self.drained_m += 1;
+        }
+        self.drained += new_cross.len();
+
+        Snapshot {
+            state: leader.state,
+            local_edges,
+            cross_edges: self.drained_m,
+        }
+    }
+
+    /// Freeze the outcome of one replayed cross edge: its degree
+    /// contribution and the communities it left its endpoints in. A
+    /// later cross edge touching the same node simply overwrites the
+    /// community (last decision wins — exactly replay order).
+    fn freeze(&mut self, e: Edge, state: &StreamState) {
+        let hi = e.u.max(e.v) as usize;
+        if self.cross_degree.len() <= hi {
+            self.cross_degree.resize(hi + 1, 0);
+            self.cross_community.resize(hi + 1, UNSEEN);
+        }
+        self.cross_degree[e.u as usize] += 1;
+        self.cross_degree[e.v as usize] += 1;
+        self.cross_community[e.u as usize] = state.community[e.u as usize];
+        self.cross_community[e.v as usize] = state.community[e.v as usize];
+    }
 }
 
 /// An immutable, point-in-time partition of the ingested stream.
@@ -48,19 +174,19 @@ impl Snapshot {
         Self { state: StreamState::new(0), local_edges: 0, cross_edges: 0 }
     }
 
-    /// Merge shard sketches and replay the pending cross edges, exactly
-    /// the batch leader's final step (`coordinator::parallel`).
+    /// Full-buffer rebuild: merge shard sketches and replay the whole
+    /// cross buffer in arrival order. Implemented as a *fresh*
+    /// `LeaderState` draining everything — the incremental path with
+    /// no history is the full rebuild, so there is exactly one
+    /// merge/replay implementation to trust. This is the terminal
+    /// replay `ClusterService::finish` runs (and therefore the batch
+    /// `run_parallel` semantics).
     pub(crate) fn build(
         config: &StrConfig,
         shard_states: &[StreamState],
         cross: &[Edge],
     ) -> Self {
-        let merged = merge_disjoint_states(0, shard_states);
-        let local_edges = merged.edges_processed;
-        let mut leader = StreamingClusterer::new(0, config.clone());
-        leader.state = merged;
-        leader.process_chunk(cross);
-        Self { state: leader.state, local_edges, cross_edges: cross.len() as u64 }
+        LeaderState::new().drain(config, shard_states, cross)
     }
 
     /// The merged sketch behind this snapshot.
@@ -159,6 +285,54 @@ mod tests {
         // intra-shard joins survive the merge
         assert_eq!(snap.community_of(0), snap.community_of(1));
         assert_eq!(snap.community_of(5), snap.community_of(6));
+    }
+
+    #[test]
+    fn incremental_drains_cover_the_same_edges_as_one_full_drain() {
+        let cfg = StrConfig::new(64);
+        let mut a = StreamingClusterer::new(0, cfg.clone());
+        a.process_edge(Edge::new(0, 1));
+        let mut b = StreamingClusterer::new(0, cfg.clone());
+        b.process_edge(Edge::new(5, 6));
+        let states = [a.state.clone(), b.state.clone()];
+        let cross = vec![Edge::new(1, 5), Edge::new(0, 6), Edge::new(1, 6)];
+
+        // one edge per drain, shard states fixed between drains
+        let mut leader = LeaderState::new();
+        let s1 = leader.drain(&cfg, &states, &cross[..1]);
+        assert_eq!((s1.edges(), leader.drained()), (3, 1));
+        let s2 = leader.drain(&cfg, &states, &cross[1..2]);
+        assert_eq!((s2.edges(), leader.drained()), (4, 2));
+        let s3 = leader.drain(&cfg, &states, &cross[2..]);
+        assert_eq!((s3.edges(), leader.drained()), (5, 3));
+        assert_eq!(s3.state().total_volume(), 2 * s3.edges());
+
+        // with shard states unchanged between drains there is nothing to
+        // re-decide, so the incremental result IS the full rebuild
+        let full = Snapshot::build(&cfg, &states, &cross);
+        assert_eq!(s3.labels(), full.labels());
+        assert_eq!(s3.state().volume, full.state().volume);
+        assert_eq!(s3.state().degree, full.state().degree);
+    }
+
+    #[test]
+    fn leader_freezes_cross_only_nodes_beyond_every_shard() {
+        // node 900 exists only in cross edges; the leader must carry it
+        // across drains even though no shard sketch will ever mention it
+        let cfg = StrConfig::new(64);
+        let mut a = StreamingClusterer::new(0, cfg.clone());
+        a.process_edge(Edge::new(0, 1));
+        let states = [a.state.clone()];
+
+        let mut leader = LeaderState::new();
+        let s1 = leader.drain(&cfg, &states, &[Edge::new(0, 900)]);
+        let c900 = s1.community_of(900);
+        assert!(s1.state().n() > 900);
+
+        let s2 = leader.drain(&cfg, &states, &[]);
+        assert_eq!(s2.community_of(900), c900, "frozen decision lost");
+        assert_eq!(s2.edges(), s1.edges());
+        assert_eq!(s2.state().total_volume(), 2 * s2.edges());
     }
 
     #[test]

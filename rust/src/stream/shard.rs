@@ -1,13 +1,13 @@
-//! Hash-sharding of an edge stream for the parallel coordinator.
+//! Hash-sharding primitives for the routing core.
 //!
 //! Node space is split across `shards` by multiplicative hashing.
 //! An edge whose endpoints fall in the same shard is routed to that
-//! shard's queue; a *cross-shard* edge goes to the leader queue, because
-//! its decision needs both shards' community state (see
-//! `coordinator/parallel.rs` for how the leader resolves them).
+//! shard's worker; a *cross-shard* edge is deferred, because its
+//! decision needs both shards' community state. The one consumer of
+//! these primitives is `service::router` — the single routing core
+//! behind both the service and the batch coordinator.
 
 use crate::graph::edge::Edge;
-use crate::util::channel::Channel;
 
 /// Multiplicative (Fibonacci) hash of a node id into `shards` buckets.
 #[inline]
@@ -36,39 +36,6 @@ pub fn route(edge: Edge, shards: usize) -> Route {
     } else {
         Route::Cross
     }
-}
-
-/// Fan a chunk out to per-shard queues + leader queue. Returns
-/// (local count, cross count).
-pub fn dispatch_chunk(
-    chunk: &[Edge],
-    shards: usize,
-    local_queues: &[Channel<Vec<Edge>>],
-    leader_queue: &Channel<Vec<Edge>>,
-) -> (usize, usize) {
-    debug_assert_eq!(local_queues.len(), shards);
-    let mut per_shard: Vec<Vec<Edge>> = (0..shards).map(|_| Vec::new()).collect();
-    let mut cross = Vec::new();
-    for &e in chunk {
-        match route(e, shards) {
-            Route::Local(s) => per_shard[s].push(e),
-            Route::Cross => cross.push(e),
-        }
-    }
-    let mut nlocal = 0;
-    for (s, batch) in per_shard.into_iter().enumerate() {
-        if !batch.is_empty() {
-            nlocal += batch.len();
-            // a closed queue means the worker aborted; drop silently,
-            // the coordinator surfaces the error
-            let _ = local_queues[s].send(batch);
-        }
-    }
-    let ncross = cross.len();
-    if !cross.is_empty() {
-        let _ = leader_queue.send(cross);
-    }
-    (nlocal, ncross)
 }
 
 #[cfg(test)]
@@ -121,32 +88,30 @@ mod tests {
     }
 
     #[test]
-    fn dispatch_partitions_every_edge_exactly_once() {
+    fn route_partitions_every_edge_exactly_once() {
         let shards = 4;
-        let queues: Vec<Channel<Vec<Edge>>> =
-            (0..shards).map(|_| Channel::bounded(64)).collect();
-        let leader = Channel::bounded(64);
         let chunk: Vec<Edge> = (0..1000u32).map(|i| Edge::new(i, (i * 7) % 500)).collect();
         let chunk: Vec<Edge> = chunk.into_iter().filter(|e| !e.is_self_loop()).collect();
-        let (nlocal, ncross) = dispatch_chunk(&chunk, shards, &queues, &leader);
+        let mut nlocal = 0;
+        let mut ncross = 0;
+        for &e in &chunk {
+            match route(e, shards) {
+                Route::Local(_) => nlocal += 1,
+                Route::Cross => ncross += 1,
+            }
+        }
         assert_eq!(nlocal + ncross, chunk.len());
-        let mut delivered = 0;
-        for q in &queues {
-            q.close();
-            while let Some(batch) = q.try_recv() {
-                for e in &batch {
-                    assert!(matches!(route(*e, shards), Route::Local(_)));
-                }
-                delivered += batch.len();
+        assert!(nlocal > 0 && ncross > 0, "both classes must occur");
+    }
+
+    #[test]
+    fn self_loops_always_route_local() {
+        // the service's incremental drain relies on the cross buffer
+        // never containing self-loops
+        for shards in [1, 2, 4, 16] {
+            for u in 0..200u32 {
+                assert!(matches!(route(Edge::new(u, u), shards), Route::Local(_)));
             }
         }
-        leader.close();
-        while let Some(batch) = leader.try_recv() {
-            for e in &batch {
-                assert_eq!(route(*e, shards), Route::Cross);
-            }
-            delivered += batch.len();
-        }
-        assert_eq!(delivered, chunk.len());
     }
 }

@@ -1,0 +1,274 @@
+#!/usr/bin/env python3
+"""Generate the golden streams and expected label vectors.
+
+This is an exact, independently-written port of the repo's decision
+rule (`rust/src/coordinator/algorithm.rs::process_edge`, paper
+defaults: BothAtMost threshold, j-joins-i tie-break, volume condition),
+the shard hash (`rust/src/stream/shard.rs::shard_of`), and the batch
+replay semantics (per-shard local processing in stream order, then
+cross-edge replay in arrival order over the merged sketch —
+`service::router` / `coordinator::parallel::run_parallel`).
+
+Because hash-sharding makes shard-local state cells fully disjoint
+(communities never span shards before cross replay), "process local
+edges in stream order on one sketch, then replay the cross edges in
+order" is *exactly* the merged-shards-then-replay pipeline; the port
+exploits that to stay small.
+
+The port double-checks itself against the upstream unit-test fixtures
+(first-edge walkthrough, two-triangles cases, conservation) before
+writing anything. The committed .edges/.labels files are the source of
+truth for `golden_partitions.rs`; this script documents their
+provenance and regenerates them without a Rust toolchain. With a
+toolchain, `GOLDEN_REGEN=1 cargo test --test golden_partitions`
+regenerates the label files from the Rust implementation itself.
+"""
+
+import random
+from pathlib import Path
+
+HERE = Path(__file__).resolve().parent
+UNSEEN = -1
+MASK64 = (1 << 64) - 1
+FIB = 0x9E37_79B9_7F4A_7C15
+
+
+def shard_of(node: int, shards: int) -> int:
+    h = (node * FIB) & MASK64
+    return ((h >> 32) * shards) >> 32
+
+
+class Sketch:
+    """The three-integers-per-node sketch."""
+
+    def __init__(self, n: int):
+        self.deg = [0] * n
+        self.com = [UNSEEN] * n
+        self.vol = [0] * n
+        self.t = 0
+
+    def process_edge(self, u: int, v: int, vmax: int) -> None:
+        if u == v:
+            return
+        if self.com[u] == UNSEEN:
+            self.com[u] = u
+        if self.com[v] == UNSEEN:
+            self.com[v] = v
+        self.deg[u] += 1
+        self.deg[v] += 1
+        ci = self.com[u]
+        cj = self.com[v]
+        self.vol[ci] += 1
+        self.vol[cj] += 1
+        self.t += 1
+        if ci == cj:
+            return
+        vi = self.vol[ci]
+        vj = self.vol[cj]
+        if vi <= vmax and vj <= vmax:
+            if vi < vj:  # i joins j's community
+                d = self.deg[u]
+                self.vol[cj] += d
+                self.vol[ci] -= d
+                self.com[u] = cj
+            else:  # vi > vj, or tie -> j joins i (paper tie-break)
+                d = self.deg[v]
+                self.vol[ci] += d
+                self.vol[cj] -= d
+                self.com[v] = ci
+
+    def labels(self):
+        return [c if c != UNSEEN else i for i, c in enumerate(self.com)]
+
+
+def sequential(n, edges, vmax):
+    st = Sketch(n)
+    for u, v in edges:
+        st.process_edge(u, v, vmax)
+    return st.labels()
+
+
+def parallel(n, edges, vmax, shards):
+    """Batch semantics: local edges in stream order, then cross replay.
+
+    Shard-local cells are disjoint, so one sketch suffices (see module
+    docstring)."""
+    st = Sketch(n)
+    cross = []
+    for u, v in edges:
+        if shard_of(u, shards) == shard_of(v, shards):
+            st.process_edge(u, v, vmax)
+        else:
+            cross.append((u, v))
+    for u, v in cross:
+        st.process_edge(u, v, vmax)
+    return st.labels()
+
+
+def self_check():
+    # paper walkthrough, first edge (algorithm.rs::paper_walkthrough_first_edge)
+    st = Sketch(2)
+    st.process_edge(0, 1, 8)
+    assert st.com == [0, 0], st.com
+    assert st.vol == [2, 0], st.vol
+    assert st.deg == [1, 1], st.deg
+
+    # two triangles bridged by one edge (algorithm.rs fixtures)
+    tri = [(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5), (2, 3)]
+    lab4 = sequential(6, tri, 4)
+    assert lab4[0] == lab4[1] == lab4[2], lab4
+    assert lab4[3] == lab4[4] == lab4[5], lab4
+    assert lab4[0] != lab4[3], lab4
+    lab_inf = sequential(6, tri, 1_000_000)
+    assert lab_inf[0] == lab_inf[1] == lab_inf[2] == lab_inf[3], lab_inf
+    assert len(set(lab_inf)) <= 2, lab_inf
+    lab1 = sequential(6, tri, 1)
+    assert lab1[0] != lab1[3], lab1
+
+    # conservation after every edge, and multigraph handling
+    st = Sketch(6)
+    for i, (u, v) in enumerate(tri + [(0, 1)]):
+        st.process_edge(u, v, 4)
+        assert sum(st.vol) == 2 * (i + 1), (i, st.vol)
+
+    # volume == sum of member degrees (the merge/drain invariant)
+    vol = [0] * 6
+    for i, c in enumerate(st.com):
+        if c != UNSEEN:
+            vol[c] += st.deg[i]
+    assert vol == st.vol, (vol, st.vol)
+
+    # shard hash: in range, deterministic, single shard collapses to 0
+    for shards in (1, 2, 4, 16):
+        for node in range(500):
+            s = shard_of(node, shards)
+            assert 0 <= s < shards
+    assert all(shard_of(x, 1) == 0 for x in range(100))
+
+    # parallel(shards=1) must equal sequential bit for bit
+    rnd = random.Random(99)
+    edges = [(rnd.randrange(40), rnd.randrange(40)) for _ in range(300)]
+    edges = [(u, v) for u, v in edges if u != v]
+    assert parallel(40, edges, 16, 1) == sequential(40, edges, 16)
+
+
+def randbelow(rnd, n: int) -> int:
+    """Uniform int in [0, n), derived only from Random.random().
+
+    CPython guarantees cross-version sequence stability for random()
+    alone; randrange/shuffle/sample are "subject to change", so the
+    generators below never touch them. The float has 53 random bits —
+    far more than these tiny ranges need — and IEEE-754 arithmetic is
+    platform-deterministic, so regeneration is byte-stable anywhere."""
+    return min(int(rnd.random() * n), n - 1)
+
+
+def stable_shuffle(rnd, xs) -> None:
+    """Fisher-Yates on top of randbelow (version-stable, see above)."""
+    for i in range(len(xs) - 1, 0, -1):
+        j = randbelow(rnd, i + 1)
+        xs[i], xs[j] = xs[j], xs[i]
+
+
+def gen_sbm(rnd, k, size, p_in, p_out):
+    """SBM-shaped stream: k equal blocks, Bernoulli intra/inter pairs."""
+    n = k * size
+    edges = []
+    for u in range(n):
+        for v in range(u + 1, n):
+            p = p_in if u // size == v // size else p_out
+            if rnd.random() < p:
+                edges.append((u, v))
+    stable_shuffle(rnd, edges)
+    return n, edges
+
+
+def gen_lfr(rnd, sizes, intra_factor, mu):
+    """LFR-shaped stream: power-law-ish community sizes, ring + random
+    intra edges per community, plus a mu-fraction of inter edges."""
+    n = sum(sizes)
+    starts = []
+    acc = 0
+    for s in sizes:
+        starts.append(acc)
+        acc += s
+    edges = []
+    for start, s in zip(starts, sizes):
+        members = list(range(start, start + s))
+        for i in range(s):  # ring keeps each community connected
+            edges.append((members[i], members[(i + 1) % s]))
+        for _ in range(int(s * intra_factor)):
+            u = members[randbelow(rnd, s)]
+            v = members[randbelow(rnd, s)]
+            while v == u:
+                v = members[randbelow(rnd, s)]
+            edges.append((u, v))
+    inter = int(mu * len(edges))
+    for _ in range(inter):
+        u = randbelow(rnd, n)
+        v = randbelow(rnd, n)
+        while v == u:
+            v = randbelow(rnd, n)
+        edges.append((u, v))
+    stable_shuffle(rnd, edges)
+    return n, edges
+
+
+def artifacts():
+    """All golden files as {filename: content}, fully deterministic."""
+    out = {}
+
+    def emit(stem, title, n, edges, vmax, shards):
+        header = (
+            f"# golden stream: {title}\n"
+            f"# format: first line 'n v_max shards', then one 'u v' edge per line\n"
+            f"# (arrival order matters — do not sort)\n"
+            f"{n} {vmax} {shards}\n"
+        )
+        out[f"{stem}.edges"] = header + "".join(f"{u} {v}\n" for u, v in edges)
+        seq = sequential(n, edges, vmax)
+        par = parallel(n, edges, vmax, shards)
+        out[f"{stem}.seq.labels"] = "".join(f"{l}\n" for l in seq)
+        out[f"{stem}.par{shards}.labels"] = "".join(f"{l}\n" for l in par)
+        print(
+            f"{stem}: n={n} m={len(edges)} vmax={vmax} shards={shards} "
+            f"communities seq={len(set(seq))} par={len(set(par))}"
+        )
+
+    rnd = random.Random(0x5EED_60_1D)
+    n, edges = gen_sbm(rnd, k=6, size=30, p_in=0.35, p_out=0.01)
+    emit("sbm_k6_s30", "SBM-shaped, 6 blocks x 30 nodes, seed 0x5EED601D", n, edges, 32, 4)
+
+    rnd = random.Random(0x1F2_60_1D)
+    sizes = [50, 35, 25, 18, 13, 9, 6, 4]
+    n, edges = gen_lfr(rnd, sizes, intra_factor=3.0, mu=0.15)
+    emit("lfr_mu015", "LFR-shaped, power-law sizes 50..4, mu=0.15, seed 0x1F2601D", n, edges, 64, 4)
+
+    return out
+
+
+def main():
+    import sys
+
+    self_check()
+    files = artifacts()
+    if "--check" in sys.argv:
+        # CI mode: the committed files must match what this port produces
+        drift = []
+        for name, content in sorted(files.items()):
+            on_disk = (HERE / name).read_text() if (HERE / name).exists() else None
+            if on_disk != content:
+                drift.append(name)
+        if drift:
+            raise SystemExit(
+                f"regen.py --check: committed goldens drifted from the port: {drift} "
+                f"(run regen.py to regenerate, then review the diff)"
+            )
+        print("regen.py: port self-checks passed; committed goldens match")
+        return
+    for name, content in files.items():
+        (HERE / name).write_text(content)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+//! Golden-partition regression tests.
+//!
+//! `rust/tests/golden/` holds committed fixed-seed edge streams
+//! (SBM-shaped and LFR-shaped) together with the expected label vectors
+//! for the sequential run and the sharded batch run. Any change to the
+//! routing core, the merge, the replay order, or the decision rule that
+//! silently alters a partition fails these tests loudly, with a
+//! node-by-node diff.
+//!
+//! The streams are data files, not generator calls, so the goldens are
+//! independent of the in-repo generators and RNG. To regenerate the
+//! expected labels after an *intentional* semantics change, run with
+//! `GOLDEN_REGEN=1` and review the resulting diff:
+//!
+//! ```text
+//! GOLDEN_REGEN=1 cargo test --test golden_partitions
+//! ```
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use streamcom::coordinator::algorithm::cluster_edges;
+use streamcom::coordinator::parallel::{run_parallel, ParallelConfig};
+use streamcom::graph::edge::Edge;
+use streamcom::service::{ClusterService, ServiceConfig};
+
+fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+}
+
+/// A committed golden stream: node count, `v_max`, shard count for the
+/// sharded variant, and the edges in arrival order.
+struct GoldenStream {
+    n: usize,
+    v_max: u64,
+    shards: usize,
+    edges: Vec<Edge>,
+}
+
+fn read_stream(stem: &str) -> GoldenStream {
+    let path = golden_dir().join(format!("{stem}.edges"));
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()));
+    let mut lines = text.lines().filter(|l| !l.trim_start().starts_with('#'));
+    let header = lines.next().expect("missing golden header line");
+    let mut parts = header.split_whitespace();
+    let n: usize = parts.next().expect("header n").parse().expect("header n");
+    let v_max: u64 = parts.next().expect("header v_max").parse().expect("header v_max");
+    let shards: usize = parts.next().expect("header shards").parse().expect("header shards");
+    let edges: Vec<Edge> = lines
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| {
+            let mut it = l.split_whitespace();
+            let u: u32 = it.next().expect("edge u").parse().expect("edge u");
+            let v: u32 = it.next().expect("edge v").parse().expect("edge v");
+            Edge::new(u, v)
+        })
+        .collect();
+    assert!(n > 0 && !edges.is_empty(), "degenerate golden stream {stem}");
+    GoldenStream { n, v_max, shards, edges }
+}
+
+fn labels_path(stem: &str, which: &str) -> PathBuf {
+    golden_dir().join(format!("{stem}.{which}.labels"))
+}
+
+fn read_labels(stem: &str, which: &str) -> Vec<u32> {
+    let path = labels_path(stem, which);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()))
+        .lines()
+        .filter(|l| !l.trim_start().starts_with('#') && !l.trim().is_empty())
+        .map(|l| l.trim().parse().expect("label"))
+        .collect()
+}
+
+fn write_labels(stem: &str, which: &str, labels: &[u32]) {
+    let path = labels_path(stem, which);
+    let mut out = String::with_capacity(labels.len() * 4);
+    for &l in labels {
+        let _ = writeln!(out, "{l}");
+    }
+    std::fs::write(&path, out).unwrap_or_else(|e| panic!("cannot write {}: {e}", path.display()));
+    eprintln!("golden: regenerated {}", path.display());
+}
+
+/// Diff-printing assertion: on mismatch, report how many labels differ
+/// and show the first divergent nodes side by side, so a failure reads
+/// as a partition diff instead of a wall of vector debug output.
+fn assert_labels_match(case: &str, got: &[u32], want: &[u32]) {
+    if got == want {
+        return;
+    }
+    let mut msg = format!("golden mismatch [{case}]: ");
+    if got.len() != want.len() {
+        let _ = writeln!(msg, "length {} != expected {}", got.len(), want.len());
+    }
+    let overlap = got.len().min(want.len());
+    let diffs: Vec<usize> = (0..overlap).filter(|&i| got[i] != want[i]).collect();
+    let _ = writeln!(msg, "{} of {} labels differ", diffs.len(), overlap);
+    let _ = writeln!(msg, "  node | expected | got");
+    for &i in diffs.iter().take(16) {
+        let _ = writeln!(msg, "{i:>6} | {:>8} | {:>6}", want[i], got[i]);
+    }
+    if diffs.len() > 16 {
+        let _ = writeln!(msg, "   ... | ({} more)", diffs.len() - 16);
+    }
+    let _ = write!(
+        msg,
+        "if this change of partition is intentional, regenerate with \
+         GOLDEN_REGEN=1 cargo test --test golden_partitions"
+    );
+    panic!("{msg}");
+}
+
+fn pad(mut labels: Vec<u32>, n: usize) -> Vec<u32> {
+    while labels.len() < n {
+        labels.push(labels.len() as u32);
+    }
+    labels
+}
+
+/// One golden case: sequential and sharded-batch labels must match the
+/// committed vectors, and both service modes (batch preset; frequent
+/// incremental drains) must reproduce the sharded-batch labels
+/// bit-identically.
+fn check_case(stem: &str) {
+    let gs = read_stream(stem);
+    let seq = pad(cluster_edges(gs.n, &gs.edges, gs.v_max), gs.n);
+    let par = pad(
+        run_parallel(gs.n, &gs.edges, &ParallelConfig::new(gs.shards, gs.v_max)).labels(),
+        gs.n,
+    );
+
+    if std::env::var_os("GOLDEN_REGEN").is_some() {
+        write_labels(stem, "seq", &seq);
+        write_labels(stem, &format!("par{}", gs.shards), &par);
+        return;
+    }
+
+    assert_labels_match(
+        &format!("{stem}: sequential"),
+        &seq,
+        &read_labels(stem, "seq"),
+    );
+    assert_labels_match(
+        &format!("{stem}: batch shards={}", gs.shards),
+        &par,
+        &read_labels(stem, &format!("par{}", gs.shards)),
+    );
+
+    // the service IS the batch path: bit-identical in the batch preset…
+    let mut svc = ClusterService::start(ServiceConfig::batch(gs.shards, gs.v_max));
+    svc.push_chunk(&gs.edges);
+    let batch_labels = svc.finish().snapshot.labels_padded(gs.n);
+    assert_labels_match(&format!("{stem}: service batch preset"), &batch_labels, &par);
+
+    // …and under frequent incremental drains, because finish always
+    // runs the terminal full replay
+    let mut cfg = ServiceConfig::new(gs.shards, gs.v_max);
+    cfg.drain_every = 97;
+    cfg.chunk_size = 64;
+    let mut svc = ClusterService::start(cfg);
+    svc.push_chunk(&gs.edges);
+    let drained_labels = svc.finish().snapshot.labels_padded(gs.n);
+    assert_labels_match(
+        &format!("{stem}: service with incremental drains"),
+        &drained_labels,
+        &par,
+    );
+}
+
+#[test]
+fn golden_sbm_stream_partitions_are_stable() {
+    check_case("sbm_k6_s30");
+}
+
+#[test]
+fn golden_lfr_stream_partitions_are_stable() {
+    check_case("lfr_mu015");
+}
+
+#[test]
+fn golden_diff_helper_reports_node_level_diffs() {
+    // the helper itself is part of the contract: a mismatch must name
+    // the diverging nodes
+    let err = std::panic::catch_unwind(|| {
+        assert_labels_match("selftest", &[0, 1, 2, 2], &[0, 1, 1, 2]);
+    })
+    .expect_err("mismatch must panic");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .unwrap_or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()).unwrap());
+    assert!(msg.contains("1 of 4 labels differ"), "{msg}");
+    assert!(msg.contains("GOLDEN_REGEN"), "{msg}");
+}

@@ -1,0 +1,178 @@
+//! Property tests for the unified routing core and the incremental
+//! cross-edge replay, on randomly permuted multigraph streams:
+//!
+//! * **Replay equivalence** — for shards ∈ {1, 2, 4} and drain
+//!   cadences ∈ {1, 7, 64}: the service's final partition under
+//!   incremental drains is bit-identical to the full-buffer replay
+//!   (`run_parallel`, which is the batch preset of the same core), and
+//!   with a single shard both are bit-identical to the single-threaded
+//!   `cluster_edges`.
+//! * **View validity** — every incremental mid-stream snapshot is a
+//!   valid partition: volume conservation `Σ v_k = 2t`, labels in
+//!   node-id space, exact coverage at quiesce points.
+//! * **Replay accounting** — across all drains of a run, each cross
+//!   edge is replayed exactly once by the snapshot path.
+
+use streamcom::coordinator::algorithm::cluster_edges;
+use streamcom::coordinator::parallel::{run_parallel, ParallelConfig};
+use streamcom::graph::edge::Edge;
+use streamcom::service::{ClusterService, ServiceConfig};
+use streamcom::util::proptest::property;
+use streamcom::util::rng::Xoshiro256;
+
+/// Random multigraph edge stream over `size` nodes, in random order.
+fn random_stream(rng: &mut Xoshiro256, size: usize) -> (usize, Vec<Edge>) {
+    let n = size.max(2);
+    let m = size * 4;
+    let mut edges: Vec<Edge> = (0..m)
+        .map(|_| {
+            let u = rng.range(0, n) as u32;
+            let mut v = rng.range(0, n) as u32;
+            if u == v {
+                v = (v + 1) % n as u32;
+            }
+            Edge::new(u, v)
+        })
+        .collect();
+    rng.shuffle(&mut edges);
+    (n, edges)
+}
+
+fn pad(mut labels: Vec<u32>, n: usize) -> Vec<u32> {
+    while labels.len() < n {
+        labels.push(labels.len() as u32);
+    }
+    labels
+}
+
+#[test]
+fn incremental_replay_equals_full_replay_equals_sequential() {
+    property("router replay equivalence", 10, |rng, size| {
+        let (n, edges) = random_stream(rng, size);
+        let v_max = 1 + rng.next_below(200);
+        let seq = pad(cluster_edges(n, &edges, v_max), n);
+
+        for shards in [1usize, 2, 4] {
+            // full-buffer replay: the batch preset (no mid-stream drains)
+            let full = pad(
+                run_parallel(n, &edges, &ParallelConfig::new(shards, v_max)).labels(),
+                n,
+            );
+            if shards == 1 && full != seq {
+                return Err(format!(
+                    "shards=1 batch run diverged from sequential (v_max={v_max})"
+                ));
+            }
+
+            for cadence in [1u64, 7, 64] {
+                let mut cfg = ServiceConfig::new(shards, v_max);
+                cfg.drain_every = cadence;
+                cfg.chunk_size = 1 + rng.next_below(32) as usize;
+                let mut svc = ClusterService::start(cfg);
+                let handle = svc.handle();
+
+                // push in two halves with a quiesce between, so the
+                // incremental leader's frozen state is actually carried
+                // across shard progress, not just across one batch
+                let half = edges.len() / 2;
+                svc.push_chunk(&edges[..half]);
+                let mid = svc.quiesce();
+                if mid.edges() != half as u64 {
+                    return Err(format!(
+                        "shards={shards} cadence={cadence}: quiesce covers {} of {half}",
+                        mid.edges()
+                    ));
+                }
+                if mid.state().total_volume() != 2 * mid.edges() {
+                    return Err(format!(
+                        "shards={shards} cadence={cadence}: mid-stream Σv = {} ≠ 2·{}",
+                        mid.state().total_volume(),
+                        mid.edges()
+                    ));
+                }
+                let nn = mid.state().n();
+                if !mid.labels().iter().all(|&l| (l as usize) < nn) {
+                    return Err(format!(
+                        "shards={shards} cadence={cadence}: label out of range mid-stream"
+                    ));
+                }
+
+                svc.push_chunk(&edges[half..]);
+                // final incremental drain (so the replay accounting
+                // below covers the whole stream), then terminal replay
+                svc.quiesce();
+                let res = svc.finish();
+                let inc = res.snapshot.labels_padded(n);
+                if inc != full {
+                    let diff = inc
+                        .iter()
+                        .zip(&full)
+                        .filter(|(a, b)| a != b)
+                        .count();
+                    return Err(format!(
+                        "shards={shards} cadence={cadence} v_max={v_max}: incremental \
+                         final diverged from full-buffer replay at {diff} nodes"
+                    ));
+                }
+
+                // replay accounting: every cross edge replayed exactly
+                // once by the snapshot path, however many drains ran
+                let s = handle.stats();
+                if s.cross_replayed_total != s.cross_drained {
+                    return Err(format!(
+                        "shards={shards} cadence={cadence}: replayed {} ≠ drained {}",
+                        s.cross_replayed_total, s.cross_drained
+                    ));
+                }
+                if s.cross_drained != s.cross_total {
+                    return Err(format!(
+                        "shards={shards} cadence={cadence}: drained {} ≠ buffered {}",
+                        s.cross_drained, s.cross_total
+                    ));
+                }
+                if shards == 1 && s.cross_total != 0 {
+                    return Err("single shard must never defer an edge".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn drain_cadence_never_changes_edge_accounting() {
+    property("drain cadence accounting", 12, |rng, size| {
+        let (n, edges) = random_stream(rng, size);
+        let _ = n;
+        let cadence = 1 + rng.next_below(32);
+        let mut cfg = ServiceConfig::new(1 + rng.next_below(5) as usize, 64);
+        cfg.drain_every = cadence;
+        cfg.chunk_size = 1 + rng.next_below(16) as usize;
+        let mut svc = ClusterService::start(cfg);
+        svc.push_chunk(&edges);
+        let res = svc.finish();
+        if res.edges_ingested != edges.len() as u64 {
+            return Err(format!(
+                "ingested {} of {} edges (cadence {cadence})",
+                res.edges_ingested,
+                edges.len()
+            ));
+        }
+        if res.snapshot.local_edges + res.snapshot.cross_edges != edges.len() as u64 {
+            return Err(format!(
+                "local {} + cross {} ≠ {} (cadence {cadence})",
+                res.snapshot.local_edges,
+                res.snapshot.cross_edges,
+                edges.len()
+            ));
+        }
+        if res.state().total_volume() != 2 * edges.len() as u64 {
+            return Err(format!(
+                "Σv = {} ≠ 2·{} (cadence {cadence})",
+                res.state().total_volume(),
+                edges.len()
+            ));
+        }
+        Ok(())
+    });
+}

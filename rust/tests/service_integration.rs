@@ -1,7 +1,10 @@
 //! Service semantics end-to-end: snapshot-during-ingest validity,
-//! backpressure (block, never drop), and detection-quality parity with
-//! the batch parallel coordinator on the Table 2 parity workload —
-//! same workload shape and tolerances as `parallel_parity.rs`.
+//! backpressure (block, never drop), incremental-drain accounting
+//! (each cross edge replayed exactly once by the snapshot path), a
+//! worst-case mailbox-capacity-1 stress run against the unified
+//! router, and detection-quality parity with the batch coordinator on
+//! the Table 2 parity workload — same workload shape and tolerances as
+//! `parallel_parity.rs`.
 
 use streamcom::coordinator::algorithm::cluster_edges;
 use streamcom::coordinator::parallel::{run_parallel, ParallelConfig};
@@ -121,6 +124,117 @@ fn tiny_mailboxes_backpressure_without_losing_edges() {
     for &peak in &stats.queue_peaks {
         assert!(peak <= 1, "peaks={:?}", stats.queue_peaks);
     }
+}
+
+#[test]
+fn drain_work_is_proportional_to_new_cross_edges() {
+    // the acceptance criterion for the incremental leader: across any
+    // number of drains, the snapshot path replays every cross edge
+    // exactly once — per-drain work is O(cross since last drain), not
+    // O(all cross so far)
+    let g = sbm::generate(&SbmConfig::equal(10, 50, 0.3, 0.002, 57));
+    let drain_every = 500u64;
+    let mut cfg = ServiceConfig::new(4, 64);
+    cfg.chunk_size = 64;
+    cfg.drain_every = drain_every;
+    let mut svc = ClusterService::start(cfg);
+    let handle = svc.handle();
+
+    svc.push_chunk(&g.edges.edges);
+    svc.quiesce();
+    let s = handle.stats();
+
+    let expected_drains = g.m() as u64 / drain_every;
+    assert!(
+        s.drains > expected_drains,
+        "expected > {expected_drains} automatic drains + quiesce, saw {}",
+        s.drains
+    );
+    // everything buffered has been integrated...
+    assert_eq!(s.cross_pending, 0);
+    assert_eq!(s.cross_drained, s.cross_total);
+    // ...and the total replay work equals the number of distinct cross
+    // edges: the old full-buffer drain would have replayed
+    // ~drains × cross/2 edges here
+    assert_eq!(
+        s.cross_replayed_total, s.cross_drained,
+        "snapshot drains must replay each cross edge exactly once"
+    );
+    // no single drain can replay more than one cadence interval's worth
+    assert!(
+        s.cross_replayed_last_drain <= drain_every,
+        "last drain replayed {} > cadence {drain_every}",
+        s.cross_replayed_last_drain
+    );
+
+    // and the mid-stream drains must not have perturbed the final
+    // partition: finish runs the terminal full replay
+    let res = svc.finish();
+    let par = run_parallel(g.n(), &g.edges.edges, &ParallelConfig::new(4, 64));
+    assert_eq!(res.snapshot.labels_padded(g.n()), par.labels());
+}
+
+#[test]
+fn unified_router_survives_capacity_one_mailboxes() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    // worst-case backpressure: every dispatch is a 1-edge chunk into a
+    // depth-1 mailbox, with frequent automatic drains and two query
+    // threads forcing extra drains concurrently. The run must not
+    // deadlock, must not drop edges, and must keep the conservation
+    // invariants — and the final partition must still be bit-identical
+    // to the batch coordinator.
+    let g = sbm::generate(&SbmConfig::equal(6, 30, 0.35, 0.01, 61));
+    let mut cfg = ServiceConfig::new(4, 64);
+    cfg.mailbox_depth = 1;
+    cfg.chunk_size = 1;
+    cfg.drain_every = 17;
+    let mut svc = ClusterService::start(cfg);
+    let handle = svc.handle();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let readers: Vec<_> = (0..2)
+        .map(|_| {
+            let handle = handle.clone();
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut snapshots = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let snap = handle.refresh();
+                    // every mid-stream view is a valid partition
+                    assert_eq!(snap.state().total_volume(), 2 * snap.edges());
+                    let _ = handle.stats();
+                    snapshots += 1;
+                }
+                snapshots
+            })
+        })
+        .collect();
+
+    svc.push_chunk(&g.edges.edges);
+    let snap = svc.quiesce();
+    assert_eq!(snap.edges(), g.m() as u64, "quiesce must cover the pushed prefix");
+
+    stop.store(true, Ordering::Relaxed);
+    for r in readers {
+        let snapshots = r.join().expect("reader panicked");
+        assert!(snapshots > 0);
+    }
+
+    let stats = handle.stats();
+    for &peak in &stats.queue_peaks {
+        assert!(peak <= 1, "depth-1 mailbox exceeded: {:?}", stats.queue_peaks);
+    }
+    assert_eq!(stats.cross_replayed_total, stats.cross_drained);
+
+    let res = svc.finish();
+    assert_eq!(res.edges_ingested, g.m() as u64, "no edge may be dropped");
+    assert_eq!(res.snapshot.edges(), g.m() as u64);
+    assert_eq!(res.state().total_volume(), 2 * g.m() as u64);
+
+    let par = run_parallel(g.n(), &g.edges.edges, &ParallelConfig::new(4, 64));
+    assert_eq!(res.snapshot.labels_padded(g.n()), par.labels());
 }
 
 #[test]
