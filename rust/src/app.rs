@@ -21,7 +21,7 @@ use streamcom::graph::generators::sbm::{self, SbmConfig};
 use streamcom::graph::generators::{lfr, GeneratedGraph};
 use streamcom::graph::io;
 use streamcom::metrics;
-use streamcom::service::{ClusterService, ServiceConfig};
+use streamcom::service::{ClusterService, CommitHorizon, ServiceConfig};
 use streamcom::stream::meter::Meter;
 use streamcom::util::cli::Args;
 
@@ -55,6 +55,9 @@ COMMANDS:
                --vmax <u64>         threshold parameter [default 64]
                --shards <k>         shard workers [default 4]
                --drain-every <t>    edges between snapshot refreshes [default 65536, 0 = off]
+               --horizon <edges>    commit horizon: drained cross edges this far behind
+                                    the log head become final and their storage is freed,
+                                    bounding memory (0 = unbounded, exact batch parity)
                --pace <e/s>         throttle ingest, edges/s (0 = full speed)
                queries: '? <node>' community, 'top <k>' largest, 'stats', 'q'
                --dynamic            legacy event mode ('+ u v' insert,
@@ -252,9 +255,25 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         }
         "memory" => {
             let graphs = workloads::load_all(scale, None, true);
+            // service columns: what the sharded service additionally
+            // retains for deferred cross-edge replay, with and without
+            // a commit horizon (the horizon bounds it regardless of |E|)
+            let shards = 4u64;
+            let horizon = 1_000_000u64;
             let mut t = report::Table::new(
-                &format!("Memory (§4.4, scale {scale})"),
-                &["dataset", "|V|", "|E|", "edge list", "STR sketch", "ratio"],
+                &format!(
+                    "Memory (§4.4, scale {scale}; x-log columns: {shards}-shard service)"
+                ),
+                &[
+                    "dataset",
+                    "|V|",
+                    "|E|",
+                    "edge list",
+                    "STR sketch",
+                    "ratio",
+                    "x-log unbounded",
+                    "x-log h=1M",
+                ],
             );
             for g in &graphs {
                 let el = memory::edge_list_bytes(g.m() as u64);
@@ -266,6 +285,15 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
                     memory::fmt_bytes(el),
                     memory::fmt_bytes(sk),
                     format!("{:.1}x", el as f64 / sk as f64),
+                    memory::fmt_bytes(memory::cross_log_unbounded_bytes(
+                        g.m() as u64,
+                        shards,
+                    )),
+                    memory::fmt_bytes(memory::cross_log_bounded_bytes(
+                        g.m() as u64,
+                        shards,
+                        horizon,
+                    )),
                 ]);
             }
             println!("{}", t.render());
@@ -304,6 +332,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 
     let mut config = ServiceConfig::new(shards, v_max);
     config.drain_every = args.u64_or("drain-every", 65_536).map_err(|e| e.to_string())?;
+    config.horizon = match args.u64_or("horizon", 0).map_err(|e| e.to_string())? {
+        0 => CommitHorizon::Unbounded,
+        h => CommitHorizon::Edges(h),
+    };
     let mut service = ClusterService::start(config);
     let queries = service.handle();
     println!(
@@ -384,8 +416,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                 println!(
                     "shards={} ingested={} ({:.2} Medges/s) snapshot_lag={} \
                      drains={} replay_last={} replay_total={} \
-                     cross drained/pending={}/{} queues={:?} peaks={:?} \
-                     sketch={} B ({:.1} B/node)",
+                     cross drained/pending={}/{} \
+                     x-log retained={} committed={} freed={} \
+                     queues={:?} peaks={:?} sketch={} B ({:.1} B/node)",
                     s.shards,
                     s.edges_ingested,
                     s.edges_per_sec / 1e6,
@@ -395,6 +428,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                     s.cross_replayed_total,
                     s.cross_drained,
                     s.cross_pending,
+                    s.cross_retained,
+                    s.cross_committed,
+                    memory::fmt_bytes(s.cross_freed_bytes),
                     s.queue_depths,
                     s.queue_peaks,
                     s.memory_bytes,

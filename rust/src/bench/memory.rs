@@ -18,6 +18,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub const BYTES_PER_EDGE_STORED: u64 = 16;
 /// STR sketch: degree u32 + community u32 + volume u64.
 pub const BYTES_PER_NODE_SKETCH: u64 = 16;
+/// Cross-log retained edge: two dense u32 node ids (`graph::edge::Edge`).
+pub const BYTES_PER_CROSS_EDGE_RETAINED: u64 = 8;
+/// Frozen decision record (endpoint + community, both u32); the cross
+/// log keeps two per drained edge while a bounded commit horizon is
+/// active, freed together with the edges when the epoch commits.
+pub const BYTES_PER_FROZEN_DECISION: u64 = 8;
 
 /// Analytic footprint of storing the edge list (all baselines' floor).
 pub fn edge_list_bytes(m: u64) -> u64 {
@@ -27,6 +33,45 @@ pub fn edge_list_bytes(m: u64) -> u64 {
 /// Analytic footprint of the streaming sketch.
 pub fn sketch_bytes(n: u64) -> u64 {
     n * BYTES_PER_NODE_SKETCH
+}
+
+/// Expected cross-shard edge fraction under uniform hash-sharding:
+/// `1 − 1/shards` of the stream defers to the cross log.
+pub fn expected_cross_fraction(shards: u64) -> f64 {
+    1.0 - 1.0 / shards.max(1) as f64
+}
+
+/// Resident bytes of a cross log holding `retained_edges` edges and
+/// `frozen_entries` frozen decision records.
+pub fn cross_log_bytes(retained_edges: u64, frozen_entries: u64) -> u64 {
+    retained_edges * BYTES_PER_CROSS_EDGE_RETAINED
+        + frozen_entries * BYTES_PER_FROZEN_DECISION
+}
+
+/// Service cross-log footprint on an `m`-edge stream over `shards`
+/// workers with an **unbounded** commit horizon: the whole expected
+/// cross fraction stays resident until `finish` (no frozen records are
+/// kept — nothing ever commits).
+pub fn cross_log_unbounded_bytes(m: u64, shards: u64) -> u64 {
+    let cross = (m as f64 * expected_cross_fraction(shards)) as u64;
+    cross_log_bytes(cross, 0)
+}
+
+/// Service cross-log footprint with commit horizon `h` (cross edges):
+/// retention is capped at `h` plus one epoch regardless of `m`, with
+/// two frozen decision records per retained drained edge — the
+/// Table-2-style figure that shows the bound. The epoch slack mirrors
+/// `service::crosslog::epoch_len_for`. `h = 0` follows the CLI's
+/// "0 = unbounded" convention and returns the unbounded figure.
+pub fn cross_log_bounded_bytes(m: u64, shards: u64, h: u64) -> u64 {
+    let horizon = crate::service::CommitHorizon::Edges(h).normalized();
+    if horizon.is_unbounded() {
+        return cross_log_unbounded_bytes(m, shards);
+    }
+    let cross = (m as f64 * expected_cross_fraction(shards)) as u64;
+    let epoch = crate::service::crosslog::epoch_len_for(horizon);
+    let retained = cross.min(h + epoch);
+    cross_log_bytes(retained, 2 * retained)
 }
 
 /// Human-readable bytes.
@@ -149,6 +194,49 @@ mod tests {
         let sketch = sketch_bytes(65_608_366);
         let edges = edge_list_bytes(1_806_067_135);
         assert!(sketch * 20 < edges);
+    }
+
+    #[test]
+    fn bounded_cross_log_is_independent_of_stream_length() {
+        // Friendster-scale stream, 4 shards: unbounded retention tracks
+        // the cross fraction (~75% of 1.8B edges), the bounded log stays
+        // at h + one epoch whatever m is
+        let m = 1_806_067_135u64;
+        let unbounded = cross_log_unbounded_bytes(m, 4);
+        assert!(unbounded > 10_000_000_000, "{unbounded}");
+        let h = 1_000_000u64;
+        let bounded = cross_log_bounded_bytes(m, 4, h);
+        assert_eq!(bounded, cross_log_bounded_bytes(10 * m, 4, h));
+        // h + one epoch edges, 8 B each + two 8 B frozen records
+        let epoch = crate::service::crosslog::epoch_len_for(
+            crate::service::CommitHorizon::Edges(h),
+        );
+        assert_eq!(bounded, (h + epoch) * (8 + 16));
+        assert!(bounded * 100 < unbounded, "bound must dominate at scale");
+    }
+
+    #[test]
+    fn zero_horizon_estimate_follows_the_unbounded_convention() {
+        // the CLI's --horizon 0 means unbounded; the estimator must not
+        // report a tiny capped figure for it
+        let m = 1_806_067_135u64;
+        assert_eq!(
+            cross_log_bounded_bytes(m, 4, 0),
+            cross_log_unbounded_bytes(m, 4)
+        );
+    }
+
+    #[test]
+    fn short_streams_never_exceed_their_own_cross_fraction() {
+        // when the stream is smaller than the horizon, retention is just
+        // the cross fraction — the cap never inflates the estimate
+        let m = 1_000u64;
+        assert_eq!(
+            cross_log_bounded_bytes(m, 4, 1_000_000),
+            cross_log_bytes(750, 1500)
+        );
+        assert_eq!(expected_cross_fraction(1), 0.0);
+        assert_eq!(expected_cross_fraction(4), 0.75);
     }
 
     #[test]

@@ -23,6 +23,15 @@
 //! replay — one code path for every execution mode, which is what
 //! makes "service ≡ batch" true by construction rather than by test.
 //!
+//! **Contract:** the batch preset pins the cross-edge log's commit
+//! horizon to `CommitHorizon::Unbounded`. Batch semantics *are* the
+//! full-history terminal replay — every cross edge is re-decided
+//! against the final shard sketches — so the preset must never let the
+//! service's bounded-memory mode (`CommitHorizon::Edges`, which makes
+//! old drained cross decisions final and frees their storage) leak into
+//! `run_parallel`. The golden suite and the `horizon ≥ stream length ≡
+//! Unbounded ≡ batch` property pin this equivalence.
+//!
 //! This is *deferred cross-edge resolution*: intra-shard edges see
 //! exactly the sequential algorithm; cross-shard edges are processed
 //! late, as if they had arrived at the end of the stream. Under the
@@ -95,10 +104,11 @@ impl ParallelResult {
 }
 
 /// Run the batch coordinator over an in-memory stream: the service in
-/// its batch preset. Edges are routed through the shared core
+/// its batch preset (automatic drains off, commit horizon pinned
+/// unbounded). Edges are routed through the shared core
 /// (`service::router`), `shards` workers consume their mailboxes
 /// concurrently, and `finish` merges the worker sketches and replays
-/// the cross edges in arrival order.
+/// **all** cross edges in arrival order.
 pub fn run_parallel(n: usize, edges: &[Edge], config: &ParallelConfig) -> ParallelResult {
     let mut cfg = ServiceConfig::batch(config.shards.max(1), config.str_config.v_max);
     cfg.str_config = config.str_config.clone();

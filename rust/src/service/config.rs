@@ -9,6 +9,60 @@
 
 use crate::coordinator::algorithm::StrConfig;
 
+/// Finality policy for the service's epoch-structured cross-edge log
+/// (`service::crosslog`).
+///
+/// Cross-shard edges are buffered for deferred replay. The horizon
+/// decides how long they stay resident:
+///
+/// * [`Unbounded`](CommitHorizon::Unbounded) — every cross edge is
+///   retained until [`finish`](crate::service::ClusterService::finish),
+///   whose terminal replay re-decides the **whole** history against the
+///   final shard sketches. The final partition is bit-identical to the
+///   batch coordinator and independent of the drain cadence — exactly
+///   the semantics the golden and property suites pin. Memory grows
+///   with the cross fraction of the stream.
+/// * [`Edges(h)`](CommitHorizon::Edges) — once a sealed epoch of the
+///   cross log falls more than `h` cross edges behind the head *and*
+///   its edges have been drained, its replay decisions become **final**:
+///   their frozen degree/community effects are folded into the leader's
+///   persistent committed base and the epoch's storage is freed.
+///   Retained cross-edge memory is then bounded by `h` plus one epoch,
+///   at the cost of exact batch parity: `finish` replays only the
+///   uncommitted tail over the committed base, so the final partition
+///   can differ (bounded in practice — the golden-stream suite asserts
+///   modularity within 2% of the unbounded run). Mid-stream decisions
+///   depend on when drains happen, so a bounded horizon is also not
+///   drain-cadence independent.
+///
+/// `Edges(0)` is normalised to `Unbounded` at service start-up
+/// (mirroring the CLI's `0 = disabled` convention for `--horizon`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CommitHorizon {
+    /// Retain all cross edges; terminal replay covers the full history
+    /// (bit-identical to batch, drain-cadence independent). The default.
+    #[default]
+    Unbounded,
+    /// Cross edges more than this many cross edges behind the log head
+    /// become final once drained; their storage is freed.
+    Edges(u64),
+}
+
+impl CommitHorizon {
+    /// True when no cross edge is ever committed early.
+    pub fn is_unbounded(&self) -> bool {
+        matches!(self, CommitHorizon::Unbounded)
+    }
+
+    /// Map the CLI convention `Edges(0)` onto `Unbounded`.
+    pub(crate) fn normalized(self) -> Self {
+        match self {
+            CommitHorizon::Edges(0) => CommitHorizon::Unbounded,
+            other => other,
+        }
+    }
+}
+
 /// Configuration for a [`crate::service::ClusterService`].
 ///
 /// ```
@@ -36,6 +90,10 @@ pub struct ServiceConfig {
     /// disables automatic drains (snapshots then only refresh on
     /// demand).
     pub drain_every: u64,
+    /// Finality policy for the cross-edge log: how far behind the log
+    /// head a drained epoch may fall before its decisions are committed
+    /// and its edge storage freed. See [`CommitHorizon`].
+    pub horizon: CommitHorizon,
 }
 
 impl ServiceConfig {
@@ -48,16 +106,21 @@ impl ServiceConfig {
             mailbox_depth: 8,
             chunk_size: 4_096,
             drain_every: 262_144,
+            horizon: CommitHorizon::Unbounded,
         }
     }
 
     /// Batch preset: automatic drains disabled, so the terminal replay
     /// in `ClusterService::finish` is the only merge — exactly the
     /// one-shot semantics of `coordinator::parallel::run_parallel`,
-    /// which is implemented as this preset over the service.
+    /// which is implemented as this preset over the service. The
+    /// horizon is pinned to [`CommitHorizon::Unbounded`]: batch
+    /// semantics *are* the full-history terminal replay, so a bounded
+    /// horizon would change what `run_parallel` means.
     pub fn batch(shards: usize, v_max: u64) -> Self {
         let mut cfg = Self::new(shards, v_max);
         cfg.drain_every = 0; // 0 = disabled (normalised at start-up)
+        cfg.horizon = CommitHorizon::Unbounded;
         cfg
     }
 }
@@ -92,5 +155,26 @@ mod tests {
         assert_eq!(cfg.drain_every, 0);
         assert_eq!(cfg.shards, 4);
         assert_eq!(cfg.str_config.v_max, 64);
+    }
+
+    #[test]
+    fn batch_preset_pins_unbounded_horizon() {
+        // batch ≡ full-history terminal replay; a bounded horizon would
+        // silently change run_parallel's semantics
+        assert!(ServiceConfig::batch(4, 64).horizon.is_unbounded());
+        assert!(ServiceConfig::default().horizon.is_unbounded());
+    }
+
+    #[test]
+    fn zero_edge_horizon_normalises_to_unbounded() {
+        assert_eq!(
+            CommitHorizon::Edges(0).normalized(),
+            CommitHorizon::Unbounded
+        );
+        assert_eq!(
+            CommitHorizon::Edges(7).normalized(),
+            CommitHorizon::Edges(7)
+        );
+        assert!(!CommitHorizon::Edges(7).is_unbounded());
     }
 }

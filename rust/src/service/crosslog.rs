@@ -1,0 +1,426 @@
+//! The epoch-structured cross-edge log.
+//!
+//! Cross-shard edges cannot be decided when they arrive (their decision
+//! needs both shards' community state), so the router defers them. This
+//! module is where they wait — and, under a bounded
+//! [`CommitHorizon`], where they *stop* waiting:
+//!
+//! * Edges append to the **open epoch**; when the open epoch reaches
+//!   `epoch_len` edges it is **sealed** and a fresh open epoch starts.
+//!   Sealing happens inside `append`, i.e. on the router's chunk
+//!   boundaries — the log never splits a decision's bookkeeping across
+//!   epochs retroactively.
+//! * Drains replay the suffix past the leader's cursor and (under a
+//!   bounded horizon) record each replayed edge's **frozen decision**
+//!   — `(endpoint, post-decision community)` pairs — back into the
+//!   owning epoch.
+//! * An epoch whose end is more than `horizon` cross edges behind the
+//!   log head, and whose edges have all been drained, is **committable**:
+//!   the leader folds its frozen decisions into the persistent
+//!   committed base (`snapshot::LeaderState::commit_epoch`) and the
+//!   epoch — edges and frozen records — is dropped, freeing its memory.
+//!
+//! Lifecycle of one epoch:
+//!
+//! ```text
+//! open ──(epoch_len edges)──▶ sealed ──(drain replays; decisions
+//!      frozen)──▶ drained ──(head moves ≥ horizon past end)──▶
+//!      committed: fold frozen effects into the committed base, FREE
+//! ```
+//!
+//! With [`CommitHorizon::Unbounded`] nothing is ever committed and no
+//! frozen records are kept: the log is the old retained buffer, split
+//! into epochs, and `finish` replays all of it — bit-identical to the
+//! batch coordinator. With [`CommitHorizon::Edges(h)`](CommitHorizon::Edges)
+//! retained memory is bounded by `h + epoch_len` edges (each retained
+//! edge costs [`BYTES_PER_EDGE`], plus [`BYTES_PER_FROZEN_ENTRY`] per
+//! endpoint once drained), independent of the stream length.
+
+use std::collections::VecDeque;
+
+use crate::graph::edge::Edge;
+
+use super::config::CommitHorizon;
+
+/// Bytes per retained cross edge (two dense `u32` node ids).
+pub(crate) const BYTES_PER_EDGE: u64 = std::mem::size_of::<Edge>() as u64;
+/// Bytes per frozen decision record (endpoint id + community id); two
+/// records per drained edge, kept only under a bounded horizon.
+pub(crate) const BYTES_PER_FROZEN_ENTRY: u64 = 8;
+
+/// A frozen replay decision: `(endpoint, post-decision community)`.
+/// `UNSEEN` as the community marks a skipped (self-loop) slot.
+pub(crate) type FrozenDecision = (u32, u32);
+
+/// Epoch length for a horizon: fine enough that the `h + epoch_len`
+/// retention bound stays close to `h`, coarse enough that commits are
+/// amortised. Unbounded logs use a fixed coarse epoch (they only need
+/// epochs for accounting — nothing ever commits).
+pub(crate) fn epoch_len_for(horizon: CommitHorizon) -> u64 {
+    const UNBOUNDED_EPOCH_LEN: u64 = 65_536;
+    match horizon {
+        CommitHorizon::Unbounded => UNBOUNDED_EPOCH_LEN,
+        CommitHorizon::Edges(h) => (h / 4).clamp(1, UNBOUNDED_EPOCH_LEN),
+    }
+}
+
+/// One epoch of the log. Fields are read by the leader at commit time.
+pub(crate) struct Epoch {
+    /// Global index (in the append-ordered cross stream) of this
+    /// epoch's first edge.
+    start: u64,
+    /// The epoch's edges, in arrival order.
+    edges: Vec<Edge>,
+    /// Sealed epochs accept no more edges.
+    sealed: bool,
+    /// Frozen decisions, two per drained edge, in replay order.
+    /// Populated only under a bounded horizon.
+    frozen: Vec<FrozenDecision>,
+}
+
+impl Epoch {
+    fn new(start: u64) -> Self {
+        Self { start, edges: Vec::new(), sealed: false, frozen: Vec::new() }
+    }
+
+    /// Global index one past this epoch's last edge.
+    fn end(&self) -> u64 {
+        self.start + self.edges.len() as u64
+    }
+
+    /// Frozen decisions for the leader's commit fold.
+    pub(crate) fn frozen(&self) -> &[FrozenDecision] {
+        &self.frozen
+    }
+
+    fn bytes(&self) -> u64 {
+        self.edges.len() as u64 * BYTES_PER_EDGE
+            + self.frozen.len() as u64 * BYTES_PER_FROZEN_ENTRY
+    }
+}
+
+/// The log: a deque of epochs (committed ones are gone, the last one is
+/// open) plus the commit cursor and byte accounting. Lives in the
+/// service's shared state behind a mutex; the lock order everywhere is
+/// leader → crosslog.
+pub(crate) struct CrossLog {
+    horizon: CommitHorizon,
+    epoch_len: u64,
+    /// Uncommitted epochs, oldest first; the last is the open epoch.
+    epochs: VecDeque<Epoch>,
+    /// Global index of the first retained edge: everything before it
+    /// has been folded into the committed base and freed.
+    committed: u64,
+    /// Total cross edges ever appended (the log head).
+    appended: u64,
+    epochs_sealed: u64,
+    epochs_committed: u64,
+    /// Bytes released by committed epochs (edges + frozen records).
+    freed_bytes: u64,
+}
+
+impl CrossLog {
+    pub(crate) fn new(horizon: CommitHorizon) -> Self {
+        let horizon = horizon.normalized();
+        let mut epochs = VecDeque::new();
+        epochs.push_back(Epoch::new(0));
+        Self {
+            horizon,
+            epoch_len: epoch_len_for(horizon),
+            epochs,
+            committed: 0,
+            appended: 0,
+            epochs_sealed: 0,
+            epochs_committed: 0,
+            freed_bytes: 0,
+        }
+    }
+
+    /// Append a router chunk, sealing the open epoch at `epoch_len`
+    /// boundaries. Drains (and clears) `batch`.
+    pub(crate) fn append(&mut self, batch: &mut Vec<Edge>) {
+        let mut rest: &[Edge] = batch;
+        while !rest.is_empty() {
+            let take = {
+                let open = self.epochs.back_mut().expect("open epoch");
+                debug_assert!(!open.sealed, "appending into a sealed epoch");
+                let room = (self.epoch_len as usize)
+                    .saturating_sub(open.edges.len())
+                    .min(rest.len());
+                open.edges.extend_from_slice(&rest[..room]);
+                room
+            };
+            self.appended += take as u64;
+            rest = &rest[take..];
+            if self.epochs.back().expect("open epoch").edges.len() as u64 >= self.epoch_len {
+                self.epochs.back_mut().expect("open epoch").sealed = true;
+                self.epochs_sealed += 1;
+                let head = self.appended;
+                self.epochs.push_back(Epoch::new(head));
+            }
+        }
+        batch.clear();
+    }
+
+    /// Copy of the retained suffix `[cursor, head)` in arrival order
+    /// (the drain and terminal-replay input). `cursor` must not point
+    /// into committed (freed) territory.
+    pub(crate) fn suffix_from(&self, cursor: u64) -> Vec<Edge> {
+        debug_assert!(
+            cursor >= self.committed,
+            "cursor {cursor} points into committed prefix {}",
+            self.committed
+        );
+        let mut out = Vec::with_capacity(self.appended.saturating_sub(cursor) as usize);
+        for ep in &self.epochs {
+            if ep.end() <= cursor {
+                continue;
+            }
+            let skip = cursor.saturating_sub(ep.start) as usize;
+            out.extend_from_slice(&ep.edges[skip..]);
+        }
+        out
+    }
+
+    /// True when drains must hand frozen decision records back to the
+    /// log (bounded horizon only — an unbounded log never commits, so
+    /// recording would be pure overhead).
+    pub(crate) fn wants_frozen(&self) -> bool {
+        !self.horizon.is_unbounded()
+    }
+
+    /// Attach frozen decisions for the just-replayed edges
+    /// `[start, start + records.len()/2)` to their owning epochs.
+    /// `records` holds exactly two entries per edge, in replay order.
+    pub(crate) fn record_frozen(&mut self, start: u64, records: &[FrozenDecision]) {
+        if !self.wants_frozen() || records.is_empty() {
+            return;
+        }
+        debug_assert_eq!(records.len() % 2, 0, "two frozen records per edge");
+        let mut cursor = start;
+        let mut rest = records;
+        for ep in self.epochs.iter_mut() {
+            if rest.is_empty() {
+                break;
+            }
+            if ep.end() <= cursor {
+                continue;
+            }
+            debug_assert!(
+                cursor >= ep.start,
+                "frozen records skipped an epoch: cursor {cursor} < start {}",
+                ep.start
+            );
+            let edges_here = ((ep.end() - cursor) as usize).min(rest.len() / 2);
+            ep.frozen.extend_from_slice(&rest[..edges_here * 2]);
+            rest = &rest[edges_here * 2..];
+            cursor += edges_here as u64;
+        }
+        debug_assert!(rest.is_empty(), "frozen records past the log head");
+    }
+
+    /// Pop every epoch whose decisions are final: sealed, fully drained
+    /// (`drained` = the leader's replay cursor), and at least `horizon`
+    /// cross edges behind the head. The caller folds each returned
+    /// epoch's frozen decisions into the committed base, then drops it —
+    /// that drop is the memory bound. Always empty under
+    /// [`CommitHorizon::Unbounded`].
+    pub(crate) fn take_committable(&mut self, drained: u64) -> Vec<Epoch> {
+        let CommitHorizon::Edges(h) = self.horizon else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        while let Some(ep) = self.epochs.front() {
+            let behind_horizon = self.appended - ep.end() >= h;
+            if !(ep.sealed && ep.end() <= drained && behind_horizon) {
+                break;
+            }
+            let ep = self.epochs.pop_front().expect("front epoch");
+            debug_assert_eq!(
+                ep.frozen.len(),
+                ep.edges.len() * 2,
+                "committing an epoch with incomplete frozen records"
+            );
+            self.committed = ep.end();
+            self.epochs_committed += 1;
+            self.freed_bytes += ep.bytes();
+            out.push(ep);
+        }
+        out
+    }
+
+    /// Total cross edges ever appended (the log head).
+    pub(crate) fn appended(&self) -> u64 {
+        self.appended
+    }
+
+    /// Edges committed (folded into the base and freed). Because the
+    /// committed region is a prefix, this is also the global index of
+    /// the first retained edge.
+    pub(crate) fn committed_edges(&self) -> u64 {
+        self.committed
+    }
+
+    /// Edges currently resident in the log.
+    pub(crate) fn retained_edges(&self) -> u64 {
+        self.appended - self.committed
+    }
+
+    /// Resident bytes: retained edges plus their frozen records.
+    pub(crate) fn retained_bytes(&self) -> u64 {
+        self.epochs.iter().map(Epoch::bytes).sum()
+    }
+
+    /// Bytes released by committed epochs so far.
+    pub(crate) fn freed_bytes(&self) -> u64 {
+        self.freed_bytes
+    }
+
+    /// Edges per epoch (the `+ one epoch` term of the retention bound).
+    pub(crate) fn epoch_len(&self) -> u64 {
+        self.epoch_len
+    }
+
+    /// Epochs sealed so far.
+    pub(crate) fn epochs_sealed(&self) -> u64 {
+        self.epochs_sealed
+    }
+
+    /// Epochs committed (and freed) so far.
+    pub(crate) fn epochs_committed(&self) -> u64 {
+        self.epochs_committed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn edges(range: std::ops::Range<u32>) -> Vec<Edge> {
+        range.map(|i| Edge::new(i, i + 1)).collect()
+    }
+
+    #[test]
+    fn appends_seal_epochs_on_chunk_boundaries() {
+        // horizon 8 → epoch_len 2
+        let mut log = CrossLog::new(CommitHorizon::Edges(8));
+        assert_eq!(log.epoch_len(), 2);
+        let mut batch = edges(0..5);
+        log.append(&mut batch);
+        assert!(batch.is_empty(), "append must drain the chunk");
+        assert_eq!(log.appended(), 5);
+        assert_eq!(log.epochs_sealed(), 2); // [0,2) and [2,4) sealed; [4,..) open
+        assert_eq!(log.retained_edges(), 5);
+        assert_eq!(log.suffix_from(0), edges(0..5));
+        assert_eq!(log.suffix_from(3), edges(3..5));
+    }
+
+    #[test]
+    fn unbounded_log_never_commits_and_keeps_no_frozen_records() {
+        let mut log = CrossLog::new(CommitHorizon::Unbounded);
+        log.append(&mut edges(0..100));
+        assert!(!log.wants_frozen());
+        log.record_frozen(0, &[(0, 0); 200]); // must be a no-op
+        assert!(log.take_committable(100).is_empty());
+        assert_eq!(log.retained_edges(), 100);
+        assert_eq!(log.committed_edges(), 0);
+        assert_eq!(log.freed_bytes(), 0);
+        assert_eq!(log.retained_bytes(), 100 * BYTES_PER_EDGE);
+    }
+
+    #[test]
+    fn zero_horizon_is_unbounded() {
+        let log = CrossLog::new(CommitHorizon::Edges(0));
+        assert!(!log.wants_frozen());
+    }
+
+    #[test]
+    fn commit_requires_sealed_drained_and_behind_horizon() {
+        // epoch_len 2, horizon 8
+        let mut log = CrossLog::new(CommitHorizon::Edges(8));
+        log.append(&mut edges(0..4)); // epochs [0,2) and [2,4) sealed
+
+        // drained but not behind the horizon → nothing commits
+        let frozen: Vec<FrozenDecision> = (0..4).flat_map(|i| [(i, 0), (i + 1, 0)]).collect();
+        log.record_frozen(0, &frozen);
+        assert!(log.take_committable(4).is_empty());
+
+        // move the head 8 past epoch [0,2)'s end, drain everything
+        log.append(&mut edges(4..10)); // head = 10; 10 - 2 = 8 ≥ h
+        let frozen: Vec<FrozenDecision> = (4..10).flat_map(|i| [(i, 0), (i + 1, 0)]).collect();
+        log.record_frozen(4, &frozen);
+        let committed = log.take_committable(10);
+        assert_eq!(committed.len(), 1, "exactly epoch [0,2) is behind the horizon");
+        assert_eq!(committed[0].frozen().len(), 4);
+        assert_eq!(log.committed_edges(), 2);
+        assert_eq!(log.retained_edges(), 8);
+        assert_eq!(
+            log.freed_bytes(),
+            2 * BYTES_PER_EDGE + 4 * BYTES_PER_FROZEN_ENTRY
+        );
+        assert_eq!(log.epochs_committed(), 1);
+        // the suffix past the commit point is intact
+        assert_eq!(log.suffix_from(2), edges(2..10));
+    }
+
+    #[test]
+    fn undrained_epochs_never_commit() {
+        let mut log = CrossLog::new(CommitHorizon::Edges(4)); // epoch_len 1
+        log.append(&mut edges(0..10));
+        // head is far past every early epoch, but nothing was drained
+        assert!(log.take_committable(0).is_empty());
+        // drain only the first 3 edges → only epochs ending ≤ 3 AND
+        // ≥ 4 behind the head (end ≤ 6) qualify → epochs [0,1),[1,2),[2,3)
+        let frozen: Vec<FrozenDecision> = (0..3).flat_map(|i| [(i, 0), (i + 1, 0)]).collect();
+        log.record_frozen(0, &frozen);
+        assert_eq!(log.take_committable(3).len(), 3);
+        assert_eq!(log.committed_edges(), 3);
+    }
+
+    #[test]
+    fn frozen_records_split_across_epochs() {
+        let mut log = CrossLog::new(CommitHorizon::Edges(8)); // epoch_len 2
+        log.append(&mut edges(0..6));
+        // one drain covering edges [1, 5) spans epochs [0,2), [2,4), [4,6)
+        let frozen: Vec<FrozenDecision> = (1..5).flat_map(|i| [(i, 7), (i + 1, 7)]).collect();
+        // first drain covered [0, 1)
+        log.record_frozen(0, &[(0, 7), (1, 7)]);
+        log.record_frozen(1, &frozen);
+        log.append(&mut edges(6..20)); // push the head far past everything
+        let frozen: Vec<FrozenDecision> = (5..20).flat_map(|i| [(i, 7), (i + 1, 7)]).collect();
+        log.record_frozen(5, &frozen);
+        let committed = log.take_committable(20);
+        // every sealed epoch with end ≤ 20 - 8 = 12 commits: [0,2)…[10,12)
+        assert_eq!(committed.len(), 6);
+        for ep in &committed {
+            assert_eq!(ep.frozen().len(), ep.edges.len() * 2);
+        }
+    }
+
+    #[test]
+    fn retention_bound_holds_when_drains_keep_pace() {
+        let h = 16u64;
+        let mut log = CrossLog::new(CommitHorizon::Edges(h));
+        let mut next = 0u32;
+        for _ in 0..50 {
+            let lo = next;
+            next += 7;
+            log.append(&mut edges(lo..next));
+            // drain to the head, then commit
+            let frozen: Vec<FrozenDecision> =
+                (lo..next).flat_map(|i| [(i, 0), (i + 1, 0)]).collect();
+            // records for just-appended edges (prior ones already recorded)
+            log.record_frozen(lo as u64, &frozen);
+            let _ = log.take_committable(log.appended());
+            assert!(
+                log.retained_edges() <= h + log.epoch_len(),
+                "retained {} > h {} + epoch {}",
+                log.retained_edges(),
+                h,
+                log.epoch_len()
+            );
+        }
+        assert!(log.epochs_committed() > 0);
+        assert!(log.freed_bytes() > 0);
+    }
+}

@@ -6,7 +6,8 @@
 //! * **Router** — `super::router::Router`, the single routing core
 //!   (also the batch path's core via `coordinator::parallel`):
 //!   intra-shard edges batch into per-shard chunks, cross-shard edges
-//!   append to the retained deferred buffer.
+//!   append to the epoch-structured cross log (`super::crosslog`),
+//!   which seals epochs on the router's chunk boundaries.
 //! * **Shard worker** — long-lived thread owning one
 //!   [`StreamingClusterer`] behind a mutex; drains its bounded mailbox
 //!   chunk by chunk. Workers never share nodes (hash-sharding), so they
@@ -17,15 +18,21 @@
 //!   worker catches up. Edges are never dropped, and cold shards are
 //!   unaffected.
 //! * **Drains** — every `drain_every` pushed edges the persistent
-//!   `LeaderState` folds its frozen history over a fresh shard merge
-//!   and replays **only the cross edges that arrived since the previous
-//!   drain** — `O(n + new cross)` per drain, each cross edge replayed
-//!   exactly once by the snapshot path.
+//!   `LeaderState` folds its frozen history (committed base + live
+//!   tail) over a fresh shard merge and replays **only the cross edges
+//!   that arrived since the previous drain** — `O(n + new cross)` per
+//!   drain, each cross edge replayed exactly once by the snapshot path.
+//!   Under a bounded [`CommitHorizon`](super::config::CommitHorizon)
+//!   each drain then folds epochs that fell behind the horizon into the
+//!   committed base and **frees their storage**.
 //! * **Terminal replay** — [`ClusterService::finish`] merges the final
-//!   shard sketches and replays the *full* retained cross buffer in
-//!   arrival order (a fresh leader). That is the batch leader's pass,
-//!   which is why the final partition is bit-identical to
-//!   `run_parallel` and independent of the drain cadence.
+//!   shard sketches and replays the retained (uncommitted) cross tail
+//!   in arrival order over the committed base. With the default
+//!   `CommitHorizon::Unbounded` the base is empty and the tail is the
+//!   whole history — the batch leader's pass, which is why the final
+//!   partition is then bit-identical to `run_parallel` and independent
+//!   of the drain cadence. With `CommitHorizon::Edges(h)` memory stays
+//!   bounded instead, and committed decisions are final.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -40,25 +47,27 @@ use crate::stream::source::EdgeSource;
 use crate::util::channel::Channel;
 
 use super::config::ServiceConfig;
+use super::crosslog::CrossLog;
 use super::query::QueryHandle;
 use super::router::Router;
 use super::snapshot::{LeaderState, Snapshot};
 
 /// State shared between the router, the shard workers, and every
 /// [`QueryHandle`].
+///
+/// Lock order (where two are held together): `leader` → `crosslog`.
 pub(crate) struct Shared {
     pub(crate) config: ServiceConfig,
     pub(crate) mailboxes: Vec<Channel<Vec<Edge>>>,
     pub(crate) states: Vec<Mutex<StreamingClusterer>>,
-    /// Retained cross-shard edges in arrival order (append-only until
-    /// shutdown; the leader's cursor marks the drained prefix).
-    pub(crate) cross: Mutex<Vec<Edge>>,
+    /// The epoch-structured cross-edge log (arrival order; the leader's
+    /// cursor marks the drained prefix, the commit horizon bounds what
+    /// stays resident).
+    pub(crate) crosslog: Mutex<CrossLog>,
     /// The persistent incremental-drain leader.
     pub(crate) leader: Mutex<LeaderState>,
     /// Edges accepted by `push` (including cross and self-loops).
     pub(crate) ingested: AtomicU64,
-    /// Cross-shard edges buffered for deferred replay.
-    pub(crate) cross_count: AtomicU64,
     /// Local edges handed to mailboxes.
     pub(crate) dispatched: AtomicU64,
     /// Local edges the workers have finished processing.
@@ -96,10 +105,13 @@ pub(crate) fn publish_snapshot(shared: &Shared, snap: &Arc<Snapshot>, is_final: 
 }
 
 /// Incremental snapshot drain: under the leader lock, clone the shard
-/// sketches, slice the cross buffer at the drained cursor, and let the
-/// persistent `LeaderState` replay only the new suffix. Publishes and
-/// returns the resulting snapshot. After `finish` this is a no-op that
-/// returns the terminal snapshot.
+/// sketches, slice the cross log at the drained cursor, and let the
+/// persistent `LeaderState` replay only the new suffix. Under a bounded
+/// commit horizon the replayed decisions are recorded back into their
+/// epochs, and every epoch that fell behind the horizon is folded into
+/// the committed base and freed. Publishes and returns the resulting
+/// snapshot. After `finish` this is a no-op that returns the terminal
+/// snapshot.
 pub(crate) fn rebuild_snapshot(shared: &Shared) -> Arc<Snapshot> {
     if shared.finished.load(Ordering::SeqCst) {
         return Arc::clone(&shared.snapshot.read().unwrap());
@@ -110,11 +122,33 @@ pub(crate) fn rebuild_snapshot(shared: &Shared) -> Arc<Snapshot> {
         .iter()
         .map(|m| m.lock().unwrap().state.clone())
         .collect();
-    let new_cross: Vec<Edge> = {
-        let buf = shared.cross.lock().unwrap();
-        buf[leader.drained()..].to_vec()
+    let replay_start = leader.drained();
+    let (new_cross, want_frozen) = {
+        let log = shared.crosslog.lock().unwrap();
+        (log.suffix_from(replay_start), log.wants_frozen())
     };
-    let snap = Arc::new(leader.drain(&shared.config.str_config, &states, &new_cross));
+    let mut frozen = want_frozen.then(|| Vec::with_capacity(new_cross.len() * 2));
+    let snap = Arc::new(leader.drain(
+        &shared.config.str_config,
+        &states,
+        &new_cross,
+        frozen.as_mut(),
+    ));
+    if let Some(frozen) = frozen {
+        // hand the frozen decisions to their epochs, then finalize every
+        // epoch the horizon has passed: fold into the committed base,
+        // free the edge storage
+        let mut log = shared.crosslog.lock().unwrap();
+        log.record_frozen(replay_start, &frozen);
+        for epoch in log.take_committable(leader.drained()) {
+            leader.commit_epoch(epoch.frozen());
+        }
+        debug_assert_eq!(
+            leader.committed_m(),
+            log.committed_edges(),
+            "committed accounting diverged between leader and cross log"
+        );
+    }
     shared.drains.fetch_add(1, Ordering::Relaxed);
     shared.replayed_last.store(new_cross.len() as u64, Ordering::Relaxed);
     shared
@@ -150,10 +184,14 @@ fn worker_loop(shared: &Shared, w: usize) {
 /// Final outcome of a service run (after [`ClusterService::finish`]).
 #[derive(Debug)]
 pub struct ServiceResult {
-    /// The final partition (all local edges processed, the full cross
-    /// buffer replayed in arrival order) — identical to what the batch
-    /// coordinator produces for the same stream and configuration,
-    /// whatever the drain cadence was.
+    /// The final partition: all local edges processed and the retained
+    /// cross tail replayed in arrival order over the committed base.
+    /// Under `CommitHorizon::Unbounded` (the default) the base is empty
+    /// and the tail is the full cross history, so this is identical to
+    /// what the batch coordinator produces for the same stream and
+    /// configuration, whatever the drain cadence was. Under a bounded
+    /// horizon, committed mid-stream decisions are final and the result
+    /// may differ from batch by a bounded quality margin.
     pub snapshot: Arc<Snapshot>,
     /// Total edges pushed over the service's lifetime.
     pub edges_ingested: u64,
@@ -201,6 +239,7 @@ impl ClusterService {
             // every edge would collapse throughput
             config.drain_every = u64::MAX;
         }
+        config.horizon = config.horizon.normalized();
         let shards = config.shards;
 
         let shared = Arc::new(Shared {
@@ -210,10 +249,9 @@ impl ClusterService {
             states: (0..shards)
                 .map(|_| Mutex::new(StreamingClusterer::new(0, config.str_config.clone())))
                 .collect(),
-            cross: Mutex::new(Vec::new()),
+            crosslog: Mutex::new(CrossLog::new(config.horizon)),
             leader: Mutex::new(LeaderState::new()),
             ingested: AtomicU64::new(0),
-            cross_count: AtomicU64::new(0),
             dispatched: AtomicU64::new(0),
             processed: AtomicU64::new(0),
             drains: AtomicU64::new(0),
@@ -319,11 +357,15 @@ impl ClusterService {
     }
 
     /// End of stream: flush, close the mailboxes, join the workers, and
-    /// run the terminal replay — merge the final shard sketches and
-    /// replay the **full** retained cross buffer in arrival order (a
-    /// fresh leader, i.e. the batch coordinator's own final pass). The
-    /// result is bit-identical to `run_parallel` on the same stream and
-    /// independent of how many incremental drains happened mid-stream.
+    /// run the terminal replay — merge the final shard sketches, fold
+    /// the committed base over them, and replay the retained
+    /// (uncommitted) cross tail in arrival order with a fresh tail
+    /// leader. Under `CommitHorizon::Unbounded` the base is empty and
+    /// the tail is the whole cross history — the batch coordinator's
+    /// own final pass, so the result is bit-identical to `run_parallel`
+    /// on the same stream and independent of how many incremental
+    /// drains happened mid-stream. Under `CommitHorizon::Edges(h)` the
+    /// freed history stays final instead.
     pub fn finish(mut self) -> ServiceResult {
         self.router.flush();
         for mb in &self.shared.mailboxes {
@@ -338,21 +380,30 @@ impl ClusterService {
             .iter()
             .map(|m| m.lock().unwrap().state.clone())
             .collect();
-        let cross: Vec<Edge> = self.shared.cross.lock().unwrap().clone();
+        let (base, tail, cross_total) = {
+            let leader = self.shared.leader.lock().unwrap();
+            let log = self.shared.crosslog.lock().unwrap();
+            (
+                leader.committed_base(),
+                log.suffix_from(log.committed_edges()),
+                log.appended(),
+            )
+        };
         // raise the flag first so a racing mid-stream drain cannot
         // overwrite the terminal snapshot we are about to publish
         self.shared.finished.store(true, Ordering::SeqCst);
-        let snapshot = Arc::new(Snapshot::build(
+        let snapshot = Arc::new(Snapshot::build_over(
             &self.shared.config.str_config,
+            base,
             &states,
-            &cross,
+            &tail,
         ));
         publish_snapshot(&self.shared, &snapshot, true);
         let report = self.shared.meter.lock().unwrap().snapshot();
         ServiceResult {
             snapshot,
             edges_ingested: self.shared.ingested.load(Ordering::Relaxed),
-            cross_edges: cross.len() as u64,
+            cross_edges: cross_total,
             elapsed: report.elapsed,
         }
     }

@@ -8,30 +8,39 @@
 //! pipeline in the repo:
 //!
 //! * [`router`] — the single routing/merge core: per-shard batching
-//!   with blocking backpressure, the deferred cross buffer, and the
-//!   disjoint shard-sketch merge.
+//!   with blocking backpressure, cross-edge deferral into the epoch
+//!   log, and the disjoint shard-sketch merge.
+//! * `crosslog` — the epoch-structured cross-edge log: cross edges
+//!   live in sealed epochs; under a bounded [`CommitHorizon`] an epoch
+//!   that falls behind the horizon is folded into the leader's
+//!   committed base and its storage **freed**, which bounds resident
+//!   cross-edge memory by `horizon + one epoch`.
 //! * [`ingest`] — N shard workers behind bounded mailboxes (sneldb-style
 //!   shard/mailbox/backpressure design); `push` blocks when a shard
 //!   lags, never drops.
 //! * [`snapshot`] — copy-on-read [`Snapshot`]s plus the persistent
-//!   drain leader: each drain folds the frozen effects of previously
-//!   replayed cross edges over a fresh shard merge and replays **only
-//!   the cross edges that arrived since the last drain** — `O(n + new
-//!   cross)` instead of `O(all cross)`.
+//!   drain leader, split into the committed base (final, freed history)
+//!   and the live tail fold: each drain folds both over a fresh shard
+//!   merge and replays **only the cross edges that arrived since the
+//!   last drain** — `O(n + new cross)` instead of `O(all cross)`.
 //! * [`query`] — cloneable [`QueryHandle`]s serving `community_of`
 //!   point lookups, top-k community summaries, and an operational
 //!   stats endpoint (edges/s, queue depths, drain/replay counters,
-//!   memory per node).
+//!   cross-log retained/committed/freed occupancy, memory per node).
 //! * [`config`] — [`ServiceConfig`] knobs (shards, `v_max`, mailbox
-//!   depth, chunk size, drain cadence) plus the
+//!   depth, chunk size, drain cadence, [`CommitHorizon`]) plus the
 //!   [`batch`](ServiceConfig::batch) preset.
 //!
-//! The final partition after [`ClusterService::finish`] is
-//! **bit-identical** to `coordinator::parallel::run_parallel` on the
-//! same stream — by construction, since both are the same code — and
-//! independent of the drain cadence, because `finish` always runs the
-//! terminal full replay of the retained cross buffer. See
-//! `docs/ARCHITECTURE.md` for the full dataflow and invariants.
+//! With the default [`CommitHorizon::Unbounded`], the final partition
+//! after [`ClusterService::finish`] is **bit-identical** to
+//! `coordinator::parallel::run_parallel` on the same stream — by
+//! construction, since both are the same code — and independent of the
+//! drain cadence, because `finish` then runs the terminal full replay
+//! of the whole cross log. [`CommitHorizon::Edges(h)`](CommitHorizon::Edges)
+//! trades that exactness for `O(h)` cross-edge memory: old epochs'
+//! decisions become final and `finish` replays only the uncommitted
+//! tail over the committed base. See `docs/ARCHITECTURE.md` for the
+//! full dataflow and invariants.
 //!
 //! ```
 //! use streamcom::graph::edge::Edge;
@@ -52,12 +61,13 @@
 //! ```
 
 pub mod config;
+pub(crate) mod crosslog;
 pub mod ingest;
 pub mod query;
 pub mod router;
 pub mod snapshot;
 
-pub use config::ServiceConfig;
+pub use config::{CommitHorizon, ServiceConfig};
 pub use ingest::{ClusterService, ServiceResult};
 pub use query::{QueryHandle, ServiceStats};
 pub use router::merge_disjoint_states;

@@ -6,9 +6,10 @@
 //! slow ingestion (the only shared-state contact is one `RwLock` read
 //! of an `Arc`). Stats follow the same rule: memory figures come from
 //! the published snapshot, queue depths from the mailbox channels,
-//! throughput from the `stream::meter` instance the router feeds, and
-//! the drain counters from atomics the drain path maintains — never
-//! from the workers' own state locks.
+//! throughput from the `stream::meter` instance the router feeds, the
+//! drain counters from atomics the drain path maintains, and the
+//! cross-log occupancy (retained/committed/freed) from one brief lock
+//! of the log's own mutex — never from the workers' own state locks.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -30,14 +31,34 @@ pub struct ServiceStats {
     pub shards: usize,
     /// Edges accepted by the router so far.
     pub edges_ingested: u64,
-    /// Cross-shard edges buffered over the service's lifetime.
+    /// Cross-shard edges logged over the service's lifetime.
     pub cross_total: u64,
     /// Cross edges not yet integrated into the published snapshot
     /// (awaiting the next incremental drain).
     pub cross_pending: u64,
     /// Cross edges the drains have integrated so far (the persistent
-    /// leader's cursor into the retained buffer).
+    /// leader's cursor into the cross log).
     pub cross_drained: u64,
+    /// Cross edges currently resident in the epoch log. Bounded by
+    /// `horizon + cross_epoch_len` under `CommitHorizon::Edges`
+    /// (asserted by the boundedness suite); grows with the stream under
+    /// `Unbounded`.
+    pub cross_retained: u64,
+    /// Cross edges whose decisions became final: folded into the
+    /// committed base, their storage freed.
+    pub cross_committed: u64,
+    /// Resident bytes of the cross log (edges + frozen decision
+    /// records).
+    pub cross_log_bytes: u64,
+    /// Bytes released by committed (freed) epochs so far.
+    pub cross_freed_bytes: u64,
+    /// Edges per cross-log epoch (the `+ one epoch` slack in the
+    /// retention bound).
+    pub cross_epoch_len: u64,
+    /// Cross-log epochs sealed so far.
+    pub epochs_sealed: u64,
+    /// Cross-log epochs committed (finalized and freed) so far.
+    pub epochs_committed: u64,
     /// Snapshot drains performed so far.
     pub drains: u64,
     /// Cross edges replayed by the most recent drain — with the
@@ -122,7 +143,28 @@ impl QueryHandle {
         // states — stats must never contend with the workers' hot loop
         let memory_bytes = snap.memory_bytes();
         let nodes = snap.state().n();
-        let cross_total = self.shared.cross_count.load(Ordering::Relaxed);
+        let (
+            cross_total,
+            cross_retained,
+            cross_committed,
+            cross_log_bytes,
+            cross_freed_bytes,
+            cross_epoch_len,
+            epochs_sealed,
+            epochs_committed,
+        ) = {
+            let log = self.shared.crosslog.lock().unwrap();
+            (
+                log.appended(),
+                log.retained_edges(),
+                log.committed_edges(),
+                log.retained_bytes(),
+                log.freed_bytes(),
+                log.epoch_len(),
+                log.epochs_sealed(),
+                log.epochs_committed(),
+            )
+        };
         let cross_drained = self.shared.cross_drained.load(Ordering::Relaxed);
         ServiceStats {
             shards: self.shared.config.shards,
@@ -130,6 +172,13 @@ impl QueryHandle {
             cross_total,
             cross_pending: cross_total.saturating_sub(cross_drained),
             cross_drained,
+            cross_retained,
+            cross_committed,
+            cross_log_bytes,
+            cross_freed_bytes,
+            cross_epoch_len,
+            epochs_sealed,
+            epochs_committed,
             drains: self.shared.drains.load(Ordering::Relaxed),
             cross_replayed_last_drain: self.shared.replayed_last.load(Ordering::Relaxed),
             cross_replayed_total: self.shared.replayed_total.load(Ordering::Relaxed),
@@ -169,6 +218,12 @@ mod tests {
         // the quiesce drained everything that was buffered
         assert_eq!(s.cross_pending, 0);
         assert_eq!(s.cross_drained, s.cross_total);
+        // unbounded horizon: the whole log stays resident, nothing is
+        // ever committed or freed
+        assert_eq!(s.cross_retained, s.cross_total);
+        assert_eq!(s.cross_committed, 0);
+        assert_eq!(s.cross_freed_bytes, 0);
+        assert_eq!(s.epochs_committed, 0);
         assert!(s.drains >= 1);
         assert!(s.memory_bytes > 0);
         assert!(s.bytes_per_node() >= 16.0, "{}", s.bytes_per_node());

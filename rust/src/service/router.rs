@@ -10,7 +10,8 @@
 //!   `stream::shard::route`, batch same-shard edges into per-shard
 //!   chunks bound for the workers' bounded mailboxes (blocking
 //!   backpressure, never drops), and append cross-shard edges to the
-//!   shared deferred buffer. `ClusterService` owns one; `run_parallel`
+//!   epoch-structured cross log (`super::crosslog`) — epochs seal on
+//!   these chunk boundaries. `ClusterService` owns one; `run_parallel`
 //!   is a thin batch preset over `ClusterService` and therefore uses
 //!   the same instance type, the same code, the same semantics.
 //! * [`merge_disjoint_states`] — the merge half of the core: the
@@ -70,8 +71,8 @@ pub(crate) struct Router {
     shared: Arc<Shared>,
     /// Per-shard batch buffers (not yet dispatched to mailboxes).
     pending: Vec<Vec<Edge>>,
-    /// Cross-edge batch (flushed to the shared deferred buffer in
-    /// chunks — one lock per chunk instead of one per edge).
+    /// Cross-edge batch (flushed to the shared cross log in chunks —
+    /// one lock per chunk instead of one per edge).
     cross_pending: Vec<Edge>,
     /// Edges routed since the last snapshot drain.
     since_drain: u64,
@@ -144,15 +145,14 @@ impl Router {
         }
     }
 
-    /// Append the router-local cross batch to the shared deferred
-    /// buffer — one lock per chunk, not per edge.
+    /// Append the router-local cross batch to the shared cross log —
+    /// one lock per chunk, not per edge. The log seals epochs on these
+    /// boundaries.
     fn flush_cross(&mut self) {
         if self.cross_pending.is_empty() {
             return;
         }
-        let k = self.cross_pending.len() as u64;
-        self.shared.cross.lock().unwrap().append(&mut self.cross_pending);
-        self.shared.cross_count.fetch_add(k, Ordering::Relaxed);
+        self.shared.crosslog.lock().unwrap().append(&mut self.cross_pending);
     }
 
     /// Report batched edge counts (local and cross) to the throughput

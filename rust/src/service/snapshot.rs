@@ -11,11 +11,12 @@
 //! `LeaderState` replaces that with an **incremental** drain. It
 //! persists two facts between drains:
 //!
-//! * `cross_degree[i]` — how much degree node `i` has accumulated from
-//!   already-drained cross edges, and
+//! * per-node cross *degree* — how much degree node `i` has accumulated
+//!   from already-drained cross edges (split between the committed base
+//!   and the live tail), and
 //! * `cross_community[i]` — the community the last drained cross-edge
 //!   decision left node `i` in (its decisions are *frozen*: a drained
-//!   cross edge is never re-decided).
+//!   cross edge is never re-decided mid-stream).
 //!
 //! A drain then costs `O(n)` to fold those frozen effects over a fresh
 //! merge of the shard sketches — volumes are *derived* in one pass via
@@ -26,13 +27,33 @@
 //! once** by the snapshot path (asserted via the drain counters in
 //! `QueryHandle::stats`).
 //!
-//! Two consistency notes, both pinned by tests:
+//! Since the commit-horizon refactor the frozen state is **split in
+//! two** (see `service::crosslog` for the epoch log that drives it):
 //!
-//! * A fresh leader draining the whole buffer is *exactly* the old
-//!   full-buffer rebuild — `Snapshot::build` is implemented that way,
-//!   and it is what `ClusterService::finish` runs as the terminal
-//!   replay. The **final** partition therefore never depends on how
-//!   many mid-stream drains happened (golden + property suites).
+//! * the **committed base** ([`CommittedBase`]) — the effects of cross
+//!   edges whose epochs fell behind the commit horizon. These are
+//!   *final*: their edge storage has been freed, so they can never be
+//!   re-replayed. The terminal replay starts from this base.
+//! * the **live tail fold** (`tail_degree` + the union community view)
+//!   — the effects of drained-but-uncommitted cross edges. These are
+//!   frozen for mid-stream views but still provisional: `finish`
+//!   discards the fold and re-replays the retained tail against the
+//!   final shard sketches.
+//!
+//! Consistency notes, all pinned by tests:
+//!
+//! * Under [`CommitHorizon::Unbounded`](super::config::CommitHorizon)
+//!   the committed base stays empty, so a fresh leader draining the
+//!   whole log is *exactly* the old full-buffer rebuild —
+//!   `Snapshot::build` is implemented that way, and it is what
+//!   `ClusterService::finish` runs as the terminal replay. The
+//!   **final** partition therefore never depends on how many mid-stream
+//!   drains happened (golden + property suites).
+//! * Under a bounded horizon the terminal replay covers only the
+//!   uncommitted tail over the committed base: memory is bounded, and
+//!   the final partition may differ from batch by whatever the
+//!   committed mid-stream decisions pinned (golden-stream modularity
+//!   within 2% of the unbounded run, asserted).
 //! * Mid-stream snapshots keep every stream-end invariant (volume
 //!   conservation `Σ v_k = 2t`, labels in node-id space), but between
 //!   drains the frozen decisions may differ from what a from-scratch
@@ -43,6 +64,7 @@ use crate::coordinator::algorithm::{StrConfig, StreamingClusterer};
 use crate::coordinator::state::{StreamState, UNSEEN};
 use crate::graph::edge::Edge;
 
+use super::crosslog::FrozenDecision;
 use super::router::merge_disjoint_states;
 
 /// One row of a top-k community report.
@@ -56,88 +78,155 @@ pub struct CommunitySummary {
     pub size: u32,
 }
 
-/// The persistent drain leader: the frozen effects of every
-/// already-drained cross edge, plus the cursor into the retained
-/// cross-edge buffer. Lives in the service's shared state behind a
-/// mutex; a fresh instance draining a full buffer reproduces the
-/// from-scratch rebuild bit for bit.
+/// The *final* effects of committed cross edges: degree contributed per
+/// node, the community each node's last committed decision chose, and
+/// the committed edge count. Once an epoch's decisions land here its
+/// edges are gone — this base is the only trace they leave, and it is
+/// what the terminal replay (and every drain) builds on.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct CommittedBase {
+    degree: Vec<u32>,
+    community: Vec<u32>,
+    m: u64,
+}
+
+impl CommittedBase {
+    fn ensure(&mut self, i: usize) {
+        if self.degree.len() <= i {
+            self.degree.resize(i + 1, 0);
+            self.community.resize(i + 1, UNSEEN);
+        }
+    }
+}
+
+/// The persistent drain leader, split along the commit horizon:
+///
+/// * [`CommittedBase`] — final effects of committed epochs (their edges
+///   are freed; these decisions can never be re-replayed);
+/// * the live tail fold — `tail_degree` plus the union community view
+///   `cross_community`, covering drained-but-uncommitted cross edges
+///   (provisional: `finish` discards the fold and re-replays the tail);
+/// * the cursor into the cross log (global edge index).
+///
+/// Lives in the service's shared state behind a mutex; a fresh instance
+/// draining a full log reproduces the from-scratch rebuild bit for bit.
 pub(crate) struct LeaderState {
-    /// Degree contributed to each node by drained cross edges.
-    cross_degree: Vec<u32>,
+    /// Final effects of committed epochs.
+    committed: CommittedBase,
+    /// Degree contributed by drained-but-uncommitted cross edges.
+    tail_degree: Vec<u32>,
     /// Community each node was left in by its last drained cross-edge
-    /// decision (`UNSEEN` = no cross edge has touched this node).
+    /// decision — committed or tail, whichever came later (`UNSEEN` =
+    /// no cross edge has touched this node). The union view folded
+    /// into mid-stream snapshots.
     cross_community: Vec<u32>,
-    /// Cursor into the retained cross buffer: edges `[0, drained)` have
-    /// been replayed by some earlier drain.
-    drained: usize,
-    /// Drained cross edges that entered `edges_processed` (self-loops
-    /// never route cross, so this equals `drained` in practice; kept
-    /// separate so the accounting cannot drift if that ever changes).
-    drained_m: u64,
+    /// Cursor into the cross log: edges `[0, drained)` (global indices)
+    /// have been replayed by some earlier drain.
+    drained: u64,
+    /// Drained *uncommitted* cross edges that entered `edges_processed`
+    /// (self-loops never route cross, so committed + tail equals
+    /// `drained` in practice; kept separate so the accounting cannot
+    /// drift if that ever changes).
+    tail_m: u64,
 }
 
 impl LeaderState {
     pub(crate) fn new() -> Self {
+        Self::over(CommittedBase::default())
+    }
+
+    /// Leader resuming from a committed base with an empty tail — the
+    /// terminal replay's starting point (and, with an empty base, the
+    /// from-scratch rebuild).
+    pub(crate) fn over(committed: CommittedBase) -> Self {
         Self {
-            cross_degree: Vec::new(),
-            cross_community: Vec::new(),
+            tail_degree: vec![0; committed.degree.len()],
+            cross_community: committed.community.clone(),
+            committed,
             drained: 0,
-            drained_m: 0,
+            tail_m: 0,
         }
     }
 
-    /// Buffer positions already replayed (the caller slices the shared
-    /// cross buffer at this cursor before draining).
-    pub(crate) fn drained(&self) -> usize {
+    /// Log positions already replayed (the caller slices the cross log
+    /// at this cursor before draining).
+    pub(crate) fn drained(&self) -> u64 {
         self.drained
     }
 
-    /// Drained cross edges counted into snapshot coverage.
+    /// Drained cross edges counted into snapshot coverage (committed
+    /// base + live tail).
     pub(crate) fn drained_m(&self) -> u64 {
-        self.drained_m
+        self.committed.m + self.tail_m
     }
 
-    /// Incremental drain: fold the frozen cross effects over a fresh
-    /// merge of `shard_states`, derive the volumes, then replay only
-    /// `new_cross` (the buffer suffix past [`drained`](Self::drained)).
+    /// Cross edges whose decisions are final (committed base only).
+    pub(crate) fn committed_m(&self) -> u64 {
+        self.committed.m
+    }
+
+    /// Clone of the committed base — what `finish` replays the
+    /// uncommitted tail over.
+    pub(crate) fn committed_base(&self) -> CommittedBase {
+        self.committed.clone()
+    }
+
+    /// Incremental drain: fold the frozen cross effects (committed base
+    /// + live tail) over a fresh merge of `shard_states`, derive the
+    /// volumes, then replay only `new_cross` (the log suffix past
+    /// [`drained`](Self::drained)). When `frozen_log` is given (bounded
+    /// horizon), two `(endpoint, post-decision community)` records per
+    /// replayed edge are appended to it for the cross log's epochs.
     pub(crate) fn drain(
         &mut self,
         config: &StrConfig,
         shard_states: &[StreamState],
         new_cross: &[Edge],
+        mut frozen_log: Option<&mut Vec<FrozenDecision>>,
     ) -> Snapshot {
         let mut base = merge_disjoint_states(0, shard_states);
         let local_edges = base.edges_processed;
-        if !self.cross_degree.is_empty() {
+        let hi = self.committed.degree.len().max(self.tail_degree.len());
+        if hi > 0 {
             // frozen effects may reference ids no shard has seen yet
-            base.ensure((self.cross_degree.len() - 1) as u32);
-            for i in 0..self.cross_degree.len() {
-                base.degree[i] += self.cross_degree[i];
-                let c = self.cross_community[i];
+            base.ensure((hi - 1) as u32);
+            for (i, &d) in self.committed.degree.iter().enumerate() {
+                base.degree[i] += d;
+            }
+            for (i, &d) in self.tail_degree.iter().enumerate() {
+                base.degree[i] += d;
+            }
+            for (i, &c) in self.cross_community.iter().enumerate() {
                 if c != UNSEEN {
                     base.community[i] = c;
                 }
             }
         }
-        base.edges_processed += self.drained_m;
+        base.edges_processed += self.drained_m();
         base.recompute_volumes();
 
         let mut leader = StreamingClusterer::with_state(base, config.clone());
         for &e in new_cross {
             debug_assert!(!e.is_self_loop(), "self-loops must never route cross");
             if e.is_self_loop() {
+                // keep the two-records-per-edge alignment; UNSEEN marks
+                // the slot as carrying no decision
+                if let Some(log) = frozen_log.as_deref_mut() {
+                    log.push((e.u, UNSEEN));
+                    log.push((e.v, UNSEEN));
+                }
                 continue;
             }
             leader.process_edge(e);
-            self.freeze(e, &leader.state);
-            self.drained_m += 1;
+            self.freeze(e, &leader.state, frozen_log.as_deref_mut());
+            self.tail_m += 1;
         }
-        self.drained += new_cross.len();
+        self.drained += new_cross.len() as u64;
 
         Snapshot {
             state: leader.state,
             local_edges,
-            cross_edges: self.drained_m,
+            cross_edges: self.drained_m(),
         }
     }
 
@@ -145,16 +234,56 @@ impl LeaderState {
     /// contribution and the communities it left its endpoints in. A
     /// later cross edge touching the same node simply overwrites the
     /// community (last decision wins — exactly replay order).
-    fn freeze(&mut self, e: Edge, state: &StreamState) {
+    fn freeze(
+        &mut self,
+        e: Edge,
+        state: &StreamState,
+        frozen_log: Option<&mut Vec<FrozenDecision>>,
+    ) {
         let hi = e.u.max(e.v) as usize;
-        if self.cross_degree.len() <= hi {
-            self.cross_degree.resize(hi + 1, 0);
+        if self.tail_degree.len() <= hi {
+            self.tail_degree.resize(hi + 1, 0);
             self.cross_community.resize(hi + 1, UNSEEN);
         }
-        self.cross_degree[e.u as usize] += 1;
-        self.cross_degree[e.v as usize] += 1;
-        self.cross_community[e.u as usize] = state.community[e.u as usize];
-        self.cross_community[e.v as usize] = state.community[e.v as usize];
+        self.tail_degree[e.u as usize] += 1;
+        self.tail_degree[e.v as usize] += 1;
+        let cu = state.community[e.u as usize];
+        let cv = state.community[e.v as usize];
+        self.cross_community[e.u as usize] = cu;
+        self.cross_community[e.v as usize] = cv;
+        if let Some(log) = frozen_log {
+            log.push((e.u, cu));
+            log.push((e.v, cv));
+        }
+    }
+
+    /// Fold one finalized epoch's frozen decisions into the committed
+    /// base, moving their degree contribution out of the live tail.
+    /// Epochs must be committed in log order (the cross log guarantees
+    /// it), so overwriting the committed community per record preserves
+    /// last-decision-wins. The union view (`cross_community`) already
+    /// holds each node's globally-last drained decision and is
+    /// untouched.
+    pub(crate) fn commit_epoch(&mut self, frozen: &[FrozenDecision]) {
+        let mut moved = 0u64;
+        for &(node, comm) in frozen {
+            if comm == UNSEEN {
+                continue; // skipped slot (self-loop) — carries no decision
+            }
+            let i = node as usize;
+            self.committed.ensure(i);
+            self.committed.degree[i] += 1;
+            self.committed.community[i] = comm;
+            debug_assert!(
+                self.tail_degree[i] > 0,
+                "committing node {i} with no tail degree to move"
+            );
+            self.tail_degree[i] -= 1;
+            moved += 1;
+        }
+        debug_assert_eq!(moved % 2, 0, "frozen records come in endpoint pairs");
+        self.committed.m += moved / 2;
+        self.tail_m -= moved / 2;
     }
 }
 
@@ -174,19 +303,35 @@ impl Snapshot {
         Self { state: StreamState::new(0), local_edges: 0, cross_edges: 0 }
     }
 
-    /// Full-buffer rebuild: merge shard sketches and replay the whole
-    /// cross buffer in arrival order. Implemented as a *fresh*
-    /// `LeaderState` draining everything — the incremental path with
-    /// no history is the full rebuild, so there is exactly one
-    /// merge/replay implementation to trust. This is the terminal
-    /// replay `ClusterService::finish` runs (and therefore the batch
+    /// Full-history rebuild: merge shard sketches and replay the whole
+    /// cross log in arrival order. Implemented as
+    /// [`build_over`](Self::build_over) with an empty committed base —
+    /// the incremental path with no history is the full rebuild, so
+    /// there is exactly one merge/replay implementation to trust. This
+    /// is the terminal replay `ClusterService::finish` runs under
+    /// `CommitHorizon::Unbounded` (and therefore the batch
     /// `run_parallel` semantics).
     pub(crate) fn build(
         config: &StrConfig,
         shard_states: &[StreamState],
         cross: &[Edge],
     ) -> Self {
-        LeaderState::new().drain(config, shard_states, cross)
+        Self::build_over(config, CommittedBase::default(), shard_states, cross)
+    }
+
+    /// Terminal replay over a committed base: fold the base's final
+    /// cross effects over the merged shard sketches, then replay only
+    /// `tail` — the retained (uncommitted) cross edges — in arrival
+    /// order with a fresh tail leader. With an empty base this *is*
+    /// [`build`](Self::build); with a bounded horizon it is how
+    /// `finish` avoids needing the freed history back.
+    pub(crate) fn build_over(
+        config: &StrConfig,
+        committed: CommittedBase,
+        shard_states: &[StreamState],
+        tail: &[Edge],
+    ) -> Self {
+        LeaderState::over(committed).drain(config, shard_states, tail, None)
     }
 
     /// The merged sketch behind this snapshot.
@@ -299,11 +444,11 @@ mod tests {
 
         // one edge per drain, shard states fixed between drains
         let mut leader = LeaderState::new();
-        let s1 = leader.drain(&cfg, &states, &cross[..1]);
+        let s1 = leader.drain(&cfg, &states, &cross[..1], None);
         assert_eq!((s1.edges(), leader.drained()), (3, 1));
-        let s2 = leader.drain(&cfg, &states, &cross[1..2]);
+        let s2 = leader.drain(&cfg, &states, &cross[1..2], None);
         assert_eq!((s2.edges(), leader.drained()), (4, 2));
-        let s3 = leader.drain(&cfg, &states, &cross[2..]);
+        let s3 = leader.drain(&cfg, &states, &cross[2..], None);
         assert_eq!((s3.edges(), leader.drained()), (5, 3));
         assert_eq!(s3.state().total_volume(), 2 * s3.edges());
 
@@ -325,14 +470,77 @@ mod tests {
         let states = [a.state.clone()];
 
         let mut leader = LeaderState::new();
-        let s1 = leader.drain(&cfg, &states, &[Edge::new(0, 900)]);
+        let s1 = leader.drain(&cfg, &states, &[Edge::new(0, 900)], None);
         let c900 = s1.community_of(900);
         assert!(s1.state().n() > 900);
 
-        let s2 = leader.drain(&cfg, &states, &[]);
+        let s2 = leader.drain(&cfg, &states, &[], None);
         assert_eq!(s2.community_of(900), c900, "frozen decision lost");
         assert_eq!(s2.edges(), s1.edges());
         assert_eq!(s2.state().total_volume(), 2 * s2.edges());
+    }
+
+    #[test]
+    fn committing_an_epoch_leaves_mid_stream_drains_unchanged() {
+        // the commit fold moves effects from the tail to the committed
+        // base; with shard states fixed, a drain after the commit must
+        // see the exact same partition as one before it
+        let cfg = StrConfig::new(64);
+        let mut a = StreamingClusterer::new(0, cfg.clone());
+        a.process_edge(Edge::new(0, 1));
+        let mut b = StreamingClusterer::new(0, cfg.clone());
+        b.process_edge(Edge::new(5, 6));
+        let states = [a.state.clone(), b.state.clone()];
+        let cross = vec![Edge::new(1, 5), Edge::new(0, 6), Edge::new(1, 6)];
+
+        let mut leader = LeaderState::new();
+        let mut frozen = Vec::new();
+        let before = leader.drain(&cfg, &states, &cross, Some(&mut frozen));
+        assert_eq!(frozen.len(), 2 * cross.len());
+
+        // commit the first two edges' decisions (one "epoch")
+        leader.commit_epoch(&frozen[..4]);
+        assert_eq!(leader.committed_m(), 2);
+        assert_eq!(leader.drained_m(), 3, "commit must not change coverage");
+
+        let after = leader.drain(&cfg, &states, &[], None);
+        assert_eq!(after.labels(), before.labels());
+        assert_eq!(after.state().volume, before.state().volume);
+        assert_eq!(after.state().degree, before.state().degree);
+        assert_eq!(after.edges(), before.edges());
+    }
+
+    #[test]
+    fn build_over_committed_base_covers_base_plus_tail() {
+        // drain everything, commit a prefix, then rebuild from the
+        // committed base + the retained tail: coverage and invariants
+        // must match the full rebuild (with static shard states the
+        // partition is identical too, since nothing gets re-decided
+        // against different volumes)
+        let cfg = StrConfig::new(64);
+        let mut a = StreamingClusterer::new(0, cfg.clone());
+        a.process_edge(Edge::new(0, 1));
+        let mut b = StreamingClusterer::new(0, cfg.clone());
+        b.process_edge(Edge::new(5, 6));
+        let states = [a.state.clone(), b.state.clone()];
+        let cross = vec![Edge::new(1, 5), Edge::new(0, 6), Edge::new(1, 6)];
+
+        let mut leader = LeaderState::new();
+        let mut frozen = Vec::new();
+        leader.drain(&cfg, &states, &cross, Some(&mut frozen));
+        leader.commit_epoch(&frozen[..2]); // commit the first edge
+
+        let full = Snapshot::build(&cfg, &states, &cross);
+        let over = Snapshot::build_over(
+            &cfg,
+            leader.committed_base(),
+            &states,
+            &cross[1..],
+        );
+        assert_eq!(over.edges(), full.edges());
+        assert_eq!(over.cross_edges, full.cross_edges);
+        assert_eq!(over.state().total_volume(), 2 * over.edges());
+        assert_eq!(over.labels(), full.labels());
     }
 
     #[test]

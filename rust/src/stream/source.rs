@@ -10,7 +10,6 @@ use std::io::{BufRead, BufReader, Read};
 use std::path::Path;
 
 use crate::graph::edge::Edge;
-use crate::graph::io::parse_edge_line;
 
 /// A single-pass edge stream.
 pub trait EdgeSource: Send {
@@ -22,6 +21,18 @@ pub trait EdgeSource: Send {
     fn len_hint(&self) -> Option<usize> {
         None
     }
+}
+
+/// Shared body of the in-memory sources: copy the next batch (up to
+/// `buf.capacity()` edges) out of `edges[*pos..]`, advancing the
+/// cursor. Returns the number of edges written.
+#[inline]
+fn slice_next_batch(edges: &[Edge], pos: &mut usize, buf: &mut Vec<Edge>) -> usize {
+    buf.clear();
+    let take = buf.capacity().min(edges.len() - *pos);
+    buf.extend_from_slice(&edges[*pos..*pos + take]);
+    *pos += take;
+    take
 }
 
 /// Stream over an in-memory edge slice (the common bench path).
@@ -37,13 +48,9 @@ impl<'a> MemorySource<'a> {
     }
 }
 
-impl<'a> EdgeSource for MemorySource<'a> {
+impl EdgeSource for MemorySource<'_> {
     fn next_batch(&mut self, buf: &mut Vec<Edge>) -> usize {
-        buf.clear();
-        let take = buf.capacity().min(self.edges.len() - self.pos);
-        buf.extend_from_slice(&self.edges[self.pos..self.pos + take]);
-        self.pos += take;
-        take
+        slice_next_batch(self.edges, &mut self.pos, buf)
     }
 
     fn len_hint(&self) -> Option<usize> {
@@ -66,11 +73,7 @@ impl OwnedMemorySource {
 
 impl EdgeSource for OwnedMemorySource {
     fn next_batch(&mut self, buf: &mut Vec<Edge>) -> usize {
-        buf.clear();
-        let take = buf.capacity().min(self.edges.len() - self.pos);
-        buf.extend_from_slice(&self.edges[self.pos..self.pos + take]);
-        self.pos += take;
-        take
+        slice_next_batch(&self.edges, &mut self.pos, buf)
     }
 
     fn len_hint(&self) -> Option<usize> {
@@ -80,7 +83,11 @@ impl EdgeSource for OwnedMemorySource {
 
 /// Stream a SNAP-style text edge file. Node ids must already be dense
 /// u32 (the harness writes files that way); sparse-id files should go
-/// through `graph::io::read_text_edges` instead.
+/// through `graph::io::read_text_edges` instead. Unlike
+/// `read_text_edges` — which hard-errors on half-numeric (corrupt)
+/// lines — this transport stays lenient and skips anything it cannot
+/// scan: `EdgeSource::next_batch` has no error channel, and the
+/// streaming path trades strictness for throughput by design.
 ///
 /// §Perf: this is a streaming-path transport, so parsing is byte-level
 /// — `read_until` into a byte buffer (no UTF-8 validation) and a
@@ -288,6 +295,26 @@ mod tests {
         assert_eq!(src.next_batch(&mut buf), 32);
         assert_eq!(src.next_batch(&mut buf), 4);
         assert_eq!(src.next_batch(&mut buf), 0);
+    }
+
+    #[test]
+    fn owned_source_batches_identically_to_borrowed() {
+        // both sources share slice_next_batch; pin the equivalence
+        let es = edges();
+        let mut borrowed = MemorySource::new(&es);
+        let mut owned = OwnedMemorySource::new(es.clone());
+        let mut a = Vec::with_capacity(17);
+        let mut b = Vec::with_capacity(17);
+        loop {
+            let na = borrowed.next_batch(&mut a);
+            let nb = owned.next_batch(&mut b);
+            assert_eq!(na, nb);
+            assert_eq!(a, b);
+            if na == 0 {
+                break;
+            }
+        }
+        assert_eq!(borrowed.len_hint(), owned.len_hint());
     }
 
     #[test]

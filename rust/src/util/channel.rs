@@ -152,7 +152,7 @@ impl<T> Channel<T> {
 
     /// True when no items are queued.
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.inner.queue.lock().unwrap().buf.is_empty()
     }
 
     /// (peak occupancy, total pushed, total popped) — backpressure stats.
@@ -184,7 +184,7 @@ mod tests {
         let ch = Channel::bounded(2);
         ch.send(1).unwrap();
         ch.send(2).unwrap();
-        assert_eq!(ch.try_send(3).unwrap(), false); // full
+        assert!(!ch.try_send(3).unwrap()); // full
 
         let tx = ch.clone();
         let producer = thread::spawn(move || {

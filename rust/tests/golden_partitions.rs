@@ -22,7 +22,8 @@ use std::path::{Path, PathBuf};
 use streamcom::coordinator::algorithm::cluster_edges;
 use streamcom::coordinator::parallel::{run_parallel, ParallelConfig};
 use streamcom::graph::edge::Edge;
-use streamcom::service::{ClusterService, ServiceConfig};
+use streamcom::metrics::modularity::modularity;
+use streamcom::service::{ClusterService, CommitHorizon, ServiceConfig};
 
 fn golden_dir() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
@@ -167,6 +168,40 @@ fn check_case(stem: &str) {
         &format!("{stem}: service with incremental drains"),
         &drained_labels,
         &par,
+    );
+
+    // a commit horizon at least as long as the stream can never commit
+    // an epoch, so it must stay bit-identical to the unbounded run —
+    // Unbounded and "horizon ≥ stream length" are the same semantics
+    let mut cfg = ServiceConfig::new(gs.shards, gs.v_max);
+    cfg.drain_every = 97;
+    cfg.chunk_size = 64;
+    cfg.horizon = CommitHorizon::Edges(gs.edges.len() as u64);
+    let mut svc = ClusterService::start(cfg);
+    svc.push_chunk(&gs.edges);
+    let horizon_labels = svc.finish().snapshot.labels_padded(gs.n);
+    assert_labels_match(
+        &format!("{stem}: service, horizon ≥ stream length"),
+        &horizon_labels,
+        &par,
+    );
+
+    // a *bounded* horizon frees old cross epochs and finalizes their
+    // decisions; the partition may drift from batch, but quality must
+    // stay within 2% modularity of the unbounded run on these streams
+    let mut cfg = ServiceConfig::new(gs.shards, gs.v_max);
+    cfg.drain_every = 61;
+    cfg.chunk_size = 64;
+    cfg.horizon = CommitHorizon::Edges((gs.edges.len() / 4).max(16) as u64);
+    let mut svc = ClusterService::start(cfg);
+    svc.push_chunk(&gs.edges);
+    let bounded_labels = svc.finish().snapshot.labels_padded(gs.n);
+    let q_full = modularity(gs.n, &gs.edges, &par);
+    let q_bounded = modularity(gs.n, &gs.edges, &bounded_labels);
+    assert!(
+        q_bounded >= q_full - 0.02 * q_full.abs(),
+        "{stem}: bounded-horizon modularity {q_bounded:.4} fell more than \
+         2% below the unbounded run's {q_full:.4}"
     );
 }
 

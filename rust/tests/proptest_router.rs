@@ -12,11 +12,19 @@
 //!   node-id space, exact coverage at quiesce points.
 //! * **Replay accounting** — across all drains of a run, each cross
 //!   edge is replayed exactly once by the snapshot path.
+//! * **Horizon degeneracy** — a commit horizon at least as long as the
+//!   stream never commits an epoch, so it is semantically `Unbounded`,
+//!   which is semantically the batch run: all three are bit-identical
+//!   across shard counts and drain cadences.
+//! * **Bounded-horizon soundness** — with a small horizon the
+//!   accounting invariants (every edge exactly once, `Σ v_k = 2t`)
+//!   still hold and retained cross edges respect the
+//!   `horizon + one epoch` bound at every quiesce point.
 
 use streamcom::coordinator::algorithm::cluster_edges;
 use streamcom::coordinator::parallel::{run_parallel, ParallelConfig};
 use streamcom::graph::edge::Edge;
-use streamcom::service::{ClusterService, ServiceConfig};
+use streamcom::service::{ClusterService, CommitHorizon, ServiceConfig};
 use streamcom::util::proptest::property;
 use streamcom::util::rng::Xoshiro256;
 
@@ -65,9 +73,19 @@ fn incremental_replay_equals_full_replay_equals_sequential() {
             }
 
             for cadence in [1u64, 7, 64] {
+                // alternate between the default unbounded horizon and a
+                // bounded one at least as long as the stream: neither
+                // can ever commit an epoch, so both must stay
+                // bit-identical to the batch run
+                let horizon = if (cadence + shards as u64) % 2 == 0 {
+                    CommitHorizon::Unbounded
+                } else {
+                    CommitHorizon::Edges(edges.len() as u64 + rng.next_below(100))
+                };
                 let mut cfg = ServiceConfig::new(shards, v_max);
                 cfg.drain_every = cadence;
                 cfg.chunk_size = 1 + rng.next_below(32) as usize;
+                cfg.horizon = horizon;
                 let mut svc = ClusterService::start(cfg);
                 let handle = svc.handle();
 
@@ -134,6 +152,80 @@ fn incremental_replay_equals_full_replay_equals_sequential() {
                     return Err("single shard must never defer an edge".into());
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn bounded_horizon_keeps_invariants_and_retention_bound() {
+    property("bounded horizon soundness", 10, |rng, size| {
+        let (n, edges) = random_stream(rng, size);
+        let _ = n;
+        let h = 1 + rng.next_below(64);
+        let mut cfg = ServiceConfig::new(2 + rng.next_below(3) as usize, 64);
+        cfg.horizon = CommitHorizon::Edges(h);
+        cfg.drain_every = 1 + rng.next_below(32);
+        cfg.chunk_size = 1 + rng.next_below(16) as usize;
+        let mut svc = ClusterService::start(cfg);
+        let handle = svc.handle();
+
+        // push in thirds with quiesce points: right after a drain the
+        // commit scan has run, so retention must respect the bound
+        let third = edges.len() / 3;
+        for part in [&edges[..third], &edges[third..2 * third], &edges[2 * third..]] {
+            svc.push_chunk(part);
+            svc.quiesce();
+            let s = handle.stats();
+            if s.cross_retained > h + s.cross_epoch_len {
+                return Err(format!(
+                    "retained {} > horizon {h} + epoch {}",
+                    s.cross_retained, s.cross_epoch_len
+                ));
+            }
+            if s.cross_committed + s.cross_retained != s.cross_total {
+                return Err(format!(
+                    "commit accounting broken: {} + {} ≠ {}",
+                    s.cross_committed, s.cross_retained, s.cross_total
+                ));
+            }
+        }
+
+        // bounded finality must not break edge-exactly-once or volume
+        // conservation — only *which* decision history is replayed
+        let res = svc.finish();
+        if res.edges_ingested != edges.len() as u64 {
+            return Err(format!(
+                "ingested {} of {} (h={h})",
+                res.edges_ingested,
+                edges.len()
+            ));
+        }
+        if res.snapshot.edges() != edges.len() as u64 {
+            return Err(format!(
+                "final covers {} of {} (h={h})",
+                res.snapshot.edges(),
+                edges.len()
+            ));
+        }
+        if res.snapshot.local_edges + res.snapshot.cross_edges != edges.len() as u64 {
+            return Err(format!(
+                "local {} + cross {} ≠ {} (h={h})",
+                res.snapshot.local_edges,
+                res.snapshot.cross_edges,
+                edges.len()
+            ));
+        }
+        if res.state().total_volume() != 2 * edges.len() as u64 {
+            return Err(format!(
+                "Σv = {} ≠ 2·{} (h={h})",
+                res.state().total_volume(),
+                edges.len()
+            ));
+        }
+        let nn = res.state().n();
+        if !res.labels().iter().all(|&l| (l as usize) < nn) {
+            return Err(format!("label out of node-id space (h={h})"));
         }
         Ok(())
     });
