@@ -9,7 +9,7 @@
 //! streamcom serve            # dynamic events on stdin, results on stdout
 //! ```
 
-use streamcom::bench::{memory, report, table1, table2, workloads};
+use streamcom::bench::{memory, report, service as service_bench, table1, table2, workloads};
 use streamcom::coordinator::algorithm::{StrConfig, StreamingClusterer};
 use streamcom::coordinator::dynamic::{DynamicClusterer, Event};
 use streamcom::coordinator::parallel::{run_parallel, ParallelConfig};
@@ -47,13 +47,19 @@ COMMANDS:
                --preset/--scale/--input as above
                --base <u64>         ladder base [default 4]
                --engine <native|pjrt>  metric engine [default native]
-  bench      regenerate the paper's tables
-               table1|table2|memory  --scale <f>
+  bench      regenerate the paper's tables / service benchmarks
+               table1|table2|memory|service  --scale <f>
+               service also takes --json (write BENCH_service.json;
+               --out <path> overrides the file name)
   serve      long-lived sharded clustering service: ingests the workload
              while answering queries on stdin
                --preset/--scale/--input as above, or --sbm <k>x<size>
                --vmax <u64>         threshold parameter [default 64]
                --shards <k>         shard workers [default 4]
+               --leaders <k>        leader partitions for the cross log's frozen
+                                    decisions + the committed base (0 = one per
+                                    shard); never changes results, only where
+                                    committed state lives
                --drain-every <t>    edges between snapshot refreshes [default 65536, 0 = off]
                --horizon <edges>    commit horizon: drained cross edges this far behind
                                     the log head become final and their storage is freed,
@@ -298,7 +304,22 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             }
             println!("{}", t.render());
         }
-        other => return Err(format!("unknown bench {other:?} (table1|table2|memory)")),
+        "service" => {
+            let cfg = service_bench::ServiceBenchConfig::scaled(scale);
+            let (t, rows) = service_bench::run(&cfg);
+            println!("{}", t.render());
+            if args.flag("json") {
+                let path = args.get_or("out", "BENCH_service.json");
+                std::fs::write(path, service_bench::to_json(&cfg, &rows))
+                    .map_err(|e| format!("write {path}: {e}"))?;
+                println!("json → {path}");
+            }
+        }
+        other => {
+            return Err(format!(
+                "unknown bench {other:?} (table1|table2|memory|service)"
+            ))
+        }
     }
     Ok(())
 }
@@ -331,11 +352,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let truth = if g.truth.is_empty() { None } else { Some(g.truth.to_labels(g.n())) };
 
     let mut config = ServiceConfig::new(shards, v_max);
+    config.leaders = args.usize_or("leaders", 0).map_err(|e| e.to_string())?;
     config.drain_every = args.u64_or("drain-every", 65_536).map_err(|e| e.to_string())?;
-    config.horizon = match args.u64_or("horizon", 0).map_err(|e| e.to_string())? {
-        0 => CommitHorizon::Unbounded,
-        h => CommitHorizon::Edges(h),
-    };
+    // Edges(0) is the CLI spelling of "unbounded"; the service
+    // normalises it at start-up (covered by the CLI test-suite)
+    config.horizon =
+        CommitHorizon::Edges(args.u64_or("horizon", 0).map_err(|e| e.to_string())?);
     let mut service = ClusterService::start(config);
     let queries = service.handle();
     println!(
@@ -413,24 +435,47 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             }
             ["stats"] => {
                 let s = queries.stats();
+                let horizon = match s.horizon {
+                    CommitHorizon::Unbounded => "unbounded".to_string(),
+                    CommitHorizon::Edges(h) => h.to_string(),
+                };
+                let per_leader: Vec<String> = s
+                    .per_leader
+                    .iter()
+                    .map(|l| {
+                        format!(
+                            "{}/{}/{}",
+                            memory::fmt_bytes(l.retained_bytes),
+                            memory::fmt_bytes(l.committed_bytes),
+                            memory::fmt_bytes(l.freed_bytes)
+                        )
+                    })
+                    .collect();
                 println!(
-                    "shards={} ingested={} ({:.2} Medges/s) snapshot_lag={} \
+                    "shards={} leaders={} horizon={horizon} ingested={} \
+                     ({:.2} Medges/s) snapshot_lag={} \
                      drains={} replay_last={} replay_total={} \
+                     delta_last={}B delta_total={}B \
                      cross drained/pending={}/{} \
                      x-log retained={} committed={} freed={} \
+                     per-leader r/c/f=[{}] \
                      queues={:?} peaks={:?} sketch={} B ({:.1} B/node)",
                     s.shards,
+                    s.leaders,
                     s.edges_ingested,
                     s.edges_per_sec / 1e6,
                     s.edges_ingested.saturating_sub(s.snapshot_edges),
                     s.drains,
                     s.cross_replayed_last_drain,
                     s.cross_replayed_total,
+                    s.delta_last_bytes,
+                    s.delta_total_bytes,
                     s.cross_drained,
                     s.cross_pending,
                     s.cross_retained,
                     s.cross_committed,
                     memory::fmt_bytes(s.cross_freed_bytes),
+                    per_leader.join(" "),
                     s.queue_depths,
                     s.queue_peaks,
                     s.memory_bytes,

@@ -18,6 +18,7 @@ pub mod framework;
 pub mod memory;
 pub mod readonly;
 pub mod report;
+pub mod service;
 pub mod table1;
 pub mod table2;
 pub mod workloads;

@@ -1,0 +1,255 @@
+//! Service-path benchmark: ingest throughput, drain cost, and the
+//! sharded-leader byte accounting — the figures that track whether the
+//! service keeps its two scaling claims as the code evolves:
+//!
+//! * drains replay only the new cross suffix (`replay/drain` stays
+//!   near the drain cadence, not the stream length), and
+//! * drains ship only epoch deltas (`delta_last` stays flat while the
+//!   committed base grows).
+//!
+//! `bench service` prints the table; `--json` additionally writes
+//! `BENCH_service.json` so the perf trajectory is machine-readable and
+//! can be recorded run over run.
+
+use crate::graph::generators::sbm::{self, SbmConfig};
+use crate::service::{ClusterService, CommitHorizon, LeaderStats, ServiceConfig};
+
+use super::memory::fmt_bytes;
+use super::report::Table;
+
+/// Workload + service shape for one `bench service` run.
+#[derive(Debug, Clone)]
+pub struct ServiceBenchConfig {
+    /// Planted communities in the SBM workload.
+    pub communities: usize,
+    /// Nodes per community.
+    pub community_size: usize,
+    /// Shard workers.
+    pub shards: usize,
+    /// Leader partitions (0 = one per shard).
+    pub leaders: usize,
+    /// The paper's volume threshold.
+    pub v_max: u64,
+    /// Edges between automatic drains.
+    pub drain_every: u64,
+    /// Commit horizons to sweep (0 = unbounded).
+    pub horizons: Vec<u64>,
+    /// Workload seed.
+    pub seed: u64,
+}
+
+impl ServiceBenchConfig {
+    /// Default shape scaled by the CLI's `--scale` knob (`1.0` ≈ a
+    /// quarter-million-edge stream; the default bench scale of 0.1
+    /// keeps CI-friendly runtimes).
+    pub fn scaled(scale: f64) -> Self {
+        Self {
+            communities: ((240.0 * scale).round() as usize).max(6),
+            community_size: 60,
+            shards: 4,
+            leaders: 0,
+            v_max: 128,
+            drain_every: 4_096,
+            horizons: vec![0, 4_096],
+            seed: 71,
+        }
+    }
+}
+
+/// One measured configuration (a row of the table / JSON).
+#[derive(Debug, Clone)]
+pub struct ServiceBenchRow {
+    /// Commit horizon (0 = unbounded).
+    pub horizon: u64,
+    /// Edges ingested.
+    pub edges: u64,
+    /// Cross-shard edges deferred to the log.
+    pub cross_total: u64,
+    /// Wall-clock ingest + terminal replay time.
+    pub elapsed_secs: f64,
+    /// Ingest throughput.
+    pub edges_per_sec: f64,
+    /// Mid-stream drains performed.
+    pub drains: u64,
+    /// Mean cross edges replayed per drain (the drain cost).
+    pub replay_per_drain: f64,
+    /// Delta payload of the last mid-stream drain (bytes).
+    pub delta_last_bytes: u64,
+    /// Σ delta payload across all drains (bytes).
+    pub delta_total_bytes: u64,
+    /// Cross edges resident at the final drain point.
+    pub cross_retained: u64,
+    /// Cross edges committed (final, storage freed).
+    pub cross_committed: u64,
+    /// Bytes freed by commits.
+    pub cross_freed_bytes: u64,
+    /// Per-leader-partition retained/committed/freed bytes.
+    pub per_leader: Vec<LeaderStats>,
+}
+
+/// Stream one SBM workload through the service per configured horizon
+/// and collect the table + raw rows.
+pub fn run(cfg: &ServiceBenchConfig) -> (Table, Vec<ServiceBenchRow>) {
+    let g = sbm::generate(&SbmConfig::equal(
+        cfg.communities,
+        cfg.community_size,
+        0.3,
+        0.002,
+        cfg.seed,
+    ));
+    let mut table = Table::new(
+        &format!(
+            "service bench: {} (n={} m={}, {} shards, drain_every={})",
+            g.name,
+            g.n(),
+            g.m(),
+            cfg.shards,
+            cfg.drain_every
+        ),
+        &[
+            "horizon",
+            "Medges/s",
+            "drains",
+            "replay/drain",
+            "delta_last",
+            "x-retained",
+            "x-committed",
+            "x-freed",
+            "Σleader base",
+        ],
+    );
+    let mut rows = Vec::new();
+    for &h in &cfg.horizons {
+        let mut config = ServiceConfig::new(cfg.shards, cfg.v_max);
+        config.leaders = cfg.leaders;
+        config.drain_every = cfg.drain_every;
+        config.horizon = CommitHorizon::Edges(h); // Edges(0) ⇒ Unbounded
+        let mut svc = ClusterService::start(config);
+        let handle = svc.handle();
+        svc.push_chunk(&g.edges.edges);
+        svc.quiesce();
+        let s = handle.stats();
+        let res = svc.finish();
+        let elapsed = res.elapsed.as_secs_f64().max(1e-9);
+        let row = ServiceBenchRow {
+            horizon: h,
+            edges: res.edges_ingested,
+            cross_total: s.cross_total,
+            elapsed_secs: elapsed,
+            edges_per_sec: res.edges_ingested as f64 / elapsed,
+            drains: s.drains,
+            replay_per_drain: s.cross_replayed_total as f64 / (s.drains.max(1)) as f64,
+            delta_last_bytes: s.delta_last_bytes,
+            delta_total_bytes: s.delta_total_bytes,
+            cross_retained: s.cross_retained,
+            cross_committed: s.cross_committed,
+            cross_freed_bytes: s.cross_freed_bytes,
+            per_leader: s.per_leader.clone(),
+        };
+        table.push_row(vec![
+            if h == 0 { "unbounded".into() } else { h.to_string() },
+            format!("{:.2}", row.edges_per_sec / 1e6),
+            row.drains.to_string(),
+            format!("{:.1}", row.replay_per_drain),
+            fmt_bytes(row.delta_last_bytes),
+            row.cross_retained.to_string(),
+            row.cross_committed.to_string(),
+            fmt_bytes(row.cross_freed_bytes),
+            fmt_bytes(s.committed_bytes_total()),
+        ]);
+        rows.push(row);
+    }
+    (table, rows)
+}
+
+/// Render the rows as the `BENCH_service.json` document (hand-rolled —
+/// the offline build has no serde; every value is numeric so no string
+/// escaping is required beyond the fixed keys).
+pub fn to_json(cfg: &ServiceBenchConfig, rows: &[ServiceBenchRow]) -> String {
+    let mut out = String::from("{\n  \"bench\": \"service\",\n");
+    out.push_str(&format!(
+        "  \"workload\": {{\"communities\": {}, \"community_size\": {}, \"seed\": {}}},\n",
+        cfg.communities, cfg.community_size, cfg.seed
+    ));
+    out.push_str(&format!(
+        "  \"shards\": {}, \"leaders\": {}, \"v_max\": {}, \"drain_every\": {},\n",
+        cfg.shards, cfg.leaders, cfg.v_max, cfg.drain_every
+    ));
+    out.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let per_leader: Vec<String> = r
+            .per_leader
+            .iter()
+            .map(|l| {
+                format!(
+                    "{{\"retained_bytes\": {}, \"committed_bytes\": {}, \"freed_bytes\": {}}}",
+                    l.retained_bytes, l.committed_bytes, l.freed_bytes
+                )
+            })
+            .collect();
+        out.push_str(&format!(
+            "    {{\"horizon\": {}, \"edges\": {}, \"cross_total\": {}, \
+             \"elapsed_secs\": {:.6}, \"edges_per_sec\": {:.1}, \"drains\": {}, \
+             \"replay_per_drain\": {:.2}, \"delta_last_bytes\": {}, \
+             \"delta_total_bytes\": {}, \"cross_retained\": {}, \
+             \"cross_committed\": {}, \"cross_freed_bytes\": {}, \
+             \"per_leader\": [{}]}}{}\n",
+            r.horizon,
+            r.edges,
+            r.cross_total,
+            r.elapsed_secs,
+            r.edges_per_sec,
+            r.drains,
+            r.replay_per_drain,
+            r.delta_last_bytes,
+            r.delta_total_bytes,
+            r.cross_retained,
+            r.cross_committed,
+            r.cross_freed_bytes,
+            per_leader.join(", "),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ServiceBenchConfig {
+        ServiceBenchConfig {
+            communities: 6,
+            community_size: 20,
+            shards: 2,
+            leaders: 0,
+            v_max: 64,
+            drain_every: 128,
+            horizons: vec![0, 64],
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn rows_cover_each_horizon_and_json_is_shaped() {
+        let cfg = tiny();
+        let (table, rows) = run(&cfg);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(table.rows.len(), 2);
+        assert!(rows.iter().all(|r| r.edges > 0 && r.edges_per_sec > 0.0));
+        // the bounded run must actually commit and free something
+        let bounded = &rows[1];
+        assert!(bounded.cross_committed > 0, "{bounded:?}");
+        assert!(bounded.cross_freed_bytes > 0);
+        assert_eq!(bounded.per_leader.len(), cfg.shards);
+
+        let json = to_json(&cfg, &rows);
+        assert!(json.starts_with('{') && json.trim_end().ends_with('}'));
+        assert!(json.contains("\"bench\": \"service\""));
+        assert!(json.contains("\"delta_last_bytes\""));
+        assert!(json.contains("\"per_leader\""));
+        // two rows, comma-separated exactly once at the top level list
+        assert_eq!(json.matches("\"horizon\"").count(), 2);
+    }
+}

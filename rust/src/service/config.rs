@@ -77,6 +77,15 @@ impl CommitHorizon {
 pub struct ServiceConfig {
     /// Number of shard workers (clamped to ≥ 1 at start-up).
     pub shards: usize,
+    /// Number of leader partitions the cross log's frozen decisions and
+    /// the committed base are sharded across (node-range ownership via
+    /// `stream::shard::shard_of(node, leaders)`). `0` — the default —
+    /// means **one leader partition per shard worker**, so each
+    /// worker's node range owns exactly its own slice of the committed
+    /// base; normalised at start-up. The partition count never changes
+    /// results (only where committed state lives — property-tested), so
+    /// this is a deployment-shape knob, not a semantics knob.
+    pub leaders: usize,
     /// Per-worker streaming configuration (the paper's `v_max` etc.).
     pub str_config: StrConfig,
     /// Bounded mailbox depth per shard, in chunks. When a shard's
@@ -102,6 +111,7 @@ impl ServiceConfig {
     pub fn new(shards: usize, v_max: u64) -> Self {
         Self {
             shards: shards.max(1),
+            leaders: 0, // 0 = one leader partition per shard
             str_config: StrConfig::new(v_max),
             mailbox_depth: 8,
             chunk_size: 4_096,
@@ -163,6 +173,14 @@ mod tests {
         // silently change run_parallel's semantics
         assert!(ServiceConfig::batch(4, 64).horizon.is_unbounded());
         assert!(ServiceConfig::default().horizon.is_unbounded());
+    }
+
+    #[test]
+    fn leaders_default_to_follow_shards() {
+        // 0 = "one leader partition per shard", resolved at start-up so
+        // changing `shards` after construction still tracks
+        assert_eq!(ServiceConfig::new(4, 64).leaders, 0);
+        assert_eq!(ServiceConfig::batch(4, 64).leaders, 0);
     }
 
     #[test]

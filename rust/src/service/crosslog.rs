@@ -1,4 +1,4 @@
-//! The epoch-structured cross-edge log.
+//! The epoch-structured cross-edge log, partitioned across leaders.
 //!
 //! Cross-shard edges cannot be decided when they arrive (their decision
 //! needs both shards' community state), so the router defers them. This
@@ -10,23 +10,35 @@
 //!   Sealing happens inside `append`, i.e. on the router's chunk
 //!   boundaries — the log never splits a decision's bookkeeping across
 //!   epochs retroactively.
-//! * Drains replay the suffix past the leader's cursor and (under a
+//! * Drains replay the suffix past the merger's cursor and (under a
 //!   bounded horizon) record each replayed edge's **frozen decision**
 //!   — `(endpoint, post-decision community)` pairs — back into the
-//!   owning epoch.
+//!   owning epoch, routed into the **leader partition** that owns the
+//!   endpoint's node range (`shard_of(endpoint, leaders)`).
 //! * An epoch whose end is more than `horizon` cross edges behind the
 //!   log head, and whose edges have all been drained, is **committable**:
-//!   the leader folds its frozen decisions into the persistent
-//!   committed base (`snapshot::LeaderState::commit_epoch`) and the
-//!   epoch — edges and frozen records — is dropped, freeing its memory.
+//!   each leader partition folds *its slice* of the epoch's frozen
+//!   decisions into its own committed-base slice
+//!   (`snapshot::LeaderShard::commit`) and the epoch — edges and frozen
+//!   records — is dropped, freeing its memory.
 //!
 //! Lifecycle of one epoch:
 //!
 //! ```text
 //! open ──(epoch_len edges)──▶ sealed ──(drain replays; decisions
-//!      frozen)──▶ drained ──(head moves ≥ horizon past end)──▶
-//!      committed: fold frozen effects into the committed base, FREE
+//!      frozen per leader)──▶ drained ──(head moves ≥ horizon past
+//!      end)──▶ committed: each leader folds its slice into its
+//!      committed base, FREE
 //! ```
+//!
+//! The **spine** of the log — arrival order, epoch boundaries, the edge
+//! storage itself — stays global: the replay that decides cross edges
+//! is a sequential pass in arrival order, and splitting the edge stream
+//! would force a k-way merge on every drain for zero semantic gain.
+//! What *is* partitioned is everything a leader owns per node range:
+//! the frozen decision slices, the committed base, and the byte
+//! accounting (retained/committed/freed per leader). An edge's own
+//! storage is attributed to the leader owning its first endpoint.
 //!
 //! With [`CommitHorizon::Unbounded`] nothing is ever committed and no
 //! frozen records are kept: the log is the old retained buffer, split
@@ -39,6 +51,7 @@
 use std::collections::VecDeque;
 
 use crate::graph::edge::Edge;
+use crate::stream::shard::shard_of;
 
 use super::config::CommitHorizon;
 
@@ -47,6 +60,11 @@ pub(crate) const BYTES_PER_EDGE: u64 = std::mem::size_of::<Edge>() as u64;
 /// Bytes per frozen decision record (endpoint id + community id); two
 /// records per drained edge, kept only under a bounded horizon.
 pub(crate) const BYTES_PER_FROZEN_ENTRY: u64 = 8;
+/// Per-epoch counter overhead a commit delta ships alongside the frozen
+/// records (epoch start, edge count, record count — three `u64`s). Part
+/// of the drain-payload accounting: the payload must be O(epoch deltas)
+/// and this is the "per-epoch counters" term.
+pub(crate) const EPOCH_COMMIT_HEADER_BYTES: u64 = 24;
 
 /// A frozen replay decision: `(endpoint, post-decision community)`.
 /// `UNSEEN` as the community marks a skipped (self-loop) slot.
@@ -64,7 +82,7 @@ pub(crate) fn epoch_len_for(horizon: CommitHorizon) -> u64 {
     }
 }
 
-/// One epoch of the log. Fields are read by the leader at commit time.
+/// One epoch of the log. Fields are read by the leaders at commit time.
 pub(crate) struct Epoch {
     /// Global index (in the append-ordered cross stream) of this
     /// epoch's first edge.
@@ -73,14 +91,24 @@ pub(crate) struct Epoch {
     edges: Vec<Edge>,
     /// Sealed epochs accept no more edges.
     sealed: bool,
-    /// Frozen decisions, two per drained edge, in replay order.
+    /// Frozen decisions partitioned by owning leader
+    /// (`shard_of(endpoint, leaders)`), each slice in replay order.
     /// Populated only under a bounded horizon.
-    frozen: Vec<FrozenDecision>,
+    frozen: Vec<Vec<FrozenDecision>>,
+    /// Total frozen records attached (across all leader slices) — the
+    /// completeness counter for the commit-time assertion.
+    frozen_count: usize,
 }
 
 impl Epoch {
-    fn new(start: u64) -> Self {
-        Self { start, edges: Vec::new(), sealed: false, frozen: Vec::new() }
+    fn new(start: u64, leaders: usize) -> Self {
+        Self {
+            start,
+            edges: Vec::new(),
+            sealed: false,
+            frozen: vec![Vec::new(); leaders],
+            frozen_count: 0,
+        }
     }
 
     /// Global index one past this epoch's last edge.
@@ -88,28 +116,38 @@ impl Epoch {
         self.start + self.edges.len() as u64
     }
 
-    /// Frozen decisions for the leader's commit fold.
-    pub(crate) fn frozen(&self) -> &[FrozenDecision] {
+    /// Frozen decision slices, one per leader partition — the commit
+    /// delta each leader folds into its committed-base slice.
+    pub(crate) fn frozen_slices(&self) -> &[Vec<FrozenDecision>] {
         &self.frozen
+    }
+
+    /// Total frozen records attached (all leader slices).
+    pub(crate) fn frozen_count(&self) -> usize {
+        self.frozen_count
     }
 
     fn bytes(&self) -> u64 {
         self.edges.len() as u64 * BYTES_PER_EDGE
-            + self.frozen.len() as u64 * BYTES_PER_FROZEN_ENTRY
+            + self.frozen_count as u64 * BYTES_PER_FROZEN_ENTRY
     }
 }
 
 /// The log: a deque of epochs (committed ones are gone, the last one is
-/// open) plus the commit cursor and byte accounting. Lives in the
-/// service's shared state behind a mutex; the lock order everywhere is
-/// leader → crosslog.
+/// open) plus the commit cursor and byte accounting — global and per
+/// leader partition. Lives in the service's shared state behind a
+/// mutex; the lock order everywhere is merger → crosslog → leader
+/// shards (ascending index).
 pub(crate) struct CrossLog {
     horizon: CommitHorizon,
     epoch_len: u64,
+    /// Leader partition count (node-range owner =
+    /// `shard_of(node, leaders)`).
+    leaders: usize,
     /// Uncommitted epochs, oldest first; the last is the open epoch.
     epochs: VecDeque<Epoch>,
     /// Global index of the first retained edge: everything before it
-    /// has been folded into the committed base and freed.
+    /// has been folded into the committed base slices and freed.
     committed: u64,
     /// Total cross edges ever appended (the log head).
     appended: u64,
@@ -117,22 +155,36 @@ pub(crate) struct CrossLog {
     epochs_committed: u64,
     /// Bytes released by committed epochs (edges + frozen records).
     freed_bytes: u64,
+    /// Edges ever appended, attributed per leader (owner of `e.u`).
+    appended_per_leader: Vec<u64>,
+    /// Edges committed (freed), attributed per leader (owner of `e.u`).
+    committed_per_leader: Vec<u64>,
+    /// Frozen records currently resident, per leader partition.
+    frozen_retained_per_leader: Vec<u64>,
+    /// Bytes released by commits, per leader partition.
+    freed_bytes_per_leader: Vec<u64>,
 }
 
 impl CrossLog {
-    pub(crate) fn new(horizon: CommitHorizon) -> Self {
+    pub(crate) fn new(horizon: CommitHorizon, leaders: usize) -> Self {
         let horizon = horizon.normalized();
+        let leaders = leaders.max(1);
         let mut epochs = VecDeque::new();
-        epochs.push_back(Epoch::new(0));
+        epochs.push_back(Epoch::new(0, leaders));
         Self {
             horizon,
             epoch_len: epoch_len_for(horizon),
+            leaders,
             epochs,
             committed: 0,
             appended: 0,
             epochs_sealed: 0,
             epochs_committed: 0,
             freed_bytes: 0,
+            appended_per_leader: vec![0; leaders],
+            committed_per_leader: vec![0; leaders],
+            frozen_retained_per_leader: vec![0; leaders],
+            freed_bytes_per_leader: vec![0; leaders],
         }
     }
 
@@ -150,13 +202,17 @@ impl CrossLog {
                 open.edges.extend_from_slice(&rest[..room]);
                 room
             };
+            for e in &rest[..take] {
+                self.appended_per_leader[shard_of(e.u, self.leaders)] += 1;
+            }
             self.appended += take as u64;
             rest = &rest[take..];
             if self.epochs.back().expect("open epoch").edges.len() as u64 >= self.epoch_len {
                 self.epochs.back_mut().expect("open epoch").sealed = true;
                 self.epochs_sealed += 1;
                 let head = self.appended;
-                self.epochs.push_back(Epoch::new(head));
+                let leaders = self.leaders;
+                self.epochs.push_back(Epoch::new(head, leaders));
             }
         }
         batch.clear();
@@ -190,13 +246,16 @@ impl CrossLog {
     }
 
     /// Attach frozen decisions for the just-replayed edges
-    /// `[start, start + records.len()/2)` to their owning epochs.
-    /// `records` holds exactly two entries per edge, in replay order.
+    /// `[start, start + records.len()/2)` to their owning epochs,
+    /// routing each record into the leader partition that owns its
+    /// endpoint. `records` holds exactly two entries per edge, in
+    /// replay order (the per-partition slices preserve that order).
     pub(crate) fn record_frozen(&mut self, start: u64, records: &[FrozenDecision]) {
         if !self.wants_frozen() || records.is_empty() {
             return;
         }
         debug_assert_eq!(records.len() % 2, 0, "two frozen records per edge");
+        let leaders = self.leaders;
         let mut cursor = start;
         let mut rest = records;
         for ep in self.epochs.iter_mut() {
@@ -212,7 +271,12 @@ impl CrossLog {
                 ep.start
             );
             let edges_here = ((ep.end() - cursor) as usize).min(rest.len() / 2);
-            ep.frozen.extend_from_slice(&rest[..edges_here * 2]);
+            for &(node, comm) in &rest[..edges_here * 2] {
+                let owner = shard_of(node, leaders);
+                ep.frozen[owner].push((node, comm));
+                self.frozen_retained_per_leader[owner] += 1;
+            }
+            ep.frozen_count += edges_here * 2;
             rest = &rest[edges_here * 2..];
             cursor += edges_here as u64;
         }
@@ -220,10 +284,10 @@ impl CrossLog {
     }
 
     /// Pop every epoch whose decisions are final: sealed, fully drained
-    /// (`drained` = the leader's replay cursor), and at least `horizon`
-    /// cross edges behind the head. The caller folds each returned
-    /// epoch's frozen decisions into the committed base, then drops it —
-    /// that drop is the memory bound. Always empty under
+    /// (`drained` = the merger's replay cursor), and at least `horizon`
+    /// cross edges behind the head. The caller hands each returned
+    /// epoch's frozen slices to their leader shards, then drops the
+    /// epoch — that drop is the memory bound. Always empty under
     /// [`CommitHorizon::Unbounded`].
     pub(crate) fn take_committable(&mut self, drained: u64) -> Vec<Epoch> {
         let CommitHorizon::Edges(h) = self.horizon else {
@@ -237,13 +301,23 @@ impl CrossLog {
             }
             let ep = self.epochs.pop_front().expect("front epoch");
             debug_assert_eq!(
-                ep.frozen.len(),
+                ep.frozen_count,
                 ep.edges.len() * 2,
                 "committing an epoch with incomplete frozen records"
             );
             self.committed = ep.end();
             self.epochs_committed += 1;
             self.freed_bytes += ep.bytes();
+            for e in &ep.edges {
+                let owner = shard_of(e.u, self.leaders);
+                self.committed_per_leader[owner] += 1;
+                self.freed_bytes_per_leader[owner] += BYTES_PER_EDGE;
+            }
+            for (l, slice) in ep.frozen.iter().enumerate() {
+                self.frozen_retained_per_leader[l] -= slice.len() as u64;
+                self.freed_bytes_per_leader[l] +=
+                    slice.len() as u64 * BYTES_PER_FROZEN_ENTRY;
+            }
             out.push(ep);
         }
         out
@@ -254,9 +328,9 @@ impl CrossLog {
         self.appended
     }
 
-    /// Edges committed (folded into the base and freed). Because the
-    /// committed region is a prefix, this is also the global index of
-    /// the first retained edge.
+    /// Edges committed (folded into the base slices and freed). Because
+    /// the committed region is a prefix, this is also the global index
+    /// of the first retained edge.
     pub(crate) fn committed_edges(&self) -> u64 {
         self.committed
     }
@@ -274,6 +348,25 @@ impl CrossLog {
     /// Bytes released by committed epochs so far.
     pub(crate) fn freed_bytes(&self) -> u64 {
         self.freed_bytes
+    }
+
+    /// Resident bytes attributed to each leader partition: retained
+    /// edges owned by its node range (via `e.u`) plus its resident
+    /// frozen record slices. Sums to [`retained_bytes`](Self::retained_bytes).
+    pub(crate) fn retained_bytes_per_leader(&self) -> Vec<u64> {
+        (0..self.leaders)
+            .map(|l| {
+                (self.appended_per_leader[l] - self.committed_per_leader[l])
+                    * BYTES_PER_EDGE
+                    + self.frozen_retained_per_leader[l] * BYTES_PER_FROZEN_ENTRY
+            })
+            .collect()
+    }
+
+    /// Bytes each leader partition's commits have released. Sums to
+    /// [`freed_bytes`](Self::freed_bytes).
+    pub(crate) fn freed_bytes_per_leader(&self) -> Vec<u64> {
+        self.freed_bytes_per_leader.clone()
     }
 
     /// Edges per epoch (the `+ one epoch` term of the retention bound).
@@ -300,10 +393,14 @@ mod tests {
         range.map(|i| Edge::new(i, i + 1)).collect()
     }
 
+    fn frozen_total(ep: &Epoch) -> usize {
+        ep.frozen_slices().iter().map(Vec::len).sum()
+    }
+
     #[test]
     fn appends_seal_epochs_on_chunk_boundaries() {
         // horizon 8 → epoch_len 2
-        let mut log = CrossLog::new(CommitHorizon::Edges(8));
+        let mut log = CrossLog::new(CommitHorizon::Edges(8), 1);
         assert_eq!(log.epoch_len(), 2);
         let mut batch = edges(0..5);
         log.append(&mut batch);
@@ -317,7 +414,7 @@ mod tests {
 
     #[test]
     fn unbounded_log_never_commits_and_keeps_no_frozen_records() {
-        let mut log = CrossLog::new(CommitHorizon::Unbounded);
+        let mut log = CrossLog::new(CommitHorizon::Unbounded, 2);
         log.append(&mut edges(0..100));
         assert!(!log.wants_frozen());
         log.record_frozen(0, &[(0, 0); 200]); // must be a no-op
@@ -326,18 +423,24 @@ mod tests {
         assert_eq!(log.committed_edges(), 0);
         assert_eq!(log.freed_bytes(), 0);
         assert_eq!(log.retained_bytes(), 100 * BYTES_PER_EDGE);
+        // per-leader views partition the totals even when idle
+        assert_eq!(
+            log.retained_bytes_per_leader().iter().sum::<u64>(),
+            log.retained_bytes()
+        );
+        assert_eq!(log.freed_bytes_per_leader(), vec![0, 0]);
     }
 
     #[test]
     fn zero_horizon_is_unbounded() {
-        let log = CrossLog::new(CommitHorizon::Edges(0));
+        let log = CrossLog::new(CommitHorizon::Edges(0), 1);
         assert!(!log.wants_frozen());
     }
 
     #[test]
     fn commit_requires_sealed_drained_and_behind_horizon() {
         // epoch_len 2, horizon 8
-        let mut log = CrossLog::new(CommitHorizon::Edges(8));
+        let mut log = CrossLog::new(CommitHorizon::Edges(8), 1);
         log.append(&mut edges(0..4)); // epochs [0,2) and [2,4) sealed
 
         // drained but not behind the horizon → nothing commits
@@ -351,7 +454,8 @@ mod tests {
         log.record_frozen(4, &frozen);
         let committed = log.take_committable(10);
         assert_eq!(committed.len(), 1, "exactly epoch [0,2) is behind the horizon");
-        assert_eq!(committed[0].frozen().len(), 4);
+        assert_eq!(committed[0].frozen_count(), 4);
+        assert_eq!(frozen_total(&committed[0]), 4);
         assert_eq!(log.committed_edges(), 2);
         assert_eq!(log.retained_edges(), 8);
         assert_eq!(
@@ -365,7 +469,7 @@ mod tests {
 
     #[test]
     fn undrained_epochs_never_commit() {
-        let mut log = CrossLog::new(CommitHorizon::Edges(4)); // epoch_len 1
+        let mut log = CrossLog::new(CommitHorizon::Edges(4), 1); // epoch_len 1
         log.append(&mut edges(0..10));
         // head is far past every early epoch, but nothing was drained
         assert!(log.take_committable(0).is_empty());
@@ -379,7 +483,7 @@ mod tests {
 
     #[test]
     fn frozen_records_split_across_epochs() {
-        let mut log = CrossLog::new(CommitHorizon::Edges(8)); // epoch_len 2
+        let mut log = CrossLog::new(CommitHorizon::Edges(8), 1); // epoch_len 2
         log.append(&mut edges(0..6));
         // one drain covering edges [1, 5) spans epochs [0,2), [2,4), [4,6)
         let frozen: Vec<FrozenDecision> = (1..5).flat_map(|i| [(i, 7), (i + 1, 7)]).collect();
@@ -393,14 +497,50 @@ mod tests {
         // every sealed epoch with end ≤ 20 - 8 = 12 commits: [0,2)…[10,12)
         assert_eq!(committed.len(), 6);
         for ep in &committed {
-            assert_eq!(ep.frozen().len(), ep.edges.len() * 2);
+            assert_eq!(ep.frozen_count(), ep.edges.len() * 2);
         }
+    }
+
+    #[test]
+    fn frozen_records_route_to_their_owning_leader_partition() {
+        let leaders = 4usize;
+        let mut log = CrossLog::new(CommitHorizon::Edges(8), leaders); // epoch_len 2
+        log.append(&mut edges(0..2)); // one sealed epoch [0,2)
+        let frozen: Vec<FrozenDecision> = (0..2).flat_map(|i| [(i, 9), (i + 1, 9)]).collect();
+        log.record_frozen(0, &frozen);
+        log.append(&mut edges(2..12)); // head far past [0,2)
+        let tail: Vec<FrozenDecision> = (2..12).flat_map(|i| [(i, 9), (i + 1, 9)]).collect();
+        log.record_frozen(2, &tail);
+        let committed = log.take_committable(12);
+        assert!(!committed.is_empty());
+        for ep in &committed {
+            assert_eq!(ep.frozen_slices().len(), leaders);
+            for (l, slice) in ep.frozen_slices().iter().enumerate() {
+                for &(node, _) in slice {
+                    assert_eq!(
+                        shard_of(node, leaders),
+                        l,
+                        "record for node {node} filed under partition {l}"
+                    );
+                }
+            }
+            assert_eq!(frozen_total(ep), ep.frozen_count());
+        }
+        // per-leader accounting partitions the totals exactly
+        assert_eq!(
+            log.retained_bytes_per_leader().iter().sum::<u64>(),
+            log.retained_bytes()
+        );
+        assert_eq!(
+            log.freed_bytes_per_leader().iter().sum::<u64>(),
+            log.freed_bytes()
+        );
     }
 
     #[test]
     fn retention_bound_holds_when_drains_keep_pace() {
         let h = 16u64;
-        let mut log = CrossLog::new(CommitHorizon::Edges(h));
+        let mut log = CrossLog::new(CommitHorizon::Edges(h), 2);
         let mut next = 0u32;
         for _ in 0..50 {
             let lo = next;

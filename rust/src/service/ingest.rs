@@ -17,22 +17,30 @@
 //!   hot shard falls behind, `push` **blocks** on that mailbox until the
 //!   worker catches up. Edges are never dropped, and cold shards are
 //!   unaffected.
-//! * **Drains** — every `drain_every` pushed edges the persistent
-//!   `LeaderState` folds its frozen history (committed base + live
-//!   tail) over a fresh shard merge and replays **only the cross edges
-//!   that arrived since the previous drain** — `O(n + new cross)` per
-//!   drain, each cross edge replayed exactly once by the snapshot path.
-//!   Under a bounded [`CommitHorizon`](super::config::CommitHorizon)
-//!   each drain then folds epochs that fell behind the horizon into the
-//!   committed base and **frees their storage**.
+//! * **Drains (the delta protocol)** — every `drain_every` pushed edges
+//!   the thin `Merger` folds its commit-invariant view (total drained
+//!   cross degree + frozen communities) over a fresh shard merge and
+//!   replays **only the cross edges that arrived since the previous
+//!   drain** — `O(n + new cross)` per drain, each cross edge replayed
+//!   exactly once by the snapshot path. Under a bounded
+//!   [`CommitHorizon`](super::config::CommitHorizon) the drain then
+//!   ships each newly-finalized epoch's frozen-record slices to their
+//!   `LeaderShard` partitions, which fold them into their
+//!   committed-base slices locally — and the epoch's storage is
+//!   **freed**. The bytes exchanged per drain (replayed suffix in,
+//!   frozen records + per-epoch commit headers out) are the **delta
+//!   payload**, tracked in `delta_last_bytes`/`delta_total_bytes`:
+//!   `O(new epoch deltas)`, never `O(committed base)` — the committed
+//!   base is not read, written, or shipped by a mid-stream drain.
 //! * **Terminal replay** — [`ClusterService::finish`] merges the final
-//!   shard sketches and replays the retained (uncommitted) cross tail
-//!   in arrival order over the committed base. With the default
-//!   `CommitHorizon::Unbounded` the base is empty and the tail is the
-//!   whole history — the batch leader's pass, which is why the final
-//!   partition is then bit-identical to `run_parallel` and independent
-//!   of the drain cadence. With `CommitHorizon::Edges(h)` memory stays
-//!   bounded instead, and committed decisions are final.
+//!   shard sketches *and* (once) the K committed-base slices, then
+//!   replays the retained (uncommitted) cross tail in arrival order.
+//!   With the default `CommitHorizon::Unbounded` every base slice is
+//!   empty and the tail is the whole history — the batch leader's pass,
+//!   which is why the final partition is then bit-identical to
+//!   `run_parallel` and independent of the drain cadence. With
+//!   `CommitHorizon::Edges(h)` memory stays bounded instead, and
+//!   committed decisions are final.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -47,25 +55,32 @@ use crate::stream::source::EdgeSource;
 use crate::util::channel::Channel;
 
 use super::config::ServiceConfig;
-use super::crosslog::CrossLog;
+use super::crosslog::{
+    CrossLog, BYTES_PER_EDGE, BYTES_PER_FROZEN_ENTRY, EPOCH_COMMIT_HEADER_BYTES,
+};
 use super::query::QueryHandle;
 use super::router::Router;
-use super::snapshot::{LeaderState, Snapshot};
+use super::snapshot::{merge_committed_bases, CommittedBase, LeaderShard, Merger, Snapshot};
 
 /// State shared between the router, the shard workers, and every
 /// [`QueryHandle`].
 ///
-/// Lock order (where two are held together): `leader` → `crosslog`.
+/// Lock order (where two or more are held together):
+/// `merger` → `crosslog` → `leaders[i]` (ascending `i`). The stats path
+/// takes `crosslog` and each `leaders[i]` one at a time, never nested
+/// under anything else.
 pub(crate) struct Shared {
     pub(crate) config: ServiceConfig,
     pub(crate) mailboxes: Vec<Channel<Vec<Edge>>>,
     pub(crate) states: Vec<Mutex<StreamingClusterer>>,
-    /// The epoch-structured cross-edge log (arrival order; the leader's
+    /// The epoch-structured cross-edge log (arrival order; the merger's
     /// cursor marks the drained prefix, the commit horizon bounds what
-    /// stays resident).
+    /// stays resident, frozen records are partitioned per leader).
     pub(crate) crosslog: Mutex<CrossLog>,
-    /// The persistent incremental-drain leader.
-    pub(crate) leader: Mutex<LeaderState>,
+    /// The thin drain merger (commit-invariant fold + cursor).
+    pub(crate) merger: Mutex<Merger>,
+    /// The leader partitions: one committed-base slice per node range.
+    pub(crate) leaders: Vec<Mutex<LeaderShard>>,
     /// Edges accepted by `push` (including cross and self-loops).
     pub(crate) ingested: AtomicU64,
     /// Local edges handed to mailboxes.
@@ -81,6 +96,12 @@ pub(crate) struct Shared {
     pub(crate) replayed_total: AtomicU64,
     /// Cross edges integrated into the published snapshot.
     pub(crate) cross_drained: AtomicU64,
+    /// Delta payload of the most recent drain: replayed suffix bytes +
+    /// frozen-record bytes + per-epoch commit headers. O(new deltas),
+    /// independent of the committed-base size (asserted by tests).
+    pub(crate) delta_last_bytes: AtomicU64,
+    /// Σ delta payload across all drains.
+    pub(crate) delta_total_bytes: AtomicU64,
     /// Set by `finish`: the published snapshot is the terminal replay
     /// and must never be overwritten by a late mid-stream drain.
     pub(crate) finished: AtomicBool,
@@ -104,49 +125,69 @@ pub(crate) fn publish_snapshot(shared: &Shared, snap: &Arc<Snapshot>, is_final: 
     }
 }
 
-/// Incremental snapshot drain: under the leader lock, clone the shard
-/// sketches, slice the cross log at the drained cursor, and let the
-/// persistent `LeaderState` replay only the new suffix. Under a bounded
-/// commit horizon the replayed decisions are recorded back into their
-/// epochs, and every epoch that fell behind the horizon is folded into
-/// the committed base and freed. Publishes and returns the resulting
-/// snapshot. After `finish` this is a no-op that returns the terminal
-/// snapshot.
+/// Incremental snapshot drain — the delta protocol. Under the merger
+/// lock: clone the shard sketches, slice the cross log at the drained
+/// cursor, and let the thin `Merger` replay only the new suffix. Under
+/// a bounded commit horizon the replayed decisions are recorded back
+/// into their epochs' per-leader slices, and every epoch that fell
+/// behind the horizon ships its slices to the leader partitions (which
+/// fold them into their committed-base slices) and is freed. The bytes
+/// exchanged — suffix + frozen records + commit headers — are the delta
+/// payload; the committed base itself is never touched. Publishes and
+/// returns the resulting snapshot. After `finish` this is a no-op that
+/// returns the terminal snapshot.
 pub(crate) fn rebuild_snapshot(shared: &Shared) -> Arc<Snapshot> {
     if shared.finished.load(Ordering::SeqCst) {
         return Arc::clone(&shared.snapshot.read().unwrap());
     }
-    let mut leader = shared.leader.lock().unwrap();
+    let mut merger = shared.merger.lock().unwrap();
     let states: Vec<StreamState> = shared
         .states
         .iter()
         .map(|m| m.lock().unwrap().state.clone())
         .collect();
-    let replay_start = leader.drained();
+    let replay_start = merger.drained();
     let (new_cross, want_frozen) = {
         let log = shared.crosslog.lock().unwrap();
         (log.suffix_from(replay_start), log.wants_frozen())
     };
     let mut frozen = want_frozen.then(|| Vec::with_capacity(new_cross.len() * 2));
-    let snap = Arc::new(leader.drain(
+    let snap = Arc::new(merger.drain(
         &shared.config.str_config,
         &states,
         &new_cross,
         frozen.as_mut(),
     ));
+    // the delta payload a cross-process drain would ship: the replayed
+    // suffix in, the frozen decisions back out, one header per epoch
+    // commit — and NO term that scales with the committed base
+    let mut payload = new_cross.len() as u64 * BYTES_PER_EDGE;
     if let Some(frozen) = frozen {
-        // hand the frozen decisions to their epochs, then finalize every
-        // epoch the horizon has passed: fold into the committed base,
-        // free the edge storage
+        payload += frozen.len() as u64 * BYTES_PER_FROZEN_ENTRY;
+        // hand the frozen decisions to their epochs' per-leader slices,
+        // then finalize every epoch the horizon has passed: each leader
+        // partition folds its slice into its committed base, and the
+        // epoch's storage is freed when `committable` drops
         let mut log = shared.crosslog.lock().unwrap();
         log.record_frozen(replay_start, &frozen);
-        for epoch in log.take_committable(leader.drained()) {
-            leader.commit_epoch(epoch.frozen());
+        let committable = log.take_committable(merger.drained());
+        payload += committable.len() as u64 * EPOCH_COMMIT_HEADER_BYTES;
+        for epoch in &committable {
+            for (l, slice) in epoch.frozen_slices().iter().enumerate() {
+                if !slice.is_empty() {
+                    shared.leaders[l].lock().unwrap().commit(slice);
+                }
+            }
         }
         debug_assert_eq!(
-            leader.committed_m(),
+            shared
+                .leaders
+                .iter()
+                .map(|l| l.lock().unwrap().committed_records())
+                .sum::<u64>()
+                / 2,
             log.committed_edges(),
-            "committed accounting diverged between leader and cross log"
+            "committed accounting diverged between leader shards and cross log"
         );
     }
     shared.drains.fetch_add(1, Ordering::Relaxed);
@@ -154,8 +195,10 @@ pub(crate) fn rebuild_snapshot(shared: &Shared) -> Arc<Snapshot> {
     shared
         .replayed_total
         .fetch_add(new_cross.len() as u64, Ordering::Relaxed);
-    shared.cross_drained.store(leader.drained_m(), Ordering::Relaxed);
-    drop(leader);
+    shared.cross_drained.store(merger.drained_m(), Ordering::Relaxed);
+    shared.delta_last_bytes.store(payload, Ordering::Relaxed);
+    shared.delta_total_bytes.fetch_add(payload, Ordering::Relaxed);
+    drop(merger);
     publish_snapshot(shared, &snap, false);
     snap
 }
@@ -185,13 +228,13 @@ fn worker_loop(shared: &Shared, w: usize) {
 #[derive(Debug)]
 pub struct ServiceResult {
     /// The final partition: all local edges processed and the retained
-    /// cross tail replayed in arrival order over the committed base.
-    /// Under `CommitHorizon::Unbounded` (the default) the base is empty
-    /// and the tail is the full cross history, so this is identical to
-    /// what the batch coordinator produces for the same stream and
-    /// configuration, whatever the drain cadence was. Under a bounded
-    /// horizon, committed mid-stream decisions are final and the result
-    /// may differ from batch by a bounded quality margin.
+    /// cross tail replayed in arrival order over the merged committed
+    /// base. Under `CommitHorizon::Unbounded` (the default) the base is
+    /// empty and the tail is the full cross history, so this is
+    /// identical to what the batch coordinator produces for the same
+    /// stream and configuration, whatever the drain cadence was. Under
+    /// a bounded horizon, committed mid-stream decisions are final and
+    /// the result may differ from batch by a bounded quality margin.
     pub snapshot: Arc<Snapshot>,
     /// Total edges pushed over the service's lifetime.
     pub edges_ingested: u64,
@@ -240,6 +283,11 @@ impl ClusterService {
             config.drain_every = u64::MAX;
         }
         config.horizon = config.horizon.normalized();
+        // 0 = one leader partition per shard worker, so each worker's
+        // node range owns exactly its slice of the committed base
+        if config.leaders == 0 {
+            config.leaders = config.shards;
+        }
         let shards = config.shards;
 
         let shared = Arc::new(Shared {
@@ -249,8 +297,11 @@ impl ClusterService {
             states: (0..shards)
                 .map(|_| Mutex::new(StreamingClusterer::new(0, config.str_config.clone())))
                 .collect(),
-            crosslog: Mutex::new(CrossLog::new(config.horizon)),
-            leader: Mutex::new(LeaderState::new()),
+            crosslog: Mutex::new(CrossLog::new(config.horizon, config.leaders)),
+            merger: Mutex::new(Merger::new()),
+            leaders: (0..config.leaders)
+                .map(|l| Mutex::new(LeaderShard::new(l, config.leaders)))
+                .collect(),
             ingested: AtomicU64::new(0),
             dispatched: AtomicU64::new(0),
             processed: AtomicU64::new(0),
@@ -258,6 +309,8 @@ impl ClusterService {
             replayed_last: AtomicU64::new(0),
             replayed_total: AtomicU64::new(0),
             cross_drained: AtomicU64::new(0),
+            delta_last_bytes: AtomicU64::new(0),
+            delta_total_bytes: AtomicU64::new(0),
             finished: AtomicBool::new(false),
             snapshot: RwLock::new(Arc::new(Snapshot::empty())),
             meter: Mutex::new(Meter::start()),
@@ -358,14 +411,15 @@ impl ClusterService {
 
     /// End of stream: flush, close the mailboxes, join the workers, and
     /// run the terminal replay — merge the final shard sketches, fold
-    /// the committed base over them, and replay the retained
+    /// the **merged** committed-base slices over them (the one moment
+    /// the K slices are read as a whole), and replay the retained
     /// (uncommitted) cross tail in arrival order with a fresh tail
-    /// leader. Under `CommitHorizon::Unbounded` the base is empty and
-    /// the tail is the whole cross history — the batch coordinator's
-    /// own final pass, so the result is bit-identical to `run_parallel`
-    /// on the same stream and independent of how many incremental
-    /// drains happened mid-stream. Under `CommitHorizon::Edges(h)` the
-    /// freed history stays final instead.
+    /// merger. Under `CommitHorizon::Unbounded` every slice is empty
+    /// and the tail is the whole cross history — the batch
+    /// coordinator's own final pass, so the result is bit-identical to
+    /// `run_parallel` on the same stream and independent of how many
+    /// incremental drains happened mid-stream. Under
+    /// `CommitHorizon::Edges(h)` the freed history stays final instead.
     pub fn finish(mut self) -> ServiceResult {
         self.router.flush();
         for mb in &self.shared.mailboxes {
@@ -381,13 +435,21 @@ impl ClusterService {
             .map(|m| m.lock().unwrap().state.clone())
             .collect();
         let (base, tail, cross_total) = {
-            let leader = self.shared.leader.lock().unwrap();
+            // hold the merger lock so a racing mid-stream drain cannot
+            // commit epochs between the tail read and the slice reads
+            // (which would double-count them); lock order merger →
+            // crosslog → leaders[i]
+            let _merger = self.shared.merger.lock().unwrap();
             let log = self.shared.crosslog.lock().unwrap();
-            (
-                leader.committed_base(),
-                log.suffix_from(log.committed_edges()),
-                log.appended(),
-            )
+            let tail = log.suffix_from(log.committed_edges());
+            let cross_total = log.appended();
+            let slices: Vec<CommittedBase> = self
+                .shared
+                .leaders
+                .iter()
+                .map(|l| l.lock().unwrap().base().clone())
+                .collect();
+            (merge_committed_bases(&slices), tail, cross_total)
         };
         // raise the flag first so a racing mid-stream drain cannot
         // overwrite the terminal snapshot we are about to publish
@@ -470,6 +532,28 @@ mod tests {
         // wrapper pads to n — compare on the service's node range
         assert!(svc_labels.len() <= par_labels.len());
         assert_eq!(svc_labels[..], par_labels[..svc_labels.len()]);
+    }
+
+    #[test]
+    fn leader_partition_count_is_semantics_free() {
+        // K is a deployment-shape knob: the final partition must be
+        // bit-identical whatever the leader count (here under the
+        // default unbounded horizon; the sharded_leader suite covers
+        // the bounded deterministic case at the unit level)
+        let g = sbm::generate(&SbmConfig::equal(8, 40, 0.3, 0.01, 41));
+        let mut reference: Option<Vec<u32>> = None;
+        for leaders in [1usize, 2, 5] {
+            let mut cfg = small_config(3, 64);
+            cfg.leaders = leaders;
+            cfg.drain_every = 200;
+            let mut svc = ClusterService::start(cfg);
+            svc.push_chunk(&g.edges.edges);
+            let labels = svc.finish().snapshot.labels_padded(g.n());
+            match &reference {
+                None => reference = Some(labels),
+                Some(r) => assert_eq!(&labels, r, "leaders={leaders} diverged"),
+            }
+        }
     }
 
     #[test]

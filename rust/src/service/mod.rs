@@ -12,24 +12,29 @@
 //!   log, and the disjoint shard-sketch merge.
 //! * `crosslog` — the epoch-structured cross-edge log: cross edges
 //!   live in sealed epochs; under a bounded [`CommitHorizon`] an epoch
-//!   that falls behind the horizon is folded into the leader's
-//!   committed base and its storage **freed**, which bounds resident
-//!   cross-edge memory by `horizon + one epoch`.
+//!   that falls behind the horizon ships its frozen decisions — as
+//!   per-leader-partition **epoch deltas** — into the sharded
+//!   committed base and its storage is **freed**, which bounds
+//!   resident cross-edge memory by `horizon + one epoch`.
 //! * [`ingest`] — N shard workers behind bounded mailboxes (sneldb-style
 //!   shard/mailbox/backpressure design); `push` blocks when a shard
 //!   lags, never drops.
-//! * [`snapshot`] — copy-on-read [`Snapshot`]s plus the persistent
-//!   drain leader, split into the committed base (final, freed history)
-//!   and the live tail fold: each drain folds both over a fresh shard
-//!   merge and replays **only the cross edges that arrived since the
-//!   last drain** — `O(n + new cross)` instead of `O(all cross)`.
+//! * [`snapshot`] — copy-on-read [`Snapshot`]s plus the sharded drain
+//!   leader: a thin commit-invariant `Merger` (each drain folds it over
+//!   a fresh shard merge and replays **only the cross edges that
+//!   arrived since the last drain** — `O(n + new cross)` instead of
+//!   `O(all cross)`) and K per-node-range `LeaderShard` partitions
+//!   owning disjoint committed-base slices, merged once at `finish` —
+//!   so a mid-stream drain ships epoch deltas only, never the base.
 //! * [`query`] — cloneable [`QueryHandle`]s serving `community_of`
 //!   point lookups, top-k community summaries, and an operational
 //!   stats endpoint (edges/s, queue depths, drain/replay counters,
-//!   cross-log retained/committed/freed occupancy, memory per node).
-//! * [`config`] — [`ServiceConfig`] knobs (shards, `v_max`, mailbox
-//!   depth, chunk size, drain cadence, [`CommitHorizon`]) plus the
-//!   [`batch`](ServiceConfig::batch) preset.
+//!   per-drain delta payload, cross-log retained/committed/freed
+//!   occupancy — global and per leader partition — memory per node).
+//! * [`config`] — [`ServiceConfig`] knobs (shards, leader partitions,
+//!   `v_max`, mailbox depth, chunk size, drain cadence,
+//!   [`CommitHorizon`]) plus the [`batch`](ServiceConfig::batch)
+//!   preset.
 //!
 //! With the default [`CommitHorizon::Unbounded`], the final partition
 //! after [`ClusterService::finish`] is **bit-identical** to
@@ -69,6 +74,6 @@ pub mod snapshot;
 
 pub use config::{CommitHorizon, ServiceConfig};
 pub use ingest::{ClusterService, ServiceResult};
-pub use query::{QueryHandle, ServiceStats};
+pub use query::{LeaderStats, QueryHandle, ServiceStats};
 pub use router::merge_disjoint_states;
 pub use snapshot::{CommunitySummary, Snapshot};

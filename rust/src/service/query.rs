@@ -7,14 +7,18 @@
 //! of an `Arc`). Stats follow the same rule: memory figures come from
 //! the published snapshot, queue depths from the mailbox channels,
 //! throughput from the `stream::meter` instance the router feeds, the
-//! drain counters from atomics the drain path maintains, and the
-//! cross-log occupancy (retained/committed/freed) from one brief lock
-//! of the log's own mutex — never from the workers' own state locks.
+//! drain and delta-payload counters from atomics the drain path
+//! maintains, the cross-log occupancy (retained/committed/freed, global
+//! and per leader partition) from one brief lock of the log's own
+//! mutex, and each leader shard's committed bytes from one brief lock
+//! of that shard alone — never from the workers' own state locks, and
+//! never nested.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
+use super::config::CommitHorizon;
 use super::ingest::{rebuild_snapshot, Shared};
 use super::snapshot::{CommunitySummary, Snapshot};
 
@@ -24,11 +28,34 @@ pub struct QueryHandle {
     shared: Arc<Shared>,
 }
 
+/// Byte accounting for one leader partition (node-range slice of the
+/// cross log + committed base). Makes the sharded-leader claim
+/// observable: drains move bytes from `retained` into `committed` +
+/// `freed` without the per-drain payload ever scaling with `committed`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LeaderStats {
+    /// Resident cross-log bytes owned by this partition (retained edges
+    /// attributed to its node range + its frozen record slices).
+    pub retained_bytes: u64,
+    /// Committed-base bytes this partition carries (frozen decision
+    /// records folded into its base slice — what a fresh replica would
+    /// fetch to adopt the slice).
+    pub committed_bytes: u64,
+    /// Bytes this partition's commits have released.
+    pub freed_bytes: u64,
+}
+
 /// Point-in-time operational statistics.
 #[derive(Debug, Clone)]
 pub struct ServiceStats {
     /// Shard worker count.
     pub shards: usize,
+    /// Leader partition count (committed base + frozen records are
+    /// sharded across these by node range).
+    pub leaders: usize,
+    /// The service's commit horizon, post-normalisation (`Edges(0)` at
+    /// start-up reads back as `Unbounded`).
+    pub horizon: CommitHorizon,
     /// Edges accepted by the router so far.
     pub edges_ingested: u64,
     /// Cross-shard edges logged over the service's lifetime.
@@ -36,8 +63,8 @@ pub struct ServiceStats {
     /// Cross edges not yet integrated into the published snapshot
     /// (awaiting the next incremental drain).
     pub cross_pending: u64,
-    /// Cross edges the drains have integrated so far (the persistent
-    /// leader's cursor into the cross log).
+    /// Cross edges the drains have integrated so far (the merger's
+    /// cursor into the cross log).
     pub cross_drained: u64,
     /// Cross edges currently resident in the epoch log. Bounded by
     /// `horizon + cross_epoch_len` under `CommitHorizon::Edges`
@@ -45,7 +72,7 @@ pub struct ServiceStats {
     /// `Unbounded`.
     pub cross_retained: u64,
     /// Cross edges whose decisions became final: folded into the
-    /// committed base, their storage freed.
+    /// leaders' committed-base slices, their storage freed.
     pub cross_committed: u64,
     /// Resident bytes of the cross log (edges + frozen decision
     /// records).
@@ -59,10 +86,14 @@ pub struct ServiceStats {
     pub epochs_sealed: u64,
     /// Cross-log epochs committed (finalized and freed) so far.
     pub epochs_committed: u64,
+    /// Per-leader-partition byte accounting
+    /// (retained/committed/freed); entries sum to the corresponding
+    /// globals.
+    pub per_leader: Vec<LeaderStats>,
     /// Snapshot drains performed so far.
     pub drains: u64,
     /// Cross edges replayed by the most recent drain — with the
-    /// incremental leader this is only what arrived since the previous
+    /// incremental merger this is only what arrived since the previous
     /// drain, not the whole buffer.
     pub cross_replayed_last_drain: u64,
     /// Σ cross edges replayed across all snapshot drains. The
@@ -71,6 +102,15 @@ pub struct ServiceStats {
     /// snapshot path, however many drains happen (asserted by the
     /// service test-suite).
     pub cross_replayed_total: u64,
+    /// Delta payload of the most recent drain: the bytes a
+    /// cross-process drain would ship (replayed suffix + frozen
+    /// records + per-epoch commit headers). O(new epoch deltas) by
+    /// construction — independent of the committed-base size, which is
+    /// the sharded-leader scaling claim (asserted by the
+    /// sharded-leader suite).
+    pub delta_last_bytes: u64,
+    /// Σ delta payload across all drains.
+    pub delta_total_bytes: u64,
     /// Ingest throughput over the service lifetime (edges/s).
     pub edges_per_sec: f64,
     /// Time since the service started.
@@ -98,6 +138,11 @@ impl ServiceStats {
         } else {
             self.memory_bytes as f64 / self.nodes as f64
         }
+    }
+
+    /// Committed-base bytes summed across the leader partitions.
+    pub fn committed_bytes_total(&self) -> u64 {
+        self.per_leader.iter().map(|l| l.committed_bytes).sum()
     }
 }
 
@@ -152,6 +197,8 @@ impl QueryHandle {
             cross_epoch_len,
             epochs_sealed,
             epochs_committed,
+            retained_per_leader,
+            freed_per_leader,
         ) = {
             let log = self.shared.crosslog.lock().unwrap();
             (
@@ -163,11 +210,26 @@ impl QueryHandle {
                 log.epoch_len(),
                 log.epochs_sealed(),
                 log.epochs_committed(),
+                log.retained_bytes_per_leader(),
+                log.freed_bytes_per_leader(),
             )
         };
+        // one brief lock per leader shard, never nested under the log
+        let per_leader: Vec<LeaderStats> = retained_per_leader
+            .into_iter()
+            .zip(freed_per_leader)
+            .zip(&self.shared.leaders)
+            .map(|((retained_bytes, freed_bytes), shard)| LeaderStats {
+                retained_bytes,
+                committed_bytes: shard.lock().unwrap().committed_bytes(),
+                freed_bytes,
+            })
+            .collect();
         let cross_drained = self.shared.cross_drained.load(Ordering::Relaxed);
         ServiceStats {
             shards: self.shared.config.shards,
+            leaders: self.shared.config.leaders,
+            horizon: self.shared.config.horizon,
             edges_ingested: self.shared.ingested.load(Ordering::Relaxed),
             cross_total,
             cross_pending: cross_total.saturating_sub(cross_drained),
@@ -179,9 +241,12 @@ impl QueryHandle {
             cross_epoch_len,
             epochs_sealed,
             epochs_committed,
+            per_leader,
             drains: self.shared.drains.load(Ordering::Relaxed),
             cross_replayed_last_drain: self.shared.replayed_last.load(Ordering::Relaxed),
             cross_replayed_total: self.shared.replayed_total.load(Ordering::Relaxed),
+            delta_last_bytes: self.shared.delta_last_bytes.load(Ordering::Relaxed),
+            delta_total_bytes: self.shared.delta_total_bytes.load(Ordering::Relaxed),
             edges_per_sec: report.edges_per_sec(),
             uptime: report.elapsed,
             queue_depths,
@@ -195,7 +260,7 @@ impl QueryHandle {
 
 #[cfg(test)]
 mod tests {
-    use super::super::config::ServiceConfig;
+    use super::super::config::{CommitHorizon, ServiceConfig};
     use super::super::ingest::ClusterService;
     use crate::graph::generators::sbm::{self, SbmConfig};
 
@@ -212,6 +277,9 @@ mod tests {
         svc.quiesce();
         let s = handle.stats();
         assert_eq!(s.shards, 3);
+        assert_eq!(s.leaders, 3, "leaders=0 must resolve to one per shard");
+        assert_eq!(s.per_leader.len(), 3);
+        assert!(s.horizon.is_unbounded());
         assert_eq!(s.edges_ingested, g.m() as u64);
         assert_eq!(s.queue_depths.len(), 3);
         assert_eq!(s.snapshot_edges, g.m() as u64);
@@ -219,16 +287,39 @@ mod tests {
         assert_eq!(s.cross_pending, 0);
         assert_eq!(s.cross_drained, s.cross_total);
         // unbounded horizon: the whole log stays resident, nothing is
-        // ever committed or freed
+        // ever committed or freed — globally and per leader partition
         assert_eq!(s.cross_retained, s.cross_total);
         assert_eq!(s.cross_committed, 0);
         assert_eq!(s.cross_freed_bytes, 0);
         assert_eq!(s.epochs_committed, 0);
+        assert_eq!(s.committed_bytes_total(), 0);
+        assert_eq!(
+            s.per_leader.iter().map(|l| l.retained_bytes).sum::<u64>(),
+            s.cross_log_bytes,
+            "per-leader retained bytes must partition the log"
+        );
+        // the drain shipped the replayed suffix as its delta payload
         assert!(s.drains >= 1);
+        assert_eq!(s.delta_total_bytes, s.cross_replayed_total * 8);
         assert!(s.memory_bytes > 0);
         assert!(s.bytes_per_node() >= 16.0, "{}", s.bytes_per_node());
         assert!(s.uptime.as_nanos() > 0);
         svc.finish();
+    }
+
+    #[test]
+    fn explicit_leader_count_and_zero_horizon_normalisation_show_in_stats() {
+        // Edges(0) is the CLI's "unbounded" spelling; start-up must
+        // normalise it, and the leaders knob must be taken as given
+        let mut cfg = ServiceConfig::new(2, 64);
+        cfg.leaders = 5;
+        cfg.horizon = CommitHorizon::Edges(0);
+        let svc = ClusterService::start(cfg);
+        let s = svc.handle().stats();
+        assert_eq!(s.leaders, 5);
+        assert_eq!(s.per_leader.len(), 5);
+        assert!(s.horizon.is_unbounded());
+        assert_eq!(s.horizon, CommitHorizon::Unbounded);
     }
 
     #[test]

@@ -11,9 +11,12 @@
 //!   chunks bound for the workers' bounded mailboxes (blocking
 //!   backpressure, never drops), and append cross-shard edges to the
 //!   epoch-structured cross log (`super::crosslog`) — epochs seal on
-//!   these chunk boundaries. `ClusterService` owns one; `run_parallel`
-//!   is a thin batch preset over `ClusterService` and therefore uses
-//!   the same instance type, the same code, the same semantics.
+//!   these chunk boundaries, and they are also the unit the sharded
+//!   drain leader ships: a drain exchanges only the epoch deltas the
+//!   router created here, never the committed base they eventually
+//!   fold into. `ClusterService` owns one; `run_parallel` is a thin
+//!   batch preset over `ClusterService` and therefore uses the same
+//!   instance type, the same code, the same semantics.
 //! * [`merge_disjoint_states`] — the merge half of the core: the
 //!   conflict-free array union of shard sketches that every drain and
 //!   the terminal replay build on.

@@ -1,25 +1,42 @@
-//! Copy-on-read snapshots and the persistent drain leader.
+//! Copy-on-read snapshots, the thin drain merger, and the sharded
+//! committed-base leaders.
 //!
 //! The service needs valid partitions *while* the stream is still
 //! flowing. Originally every drain rebuilt the queryable partition from
 //! scratch: clone the shard sketches, merge, and replay the **entire**
-//! cross-edge buffer — cost `O(all cross edges)`, growing with the
-//! cross fraction `≈ 1 − 1/shards` of everything ever streamed. A
-//! service that drains often would spend its life re-deciding old cross
-//! edges.
+//! cross-edge buffer — cost `O(all cross edges)`. The persistent leader
+//! (PR 2) made drains incremental; the commit horizon (PR 3) made the
+//! retained log bounded. This revision splits the leader itself so a
+//! drain no longer touches the committed base at all:
 //!
-//! `LeaderState` replaces that with an **incremental** drain. It
-//! persists two facts between drains:
+//! * `Merger` — the thin merger. Persists, per node, the **total**
+//!   cross degree contributed by already-drained cross edges
+//!   (`fold_degree`) and the community the last drained decision left
+//!   the node in (`cross_community` — frozen: a drained cross edge is
+//!   never re-decided mid-stream). Because a commit only *moves* a
+//!   record from the live tail into a committed-base slice — the
+//!   per-node degree sum and the last-decision community are invariant
+//!   under that move — the merger's fold needs no update when epochs
+//!   commit. A mid-stream drain therefore reads **only** the merger
+//!   fold (`O(n)`) and the cross edges that arrived since the previous
+//!   drain; the committed base, however large, is never re-read and
+//!   never re-shipped.
+//! * `LeaderShard` — one per leader partition. Owns the
+//!   `CommittedBase` **slice** for its node range
+//!   (`shard_of(node, leaders)`): the final effects of committed
+//!   epochs. Commits arrive as per-epoch frozen-record slices (the
+//!   epoch delta) and fold in locally — no cross-partition
+//!   coordination, no merger involvement.
+//! * `merge_committed_bases` — the disjoint-node-range merge rule:
+//!   each node's committed records all live in exactly one slice
+//!   (its owner's), so the merge is a conflict-free array union, and
+//!   "per node, last committed epoch wins" is preserved because each
+//!   slice receives its records in global commit order. Run **once**,
+//!   at `finish`, to assemble the base the terminal replay starts from
+//!   — the only moment the base slices are read as a whole.
 //!
-//! * per-node cross *degree* — how much degree node `i` has accumulated
-//!   from already-drained cross edges (split between the committed base
-//!   and the live tail), and
-//! * `cross_community[i]` — the community the last drained cross-edge
-//!   decision left node `i` in (its decisions are *frozen*: a drained
-//!   cross edge is never re-decided mid-stream).
-//!
-//! A drain then costs `O(n)` to fold those frozen effects over a fresh
-//! merge of the shard sketches — volumes are *derived* in one pass via
+//! A drain costs `O(n)` to fold the merger state over a fresh merge of
+//! the shard sketches — volumes are *derived* in one pass via
 //! [`StreamState::recompute_volumes`], which is sound because
 //! `v_k = Σ_{i∈k} d_i` is an invariant of the decision rule — plus
 //! `O(new cross edges)` to replay only what arrived since the previous
@@ -27,33 +44,24 @@
 //! once** by the snapshot path (asserted via the drain counters in
 //! `QueryHandle::stats`).
 //!
-//! Since the commit-horizon refactor the frozen state is **split in
-//! two** (see `service::crosslog` for the epoch log that drives it):
-//!
-//! * the **committed base** ([`CommittedBase`]) — the effects of cross
-//!   edges whose epochs fell behind the commit horizon. These are
-//!   *final*: their edge storage has been freed, so they can never be
-//!   re-replayed. The terminal replay starts from this base.
-//! * the **live tail fold** (`tail_degree` + the union community view)
-//!   — the effects of drained-but-uncommitted cross edges. These are
-//!   frozen for mid-stream views but still provisional: `finish`
-//!   discards the fold and re-replays the retained tail against the
-//!   final shard sketches.
-//!
 //! Consistency notes, all pinned by tests:
 //!
 //! * Under [`CommitHorizon::Unbounded`](super::config::CommitHorizon)
-//!   the committed base stays empty, so a fresh leader draining the
-//!   whole log is *exactly* the old full-buffer rebuild —
+//!   nothing commits, every base slice stays empty, and a fresh merger
+//!   draining the whole log is *exactly* the old full-buffer rebuild —
 //!   `Snapshot::build` is implemented that way, and it is what
 //!   `ClusterService::finish` runs as the terminal replay. The
 //!   **final** partition therefore never depends on how many mid-stream
 //!   drains happened (golden + property suites).
+//! * The leader partition count never changes results — only where
+//!   committed state lives. Merging K base slices reproduces the
+//!   single-leader base bit for bit (property-tested below across
+//!   partition counts × horizons).
 //! * Under a bounded horizon the terminal replay covers only the
-//!   uncommitted tail over the committed base: memory is bounded, and
-//!   the final partition may differ from batch by whatever the
-//!   committed mid-stream decisions pinned (golden-stream modularity
-//!   within 2% of the unbounded run, asserted).
+//!   uncommitted tail over the merged base: memory is bounded, and the
+//!   final partition may differ from batch by whatever the committed
+//!   mid-stream decisions pinned (golden-stream modularity within 2%
+//!   of the unbounded run, asserted).
 //! * Mid-stream snapshots keep every stream-end invariant (volume
 //!   conservation `Σ v_k = 2t`, labels in node-id space), but between
 //!   drains the frozen decisions may differ from what a from-scratch
@@ -63,8 +71,9 @@
 use crate::coordinator::algorithm::{StrConfig, StreamingClusterer};
 use crate::coordinator::state::{StreamState, UNSEEN};
 use crate::graph::edge::Edge;
+use crate::stream::shard::shard_of;
 
-use super::crosslog::FrozenDecision;
+use super::crosslog::{FrozenDecision, BYTES_PER_FROZEN_ENTRY};
 use super::router::merge_disjoint_states;
 
 /// One row of a top-k community report.
@@ -80,14 +89,19 @@ pub struct CommunitySummary {
 
 /// The *final* effects of committed cross edges: degree contributed per
 /// node, the community each node's last committed decision chose, and
-/// the committed edge count. Once an epoch's decisions land here its
-/// edges are gone — this base is the only trace they leave, and it is
-/// what the terminal replay (and every drain) builds on.
+/// the committed record count. Once an epoch's decisions land here its
+/// edges are gone — this base is the only trace they leave. Each
+/// [`LeaderShard`] owns one **slice** (only nodes in its range are ever
+/// populated); [`merge_committed_bases`] assembles the whole for the
+/// terminal replay.
 #[derive(Debug, Clone, Default)]
 pub(crate) struct CommittedBase {
     degree: Vec<u32>,
     community: Vec<u32>,
-    m: u64,
+    /// Committed endpoint records folded in (two per committed cross
+    /// edge — a slice may hold an odd count when an edge's endpoints
+    /// have different owners, so this counts half-edges, not edges).
+    records: u64,
 }
 
 impl CommittedBase {
@@ -97,54 +111,151 @@ impl CommittedBase {
             self.community.resize(i + 1, UNSEEN);
         }
     }
+
+    /// Committed cross edges covered (meaningful on a merged base or a
+    /// single-partition slice, where both endpoints of every committed
+    /// edge are present).
+    pub(crate) fn m(&self) -> u64 {
+        self.records / 2
+    }
+
+    /// Committed endpoint records folded into this slice.
+    pub(crate) fn records(&self) -> u64 {
+        self.records
+    }
 }
 
-/// The persistent drain leader, split along the commit horizon:
+/// Merge disjoint committed-base slices into the whole base.
 ///
-/// * [`CommittedBase`] — final effects of committed epochs (their edges
-///   are freed; these decisions can never be re-replayed);
-/// * the live tail fold — `tail_degree` plus the union community view
-///   `cross_community`, covering drained-but-uncommitted cross edges
-///   (provisional: `finish` discards the fold and re-replays the tail);
-/// * the cursor into the cross log (global edge index).
+/// The merge rule for disjoint node ranges: every node's committed
+/// records were all routed to its owning partition, so at most one
+/// slice has data for any node — degrees and communities copy over
+/// (debug-asserted disjoint) and record counts add. "Per node, last
+/// committed epoch wins" needs no tie-break here: it was already
+/// enforced inside the owning slice, which received the node's records
+/// in global commit order.
+pub(crate) fn merge_committed_bases(slices: &[CommittedBase]) -> CommittedBase {
+    let n = slices.iter().map(|b| b.degree.len()).max().unwrap_or(0);
+    let mut out = CommittedBase::default();
+    if n > 0 {
+        out.ensure(n - 1);
+    }
+    for b in slices {
+        for i in 0..b.degree.len() {
+            if b.degree[i] > 0 || b.community[i] != UNSEEN {
+                debug_assert!(
+                    out.degree[i] == 0 && out.community[i] == UNSEEN,
+                    "leader base slices overlap at node {i}"
+                );
+                out.degree[i] = b.degree[i];
+                out.community[i] = b.community[i];
+            }
+        }
+        out.records += b.records;
+    }
+    out
+}
+
+/// One leader partition: the committed-base slice for its node range.
+/// Commits fold epoch-delta frozen records in locally; nothing else
+/// ever writes here, and mid-stream drains never read it — the slices
+/// are only assembled (once) by the terminal replay.
+pub(crate) struct LeaderShard {
+    /// Partition index (owner of node `i` ⇔ `shard_of(i, of) == id`).
+    id: usize,
+    /// Partition count.
+    of: usize,
+    base: CommittedBase,
+}
+
+impl LeaderShard {
+    pub(crate) fn new(id: usize, of: usize) -> Self {
+        debug_assert!(id < of.max(1));
+        Self { id, of: of.max(1), base: CommittedBase::default() }
+    }
+
+    /// Fold one epoch's frozen-record slice for this partition into the
+    /// committed base slice. Records arrive in global commit order
+    /// (epochs commit oldest-first, slices preserve replay order), so
+    /// overwriting the community per record is last-decision-wins.
+    pub(crate) fn commit(&mut self, frozen: &[FrozenDecision]) {
+        for &(node, comm) in frozen {
+            if comm == UNSEEN {
+                continue; // skipped slot (self-loop) — carries no decision
+            }
+            debug_assert_eq!(
+                shard_of(node, self.of),
+                self.id,
+                "record for node {node} shipped to the wrong leader partition"
+            );
+            let i = node as usize;
+            self.base.ensure(i);
+            self.base.degree[i] += 1;
+            self.base.community[i] = comm;
+            self.base.records += 1;
+        }
+    }
+
+    /// This partition's committed-base slice.
+    pub(crate) fn base(&self) -> &CommittedBase {
+        &self.base
+    }
+
+    /// Committed endpoint records held by this slice.
+    pub(crate) fn committed_records(&self) -> u64 {
+        self.base.records
+    }
+
+    /// Logical bytes of committed decision state this slice carries
+    /// (the payload a fresh replica would have to fetch to adopt it).
+    pub(crate) fn committed_bytes(&self) -> u64 {
+        self.base.records * BYTES_PER_FROZEN_ENTRY
+    }
+}
+
+/// The thin drain merger: the only state a mid-stream drain needs.
+///
+/// * `fold_degree[i]` — total degree node `i` accumulated from **all**
+///   drained cross edges, committed or not. Commits move records
+///   between the tail and a base slice without changing this sum, so
+///   the merger is commit-invariant by construction.
+/// * `cross_community[i]` — the community the last drained cross-edge
+///   decision left node `i` in (`UNSEEN` = untouched). Also
+///   commit-invariant: the union view already reflects the globally
+///   last decision.
+/// * the cursor into the cross log and the drained-edge count.
 ///
 /// Lives in the service's shared state behind a mutex; a fresh instance
 /// draining a full log reproduces the from-scratch rebuild bit for bit.
-pub(crate) struct LeaderState {
-    /// Final effects of committed epochs.
-    committed: CommittedBase,
-    /// Degree contributed by drained-but-uncommitted cross edges.
-    tail_degree: Vec<u32>,
+pub(crate) struct Merger {
+    /// Per-node degree from drained cross edges (committed + tail).
+    fold_degree: Vec<u32>,
     /// Community each node was left in by its last drained cross-edge
-    /// decision — committed or tail, whichever came later (`UNSEEN` =
-    /// no cross edge has touched this node). The union view folded
-    /// into mid-stream snapshots.
+    /// decision (`UNSEEN` = no cross edge has touched this node).
     cross_community: Vec<u32>,
     /// Cursor into the cross log: edges `[0, drained)` (global indices)
     /// have been replayed by some earlier drain.
     drained: u64,
-    /// Drained *uncommitted* cross edges that entered `edges_processed`
-    /// (self-loops never route cross, so committed + tail equals
-    /// `drained` in practice; kept separate so the accounting cannot
-    /// drift if that ever changes).
-    tail_m: u64,
+    /// Drained cross edges that entered `edges_processed` (self-loops
+    /// never route cross, so this equals `drained` in practice; kept
+    /// separate so the accounting cannot drift if that ever changes).
+    drained_m: u64,
 }
 
-impl LeaderState {
+impl Merger {
     pub(crate) fn new() -> Self {
         Self::over(CommittedBase::default())
     }
 
-    /// Leader resuming from a committed base with an empty tail — the
-    /// terminal replay's starting point (and, with an empty base, the
-    /// from-scratch rebuild).
-    pub(crate) fn over(committed: CommittedBase) -> Self {
+    /// Merger resuming from a (merged) committed base with an empty
+    /// tail — the terminal replay's starting point (and, with an empty
+    /// base, the from-scratch rebuild).
+    pub(crate) fn over(base: CommittedBase) -> Self {
         Self {
-            tail_degree: vec![0; committed.degree.len()],
-            cross_community: committed.community.clone(),
-            committed,
+            drained_m: base.m(),
+            fold_degree: base.degree,
+            cross_community: base.community,
             drained: 0,
-            tail_m: 0,
         }
     }
 
@@ -154,29 +265,17 @@ impl LeaderState {
         self.drained
     }
 
-    /// Drained cross edges counted into snapshot coverage (committed
-    /// base + live tail).
+    /// Drained cross edges counted into snapshot coverage.
     pub(crate) fn drained_m(&self) -> u64 {
-        self.committed.m + self.tail_m
+        self.drained_m
     }
 
-    /// Cross edges whose decisions are final (committed base only).
-    pub(crate) fn committed_m(&self) -> u64 {
-        self.committed.m
-    }
-
-    /// Clone of the committed base — what `finish` replays the
-    /// uncommitted tail over.
-    pub(crate) fn committed_base(&self) -> CommittedBase {
-        self.committed.clone()
-    }
-
-    /// Incremental drain: fold the frozen cross effects (committed base
-    /// + live tail) over a fresh merge of `shard_states`, derive the
-    /// volumes, then replay only `new_cross` (the log suffix past
-    /// [`drained`](Self::drained)). When `frozen_log` is given (bounded
-    /// horizon), two `(endpoint, post-decision community)` records per
-    /// replayed edge are appended to it for the cross log's epochs.
+    /// Incremental drain: fold the frozen cross effects over a fresh
+    /// merge of `shard_states`, derive the volumes, then replay only
+    /// `new_cross` (the log suffix past [`drained`](Self::drained)).
+    /// When `frozen_log` is given (bounded horizon), two
+    /// `(endpoint, post-decision community)` records per replayed edge
+    /// are appended to it for the cross log's epochs.
     pub(crate) fn drain(
         &mut self,
         config: &StrConfig,
@@ -186,14 +285,11 @@ impl LeaderState {
     ) -> Snapshot {
         let mut base = merge_disjoint_states(0, shard_states);
         let local_edges = base.edges_processed;
-        let hi = self.committed.degree.len().max(self.tail_degree.len());
+        let hi = self.fold_degree.len();
         if hi > 0 {
             // frozen effects may reference ids no shard has seen yet
             base.ensure((hi - 1) as u32);
-            for (i, &d) in self.committed.degree.iter().enumerate() {
-                base.degree[i] += d;
-            }
-            for (i, &d) in self.tail_degree.iter().enumerate() {
+            for (i, &d) in self.fold_degree.iter().enumerate() {
                 base.degree[i] += d;
             }
             for (i, &c) in self.cross_community.iter().enumerate() {
@@ -202,7 +298,7 @@ impl LeaderState {
                 }
             }
         }
-        base.edges_processed += self.drained_m();
+        base.edges_processed += self.drained_m;
         base.recompute_volumes();
 
         let mut leader = StreamingClusterer::with_state(base, config.clone());
@@ -219,14 +315,14 @@ impl LeaderState {
             }
             leader.process_edge(e);
             self.freeze(e, &leader.state, frozen_log.as_deref_mut());
-            self.tail_m += 1;
+            self.drained_m += 1;
         }
         self.drained += new_cross.len() as u64;
 
         Snapshot {
             state: leader.state,
             local_edges,
-            cross_edges: self.drained_m(),
+            cross_edges: self.drained_m,
         }
     }
 
@@ -241,12 +337,12 @@ impl LeaderState {
         frozen_log: Option<&mut Vec<FrozenDecision>>,
     ) {
         let hi = e.u.max(e.v) as usize;
-        if self.tail_degree.len() <= hi {
-            self.tail_degree.resize(hi + 1, 0);
+        if self.fold_degree.len() <= hi {
+            self.fold_degree.resize(hi + 1, 0);
             self.cross_community.resize(hi + 1, UNSEEN);
         }
-        self.tail_degree[e.u as usize] += 1;
-        self.tail_degree[e.v as usize] += 1;
+        self.fold_degree[e.u as usize] += 1;
+        self.fold_degree[e.v as usize] += 1;
         let cu = state.community[e.u as usize];
         let cv = state.community[e.v as usize];
         self.cross_community[e.u as usize] = cu;
@@ -255,35 +351,6 @@ impl LeaderState {
             log.push((e.u, cu));
             log.push((e.v, cv));
         }
-    }
-
-    /// Fold one finalized epoch's frozen decisions into the committed
-    /// base, moving their degree contribution out of the live tail.
-    /// Epochs must be committed in log order (the cross log guarantees
-    /// it), so overwriting the committed community per record preserves
-    /// last-decision-wins. The union view (`cross_community`) already
-    /// holds each node's globally-last drained decision and is
-    /// untouched.
-    pub(crate) fn commit_epoch(&mut self, frozen: &[FrozenDecision]) {
-        let mut moved = 0u64;
-        for &(node, comm) in frozen {
-            if comm == UNSEEN {
-                continue; // skipped slot (self-loop) — carries no decision
-            }
-            let i = node as usize;
-            self.committed.ensure(i);
-            self.committed.degree[i] += 1;
-            self.committed.community[i] = comm;
-            debug_assert!(
-                self.tail_degree[i] > 0,
-                "committing node {i} with no tail degree to move"
-            );
-            self.tail_degree[i] -= 1;
-            moved += 1;
-        }
-        debug_assert_eq!(moved % 2, 0, "frozen records come in endpoint pairs");
-        self.committed.m += moved / 2;
-        self.tail_m -= moved / 2;
     }
 }
 
@@ -319,11 +386,11 @@ impl Snapshot {
         Self::build_over(config, CommittedBase::default(), shard_states, cross)
     }
 
-    /// Terminal replay over a committed base: fold the base's final
-    /// cross effects over the merged shard sketches, then replay only
-    /// `tail` — the retained (uncommitted) cross edges — in arrival
-    /// order with a fresh tail leader. With an empty base this *is*
-    /// [`build`](Self::build); with a bounded horizon it is how
+    /// Terminal replay over a (merged) committed base: fold the base's
+    /// final cross effects over the merged shard sketches, then replay
+    /// only `tail` — the retained (uncommitted) cross edges — in
+    /// arrival order with a fresh tail merger. With an empty base this
+    /// *is* [`build`](Self::build); with a bounded horizon it is how
     /// `finish` avoids needing the freed history back.
     pub(crate) fn build_over(
         config: &StrConfig,
@@ -331,7 +398,7 @@ impl Snapshot {
         shard_states: &[StreamState],
         tail: &[Edge],
     ) -> Self {
-        LeaderState::over(committed).drain(config, shard_states, tail, None)
+        Merger::over(committed).drain(config, shard_states, tail, None)
     }
 
     /// The merged sketch behind this snapshot.
@@ -399,7 +466,10 @@ impl Snapshot {
 
 #[cfg(test)]
 mod tests {
+    use super::super::config::CommitHorizon;
+    use super::super::crosslog::CrossLog;
     use super::*;
+    use crate::util::proptest::property;
 
     #[test]
     fn empty_snapshot_is_all_singletons() {
@@ -443,13 +513,13 @@ mod tests {
         let cross = vec![Edge::new(1, 5), Edge::new(0, 6), Edge::new(1, 6)];
 
         // one edge per drain, shard states fixed between drains
-        let mut leader = LeaderState::new();
-        let s1 = leader.drain(&cfg, &states, &cross[..1], None);
-        assert_eq!((s1.edges(), leader.drained()), (3, 1));
-        let s2 = leader.drain(&cfg, &states, &cross[1..2], None);
-        assert_eq!((s2.edges(), leader.drained()), (4, 2));
-        let s3 = leader.drain(&cfg, &states, &cross[2..], None);
-        assert_eq!((s3.edges(), leader.drained()), (5, 3));
+        let mut merger = Merger::new();
+        let s1 = merger.drain(&cfg, &states, &cross[..1], None);
+        assert_eq!((s1.edges(), merger.drained()), (3, 1));
+        let s2 = merger.drain(&cfg, &states, &cross[1..2], None);
+        assert_eq!((s2.edges(), merger.drained()), (4, 2));
+        let s3 = merger.drain(&cfg, &states, &cross[2..], None);
+        assert_eq!((s3.edges(), merger.drained()), (5, 3));
         assert_eq!(s3.state().total_volume(), 2 * s3.edges());
 
         // with shard states unchanged between drains there is nothing to
@@ -461,20 +531,20 @@ mod tests {
     }
 
     #[test]
-    fn leader_freezes_cross_only_nodes_beyond_every_shard() {
-        // node 900 exists only in cross edges; the leader must carry it
+    fn merger_freezes_cross_only_nodes_beyond_every_shard() {
+        // node 900 exists only in cross edges; the merger must carry it
         // across drains even though no shard sketch will ever mention it
         let cfg = StrConfig::new(64);
         let mut a = StreamingClusterer::new(0, cfg.clone());
         a.process_edge(Edge::new(0, 1));
         let states = [a.state.clone()];
 
-        let mut leader = LeaderState::new();
-        let s1 = leader.drain(&cfg, &states, &[Edge::new(0, 900)], None);
+        let mut merger = Merger::new();
+        let s1 = merger.drain(&cfg, &states, &[Edge::new(0, 900)], None);
         let c900 = s1.community_of(900);
         assert!(s1.state().n() > 900);
 
-        let s2 = leader.drain(&cfg, &states, &[], None);
+        let s2 = merger.drain(&cfg, &states, &[], None);
         assert_eq!(s2.community_of(900), c900, "frozen decision lost");
         assert_eq!(s2.edges(), s1.edges());
         assert_eq!(s2.state().total_volume(), 2 * s2.edges());
@@ -482,9 +552,9 @@ mod tests {
 
     #[test]
     fn committing_an_epoch_leaves_mid_stream_drains_unchanged() {
-        // the commit fold moves effects from the tail to the committed
-        // base; with shard states fixed, a drain after the commit must
-        // see the exact same partition as one before it
+        // a commit only moves frozen records into a leader's base slice;
+        // the merger fold is invariant under it, so a drain after the
+        // commit must see the exact same partition as one before it
         let cfg = StrConfig::new(64);
         let mut a = StreamingClusterer::new(0, cfg.clone());
         a.process_edge(Edge::new(0, 1));
@@ -493,17 +563,19 @@ mod tests {
         let states = [a.state.clone(), b.state.clone()];
         let cross = vec![Edge::new(1, 5), Edge::new(0, 6), Edge::new(1, 6)];
 
-        let mut leader = LeaderState::new();
+        let mut merger = Merger::new();
         let mut frozen = Vec::new();
-        let before = leader.drain(&cfg, &states, &cross, Some(&mut frozen));
+        let before = merger.drain(&cfg, &states, &cross, Some(&mut frozen));
         assert_eq!(frozen.len(), 2 * cross.len());
 
-        // commit the first two edges' decisions (one "epoch")
-        leader.commit_epoch(&frozen[..4]);
-        assert_eq!(leader.committed_m(), 2);
-        assert_eq!(leader.drained_m(), 3, "commit must not change coverage");
+        // commit the first two edges' decisions (one "epoch") into a
+        // single-partition leader
+        let mut shard = LeaderShard::new(0, 1);
+        shard.commit(&frozen[..4]);
+        assert_eq!(shard.base().m(), 2);
+        assert_eq!(merger.drained_m(), 3, "commit must not change coverage");
 
-        let after = leader.drain(&cfg, &states, &[], None);
+        let after = merger.drain(&cfg, &states, &[], None);
         assert_eq!(after.labels(), before.labels());
         assert_eq!(after.state().volume, before.state().volume);
         assert_eq!(after.state().degree, before.state().degree);
@@ -525,15 +597,16 @@ mod tests {
         let states = [a.state.clone(), b.state.clone()];
         let cross = vec![Edge::new(1, 5), Edge::new(0, 6), Edge::new(1, 6)];
 
-        let mut leader = LeaderState::new();
+        let mut merger = Merger::new();
         let mut frozen = Vec::new();
-        leader.drain(&cfg, &states, &cross, Some(&mut frozen));
-        leader.commit_epoch(&frozen[..2]); // commit the first edge
+        merger.drain(&cfg, &states, &cross, Some(&mut frozen));
+        let mut shard = LeaderShard::new(0, 1);
+        shard.commit(&frozen[..2]); // commit the first edge
 
         let full = Snapshot::build(&cfg, &states, &cross);
         let over = Snapshot::build_over(
             &cfg,
-            leader.committed_base(),
+            merge_committed_bases(&[shard.base().clone()]),
             &states,
             &cross[1..],
         );
@@ -541,6 +614,128 @@ mod tests {
         assert_eq!(over.cross_edges, full.cross_edges);
         assert_eq!(over.state().total_volume(), 2 * over.edges());
         assert_eq!(over.labels(), full.labels());
+    }
+
+    #[test]
+    fn merge_routes_each_node_to_exactly_one_slice() {
+        // three partitions, records hand-routed exactly as the cross log
+        // does it: owner = shard_of(node, 3)
+        let of = 3usize;
+        let mut shards: Vec<LeaderShard> =
+            (0..of).map(|l| LeaderShard::new(l, of)).collect();
+        let records: Vec<FrozenDecision> =
+            (0..40u32).flat_map(|i| [(i, i % 5), (i + 1, i % 5)]).collect();
+        for &(node, comm) in &records {
+            shards[shard_of(node, of)].commit(&[(node, comm)]);
+        }
+        let merged =
+            merge_committed_bases(&shards.iter().map(|s| s.base().clone()).collect::<Vec<_>>());
+        // vs the single-partition fold of the same record stream
+        let mut single = LeaderShard::new(0, 1);
+        single.commit(&records);
+        assert_eq!(merged.degree, single.base().degree);
+        assert_eq!(merged.community, single.base().community);
+        assert_eq!(merged.records(), single.base().records());
+        assert_eq!(merged.m(), 40);
+    }
+
+    /// The sharded-base merge rule, end to end and deterministic: drive
+    /// the cross log + merger + K leader shards by hand (no threads, so
+    /// drain points are identical across K) and check that merging the
+    /// K per-partition base slices reproduces the single-leader base —
+    /// and the same terminal partition — for the same committed epochs,
+    /// across partition counts {1, 2, 4} × horizons.
+    #[test]
+    fn sharded_base_merge_equals_single_leader_across_horizons() {
+        property("sharded base merge ≡ single leader", 12, |rng, size| {
+            let n = size.max(4);
+            let cfg = StrConfig::new(1 + rng.next_below(100));
+            // fixed shard sketch over a few local edges
+            let mut a = StreamingClusterer::new(0, cfg.clone());
+            for _ in 0..size {
+                let u = rng.range(0, n) as u32;
+                let v = rng.range(0, n) as u32;
+                if u != v {
+                    a.process_edge(Edge::new(u, v));
+                }
+            }
+            let states = [a.state.clone()];
+
+            // a random cross stream and a fixed chunking of it
+            let m = size * 3 + 8;
+            let cross: Vec<Edge> = (0..m)
+                .map(|_| {
+                    let u = rng.range(0, n) as u32;
+                    let mut v = rng.range(0, n) as u32;
+                    if u == v {
+                        v = (v + 1) % n as u32;
+                    }
+                    Edge::new(u, v)
+                })
+                .collect();
+            let chunk = 1 + rng.next_below(6) as usize;
+            let h = 1 + rng.next_below(24);
+
+            for horizon in [CommitHorizon::Edges(h), CommitHorizon::Edges(2 * h)] {
+                let mut reference: Option<(CommittedBase, Vec<u32>)> = None;
+                for leaders in [1usize, 2, 4] {
+                    let mut log = CrossLog::new(horizon, leaders);
+                    let mut merger = Merger::new();
+                    let mut shards: Vec<LeaderShard> =
+                        (0..leaders).map(|l| LeaderShard::new(l, leaders)).collect();
+
+                    for part in cross.chunks(chunk) {
+                        log.append(&mut part.to_vec());
+                        let start = merger.drained();
+                        let suffix = log.suffix_from(start);
+                        let mut frozen = Vec::with_capacity(suffix.len() * 2);
+                        merger.drain(&cfg, &states, &suffix, Some(&mut frozen));
+                        log.record_frozen(start, &frozen);
+                        for ep in log.take_committable(merger.drained()) {
+                            for (l, slice) in ep.frozen_slices().iter().enumerate() {
+                                shards[l].commit(slice);
+                            }
+                        }
+                    }
+
+                    let merged = merge_committed_bases(
+                        &shards.iter().map(|s| s.base().clone()).collect::<Vec<_>>(),
+                    );
+                    let tail = log.suffix_from(log.committed_edges());
+                    let snap =
+                        Snapshot::build_over(&cfg, merged.clone(), &states, &tail);
+                    if merged.m() != log.committed_edges() {
+                        return Err(format!(
+                            "leaders={leaders}: merged base covers {} edges, \
+                             log committed {}",
+                            merged.m(),
+                            log.committed_edges()
+                        ));
+                    }
+                    match &reference {
+                        None => reference = Some((merged, snap.labels())),
+                        Some((base1, labels1)) => {
+                            if merged.degree != base1.degree
+                                || merged.community != base1.community
+                                || merged.records() != base1.records()
+                            {
+                                return Err(format!(
+                                    "leaders={leaders}: merged base slices diverged \
+                                     from the single-leader base (h={h})"
+                                ));
+                            }
+                            if snap.labels() != *labels1 {
+                                return Err(format!(
+                                    "leaders={leaders}: terminal partition diverged \
+                                     (h={h})"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -150,6 +150,46 @@ fn serve_answers_queries_and_scores_final_partition() {
 }
 
 #[test]
+fn serve_stats_report_horizon_and_leader_partitions() {
+    // --horizon 0 is the CLI spelling of "unbounded" (normalised at
+    // service start-up); --leaders picks the committed-base partition
+    // count and the stats line must surface both
+    let (stdout, stderr, ok) = run_with_stdin(
+        &[
+            "serve", "--sbm", "6x40", "--shards", "2", "--leaders", "3", "--vmax", "64",
+            "--drain-every", "500", "--horizon", "0",
+        ],
+        "stats\n",
+    );
+    assert!(ok, "serve failed: {stderr}");
+    assert!(stdout.contains("shards=2"), "{stdout}");
+    assert!(stdout.contains("leaders=3"), "{stdout}");
+    assert!(stdout.contains("horizon=unbounded"), "{stdout}");
+    assert!(stdout.contains("delta_last="), "{stdout}");
+    assert!(stdout.contains("per-leader r/c/f=["), "{stdout}");
+
+    // a bounded horizon reads back verbatim, and leaders default to one
+    // per shard
+    let (stdout, stderr, ok) = run_with_stdin(
+        &["serve", "--sbm", "6x40", "--shards", "2", "--vmax", "64", "--horizon", "5000"],
+        "stats\n",
+    );
+    assert!(ok, "serve failed: {stderr}");
+    assert!(stdout.contains("leaders=2"), "{stdout}");
+    assert!(stdout.contains("horizon=5000"), "{stdout}");
+}
+
+#[test]
+fn serve_rejects_malformed_horizon() {
+    let (_, stderr, ok) = run_with_stdin(
+        &["serve", "--sbm", "4x20", "--horizon", "lots"],
+        "",
+    );
+    assert!(!ok, "malformed --horizon must fail fast");
+    assert!(stderr.contains("horizon"), "{stderr}");
+}
+
+#[test]
 fn serve_dynamic_mode_still_speaks_event_protocol() {
     let (stdout, _, ok) = run_with_stdin(
         &["serve", "--dynamic", "--vmax", "8"],
@@ -159,6 +199,31 @@ fn serve_dynamic_mode_still_speaks_event_protocol() {
     assert!(stdout.contains("live_edges=2"), "{stdout}");
     assert!(stdout.contains("live_edges=1"), "{stdout}");
     assert!(stdout.contains("bye:"), "{stdout}");
+}
+
+#[test]
+fn bench_service_writes_machine_readable_json() {
+    let dir = std::env::temp_dir();
+    let json_path = dir.join(format!("sc_bench_{}.json", std::process::id()));
+    let json_str = json_path.to_str().unwrap();
+
+    let (stdout, stderr, ok) = run(&[
+        "bench", "service", "--scale", "0.03", "--out", json_str, "--json",
+    ]);
+    assert!(ok, "bench service failed: {stderr}");
+    assert!(stdout.contains("service bench"), "{stdout}");
+    assert!(stdout.contains("delta_last"), "{stdout}");
+    let json = std::fs::read_to_string(&json_path).expect("BENCH_service.json written");
+    assert!(json.contains("\"bench\": \"service\""), "{json}");
+    assert!(json.contains("\"edges_per_sec\""), "{json}");
+    assert!(json.contains("\"per_leader\""), "{json}");
+    std::fs::remove_file(&json_path).ok();
+
+    // without --json the table still renders and nothing is written
+    let (stdout, stderr, ok) = run(&["bench", "service", "--scale", "0.03"]);
+    assert!(ok, "bench service failed: {stderr}");
+    assert!(stdout.contains("service bench"), "{stdout}");
+    assert!(!json_path.exists());
 }
 
 #[test]

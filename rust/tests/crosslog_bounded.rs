@@ -56,6 +56,15 @@ fn retained_cross_edges_never_exceed_horizon_plus_one_epoch() {
             s.cross_total,
             "every logged cross edge is either resident or committed"
         );
+        // the leader partitions always account for the whole log
+        assert_eq!(
+            s.per_leader.iter().map(|l| l.retained_bytes).sum::<u64>(),
+            s.cross_log_bytes,
+        );
+        assert_eq!(
+            s.per_leader.iter().map(|l| l.freed_bytes).sum::<u64>(),
+            s.cross_freed_bytes,
+        );
     }
 
     let s = handle.stats();

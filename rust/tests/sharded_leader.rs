@@ -1,0 +1,235 @@
+//! Sharded-leader properties, end to end through the public service
+//! API:
+//!
+//! * **Leader-count invariance** — the leader partition count is a
+//!   deployment-shape knob: under an unbounded (or never-binding)
+//!   commit horizon the final partition is bit-identical to
+//!   `run_parallel` whatever `leaders` is, across shard counts and
+//!   drain cadences. (The bounded-horizon equivalence — merging K base
+//!   slices ≡ the single-leader base for the same committed epochs —
+//!   is deterministic only without thread timing, so it lives as the
+//!   in-crate property `sharded_base_merge_equals_single_leader…` in
+//!   `service::snapshot`.)
+//! * **Delta payload flatness** — the per-drain delta payload
+//!   (replayed suffix + frozen records + commit headers) is
+//!   O(new epoch deltas): on a long high-cross stream drained at a
+//!   fixed cadence it stays under an analytic bound derived from the
+//!   cadence alone, while the committed base grows far past that bound
+//!   — the "drains no longer ship the base" claim, observable.
+//! * **Per-leader accounting** — retained/committed/freed bytes per
+//!   leader partition always sum to the service-wide figures.
+
+use streamcom::coordinator::parallel::{run_parallel, ParallelConfig};
+use streamcom::graph::edge::Edge;
+use streamcom::graph::generators::sbm::{self, SbmConfig};
+use streamcom::service::{ClusterService, CommitHorizon, ServiceConfig};
+use streamcom::util::proptest::property;
+use streamcom::util::rng::Xoshiro256;
+
+/// Random multigraph edge stream over `size` nodes, in random order.
+fn random_stream(rng: &mut Xoshiro256, size: usize) -> (usize, Vec<Edge>) {
+    let n = size.max(2);
+    let m = size * 4;
+    let mut edges: Vec<Edge> = (0..m)
+        .map(|_| {
+            let u = rng.range(0, n) as u32;
+            let mut v = rng.range(0, n) as u32;
+            if u == v {
+                v = (v + 1) % n as u32;
+            }
+            Edge::new(u, v)
+        })
+        .collect();
+    rng.shuffle(&mut edges);
+    (n, edges)
+}
+
+fn pad(mut labels: Vec<u32>, n: usize) -> Vec<u32> {
+    while labels.len() < n {
+        labels.push(labels.len() as u32);
+    }
+    labels
+}
+
+#[test]
+fn leader_count_is_invariant_and_finals_match_batch() {
+    property("sharded leader invariance", 6, |rng, size| {
+        let (n, edges) = random_stream(rng, size);
+        let v_max = 1 + rng.next_below(200);
+        for shards in [2usize, 4] {
+            let full = pad(
+                run_parallel(n, &edges, &ParallelConfig::new(shards, v_max)).labels(),
+                n,
+            );
+            for leaders in [1usize, 3] {
+                for cadence in [1u64, 17] {
+                    // alternate between the default unbounded horizon
+                    // and a bounded one at least as long as the stream:
+                    // neither ever commits, so the sharded leaders stay
+                    // empty and finals must equal the batch run exactly
+                    let horizon = if (cadence + leaders as u64) % 2 == 0 {
+                        CommitHorizon::Unbounded
+                    } else {
+                        CommitHorizon::Edges(edges.len() as u64 + 1 + rng.next_below(50))
+                    };
+                    let mut cfg = ServiceConfig::new(shards, v_max);
+                    cfg.leaders = leaders;
+                    cfg.drain_every = cadence;
+                    cfg.chunk_size = 1 + rng.next_below(32) as usize;
+                    cfg.horizon = horizon;
+                    let mut svc = ClusterService::start(cfg);
+                    let handle = svc.handle();
+
+                    let half = edges.len() / 2;
+                    svc.push_chunk(&edges[..half]);
+                    svc.quiesce();
+                    svc.push_chunk(&edges[half..]);
+                    svc.quiesce();
+                    let res = svc.finish();
+                    let got = res.snapshot.labels_padded(n);
+                    if got != full {
+                        let diff = got.iter().zip(&full).filter(|(a, b)| a != b).count();
+                        return Err(format!(
+                            "shards={shards} leaders={leaders} cadence={cadence} \
+                             v_max={v_max}: final diverged from batch at {diff} nodes"
+                        ));
+                    }
+
+                    let s = handle.stats();
+                    if s.leaders != leaders {
+                        return Err(format!(
+                            "stats report {} leaders, configured {leaders}",
+                            s.leaders
+                        ));
+                    }
+                    if s.cross_committed != 0 || s.committed_bytes_total() != 0 {
+                        return Err(format!(
+                            "never-binding horizon committed {} edges / {} B",
+                            s.cross_committed,
+                            s.committed_bytes_total()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Strongly separated SBM over 4 shards: ~3/4 of all edges are
+/// cross-shard, so the committed base grows with the stream while the
+/// per-drain work stays at the chunk size.
+fn high_cross_workload() -> streamcom::graph::generators::GeneratedGraph {
+    sbm::generate(&SbmConfig::equal(10, 60, 0.4, 0.002, 71))
+}
+
+#[test]
+fn delta_payload_stays_flat_while_committed_base_grows() {
+    let g = high_cross_workload();
+    let h = 256u64;
+    let chunk = 200usize;
+    let mut cfg = ServiceConfig::new(4, 128);
+    cfg.chunk_size = 32;
+    cfg.drain_every = u64::MAX; // drains happen exactly at our quiesces
+    cfg.horizon = CommitHorizon::Edges(h);
+    let mut svc = ClusterService::start(cfg);
+    let handle = svc.handle();
+
+    let mut max_payload = 0u64;
+    let mut last_committed_bytes = 0u64;
+    let mut bound = 0u64;
+    for part in g.edges.edges.chunks(chunk) {
+        svc.push_chunk(part);
+        svc.quiesce();
+        let s = handle.stats();
+        // analytic per-drain bound, from the cadence alone: at most
+        // `chunk` new cross edges in (8 B each), two frozen records per
+        // edge out (8 B each), and one 24 B header per epoch the drain
+        // can commit (≤ chunk/epoch_len + 2, the +2 covering epochs
+        // left pending by earlier drains)
+        bound = chunk as u64 * (8 + 16) + (chunk as u64 / s.cross_epoch_len + 2) * 24;
+        assert!(
+            s.delta_last_bytes <= bound,
+            "drain payload {} exceeded the delta bound {bound} at t={}",
+            s.delta_last_bytes,
+            s.edges_ingested
+        );
+        max_payload = max_payload.max(s.delta_last_bytes);
+        let committed_bytes = s.committed_bytes_total();
+        assert!(
+            committed_bytes >= last_committed_bytes,
+            "committed base shrank: {committed_bytes} < {last_committed_bytes}"
+        );
+        last_committed_bytes = committed_bytes;
+        // payload and committed state always reconcile per leader
+        assert_eq!(
+            s.per_leader.iter().map(|l| l.retained_bytes).sum::<u64>(),
+            s.cross_log_bytes
+        );
+    }
+
+    let s = handle.stats();
+    // the claim: the base grew far past what any single drain shipped
+    assert!(
+        s.cross_committed > 0 && s.committed_bytes_total() >= 5 * bound,
+        "workload too small to show the gap: committed {} B vs bound {bound} B",
+        s.committed_bytes_total()
+    );
+    assert!(
+        max_payload <= bound,
+        "max drain payload {max_payload} vs bound {bound}"
+    );
+    // committed-base bytes are exactly the folded frozen records
+    assert_eq!(s.committed_bytes_total(), s.cross_committed * 16);
+
+    // bounded finality keeps the coverage invariants
+    let res = svc.finish();
+    assert_eq!(res.edges_ingested, g.m() as u64);
+    assert_eq!(res.snapshot.edges(), g.m() as u64);
+    assert_eq!(res.state().total_volume(), 2 * g.m() as u64);
+}
+
+#[test]
+fn per_leader_accounting_partitions_the_totals() {
+    let g = high_cross_workload();
+    let mut cfg = ServiceConfig::new(4, 128);
+    cfg.leaders = 3; // deliberately ≠ shards: partitions are independent
+    cfg.chunk_size = 64;
+    cfg.drain_every = 512;
+    cfg.horizon = CommitHorizon::Edges(300);
+    let mut svc = ClusterService::start(cfg);
+    let handle = svc.handle();
+
+    let half = g.m() / 2;
+    for stop in [half, g.m()] {
+        let start = if stop == half { 0 } else { half };
+        svc.push_chunk(&g.edges.edges[start..stop]);
+        svc.quiesce();
+        let s = handle.stats();
+        assert_eq!(s.leaders, 3);
+        assert_eq!(s.per_leader.len(), 3);
+        assert_eq!(
+            s.per_leader.iter().map(|l| l.retained_bytes).sum::<u64>(),
+            s.cross_log_bytes,
+            "retained bytes must partition the resident log"
+        );
+        assert_eq!(
+            s.per_leader.iter().map(|l| l.freed_bytes).sum::<u64>(),
+            s.cross_freed_bytes,
+            "freed bytes must partition the freed total"
+        );
+        assert_eq!(
+            s.committed_bytes_total(),
+            s.cross_committed * 16,
+            "committed bytes must equal the folded records"
+        );
+    }
+    let s = handle.stats();
+    assert!(s.cross_committed > 0, "workload never committed an epoch");
+    assert!(
+        s.per_leader.iter().filter(|l| l.committed_bytes > 0).count() > 1,
+        "commits all landed in one partition: {:?}",
+        s.per_leader
+    );
+    svc.finish();
+}
