@@ -49,13 +49,17 @@ COMMANDS:
                --engine <native|pjrt>  metric engine [default native]
   bench      regenerate the paper's tables / service benchmarks
                table1|table2|memory|service  --scale <f>
-               service also takes --json (write BENCH_service.json;
-               --out <path> overrides the file name)
+               service prints the horizon sweep AND the ingest-path
+               microbench (shards × batch, pool hit/miss, router RMWs);
+               --json writes both to BENCH_service.json
+               (--out <path> overrides the file name)
   serve      long-lived sharded clustering service: ingests the workload
              while answering queries on stdin
                --preset/--scale/--input as above, or --sbm <k>x<size>
                --vmax <u64>         threshold parameter [default 64]
-               --shards <k>         shard workers [default 4]
+               --shards <k>         shard workers [default 4]; any count works,
+                                    powers of two take the router's shift
+                                    fast path (recommended)
                --leaders <k>        leader partitions for the cross log's frozen
                                     decisions + the committed base (0 = one per
                                     shard); never changes results, only where
@@ -308,9 +312,13 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             let cfg = service_bench::ServiceBenchConfig::scaled(scale);
             let (t, rows) = service_bench::run(&cfg);
             println!("{}", t.render());
+            // the ingest-path microbench: shards × batch sweep with the
+            // pool/RMW counters that pin the batch spine's amortization
+            let (ti, ingest) = service_bench::run_ingest(&cfg);
+            println!("{}", ti.render());
             if args.flag("json") {
                 let path = args.get_or("out", "BENCH_service.json");
-                std::fs::write(path, service_bench::to_json(&cfg, &rows))
+                std::fs::write(path, service_bench::to_json(&cfg, &rows, &ingest))
                     .map_err(|e| format!("write {path}: {e}"))?;
                 println!("json → {path}");
             }
@@ -459,6 +467,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                      cross drained/pending={}/{} \
                      x-log retained={} committed={} freed={} \
                      per-leader r/c/f=[{}] \
+                     chunks={} pool hit/miss={}/{} recycled={} \
                      queues={:?} peaks={:?} sketch={} B ({:.1} B/node)",
                     s.shards,
                     s.leaders,
@@ -476,6 +485,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                     s.cross_committed,
                     memory::fmt_bytes(s.cross_freed_bytes),
                     per_leader.join(" "),
+                    s.chunks_dispatched,
+                    s.pool.hits,
+                    s.pool.misses,
+                    memory::fmt_bytes(s.pool.recycled_bytes),
                     s.queue_depths,
                     s.queue_peaks,
                     s.memory_bytes,

@@ -184,7 +184,13 @@ mod tests {
     fn bench_respects_min_iters() {
         let stats = bench(
             "noop",
-            Budget { warmup_iters: 0, min_iters: 7, max_iters: 7, min_time: Duration::ZERO, max_time: Duration::from_secs(1) },
+            Budget {
+                warmup_iters: 0,
+                min_iters: 7,
+                max_iters: 7,
+                min_time: Duration::ZERO,
+                max_time: Duration::from_secs(1),
+            },
             || {
                 black_box(1 + 1);
             },

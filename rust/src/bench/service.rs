@@ -1,13 +1,24 @@
-//! Service-path benchmark: ingest throughput, drain cost, and the
-//! sharded-leader byte accounting — the figures that track whether the
-//! service keeps its two scaling claims as the code evolves:
+//! Service-path benchmark: ingest throughput, drain cost, the
+//! sharded-leader byte accounting, and the ingest-path microbench —
+//! the figures that track whether the service keeps its scaling claims
+//! as the code evolves:
 //!
 //! * drains replay only the new cross suffix (`replay/drain` stays
-//!   near the drain cadence, not the stream length), and
+//!   near the drain cadence, not the stream length),
 //! * drains ship only epoch deltas (`delta_last` stays flat while the
-//!   committed base grows).
+//!   committed base grows), and
+//! * the batch ingest spine stays allocation- and atomic-amortized:
+//!   the microbench sweeps shards × batch size on the memory-source
+//!   workload and records edges/sec alongside the **measured** pool
+//!   hit/miss and chunk-dispatch counters — a regression that
+//!   reintroduces a per-chunk allocation shows up as a pool-miss jump
+//!   even when throughput noise hides it. (`router_rmws` is *derived*
+//!   from those counts by the spine's design — one `ingested` add per
+//!   batch, one `dispatched` add per chunk — so it documents the
+//!   expected atomic budget per cell; a reintroduced per-*edge* RMW
+//!   would surface in edges/sec, not in this column.)
 //!
-//! `bench service` prints the table; `--json` additionally writes
+//! `bench service` prints the tables; `--json` additionally writes
 //! `BENCH_service.json` so the perf trajectory is machine-readable and
 //! can be recorded run over run.
 
@@ -16,6 +27,11 @@ use crate::service::{ClusterService, CommitHorizon, LeaderStats, ServiceConfig};
 
 use super::memory::fmt_bytes;
 use super::report::Table;
+
+/// Shard counts swept by the ingest-path microbench.
+pub const INGEST_SHARDS_SWEEP: &[usize] = &[1, 4, 8];
+/// Ingest batch sizes swept by the microbench (edges per `push_chunk`).
+pub const INGEST_BATCH_SWEEP: &[usize] = &[1, 256, 4096];
 
 /// Workload + service shape for one `bench service` run.
 #[derive(Debug, Clone)]
@@ -87,6 +103,123 @@ pub struct ServiceBenchRow {
     pub per_leader: Vec<LeaderStats>,
 }
 
+/// One ingest-path microbench measurement: a (shards × batch) cell of
+/// the sweep over the memory-source workload, pure ingest (automatic
+/// drains disabled), with the counters that pin the batch spine's
+/// amortization claims.
+#[derive(Debug, Clone)]
+pub struct IngestBenchRow {
+    /// Shard workers.
+    pub shards: usize,
+    /// Edges per `push_chunk` batch.
+    pub batch: usize,
+    /// Edges ingested.
+    pub edges: u64,
+    /// Wall-clock ingest + terminal replay time.
+    pub elapsed_secs: f64,
+    /// Ingest throughput.
+    pub edges_per_sec: f64,
+    /// `push_chunk` batches issued.
+    pub batches: u64,
+    /// Chunks handed to shard mailboxes.
+    pub chunks_dispatched: u64,
+    /// Chunk-pool checkouts served by recycled buffers.
+    pub pool_hits: u64,
+    /// Chunk-pool checkouts that allocated (cold warm-up only —
+    /// bounded by the buffers that can be in flight at once).
+    pub pool_misses: u64,
+    /// Buffer bytes returned to the pool.
+    pub pool_recycled_bytes: u64,
+    /// Router-side atomic RMW budget, **derived** from the measured
+    /// batch/chunk counts by the spine's design: one `ingested` add
+    /// per batch plus one `dispatched` add per chunk send (the
+    /// per-edge spine paid one RMW per *edge* here). Not an
+    /// instrumented count — counting the RMWs would itself add one.
+    pub router_rmws: u64,
+}
+
+impl IngestBenchRow {
+    /// Router-side atomic RMWs per thousand ingested edges.
+    pub fn rmws_per_kedge(&self) -> f64 {
+        self.router_rmws as f64 * 1e3 / (self.edges.max(1)) as f64
+    }
+}
+
+/// The microbench: sweep [`INGEST_SHARDS_SWEEP`] × [`INGEST_BATCH_SWEEP`]
+/// over the same SBM workload as [`run`], pure ingest (drains off), and
+/// collect the table + raw rows.
+pub fn run_ingest(cfg: &ServiceBenchConfig) -> (Table, Vec<IngestBenchRow>) {
+    let g = sbm::generate(&SbmConfig::equal(
+        cfg.communities,
+        cfg.community_size,
+        0.3,
+        0.002,
+        cfg.seed,
+    ));
+    let mut table = Table::new(
+        &format!(
+            "ingest microbench: {} (n={} m={}, memory source, drains off)",
+            g.name,
+            g.n(),
+            g.m()
+        ),
+        &[
+            "shards",
+            "batch",
+            "Medges/s",
+            "batches",
+            "chunks",
+            "pool hit",
+            "pool miss",
+            "recycled",
+            "rmw/kedge",
+        ],
+    );
+    let mut rows = Vec::new();
+    for &shards in INGEST_SHARDS_SWEEP {
+        for &batch in INGEST_BATCH_SWEEP {
+            let mut config = ServiceConfig::new(shards, cfg.v_max);
+            config.drain_every = 0; // pure ingest: no automatic drains
+            let mut svc = ClusterService::start(config);
+            let handle = svc.handle();
+            let mut batches = 0u64;
+            for chunk in g.edges.edges.chunks(batch) {
+                svc.push_chunk(chunk);
+                batches += 1;
+            }
+            let res = svc.finish();
+            let s = handle.stats();
+            let elapsed = res.elapsed.as_secs_f64().max(1e-9);
+            let row = IngestBenchRow {
+                shards,
+                batch,
+                edges: res.edges_ingested,
+                elapsed_secs: elapsed,
+                edges_per_sec: res.edges_ingested as f64 / elapsed,
+                batches,
+                chunks_dispatched: s.chunks_dispatched,
+                pool_hits: s.pool.hits,
+                pool_misses: s.pool.misses,
+                pool_recycled_bytes: s.pool.recycled_bytes,
+                router_rmws: batches + s.chunks_dispatched,
+            };
+            table.push_row(vec![
+                row.shards.to_string(),
+                row.batch.to_string(),
+                format!("{:.2}", row.edges_per_sec / 1e6),
+                row.batches.to_string(),
+                row.chunks_dispatched.to_string(),
+                row.pool_hits.to_string(),
+                row.pool_misses.to_string(),
+                fmt_bytes(row.pool_recycled_bytes),
+                format!("{:.2}", row.rmws_per_kedge()),
+            ]);
+            rows.push(row);
+        }
+    }
+    (table, rows)
+}
+
 /// Stream one SBM workload through the service per configured horizon
 /// and collect the table + raw rows.
 pub fn run(cfg: &ServiceBenchConfig) -> (Table, Vec<ServiceBenchRow>) {
@@ -126,7 +259,13 @@ pub fn run(cfg: &ServiceBenchConfig) -> (Table, Vec<ServiceBenchRow>) {
         config.horizon = CommitHorizon::Edges(h); // Edges(0) ⇒ Unbounded
         let mut svc = ClusterService::start(config);
         let handle = svc.handle();
-        svc.push_chunk(&g.edges.edges);
+        // the drain clock is batch-granular: stream in batches no
+        // larger than the cadence so the sweep actually measures
+        // per-drain cost at the configured cadence
+        let batch = cfg.drain_every.clamp(1, 4_096) as usize;
+        for chunk in g.edges.edges.chunks(batch) {
+            svc.push_chunk(chunk);
+        }
         svc.quiesce();
         let s = handle.stats();
         let res = svc.finish();
@@ -164,8 +303,13 @@ pub fn run(cfg: &ServiceBenchConfig) -> (Table, Vec<ServiceBenchRow>) {
 
 /// Render the rows as the `BENCH_service.json` document (hand-rolled —
 /// the offline build has no serde; every value is numeric so no string
-/// escaping is required beyond the fixed keys).
-pub fn to_json(cfg: &ServiceBenchConfig, rows: &[ServiceBenchRow]) -> String {
+/// escaping is required beyond the fixed keys). `ingest` carries the
+/// shards × batch microbench sweep next to the horizon rows.
+pub fn to_json(
+    cfg: &ServiceBenchConfig,
+    rows: &[ServiceBenchRow],
+    ingest: &[IngestBenchRow],
+) -> String {
     let mut out = String::from("{\n  \"bench\": \"service\",\n");
     out.push_str(&format!(
         "  \"workload\": {{\"communities\": {}, \"community_size\": {}, \"seed\": {}}},\n",
@@ -210,6 +354,30 @@ pub fn to_json(cfg: &ServiceBenchConfig, rows: &[ServiceBenchRow]) -> String {
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }
+    out.push_str("  ],\n  \"ingest\": [\n");
+    for (i, r) in ingest.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"shards\": {}, \"batch\": {}, \"edges\": {}, \
+             \"elapsed_secs\": {:.6}, \"edges_per_sec\": {:.1}, \
+             \"batches\": {}, \"chunks_dispatched\": {}, \
+             \"pool_hits\": {}, \"pool_misses\": {}, \
+             \"pool_recycled_bytes\": {}, \"router_rmws\": {}, \
+             \"rmws_per_kedge\": {:.3}}}{}\n",
+            r.shards,
+            r.batch,
+            r.edges,
+            r.elapsed_secs,
+            r.edges_per_sec,
+            r.batches,
+            r.chunks_dispatched,
+            r.pool_hits,
+            r.pool_misses,
+            r.pool_recycled_bytes,
+            r.router_rmws,
+            r.rmws_per_kedge(),
+            if i + 1 < ingest.len() { "," } else { "" }
+        ));
+    }
     out.push_str("  ]\n}\n");
     out
 }
@@ -244,12 +412,51 @@ mod tests {
         assert!(bounded.cross_freed_bytes > 0);
         assert_eq!(bounded.per_leader.len(), cfg.shards);
 
-        let json = to_json(&cfg, &rows);
+        let json = to_json(&cfg, &rows, &[]);
         assert!(json.starts_with('{') && json.trim_end().ends_with('}'));
         assert!(json.contains("\"bench\": \"service\""));
         assert!(json.contains("\"delta_last_bytes\""));
         assert!(json.contains("\"per_leader\""));
+        assert!(json.contains("\"ingest\""));
         // two rows, comma-separated exactly once at the top level list
         assert_eq!(json.matches("\"horizon\"").count(), 2);
+    }
+
+    #[test]
+    fn ingest_microbench_sweeps_and_pins_amortization() {
+        let cfg = tiny();
+        let (table, rows) = run_ingest(&cfg);
+        let cells = INGEST_SHARDS_SWEEP.len() * INGEST_BATCH_SWEEP.len();
+        assert_eq!(rows.len(), cells);
+        assert_eq!(table.rows.len(), cells);
+        for r in &rows {
+            assert!(r.edges > 0 && r.edges_per_sec > 0.0, "{r:?}");
+            // every edge ingested exactly once, whatever the cell shape
+            assert_eq!(r.edges, rows[0].edges, "{r:?}");
+            // measured chunk count stays amortized: the router never
+            // dispatched anywhere near one chunk per edge (the default
+            // chunk_size is 4096; flush partials add at most `shards`)
+            assert!(
+                r.chunks_dispatched <= r.edges / 1024 + r.shards as u64,
+                "{r:?}"
+            );
+            // pool accounting is live wherever chunks were dispatched
+            if r.chunks_dispatched > 0 {
+                assert!(r.pool_hits + r.pool_misses > 0, "{r:?}");
+            }
+        }
+        // bigger batches reduce the derived per-edge router budget: the
+        // batch=1 column pays one ingested-add per edge by definition
+        let small = rows.iter().find(|r| r.shards == 4 && r.batch == 1).unwrap();
+        let big = rows.iter().find(|r| r.shards == 4 && r.batch == 4096).unwrap();
+        assert!(
+            big.rmws_per_kedge() < small.rmws_per_kedge(),
+            "batch=4096 {:?} vs batch=1 {:?}",
+            big.rmws_per_kedge(),
+            small.rmws_per_kedge()
+        );
+
+        let json = to_json(&cfg, &[], &rows);
+        assert_eq!(json.matches("\"rmws_per_kedge\"").count(), cells);
     }
 }

@@ -149,30 +149,48 @@ impl StreamingClusterer {
 
     /// Process a single edge (the paper's loop body).
     ///
-    /// §Perf note: after `ensure(max(u, v))`, every index below is in
-    /// bounds by construction (`i, j < n`; community ids live in the
-    /// node-id space so `ci, cj < n` too). The accesses use
-    /// `get_unchecked` — measured ~15% of per-edge cost in the
-    /// bounds-checked version (EXPERIMENTS.md §Perf).
+    /// Growth (`ensure`) runs here per edge; the chunked hot loop
+    /// ([`process_chunk`](Self::process_chunk)) hoists it to one
+    /// pre-scan per chunk instead.
     #[inline]
     pub fn process_edge(&mut self, e: Edge) {
         if e.is_self_loop() {
             self.stats.self_loops_skipped += 1;
             return;
         }
-        let st = &mut self.state;
-        st.ensure(e.u.max(e.v));
+        self.state.ensure(e.u.max(e.v));
         if self.config.size_condition {
-            let need = st.n();
+            let need = self.state.n();
             if self.sizes.len() < need {
                 self.sizes.resize(need, 0);
             }
         }
+        self.process_edge_ensured(e);
+    }
+
+    /// The decision rule with growth hoisted out. Caller contract:
+    /// `state.ensure(max(e.u, e.v))` has already run (and, under
+    /// `size_condition`, `sizes` has been resized to `state.n()`).
+    ///
+    /// §Perf note: under that contract every index below is in bounds
+    /// by construction (`i, j < n`; community ids live in the node-id
+    /// space so `ci, cj < n` too). The accesses use `get_unchecked` —
+    /// measured ~15% of per-edge cost in the bounds-checked version
+    /// (EXPERIMENTS.md §Perf).
+    #[inline]
+    fn process_edge_ensured(&mut self, e: Edge) {
+        if e.is_self_loop() {
+            self.stats.self_loops_skipped += 1;
+            return;
+        }
+        let st = &mut self.state;
+        debug_assert!((e.u.max(e.v) as usize) < st.n(), "caller skipped ensure");
         let (i, j) = (e.u as usize, e.v as usize);
 
-        // SAFETY: ensure() grew all three arrays to max(i, j) + 1, and
-        // community values are node ids < n (set only from e.u / e.v /
-        // prior community ids).
+        // SAFETY: the caller contract (checked above in debug builds)
+        // guarantees ensure() grew all three arrays to max(i, j) + 1,
+        // and community values are node ids < n (set only from e.u /
+        // e.v / prior community ids).
         let (ci, cj, vi, vj) = unsafe {
             // first touch: own community (size 1)
             if *st.community.get_unchecked(i) == super::state::UNSEEN {
@@ -255,10 +273,29 @@ impl StreamingClusterer {
     }
 
     /// Process a chunk (the hot loop of the chunked pipeline).
+    ///
+    /// §Perf: the chunk's max node id is pre-scanned so the sketch
+    /// grows (`ensure`) **once per chunk** instead of per edge, keeping
+    /// the per-edge core to the paper's three-array update with no
+    /// growth checks. Pre-growing to the chunk max can size the sketch
+    /// slightly earlier than the edge-at-a-time path would (e.g. ids
+    /// seen only on skipped self-loops later in the chunk); that never
+    /// changes a label — fresh slots are UNSEEN singletons — and the
+    /// parity suites pin chunked ≡ per-edge ≡ sequential bit-for-bit.
     #[inline]
     pub fn process_chunk(&mut self, chunk: &[Edge]) {
+        let Some(max_id) = chunk.iter().map(|e| e.u.max(e.v)).max() else {
+            return; // empty chunk: nothing to grow, nothing to process
+        };
+        self.state.ensure(max_id);
+        if self.config.size_condition {
+            let need = self.state.n();
+            if self.sizes.len() < need {
+                self.sizes.resize(need, 0);
+            }
+        }
         for &e in chunk {
-            self.process_edge(e);
+            self.process_edge_ensured(e);
         }
     }
 
@@ -386,6 +423,52 @@ mod tests {
         assert_eq!(resumed.state.community, oneshot.state.community);
         assert_eq!(resumed.state.volume, oneshot.state.volume);
         assert_eq!(resumed.state.edges_processed, oneshot.state.edges_processed);
+    }
+
+    #[test]
+    fn process_chunk_matches_per_edge_processing() {
+        // the chunked loop pre-grows to the chunk max; the sketch it
+        // produces must match edge-at-a-time processing exactly
+        use crate::graph::generators::sbm::{self, SbmConfig};
+        let g = sbm::generate(&SbmConfig::equal(6, 25, 0.35, 0.01, 77));
+        for size_condition in [false, true] {
+            let mut cfg = StrConfig::new(16);
+            cfg.size_condition = size_condition;
+            let mut per_edge = StreamingClusterer::new(0, cfg.clone());
+            for &e in &g.edges.edges {
+                per_edge.process_edge(e);
+            }
+            let mut chunked = StreamingClusterer::new(0, cfg);
+            for chunk in g.edges.edges.chunks(37) {
+                chunked.process_chunk(chunk);
+            }
+            assert_eq!(per_edge.state.community, chunked.state.community);
+            assert_eq!(per_edge.state.degree, chunked.state.degree);
+            assert_eq!(per_edge.state.volume, chunked.state.volume);
+            assert_eq!(per_edge.stats.joins, chunked.stats.joins);
+        }
+    }
+
+    #[test]
+    fn prescan_growth_from_self_loops_never_changes_labels() {
+        // a chunk whose max id appears only on a skipped self-loop
+        // grows the sketch early; the extra slots must stay UNSEEN
+        // singletons and the decision stream must be untouched
+        let mut c = StreamingClusterer::new(0, StrConfig::new(8));
+        c.process_chunk(&[Edge::new(0, 1), Edge::new(9, 9)]);
+        assert_eq!(c.stats.self_loops_skipped, 1);
+        assert_eq!(c.state.edges_processed, 1);
+        let labels = c.labels();
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[9], 9, "self-loop id must stay a singleton");
+    }
+
+    #[test]
+    fn empty_chunk_is_a_no_op() {
+        let mut c = StreamingClusterer::new(0, StrConfig::new(8));
+        c.process_chunk(&[]);
+        assert_eq!(c.state.n(), 0);
+        assert_eq!(c.state.edges_processed, 0);
     }
 
     #[test]

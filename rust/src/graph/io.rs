@@ -22,16 +22,111 @@ use super::ground_truth::GroundTruth;
 const BIN_MAGIC: u32 = 0x5354_4d43; // "STMC"
 
 /// Parse one text line as an edge; `None` for comments/blank lines.
+/// Thin `&str` wrapper over the byte scanner (`parse_edge_bytes`) so
+/// there is exactly one line-classification implementation in the repo.
 #[inline]
 pub fn parse_edge_line(line: &str) -> Option<(u64, u64)> {
-    let line = line.trim();
-    if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
-        return None;
+    match parse_edge_bytes(line.as_bytes()) {
+        LineParse::Edge(u, v) => Some((u, v)),
+        _ => None,
     }
-    let mut it = line.split_whitespace();
-    let u = it.next()?.parse().ok()?;
-    let v = it.next()?.parse().ok()?;
-    Some((u, v))
+}
+
+/// Classification of one text line by the shared byte-level edge
+/// scanner (`parse_edge_bytes`). The split matters because the two
+/// consumers disagree on what a bad target means: the strict batch
+/// reader ([`read_text_edges`]) hard-errors (a half-numeric line is a
+/// corrupt file), while the lenient streaming transport
+/// (`stream::source::TextFileSource`) skips.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum LineParse<'a> {
+    /// Comment (`#`/`%`), blank, or non-numeric-source line — always
+    /// skipped, by both consumers.
+    Skip,
+    /// A well-formed `u <ws> v` pair (64-bit ids, no narrowing here —
+    /// the consumer decides whether an id beyond `u32` is remappable).
+    Edge(u64, u64),
+    /// The source id parsed but the target is missing (`None`) or
+    /// malformed/overflowing (the offending token bytes).
+    BadTarget(u64, Option<&'a [u8]>),
+}
+
+/// ASCII whitespace (the set `u8::is_ascii_whitespace` covers: space,
+/// tab, CR, LF, form feed — plus vertical tab, which
+/// `str::split_whitespace` also split on).
+#[inline]
+fn is_line_space(b: u8) -> bool {
+    b.is_ascii_whitespace() || b == 0x0B
+}
+
+/// Scan the whitespace-delimited token starting at `line[*i..]` as a
+/// decimal `u64`. Returns `None` — with the cursor still advanced past
+/// the token — when the token is empty, contains a non-digit, or
+/// overflows `u64`; an optional leading `+` is accepted, exactly like
+/// `str::parse::<u64>`. The overflow check is what keeps a 20-digit id
+/// from silently wrapping into a *wrong but plausible* value.
+#[inline]
+fn scan_token(line: &[u8], i: &mut usize) -> Option<u64> {
+    let n = line.len();
+    if *i < n && line[*i] == b'+' && *i + 1 < n && line[*i + 1].is_ascii_digit() {
+        *i += 1; // "+42" parses like "42"; a bare "+" stays non-numeric
+    }
+    let start = *i;
+    let mut x: u64 = 0;
+    let mut ok = true;
+    while *i < n && !is_line_space(line[*i]) {
+        let b = line[*i];
+        if ok && b.is_ascii_digit() {
+            match x.checked_mul(10).and_then(|x| x.checked_add((b - b'0') as u64)) {
+                Some(next) => x = next,
+                None => ok = false,
+            }
+        } else {
+            ok = false;
+        }
+        *i += 1;
+    }
+    (ok && *i > start).then_some(x)
+}
+
+/// Byte-level scan of one text line as two decimal ids — the shared
+/// core of [`read_text_edges`] and the streaming
+/// `stream::source::TextFileSource` (no UTF-8 validation, no per-line
+/// `String`, hand-rolled decimal scan; see EXPERIMENTS.md §Perf for
+/// why this matters on the streaming path). Classification matches the
+/// old `&str` reader token for token on ASCII input: a token is
+/// numeric only when it is *entirely* ASCII digits (optionally
+/// `+`-prefixed, like `str::parse::<u64>`) and fits in `u64` — so
+/// `12ab` is a non-numeric source (skip), and `1 2ab` or a 20-digit
+/// target is a [`BadTarget`](LineParse::BadTarget), never a silently
+/// wrapped id. Known, deliberate divergence: non-ASCII Unicode
+/// whitespace (e.g. U+00A0) no longer separates tokens — a byte
+/// scanner treats those bytes as part of a (then non-numeric) token;
+/// SNAP-convention files are tab/space separated, so this only affects
+/// already-exotic inputs.
+pub(crate) fn parse_edge_bytes(line: &[u8]) -> LineParse<'_> {
+    let mut i = 0;
+    let n = line.len();
+    while i < n && is_line_space(line[i]) {
+        i += 1;
+    }
+    if i >= n || line[i] == b'#' || line[i] == b'%' {
+        return LineParse::Skip;
+    }
+    let Some(u) = scan_token(line, &mut i) else {
+        return LineParse::Skip; // non-numeric source: lenient skip
+    };
+    while i < n && is_line_space(line[i]) {
+        i += 1;
+    }
+    if i >= n {
+        return LineParse::BadTarget(u, None);
+    }
+    let tok_start = i;
+    match scan_token(line, &mut i) {
+        Some(v) => LineParse::Edge(u, v),
+        None => LineParse::BadTarget(u, Some(&line[tok_start..i])),
+    }
 }
 
 /// Read a SNAP-style text edge list, remapping ids to dense u32.
@@ -46,58 +141,105 @@ pub fn parse_edge_line(line: &str) -> Option<(u64, u64)> {
 /// The intern map and edge vector are pre-sized from the file length
 /// (SNAP-style lines run ~12 bytes), so ingesting a large list does not
 /// rehash/regrow its way up from empty.
+///
+/// §Perf: built on the same byte-level machinery as the streaming
+/// `stream::source::TextFileSource` — lines are scanned directly in the
+/// `BufReader`'s buffer via `fill_buf` with a carry for lines spanning
+/// a refill boundary, and ids are decoded by the shared hand-rolled
+/// decimal scanner (`parse_edge_bytes`). No per-line `String`, no UTF-8
+/// validation, no `split_whitespace`: the per-line allocation the old
+/// `lines()`-based reader paid is gone. Ids are interned as full `u64`,
+/// so sparse ids beyond `u32` remain valid here (they remap densely) —
+/// only genuinely non-numeric or `u64`-overflowing tokens are rejected.
 pub fn read_text_edges<P: AsRef<Path>>(path: P) -> io::Result<(EdgeList, Vec<u64>)> {
     let f = File::open(path)?;
     // capped estimate: a wrong metadata size must not trigger a giant
     // pre-allocation
     let est_edges = (f.metadata().map(|m| m.len()).unwrap_or(0) / 12).min(1 << 27) as usize;
-    let reader = BufReader::with_capacity(1 << 20, f);
+    let mut reader = BufReader::with_capacity(1 << 20, f);
     // nodes run well below edges on SNAP shapes (Amazon ~0.36 n/m,
     // Friendster ~0.04): an edges/8 guess avoids most rehashing without
     // a giant mostly-empty table on large files
     let mut map: HashMap<u64, u32> = HashMap::with_capacity((est_edges / 8).min(1 << 22));
     let mut back: Vec<u64> = Vec::new();
     let mut edges = Vec::with_capacity(est_edges);
-    let intern = |id: u64, map: &mut HashMap<u64, u32>, back: &mut Vec<u64>| -> u32 {
-        *map.entry(id).or_insert_with(|| {
-            back.push(id);
-            (back.len() - 1) as u32
-        })
-    };
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        let t = line.trim();
-        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
-            continue;
-        }
-        let mut it = t.split_whitespace();
-        let Some(u_tok) = it.next() else { continue };
-        let Ok(u) = u_tok.parse::<u64>() else {
-            continue; // non-numeric line (e.g. a textual header) — skip
+
+    fn consume_line(
+        line: &[u8],
+        lineno: u64,
+        map: &mut HashMap<u64, u32>,
+        back: &mut Vec<u64>,
+        edges: &mut Vec<Edge>,
+    ) -> io::Result<()> {
+        let mut intern = |id: u64, map: &mut HashMap<u64, u32>| -> u32 {
+            *map.entry(id).or_insert_with(|| {
+                back.push(id);
+                (back.len() - 1) as u32
+            })
         };
-        let v = match it.next() {
-            None => {
-                return Err(io::Error::new(
-                    io::ErrorKind::InvalidData,
-                    format!("line {}: edge source {u} has no target", lineno + 1),
-                ))
+        match parse_edge_bytes(line) {
+            LineParse::Skip => Ok(()),
+            LineParse::Edge(u, v) => {
+                if u != v {
+                    let du = intern(u, map);
+                    let dv = intern(v, map);
+                    edges.push(Edge::new(du, dv));
+                }
+                Ok(())
             }
-            Some(v_tok) => v_tok.parse::<u64>().map_err(|_| {
-                io::Error::new(
-                    io::ErrorKind::InvalidData,
-                    format!(
-                        "line {}: edge source {u} has malformed target {v_tok:?}",
-                        lineno + 1
-                    ),
-                )
-            })?,
-        };
-        if u == v {
-            continue;
+            // a parseable source with a missing or garbage target means
+            // the file is corrupt — hard error, never a silent skip
+            LineParse::BadTarget(u, None) => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("line {lineno}: edge source {u} has no target"),
+            )),
+            LineParse::BadTarget(u, Some(tok)) => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "line {lineno}: edge source {u} has malformed target {:?}",
+                    String::from_utf8_lossy(tok)
+                ),
+            )),
         }
-        let du = intern(u, &mut map, &mut back);
-        let dv = intern(v, &mut map, &mut back);
-        edges.push(Edge::new(du, dv));
+    }
+
+    // fill_buf + carry: scan lines in place in the reader's buffer; a
+    // line that spans a refill boundary is stitched in `carry`.
+    // NOTE: `stream::source::TextFileSource::next_batch` carries a
+    // sibling of this framing loop (incremental, capacity-bounded,
+    // infallible — different enough that unifying them would complicate
+    // both); a fix to a carry/boundary edge case here likely applies
+    // there too.
+    let mut carry: Vec<u8> = Vec::with_capacity(64);
+    let mut lineno: u64 = 0;
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            if !carry.is_empty() {
+                lineno += 1;
+                consume_line(&carry, lineno, &mut map, &mut back, &mut edges)?;
+                carry.clear();
+            }
+            break;
+        }
+        let mut start = 0usize;
+        while let Some(pos) = chunk[start..].iter().position(|&b| b == b'\n') {
+            lineno += 1;
+            let line = &chunk[start..start + pos];
+            if carry.is_empty() {
+                consume_line(line, lineno, &mut map, &mut back, &mut edges)?;
+            } else {
+                carry.extend_from_slice(line);
+                consume_line(&carry, lineno, &mut map, &mut back, &mut edges)?;
+                carry.clear();
+            }
+            start += pos + 1;
+        }
+        if start < chunk.len() {
+            carry.extend_from_slice(&chunk[start..]);
+        }
+        let consumed = chunk.len();
+        reader.consume(consumed);
     }
     Ok((EdgeList::new(back.len(), edges), back))
 }
@@ -206,6 +348,91 @@ mod tests {
         assert_eq!(parse_edge_line("# comment"), None);
         assert_eq!(parse_edge_line(""), None);
         assert_eq!(parse_edge_line("x y"), None);
+    }
+
+    #[test]
+    fn byte_scanner_classifies_like_the_str_reader() {
+        // the scanner is the shared core of both text readers — its
+        // classification must match the old token-wise &str semantics
+        assert_eq!(parse_edge_bytes(b"1\t2"), LineParse::Edge(1, 2));
+        assert_eq!(parse_edge_bytes(b"  3 4  \r"), LineParse::Edge(3, 4));
+        assert_eq!(parse_edge_bytes(b"1 2 3"), LineParse::Edge(1, 2)); // extra tokens ignored
+        assert_eq!(parse_edge_bytes(b"# comment"), LineParse::Skip);
+        assert_eq!(parse_edge_bytes(b"% header"), LineParse::Skip);
+        assert_eq!(parse_edge_bytes(b""), LineParse::Skip);
+        assert_eq!(parse_edge_bytes(b"   "), LineParse::Skip);
+        // str::parse::<u64> accepts a leading '+'; the scanner must too
+        assert_eq!(parse_edge_bytes(b"+1 +2"), LineParse::Edge(1, 2));
+        assert_eq!(parse_edge_bytes(b"1 +"), LineParse::BadTarget(1, Some(b"+".as_slice())));
+        // vertical tab / form feed separate tokens like split_whitespace
+        assert_eq!(parse_edge_bytes(b"1\x0b2"), LineParse::Edge(1, 2));
+        assert_eq!(parse_edge_bytes(b"1\x0c2"), LineParse::Edge(1, 2));
+        // a partially-numeric token is NOT a number: "12ab" is a
+        // non-numeric source (skip), "2ab" a malformed target (error)
+        assert_eq!(parse_edge_bytes(b"12ab 34"), LineParse::Skip);
+        assert_eq!(
+            parse_edge_bytes(b"1 2ab"),
+            LineParse::BadTarget(1, Some(b"2ab".as_slice()))
+        );
+        assert_eq!(parse_edge_bytes(b"42"), LineParse::BadTarget(42, None));
+    }
+
+    #[test]
+    fn byte_scanner_never_wraps_u64_overflow() {
+        // 2^64 + ε as text: the old wrapping scan silently produced a
+        // wrong-but-valid id; overflow must classify as non-numeric
+        let big = "18446744073709551616"; // u64::MAX + 1
+        let line = format!("{big} 5");
+        assert_eq!(
+            parse_edge_bytes(line.as_bytes()),
+            LineParse::Skip,
+            "overflowing source"
+        );
+        let line = format!("5 {big}");
+        assert!(
+            matches!(parse_edge_bytes(line.as_bytes()), LineParse::BadTarget(5, Some(_))),
+            "overflowing target must be a hard error for the strict reader"
+        );
+        // u64::MAX itself still parses
+        assert_eq!(
+            parse_edge_bytes(b"18446744073709551615 1"),
+            LineParse::Edge(u64::MAX, 1)
+        );
+    }
+
+    #[test]
+    fn text_reader_interns_40bit_ids_without_truncation() {
+        // regression: ids beyond u32 must remap densely, never narrow
+        let p = tmp("wide.txt");
+        let a = 1u64 << 40;
+        let b = (1u64 << 40) + 1;
+        std::fs::write(&p, format!("{a}\t{b}\n{b}\t7\n")).unwrap();
+        let (el, back) = read_text_edges(&p).unwrap();
+        assert_eq!(el.n, 3);
+        assert_eq!(el.m(), 2);
+        assert_eq!(back, vec![a, b, 7]);
+        assert_eq!(el.edges, vec![Edge::new(0, 1), Edge::new(1, 2)]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn text_reader_handles_lines_spanning_buffer_refills() {
+        // a file larger than the BufReader's internal buffer exercises
+        // the fill_buf + carry path end to end; build one long comment
+        // line (> 1 MiB) followed by real edges and a no-newline tail
+        let p = tmp("carry.txt");
+        let mut data = String::with_capacity((1 << 20) + 64);
+        data.push('#');
+        for _ in 0..(1 << 20) {
+            data.push('x');
+        }
+        data.push('\n');
+        data.push_str("10\t20\n30\t40"); // final line has no newline
+        std::fs::write(&p, data).unwrap();
+        let (el, back) = read_text_edges(&p).unwrap();
+        assert_eq!(el.m(), 2);
+        assert_eq!(back, vec![10, 20, 30, 40]);
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

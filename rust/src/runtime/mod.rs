@@ -187,7 +187,12 @@ mod real {
         }
 
         /// Execute `sweep_metrics.hlo.txt`: `(A·K, A·K, A)` → `A × 6` scores.
-        pub fn sweep_metrics(&self, vols: &[f32], sizes: &[f32], w: &[f32]) -> Result<Vec<[f32; 6]>> {
+        pub fn sweep_metrics(
+            &self,
+            vols: &[f32],
+            sizes: &[f32],
+            w: &[f32],
+        ) -> Result<Vec<[f32; 6]>> {
             let (a, k) = (NUM_SWEEPS, VOLUME_BUCKETS);
             if vols.len() != a * k || sizes.len() != a * k || w.len() != a {
                 return Err(RuntimeError::new(format!(

@@ -1,0 +1,196 @@
+//! Pooled chunk buffers — the zero-allocation ingest cycle.
+//!
+//! Every dispatched chunk used to be a freshly allocated `Vec<Edge>`
+//! that the shard worker dropped after processing: one heap
+//! allocation and one free per `chunk_size` edges, on the hottest path
+//! in the process. The pool closes that cycle into a loop of owned
+//! buffers:
+//!
+//! ```text
+//! router pending[w] ──send──► mailbox[w] ──recv──► shard worker w
+//!       ▲                                              │ process_chunk
+//!       │ checkout() (hit = recycled)                  ▼
+//!       └───────────────── BufPool ◄───── give_back() ─┘
+//! ```
+//!
+//! In steady state every `checkout` is a **hit** (a recycled buffer
+//! with its capacity intact), so chunk dispatch performs no heap
+//! allocation at all. Misses happen only while the cycle warms up —
+//! bounded by the number of buffers that can be in flight at once
+//! (per shard: the pending buffer, `mailbox_depth` queued chunks, and
+//! one in the worker's hands) — which is exactly what the
+//! zero-allocation integration test asserts via [`PoolStats`].
+//!
+//! The idle shelf is capped (`max_idle`): buffers beyond the cap are
+//! dropped on return, so a transient burst cannot pin memory forever.
+
+use std::mem::size_of;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::graph::edge::Edge;
+
+/// Counters of the chunk-buffer pool, surfaced in
+/// [`ServiceStats::pool`](super::ServiceStats::pool) and the `serve`
+/// stats line. `hits + misses` is the total number of checkouts;
+/// steady-state zero-allocation ingest shows up as `misses` frozen at
+/// its warm-up value while `hits` keeps growing.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Checkouts served by a recycled buffer (no allocation).
+    pub hits: u64,
+    /// Checkouts that had to allocate a fresh buffer (cold cycle).
+    pub misses: u64,
+    /// Buffer-capacity bytes returned to the pool over its lifetime.
+    pub recycled_bytes: u64,
+}
+
+/// The pool itself: a mutex-held shelf of empty, capacity-bearing
+/// chunk buffers plus lifetime counters. One per service, shared by
+/// the router (checkout on dispatch) and every shard worker (return
+/// after processing). The shelf lock is taken once per *chunk*, never
+/// per edge, so it adds nothing to the per-edge cost.
+pub(crate) struct BufPool {
+    free: Mutex<Vec<Vec<Edge>>>,
+    /// Idle buffers kept at most; returns beyond this are dropped.
+    max_idle: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    recycled_bytes: AtomicU64,
+}
+
+impl BufPool {
+    /// A pool that shelves at most `max_idle` idle buffers.
+    pub(crate) fn new(max_idle: usize) -> Self {
+        Self {
+            free: Mutex::new(Vec::with_capacity(max_idle.min(64))),
+            max_idle: max_idle.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            recycled_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// An empty buffer with at least `cap` capacity: recycled when the
+    /// shelf has one (hit), freshly allocated otherwise (miss).
+    pub(crate) fn checkout(&self, cap: usize) -> Vec<Edge> {
+        let recycled = self.free.lock().unwrap().pop();
+        match recycled {
+            Some(mut buf) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                // buffers come back cleared; reserve only if a config
+                // change outgrew the recycled capacity
+                if buf.capacity() < cap {
+                    buf.reserve(cap);
+                }
+                buf
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(cap)
+            }
+        }
+    }
+
+    /// Return a spent chunk to the shelf: cleared, its capacity counted
+    /// as recycled; dropped instead when the shelf is at `max_idle` or
+    /// the buffer never held capacity worth keeping.
+    pub(crate) fn give_back(&self, mut buf: Vec<Edge>) {
+        buf.clear();
+        if buf.capacity() == 0 {
+            return;
+        }
+        let bytes = (buf.capacity() * size_of::<Edge>()) as u64;
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.max_idle {
+            free.push(buf);
+            drop(free);
+            self.recycled_bytes.fetch_add(bytes, Ordering::Relaxed);
+        }
+    }
+
+    /// Lifetime counters (lock-free reads).
+    pub(crate) fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            recycled_bytes: self.recycled_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Buffers currently shelved (tests/observability).
+    #[cfg(test)]
+    pub(crate) fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_miss_then_hit_cycle() {
+        let pool = BufPool::new(4);
+        let buf = pool.checkout(16);
+        let cap = buf.capacity();
+        assert!(cap >= 16);
+        assert_eq!(pool.stats(), PoolStats { hits: 0, misses: 1, recycled_bytes: 0 });
+
+        pool.give_back(buf);
+        assert_eq!(pool.idle(), 1);
+        assert_eq!(pool.stats().recycled_bytes, (cap * size_of::<Edge>()) as u64);
+
+        let again = pool.checkout(16);
+        assert_eq!(again.capacity(), cap, "recycled capacity must survive");
+        assert!(again.is_empty(), "recycled buffers must come back cleared");
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn give_back_clears_contents() {
+        let pool = BufPool::new(2);
+        let mut buf = pool.checkout(8);
+        buf.push(Edge::new(1, 2));
+        buf.push(Edge::new(3, 4));
+        pool.give_back(buf);
+        let buf = pool.checkout(8);
+        assert!(buf.is_empty(), "a stale edge in a recycled chunk would be re-processed");
+    }
+
+    #[test]
+    fn idle_shelf_is_capped() {
+        let pool = BufPool::new(2);
+        let bufs: Vec<_> = (0..5).map(|_| pool.checkout(8)).collect();
+        let caps: u64 = bufs[..2].iter().map(|b| b.capacity() as u64).sum();
+        for b in bufs {
+            pool.give_back(b);
+        }
+        assert_eq!(pool.idle(), 2, "returns beyond max_idle must be dropped");
+        // only the shelved capacity counts as recycled
+        assert_eq!(pool.stats().recycled_bytes, caps * size_of::<Edge>() as u64);
+    }
+
+    #[test]
+    fn checkout_regrows_undersized_recycled_buffers() {
+        let pool = BufPool::new(2);
+        pool.give_back({
+            let mut v = Vec::with_capacity(4);
+            v.push(Edge::new(0, 1));
+            v
+        });
+        let buf = pool.checkout(32);
+        assert!(buf.capacity() >= 32);
+        assert!(buf.is_empty());
+        assert_eq!(pool.stats().hits, 1);
+    }
+
+    #[test]
+    fn zero_capacity_buffers_are_not_shelved() {
+        let pool = BufPool::new(2);
+        pool.give_back(Vec::new());
+        assert_eq!(pool.idle(), 0);
+        assert_eq!(pool.stats().recycled_bytes, 0);
+    }
+}

@@ -5,9 +5,13 @@
 //!
 //! * **Router** — `super::router::Router`, the single routing core
 //!   (also the batch path's core via `coordinator::parallel`):
-//!   intra-shard edges batch into per-shard chunks, cross-shard edges
-//!   append to the epoch-structured cross log (`super::crosslog`),
-//!   which seals epochs on the router's chunk boundaries.
+//!   each ingest batch is partitioned in one pass (pow2 shard counts
+//!   take a shift fast path), intra-shard edges batch into
+//!   pool-recycled per-shard chunks (`super::bufpool` — the workers
+//!   return spent chunks, so steady-state dispatch allocates
+//!   nothing), cross-shard edges append to the epoch-structured cross
+//!   log (`super::crosslog`), which seals epochs on the router's
+//!   chunk boundaries.
 //! * **Shard worker** — long-lived thread owning one
 //!   [`StreamingClusterer`] behind a mutex; drains its bounded mailbox
 //!   chunk by chunk. Workers never share nodes (hash-sharding), so they
@@ -54,6 +58,7 @@ use crate::stream::meter::Meter;
 use crate::stream::source::EdgeSource;
 use crate::util::channel::Channel;
 
+use super::bufpool::BufPool;
 use super::config::ServiceConfig;
 use super::crosslog::{
     CrossLog, BYTES_PER_EDGE, BYTES_PER_FROZEN_ENTRY, EPOCH_COMMIT_HEADER_BYTES,
@@ -68,10 +73,15 @@ use super::snapshot::{merge_committed_bases, CommittedBase, LeaderShard, Merger,
 /// Lock order (where two or more are held together):
 /// `merger` → `crosslog` → `leaders[i]` (ascending `i`). The stats path
 /// takes `crosslog` and each `leaders[i]` one at a time, never nested
-/// under anything else.
+/// under anything else. The chunk pool's shelf lock (`bufpool`) is a
+/// leaf: checkout/return never hold any other lock.
 pub(crate) struct Shared {
     pub(crate) config: ServiceConfig,
     pub(crate) mailboxes: Vec<Channel<Vec<Edge>>>,
+    /// Chunk-buffer pool: the router checks buffers out on dispatch,
+    /// the workers return them after processing — steady-state chunk
+    /// dispatch performs zero heap allocations (see `super::bufpool`).
+    pub(crate) bufpool: BufPool,
     pub(crate) states: Vec<Mutex<StreamingClusterer>>,
     /// The epoch-structured cross-edge log (arrival order; the merger's
     /// cursor marks the drained prefix, the commit horizon bounds what
@@ -221,6 +231,9 @@ fn worker_loop(shared: &Shared, w: usize) {
             clusterer.process_chunk(&chunk);
         }
         shared.processed.fetch_add(chunk.len() as u64, Ordering::SeqCst);
+        // close the zero-allocation cycle: the spent chunk goes back to
+        // the pool for the router's next dispatch
+        shared.bufpool.give_back(chunk);
     }
 }
 
@@ -289,11 +302,16 @@ impl ClusterService {
             config.leaders = config.shards;
         }
         let shards = config.shards;
+        // per shard, at most: the pending buffer, `mailbox_depth`
+        // queued chunks, and one in the worker's hands — the pool never
+        // needs to shelve more than can circulate
+        let pool_cap = shards * (config.mailbox_depth + 2);
 
         let shared = Arc::new(Shared {
             mailboxes: (0..shards)
                 .map(|_| Channel::bounded(config.mailbox_depth))
                 .collect(),
+            bufpool: BufPool::new(pool_cap),
             states: (0..shards)
                 .map(|_| Mutex::new(StreamingClusterer::new(0, config.str_config.clone())))
                 .collect(),
@@ -347,10 +365,17 @@ impl ClusterService {
         }
     }
 
-    /// Route a chunk of edges.
+    /// Route a chunk of edges as **one batch** through
+    /// `Router::push_batch`: a single routing pass, per-batch (not
+    /// per-edge) counter/meter/drain-clock bookkeeping. The automatic
+    /// drain clock is therefore batch-granular — a drain fires at the
+    /// first chunk boundary at or past `config.drain_every` edges
+    /// since the previous drain (the final partition is
+    /// drain-cadence-independent under the default unbounded horizon,
+    /// so only mid-stream snapshot freshness sees the difference).
     pub fn push_chunk(&mut self, chunk: &[Edge]) {
-        for &e in chunk {
-            self.push(e);
+        if self.router.push_batch(chunk) {
+            self.refresh();
         }
     }
 

@@ -7,9 +7,14 @@
 //! preset over it, it is also the **only** route/batch/merge/replay
 //! pipeline in the repo:
 //!
-//! * [`router`] — the single routing/merge core: per-shard batching
-//!   with blocking backpressure, cross-edge deferral into the epoch
+//! * [`router`] — the single routing/merge core: one-pass per-batch
+//!   partitioning (pow2 shard counts take a shift fast path) with
+//!   blocking backpressure, cross-edge deferral into the epoch
 //!   log, and the disjoint shard-sketch merge.
+//! * [`bufpool`] — the chunk-buffer pool closing the router → mailbox
+//!   → worker cycle: spent chunks come back for the next dispatch, so
+//!   steady-state ingest performs zero heap allocations (hit/miss/
+//!   recycled-bytes counters in [`ServiceStats`]).
 //! * `crosslog` — the epoch-structured cross-edge log: cross edges
 //!   live in sealed epochs; under a bounded [`CommitHorizon`] an epoch
 //!   that falls behind the horizon ships its frozen decisions — as
@@ -65,6 +70,7 @@
 //! assert_eq!(result.edges_ingested, 3);
 //! ```
 
+pub mod bufpool;
 pub mod config;
 pub(crate) mod crosslog;
 pub mod ingest;
@@ -72,6 +78,7 @@ pub mod query;
 pub mod router;
 pub mod snapshot;
 
+pub use bufpool::PoolStats;
 pub use config::{CommitHorizon, ServiceConfig};
 pub use ingest::{ClusterService, ServiceResult};
 pub use query::{LeaderStats, QueryHandle, ServiceStats};

@@ -18,6 +18,7 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
+use super::bufpool::PoolStats;
 use super::config::CommitHorizon;
 use super::ingest::{rebuild_snapshot, Shared};
 use super::snapshot::{CommunitySummary, Snapshot};
@@ -119,6 +120,14 @@ pub struct ServiceStats {
     pub queue_depths: Vec<usize>,
     /// High-water mark of each shard mailbox (backpressure indicator).
     pub queue_peaks: Vec<usize>,
+    /// Chunks handed to shard mailboxes over the service's lifetime
+    /// (with the batch spine, router-side atomic RMWs are one per
+    /// ingest batch plus one per dispatched chunk — not per edge).
+    pub chunks_dispatched: u64,
+    /// Chunk-buffer pool counters: steady-state zero-allocation ingest
+    /// shows up as `misses` frozen at its warm-up value while `hits`
+    /// keeps growing (asserted by the service integration suite).
+    pub pool: PoolStats,
     /// Edges covered by the currently-published snapshot (query lag =
     /// `edges_ingested - snapshot_edges`).
     pub snapshot_edges: u64,
@@ -182,8 +191,13 @@ impl QueryHandle {
         let snap = self.snapshot();
         let queue_depths: Vec<usize> =
             self.shared.mailboxes.iter().map(|m| m.len()).collect();
-        let queue_peaks: Vec<usize> =
-            self.shared.mailboxes.iter().map(|m| m.stats().0).collect();
+        let mut queue_peaks = Vec::with_capacity(self.shared.mailboxes.len());
+        let mut chunks_dispatched = 0u64;
+        for m in &self.shared.mailboxes {
+            let (peak, pushed, _) = m.stats();
+            queue_peaks.push(peak);
+            chunks_dispatched += pushed;
+        }
         // memory comes from the published snapshot, not the live shard
         // states — stats must never contend with the workers' hot loop
         let memory_bytes = snap.memory_bytes();
@@ -251,6 +265,8 @@ impl QueryHandle {
             uptime: report.elapsed,
             queue_depths,
             queue_peaks,
+            chunks_dispatched,
+            pool: self.shared.bufpool.stats(),
             snapshot_edges: snap.edges(),
             memory_bytes,
             nodes,

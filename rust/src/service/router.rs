@@ -6,10 +6,12 @@
 //! ingest path — bit-identical in behaviour, duplicated in code. Both
 //! now go through here:
 //!
-//! * `Router` — the write-side core: classify each edge with
-//!   `stream::shard::route`, batch same-shard edges into per-shard
-//!   chunks bound for the workers' bounded mailboxes (blocking
-//!   backpressure, never drops), and append cross-shard edges to the
+//! * `Router` — the write-side core: partition each ingest **batch**
+//!   in one pass with a precomputed `stream::shard::Sharder` (shift
+//!   fast path for power-of-two shard counts), batch same-shard edges
+//!   into pool-recycled per-shard chunks bound for the workers'
+//!   bounded mailboxes (blocking backpressure, never drops), and
+//!   append cross-shard edges to the
 //!   epoch-structured cross log (`super::crosslog`) — epochs seal on
 //!   these chunk boundaries, and they are also the unit the sharded
 //!   drain leader ships: a drain exchanges only the epoch deltas the
@@ -30,9 +32,13 @@ use std::sync::Arc;
 
 use crate::coordinator::state::{StreamState, UNSEEN};
 use crate::graph::edge::Edge;
-use crate::stream::shard::{route, Route};
+use crate::stream::shard::{Route, Sharder};
 
 use super::ingest::Shared;
+
+/// Unreported edges accumulated before the throughput meter's mutex is
+/// taken (once per ~this many edges, or at most once per batch).
+const METER_FLUSH_EVERY: u64 = 1024;
 
 /// Merge shard-disjoint worker states into one sketch (disjoint array
 /// union).
@@ -70,12 +76,27 @@ pub fn merge_disjoint_states(n: usize, states: &[StreamState]) -> StreamState {
 /// deferred cross-edge batch, all draining into the `Shared` service
 /// state. Owned by `ClusterService`; not thread-safe by itself (one
 /// router per ingest thread, backed by thread-safe `Shared`).
+///
+/// §Perf: the core is **batch-granular**. [`push_batch`](Self::push_batch)
+/// is the primary entry point — one pass partitions the batch into
+/// per-shard runs and the cross run through a precomputed [`Sharder`]
+/// (shift fast path when `shards` is a power of two), and all
+/// bookkeeping that used to run per edge (`ingested` atomic RMW, meter
+/// check, drain-clock arithmetic) runs once per batch. Chunk buffers
+/// come from the shared [`BufPool`](super::bufpool::BufPool) and are
+/// returned by the workers, so steady-state dispatch allocates
+/// nothing. [`push`](Self::push) survives as a one-edge batch for the
+/// dynamic/event path.
 pub(crate) struct Router {
     shared: Arc<Shared>,
-    /// Per-shard batch buffers (not yet dispatched to mailboxes).
+    /// Precomputed shard router (pow2 shift fast path when possible).
+    sharder: Sharder,
+    /// Per-shard batch buffers (not yet dispatched to mailboxes);
+    /// pool-backed — dispatch swaps in a recycled buffer.
     pending: Vec<Vec<Edge>>,
     /// Cross-edge batch (flushed to the shared cross log in chunks —
-    /// one lock per chunk instead of one per edge).
+    /// one lock per chunk instead of one per edge). Drained in place,
+    /// so its capacity is reused for the whole run.
     cross_pending: Vec<Edge>,
     /// Edges routed since the last snapshot drain.
     since_drain: u64,
@@ -86,41 +107,64 @@ pub(crate) struct Router {
 impl Router {
     pub(crate) fn new(shared: Arc<Shared>) -> Self {
         let shards = shared.config.shards;
+        let chunk = shared.config.chunk_size;
         Self {
-            shared,
-            pending: (0..shards).map(|_| Vec::new()).collect(),
-            cross_pending: Vec::new(),
+            sharder: Sharder::new(shards),
+            pending: (0..shards).map(|_| shared.bufpool.checkout(chunk)).collect(),
+            cross_pending: Vec::with_capacity(chunk),
             since_drain: 0,
             unmetered: 0,
+            shared,
         }
     }
 
-    /// Route one edge. Blocks when the target shard's mailbox is full
-    /// (backpressure). Returns `true` when `config.drain_every` edges
-    /// have accumulated since the last drain — the caller owns the
-    /// drain itself (and must call [`reset_drain_clock`](Self::reset_drain_clock)
-    /// when it drains for any other reason).
+    /// Route one edge — a one-edge [`push_batch`](Self::push_batch),
+    /// kept for the dynamic/event path. Blocks when the target shard's
+    /// mailbox is full (backpressure).
     pub(crate) fn push(&mut self, e: Edge) -> bool {
-        match route(e, self.shared.config.shards) {
-            Route::Local(w) => {
-                self.pending[w].push(e);
-                if self.pending[w].len() >= self.shared.config.chunk_size {
-                    self.dispatch(w);
+        self.push_batch(std::slice::from_ref(&e))
+    }
+
+    /// Route a batch of edges — the primary ingest entry point. One
+    /// pass partitions the batch into per-shard runs (dispatched as
+    /// chunks whenever a pending buffer fills) and the cross run;
+    /// the `ingested` counter, the meter check, and the drain clock
+    /// are each touched **once per batch**, not per edge. Blocks when
+    /// a target shard's mailbox is full (backpressure). Returns `true`
+    /// when at least `config.drain_every` edges have accumulated since
+    /// the last drain — the drain clock is batch-granular: the caller
+    /// (who owns the drain) learns at the first batch boundary at or
+    /// past the cadence, and must call
+    /// [`reset_drain_clock`](Self::reset_drain_clock) when it drains
+    /// for any other reason.
+    pub(crate) fn push_batch(&mut self, batch: &[Edge]) -> bool {
+        if batch.is_empty() {
+            return false;
+        }
+        let chunk_size = self.shared.config.chunk_size;
+        for &e in batch {
+            match self.sharder.route(e) {
+                Route::Local(w) => {
+                    self.pending[w].push(e);
+                    if self.pending[w].len() >= chunk_size {
+                        self.dispatch(w);
+                    }
                 }
-            }
-            Route::Cross => {
-                self.cross_pending.push(e);
-                if self.cross_pending.len() >= self.shared.config.chunk_size {
-                    self.flush_cross();
+                Route::Cross => {
+                    self.cross_pending.push(e);
+                    if self.cross_pending.len() >= chunk_size {
+                        self.flush_cross();
+                    }
                 }
             }
         }
-        self.shared.ingested.fetch_add(1, Ordering::Relaxed);
-        self.unmetered += 1;
-        if self.unmetered >= 1024 {
+        let k = batch.len() as u64;
+        self.shared.ingested.fetch_add(k, Ordering::Relaxed);
+        self.unmetered += k;
+        if self.unmetered >= METER_FLUSH_EVERY {
             self.meter_flush();
         }
-        self.since_drain += 1;
+        self.since_drain += k;
         self.since_drain >= self.shared.config.drain_every
     }
 
@@ -130,12 +174,16 @@ impl Router {
     }
 
     /// Send shard `w`'s pending batch to its mailbox (blocking when the
-    /// mailbox is full — that *is* the backpressure).
+    /// mailbox is full — that *is* the backpressure). The replacement
+    /// pending buffer comes from the pool: in steady state it is one
+    /// the worker already processed and returned, so no allocation
+    /// happens here.
     fn dispatch(&mut self, w: usize) {
         if self.pending[w].is_empty() {
             return;
         }
-        let batch = std::mem::take(&mut self.pending[w]);
+        let fresh = self.shared.bufpool.checkout(self.shared.config.chunk_size);
+        let batch = std::mem::replace(&mut self.pending[w], fresh);
         let len = batch.len() as u64;
         // a mailbox only closes mid-run when its worker died; fail fast
         // rather than silently discarding this shard's edges for the

@@ -3,18 +3,91 @@
 //! Node space is split across `shards` by multiplicative hashing.
 //! An edge whose endpoints fall in the same shard is routed to that
 //! shard's worker; a *cross-shard* edge is deferred, because its
-//! decision needs both shards' community state. The one consumer of
-//! these primitives is `service::router` — the single routing core
-//! behind both the service and the batch coordinator.
+//! decision needs both shards' community state. The hot-path consumer
+//! of these primitives is `service::router` — the single routing core
+//! behind both the service and the batch coordinator — which holds a
+//! [`Sharder`] so the power-of-two fast path is chosen once per run
+//! instead of once per edge; the free functions remain for one-off
+//! callers (leader partitioning, tests).
 
 use crate::graph::edge::Edge;
+
+/// The multiplier of the multiplicative (Fibonacci) hash.
+const FIB: u64 = 0x9E37_79B9_7F4A_7C15;
 
 /// Multiplicative (Fibonacci) hash of a node id into `shards` buckets.
 #[inline]
 pub fn shard_of(node: u32, shards: usize) -> usize {
     debug_assert!(shards > 0);
-    let h = (node as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let h = (node as u64).wrapping_mul(FIB);
     ((h >> 32) as usize * shards) >> 32
+}
+
+/// A precomputed shard router: the per-edge "which bucket?" decision of
+/// [`shard_of`] with the bucket-count dispatch hoisted to construction
+/// time. When `shards` is a power of two `2^k` the generic
+/// multiply-shift reduction collapses to a plain shift of the hash
+/// (`((h >> 32) · 2^k) >> 32 = h >> (64 − k)` for `k ≤ 32`), saving a
+/// multiply on every endpoint of every edge on the hot path; any other
+/// count keeps the generic path. Both paths are **bit-identical** to
+/// [`shard_of`] (unit-tested exhaustively), so the fast path can never
+/// change where an edge lands — only how fast the answer is computed.
+#[derive(Debug, Clone, Copy)]
+pub struct Sharder {
+    shards: usize,
+    /// `64 − log2(shards)` when `shards` is a power of two in
+    /// `[2, 2^32]`; `0` selects the generic multiply path.
+    shift: u32,
+}
+
+impl Sharder {
+    /// Precompute the routing mode for `shards` buckets.
+    pub fn new(shards: usize) -> Self {
+        debug_assert!(shards > 0);
+        let k = shards.trailing_zeros();
+        let shift = if shards.is_power_of_two() && (1..=32).contains(&k) {
+            64 - k
+        } else {
+            0
+        };
+        Self { shards, shift }
+    }
+
+    /// The bucket count this router was built for.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// True when the power-of-two shift path is active.
+    pub fn is_pow2_fast_path(&self) -> bool {
+        self.shift != 0
+    }
+
+    /// Bucket of `node` — identical to `shard_of(node, self.shards())`.
+    #[inline]
+    pub fn shard_of(&self, node: u32) -> usize {
+        if self.shards == 1 {
+            return 0;
+        }
+        let h = (node as u64).wrapping_mul(FIB);
+        if self.shift != 0 {
+            (h >> self.shift) as usize
+        } else {
+            ((h >> 32) as usize * self.shards) >> 32
+        }
+    }
+
+    /// Classify an edge — identical to `route(edge, self.shards())`.
+    #[inline]
+    pub fn route(&self, edge: Edge) -> Route {
+        let a = self.shard_of(edge.u);
+        let b = self.shard_of(edge.v);
+        if a == b {
+            Route::Local(a)
+        } else {
+            Route::Cross
+        }
+    }
 }
 
 /// Routing decision for one edge.
@@ -102,6 +175,56 @@ mod tests {
         }
         assert_eq!(nlocal + ncross, chunk.len());
         assert!(nlocal > 0 && ncross > 0, "both classes must occur");
+    }
+
+    #[test]
+    fn sharder_is_bit_identical_to_shard_of_for_every_mode() {
+        // the golden suites pin routing bit-for-bit, so the pow2 shift
+        // path must agree with the generic multiply everywhere —
+        // including the extremes of the id space
+        for shards in [1usize, 2, 3, 4, 5, 7, 8, 16, 31, 32, 64, 1024] {
+            let s = Sharder::new(shards);
+            assert_eq!(s.shards(), shards);
+            for node in (0..20_000u32).chain(u32::MAX - 20_000..=u32::MAX) {
+                assert_eq!(
+                    s.shard_of(node),
+                    shard_of(node, shards),
+                    "shards={shards} node={node}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharder_pow2_fast_path_activates_exactly_on_powers_of_two() {
+        for (shards, pow2) in [
+            (1usize, false), // single shard short-circuits to 0
+            (2, true),
+            (3, false),
+            (4, true),
+            (6, false),
+            (8, true),
+            (4096, true),
+        ] {
+            assert_eq!(
+                Sharder::new(shards).is_pow2_fast_path(),
+                pow2,
+                "shards={shards}"
+            );
+        }
+    }
+
+    #[test]
+    fn sharder_route_matches_free_route() {
+        for shards in [1usize, 2, 3, 4, 8] {
+            let s = Sharder::new(shards);
+            for u in 0..200u32 {
+                for v in 0..50u32 {
+                    let e = Edge::new(u, v * 17);
+                    assert_eq!(s.route(e), route(e, shards), "shards={shards} {e:?}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -10,6 +10,7 @@ use std::io::{BufRead, BufReader, Read};
 use std::path::Path;
 
 use crate::graph::edge::Edge;
+use crate::graph::io::{parse_edge_bytes, LineParse};
 
 /// A single-pass edge stream.
 pub trait EdgeSource: Send {
@@ -87,53 +88,32 @@ impl EdgeSource for OwnedMemorySource {
 /// `read_text_edges` — which hard-errors on half-numeric (corrupt)
 /// lines — this transport stays lenient and skips anything it cannot
 /// scan: `EdgeSource::next_batch` has no error channel, and the
-/// streaming path trades strictness for throughput by design.
+/// streaming path trades strictness for throughput by design — but the
+/// two corruption-shaped drop classes are **counted**, never silent: a
+/// line whose ids parse but exceed `u32`
+/// ([`oversized_skipped`](Self::oversized_skipped) — narrowing would
+/// alias another node, worse than dropping), and a numeric-source line
+/// with a missing/malformed target
+/// ([`malformed_skipped`](Self::malformed_skipped) — what the strict
+/// reader hard-errors on).
 ///
 /// §Perf: this is a streaming-path transport, so parsing is byte-level
-/// — `read_until` into a byte buffer (no UTF-8 validation) and a
-/// hand-rolled decimal scanner instead of `split_whitespace` + `parse`.
-/// This took STR-from-text from 4.7× the `cat` bound to ~2× (the
-/// paper's Friendster ratio); see EXPERIMENTS.md §Perf.
+/// — lines are scanned in place in the reader's buffer (no UTF-8
+/// validation) by the shared `graph::io::parse_edge_bytes` scanner
+/// instead of `split_whitespace` + `parse`. This took STR-from-text
+/// from 4.7× the `cat` bound to ~2× (the paper's Friendster ratio);
+/// see EXPERIMENTS.md §Perf.
 pub struct TextFileSource {
     reader: BufReader<File>,
     /// carry for a line spanning a buffer refill boundary
     carry: Vec<u8>,
     bytes_read: u64,
+    /// lines whose ids parsed but did not fit in u32 (skipped)
+    oversized: u64,
+    /// lines with a numeric source but a missing/malformed target —
+    /// what the strict reader hard-errors on (skipped here)
+    malformed: u64,
     eof: bool,
-}
-
-/// Scan one text line as two decimal ids; `None` for comments/blank/
-/// malformed lines. Byte-level twin of `graph::io::parse_edge_line`.
-#[inline]
-fn parse_edge_bytes(line: &[u8]) -> Option<(u64, u64)> {
-    let mut i = 0;
-    let n = line.len();
-    // skip leading whitespace
-    while i < n && (line[i] == b' ' || line[i] == b'\t' || line[i] == b'\r' || line[i] == b'\n') {
-        i += 1;
-    }
-    if i >= n || line[i] == b'#' || line[i] == b'%' {
-        return None;
-    }
-    let mut scan_int = |i: &mut usize| -> Option<u64> {
-        let start = *i;
-        let mut x: u64 = 0;
-        while *i < n && line[*i].is_ascii_digit() {
-            x = x.wrapping_mul(10).wrapping_add((line[*i] - b'0') as u64);
-            *i += 1;
-        }
-        if *i == start {
-            None
-        } else {
-            Some(x)
-        }
-    };
-    let u = scan_int(&mut i)?;
-    while i < n && (line[i] == b' ' || line[i] == b'\t') {
-        i += 1;
-    }
-    let v = scan_int(&mut i)?;
-    Some((u, v))
 }
 
 impl TextFileSource {
@@ -143,6 +123,8 @@ impl TextFileSource {
             reader: BufReader::with_capacity(1 << 20, File::open(path)?),
             carry: Vec::with_capacity(64),
             bytes_read: 0,
+            oversized: 0,
+            malformed: 0,
             eof: false,
         })
     }
@@ -152,12 +134,44 @@ impl TextFileSource {
         self.bytes_read
     }
 
+    /// Lines skipped because an id parsed but exceeded `u32` (these
+    /// were previously *truncated* into wrong-but-valid edges — the
+    /// counter makes the drop observable instead of silent).
+    pub fn oversized_skipped(&self) -> u64 {
+        self.oversized
+    }
+
+    /// Lines skipped because the source id parsed but the target was
+    /// missing or malformed — the corruption class the strict reader
+    /// (`graph::io::read_text_edges`) hard-errors on. The lenient
+    /// transport has no error channel, so the counter is how the drop
+    /// stays observable.
+    pub fn malformed_skipped(&self) -> u64 {
+        self.malformed
+    }
+
     #[inline]
-    fn emit(line: &[u8], buf: &mut Vec<Edge>) {
-        if let Some((u, v)) = parse_edge_bytes(line) {
-            if u != v {
+    fn emit(line: &[u8], buf: &mut Vec<Edge>, oversized: &mut u64, malformed: &mut u64) {
+        // lenient transport: only well-formed pairs become edges;
+        // comment/non-numeric lines skip silently, the two observable
+        // drop classes (bad target, oversized id) are counted
+        match parse_edge_bytes(line) {
+            LineParse::Edge(u, v) => {
+                // oversized before self-loop: the counter covers every
+                // line whose ids cannot be dense u32, loops included
+                if u > u32::MAX as u64 || v > u32::MAX as u64 {
+                    // an id that cannot be a dense u32 would alias
+                    // another node if narrowed with `as` — skip + count
+                    *oversized += 1;
+                    return;
+                }
+                if u == v {
+                    return;
+                }
                 buf.push(Edge::new(u as u32, v as u32));
             }
+            LineParse::BadTarget(..) => *malformed += 1,
+            LineParse::Skip => {}
         }
     }
 }
@@ -168,7 +182,9 @@ impl EdgeSource for TextFileSource {
         buf.clear();
         while buf.len() < buf.capacity() && !self.eof {
             // scan lines directly in the reader's internal buffer —
-            // no per-line copy (§Perf)
+            // no per-line copy (§Perf). A sibling of this framing loop
+            // lives in graph::io::read_text_edges (one-shot, fallible);
+            // carry/boundary fixes likely apply to both.
             let chunk = match self.reader.fill_buf() {
                 Ok(c) => c,
                 Err(_) => break,
@@ -177,7 +193,7 @@ impl EdgeSource for TextFileSource {
                 self.eof = true;
                 if !self.carry.is_empty() {
                     let carry = std::mem::take(&mut self.carry);
-                    Self::emit(&carry, buf);
+                    Self::emit(&carry, buf, &mut self.oversized, &mut self.malformed);
                 }
                 break;
             }
@@ -186,11 +202,11 @@ impl EdgeSource for TextFileSource {
             while let Some(pos) = chunk[start..].iter().position(|&b| b == b'\n') {
                 let line = &chunk[start..start + pos];
                 if self.carry.is_empty() {
-                    Self::emit(line, buf);
+                    Self::emit(line, buf, &mut self.oversized, &mut self.malformed);
                 } else {
                     self.carry.extend_from_slice(line);
                     let carry = std::mem::take(&mut self.carry);
-                    Self::emit(&carry, buf);
+                    Self::emit(&carry, buf, &mut self.oversized, &mut self.malformed);
                     self.carry = carry;
                     self.carry.clear();
                 }
@@ -333,6 +349,42 @@ mod tests {
         let got = collect(&mut src, 13);
         assert_eq!(got, el.edges);
         assert!(src.bytes_read() > 0);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn oversized_ids_are_skipped_and_counted() {
+        // regression: a 40-bit id used to be narrowed with `as u32`
+        // into a wrong-but-valid edge (2^40 → node 0). The lenient
+        // transport must skip the line and count it instead.
+        let p = std::env::temp_dir().join(format!("sc_src_wide_{}.txt", std::process::id()));
+        let wide = 1u64 << 40;
+        std::fs::write(
+            &p,
+            format!("1 2\n{wide} 3\n4 {}\n{wide} {wide}\n5 6\n", wide + 1),
+        )
+        .unwrap();
+        let mut src = TextFileSource::open(&p).unwrap();
+        let got = collect(&mut src, 8);
+        assert_eq!(got, vec![Edge::new(1, 2), Edge::new(5, 6)]);
+        // two oversized pairs + one oversized self-loop, all counted
+        assert_eq!(src.oversized_skipped(), 3);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn lenient_source_counts_malformed_lines_strict_reader_rejects() {
+        // the shared scanner classifies; this transport has no error
+        // channel, so BadTarget lines skip here — counted, so the drop
+        // is observable (graph::io::read_text_edges hard-errors on the
+        // same lines — covered by its own tests)
+        let p = std::env::temp_dir().join(format!("sc_src_bad_{}.txt", std::process::id()));
+        std::fs::write(&p, "# header\n1 2\n3 oops\n4\n5 6\n").unwrap();
+        let mut src = TextFileSource::open(&p).unwrap();
+        let got = collect(&mut src, 8);
+        assert_eq!(got, vec![Edge::new(1, 2), Edge::new(5, 6)]);
+        assert_eq!(src.oversized_skipped(), 0);
+        assert_eq!(src.malformed_skipped(), 2, "'3 oops' and bare '4'");
         std::fs::remove_file(&p).ok();
     }
 

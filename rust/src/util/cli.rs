@@ -79,7 +79,8 @@ impl Args {
 
     /// True when `--name` was passed bare or as `--name=true`.
     pub fn flag(&self, name: &str) -> bool {
-        self.flags.iter().any(|f| f == name) || self.options.get(name).map(|v| v == "true").unwrap_or(false)
+        self.flags.iter().any(|f| f == name)
+            || self.options.get(name).map(|v| v == "true").unwrap_or(false)
     }
 
     /// Raw value of `--name`, if present.
@@ -195,7 +196,12 @@ mod tests {
 
     #[test]
     fn help_renders() {
-        let specs = [OptSpec { name: "nodes", help: "node count", default: Some("1000"), is_flag: false }];
+        let specs = [OptSpec {
+            name: "nodes",
+            help: "node count",
+            default: Some("1000"),
+            is_flag: false,
+        }];
         let h = render_help("run", "run the thing", &specs);
         assert!(h.contains("--nodes"));
         assert!(h.contains("default: 1000"));

@@ -167,6 +167,8 @@ fn serve_stats_report_horizon_and_leader_partitions() {
     assert!(stdout.contains("horizon=unbounded"), "{stdout}");
     assert!(stdout.contains("delta_last="), "{stdout}");
     assert!(stdout.contains("per-leader r/c/f=["), "{stdout}");
+    assert!(stdout.contains("pool hit/miss="), "{stdout}");
+    assert!(stdout.contains("recycled="), "{stdout}");
 
     // a bounded horizon reads back verbatim, and leaders default to one
     // per shard
@@ -213,10 +215,14 @@ fn bench_service_writes_machine_readable_json() {
     assert!(ok, "bench service failed: {stderr}");
     assert!(stdout.contains("service bench"), "{stdout}");
     assert!(stdout.contains("delta_last"), "{stdout}");
+    assert!(stdout.contains("ingest microbench"), "{stdout}");
+    assert!(stdout.contains("rmw/kedge"), "{stdout}");
     let json = std::fs::read_to_string(&json_path).expect("BENCH_service.json written");
     assert!(json.contains("\"bench\": \"service\""), "{json}");
     assert!(json.contains("\"edges_per_sec\""), "{json}");
     assert!(json.contains("\"per_leader\""), "{json}");
+    assert!(json.contains("\"ingest\""), "{json}");
+    assert!(json.contains("\"pool_misses\""), "{json}");
     std::fs::remove_file(&json_path).ok();
 
     // without --json the table still renders and nothing is written

@@ -7,6 +7,11 @@
 //!   (`run_parallel`, which is the batch preset of the same core), and
 //!   with a single shard both are bit-identical to the single-threaded
 //!   `cluster_edges`.
+//! * **Batch-spine equivalence** — `push_chunk` batches of any size
+//!   (one-pass partitioning, pooled chunk buffers, per-batch
+//!   bookkeeping) are bit-identical to per-edge `push`, across shard
+//!   counts covering both the pow2 shift fast path and the generic
+//!   multiplicative path.
 //! * **View validity** — every incremental mid-stream snapshot is a
 //!   valid partition: volume conservation `Σ v_k = 2t`, labels in
 //!   node-id space, exact coverage at quiesce points.
@@ -150,6 +155,64 @@ fn incremental_replay_equals_full_replay_equals_sequential() {
                 }
                 if shards == 1 && s.cross_total != 0 {
                     return Err("single shard must never defer an edge".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn push_batch_equals_per_edge_push_equals_sequential() {
+    // the batch spine property: routing a stream as batches of any
+    // size through push_chunk (one-pass partitioning, per-batch
+    // bookkeeping, pooled chunks) is bit-identical to routing it one
+    // edge at a time through push — and with a single shard both are
+    // bit-identical to the sequential reference. Shards cover the
+    // pow2 shift fast path (1, 2, 4, 8) and the generic multiplicative
+    // path (3).
+    property("push_batch ≡ push ≡ sequential", 6, |rng, size| {
+        let (n, edges) = random_stream(rng, size);
+        let v_max = 1 + rng.next_below(200);
+        let seq = pad(cluster_edges(n, &edges, v_max), n);
+
+        for shards in [1usize, 2, 4, 8, 3] {
+            let mut cfg = ServiceConfig::new(shards, v_max);
+            cfg.chunk_size = 1 + rng.next_below(32) as usize;
+            cfg.drain_every = 1 + rng.next_below(128);
+
+            let mut svc = ClusterService::start(cfg.clone());
+            for &e in &edges {
+                svc.push(e);
+            }
+            let per_edge = svc.finish().snapshot.labels_padded(n);
+
+            if shards == 1 && per_edge != seq {
+                return Err(format!(
+                    "shards=1 per-edge service diverged from sequential (v_max={v_max})"
+                ));
+            }
+
+            for batch in [1usize, 7, 64, 1024] {
+                let mut svc = ClusterService::start(cfg.clone());
+                for chunk in edges.chunks(batch) {
+                    svc.push_chunk(chunk);
+                }
+                let res = svc.finish();
+                if res.edges_ingested != edges.len() as u64 {
+                    return Err(format!(
+                        "shards={shards} batch={batch}: ingested {} of {}",
+                        res.edges_ingested,
+                        edges.len()
+                    ));
+                }
+                let got = res.snapshot.labels_padded(n);
+                if got != per_edge {
+                    let diff = got.iter().zip(&per_edge).filter(|(a, b)| a != b).count();
+                    return Err(format!(
+                        "shards={shards} batch={batch} v_max={v_max}: push_batch \
+                         diverged from per-edge push at {diff} nodes"
+                    ));
                 }
             }
         }

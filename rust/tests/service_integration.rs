@@ -140,7 +140,12 @@ fn drain_work_is_proportional_to_new_cross_edges() {
     let mut svc = ClusterService::start(cfg);
     let handle = svc.handle();
 
-    svc.push_chunk(&g.edges.edges);
+    // the drain clock is batch-granular: stream in batches no larger
+    // than the cadence so automatic drains actually fire mid-stream
+    // (a single giant batch would legitimately drain once, at its end)
+    for chunk in g.edges.edges.chunks(250) {
+        svc.push_chunk(chunk);
+    }
     svc.quiesce();
     let s = handle.stats();
 
@@ -235,6 +240,92 @@ fn unified_router_survives_capacity_one_mailboxes() {
 
     let par = run_parallel(g.n(), &g.edges.edges, &ParallelConfig::new(4, 64));
     assert_eq!(res.snapshot.labels_padded(g.n()), par.labels());
+}
+
+#[test]
+fn ingest_spine_recycles_chunks_with_zero_steady_state_allocations() {
+    // the zero-allocation acceptance criterion, made observable via
+    // the pool counters: once the router → mailbox → worker → pool
+    // cycle is warm, every dispatch checks out a recycled buffer, so
+    // pool misses are bounded by the number of chunk buffers that can
+    // be in flight at once — per shard: the pending buffer,
+    // mailbox_depth queued chunks, one in the worker's hands (plus one
+    // in transit during the swap) — while hits keep growing with the
+    // stream. Any regression that reintroduces a per-chunk allocation
+    // shows up as misses scaling with the chunk count.
+    let g = sbm::generate(&SbmConfig::equal(12, 60, 0.3, 0.002, 211));
+    let shards = 2usize;
+    let depth = 2usize;
+    let mut cfg = ServiceConfig::new(shards, 64);
+    cfg.chunk_size = 32; // many dispatch cycles
+    cfg.mailbox_depth = depth;
+    cfg.drain_every = u64::MAX;
+    let mut svc = ClusterService::start(cfg);
+    let handle = svc.handle();
+    for chunk in g.edges.edges.chunks(256) {
+        svc.push_chunk(chunk);
+    }
+    svc.quiesce();
+    let s = handle.stats();
+
+    let in_flight_ceiling = (shards * (depth + 3)) as u64;
+    assert!(
+        s.pool.misses <= in_flight_ceiling,
+        "pool misses {} exceed the in-flight ceiling {} — steady-state \
+         ingest is allocating",
+        s.pool.misses,
+        in_flight_ceiling
+    );
+    assert!(
+        s.chunks_dispatched > 4 * in_flight_ceiling,
+        "workload too small to exercise recycling: {} chunks",
+        s.chunks_dispatched
+    );
+    assert!(
+        s.pool.hits >= s.chunks_dispatched - s.pool.misses,
+        "hits {} must cover nearly every dispatch ({} chunks, {} misses)",
+        s.pool.hits,
+        s.chunks_dispatched,
+        s.pool.misses
+    );
+    assert!(s.pool.recycled_bytes > 0);
+    // router-side RMW amortization: one dispatched-add per chunk, one
+    // ingested-add per batch — far below one per edge
+    assert!(s.chunks_dispatched < g.m() as u64 / 4);
+
+    // pool recycling must not lose or duplicate a chunk: every pushed
+    // edge is processed exactly once and the final partition is the
+    // batch coordinator's
+    let res = svc.finish();
+    assert_eq!(res.edges_ingested, g.m() as u64);
+    assert_eq!(res.snapshot.edges(), g.m() as u64);
+    assert_eq!(res.state().total_volume(), 2 * g.m() as u64);
+    let par = run_parallel(g.n(), &g.edges.edges, &ParallelConfig::new(shards, 64));
+    assert_eq!(res.snapshot.labels_padded(g.n()), par.labels());
+}
+
+#[test]
+fn pool_counters_flow_through_stats_endpoint() {
+    // hits + misses covers every checkout (initial pending buffers +
+    // one per dispatch), and recycled bytes only ever grow
+    let g = sbm::generate(&SbmConfig::equal(6, 30, 0.4, 0.01, 212));
+    let mut cfg = ServiceConfig::new(3, 64);
+    cfg.chunk_size = 16;
+    let mut svc = ClusterService::start(cfg);
+    let handle = svc.handle();
+    let before = handle.stats();
+    svc.push_chunk(&g.edges.edges);
+    svc.quiesce();
+    let after = handle.stats();
+    assert_eq!(
+        after.pool.hits + after.pool.misses,
+        // 3 initial pending checkouts + one replacement per dispatch
+        3 + after.chunks_dispatched,
+        "every checkout must be a hit or a miss"
+    );
+    assert!(after.pool.recycled_bytes >= before.pool.recycled_bytes);
+    assert!(after.chunks_dispatched > before.chunks_dispatched);
+    svc.finish();
 }
 
 #[test]
