@@ -69,6 +69,12 @@ COMMANDS:
                                     the log head become final and their storage is freed,
                                     bounding memory (0 = unbounded, exact batch parity)
                --pace <e/s>         throttle ingest, edges/s (0 = full speed)
+               --wal-dir <dir>      durability: append every edge to a per-shard
+                                    write-ahead log under <dir> and checkpoint at
+                                    epoch commits (off by default)
+               --resume             recover from the latest checkpoint + WAL
+                                    suffix in --wal-dir, then skip the already-
+                                    ingested prefix of the workload
                queries: '? <node>' community, 'top <k>' largest, 'stats', 'q'
                --dynamic            legacy event mode ('+ u v' insert,
                                     '- u v' delete, '?' report on stdin)
@@ -366,7 +372,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     // normalises it at start-up (covered by the CLI test-suite)
     config.horizon =
         CommitHorizon::Edges(args.u64_or("horizon", 0).map_err(|e| e.to_string())?);
-    let mut service = ClusterService::start(config);
+    if let Some(dir) = args.get("wal-dir") {
+        config.wal_dir = Some(std::path::PathBuf::from(dir));
+    }
+    let resume = args.flag("resume");
+    let mut service = if resume {
+        ClusterService::resume(config).map_err(|e| format!("resume: {e}"))?
+    } else {
+        ClusterService::start(config)
+    };
     let queries = service.handle();
     println!(
         "serve: streaming {} (n={} m={}) across {shards} shards (v_max={v_max})",
@@ -374,6 +388,17 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         g.n(),
         g.m()
     );
+    // a resumed service already holds a prefix of the stream — skip it
+    let skip = if resume {
+        let s = queries.stats();
+        println!(
+            "resume: recovered to t={} edges (checkpoint epoch {}, {} WAL edges replayed)",
+            s.edges_ingested, s.recovered_epochs, s.wal_recovered_edges
+        );
+        s.edges_ingested as usize
+    } else {
+        0
+    };
     println!("queries on stdin: '? <node>' community, 'top <k>' largest, 'stats', 'q' quit");
 
     // ingest runs in the background; this thread answers queries.
@@ -382,8 +407,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     let stop_ingest = std::sync::Arc::clone(&stop);
     let edges = std::mem::take(&mut g.edges.edges);
+    let skip = skip.min(edges.len());
     let ingest = std::thread::spawn(move || {
-        'stream: for chunk in edges.chunks(8_192) {
+        'stream: for chunk in edges[skip..].chunks(8_192) {
             if stop_ingest.load(std::sync::atomic::Ordering::Relaxed) {
                 break;
             }
@@ -468,7 +494,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                      x-log retained={} committed={} freed={} \
                      per-leader r/c/f=[{}] \
                      chunks={} pool hit/miss={}/{} recycled={} \
-                     queues={:?} peaks={:?} sketch={} B ({:.1} B/node)",
+                     queues={:?} peaks={:?} sketch={} B ({:.1} B/node) \
+                     wal={} ckpts={} ckpt_epoch={} recovered_epochs={} wal_replayed={}",
                     s.shards,
                     s.leaders,
                     s.edges_ingested,
@@ -493,6 +520,11 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                     s.queue_peaks,
                     s.memory_bytes,
                     s.bytes_per_node(),
+                    memory::fmt_bytes(s.wal_bytes),
+                    s.checkpoints_written,
+                    s.last_checkpoint_epoch,
+                    s.recovered_epochs,
+                    s.wal_recovered_edges,
                 );
             }
             ["q"] | ["quit"] => {
@@ -531,6 +563,17 @@ fn cmd_serve_dynamic(args: &Args) -> Result<(), String> {
     use std::io::BufRead;
     let v_max = args.u64_or("vmax", 64).map_err(|e| e.to_string())?;
     let mut d = DynamicClusterer::new(0, StrConfig::new(v_max));
+    // consecutive inserts batch through the same chunk spine the
+    // sharded service routes to (`insert_batch` → `process_chunk`);
+    // the pending run flushes before anything that reads or mutates
+    // the sketch, so event semantics are unchanged
+    let mut pending: Vec<Edge> = Vec::new();
+    fn drain(d: &mut DynamicClusterer, pending: &mut Vec<Edge>) {
+        if !pending.is_empty() {
+            d.insert_batch(pending);
+            pending.clear();
+        }
+    }
     let stdin = std::io::stdin();
     println!("streamcom serve: '+ u v' insert, '- u v' delete, '?' report, 'q' quit");
     for line in stdin.lock().lines() {
@@ -539,15 +582,17 @@ fn cmd_serve_dynamic(args: &Args) -> Result<(), String> {
         match toks.as_slice() {
             ["+", u, v] => {
                 let (u, v) = parse_pair(u, v)?;
-                let _ = d.apply(Event::Insert(Edge::new(u, v)));
+                pending.push(Edge::new(u, v));
             }
             ["-", u, v] => {
                 let (u, v) = parse_pair(u, v)?;
+                drain(&mut d, &mut pending);
                 if d.apply(Event::Delete(Edge::new(u, v))).is_err() {
                     println!("! unknown edge {u} {v}");
                 }
             }
             ["?"] => {
+                drain(&mut d, &mut pending);
                 let labels = d.labels();
                 let ncomm = metrics::labels_to_communities(&labels).len();
                 println!(
@@ -561,6 +606,7 @@ fn cmd_serve_dynamic(args: &Args) -> Result<(), String> {
             _ => println!("! parse error: {line:?}"),
         }
     }
+    drain(&mut d, &mut pending);
     println!("bye: {} nodes, {} live edges", d.state().n(), d.live_edges());
     Ok(())
 }

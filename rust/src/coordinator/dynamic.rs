@@ -120,6 +120,19 @@ impl DynamicClusterer {
         Ok(())
     }
 
+    /// Insert a batch of edges through the same chunk-processing spine
+    /// the sharded service's router dispatches to
+    /// (`StreamingClusterer::process_chunk`): one pre-grow pass over
+    /// the batch, then the exact per-edge algorithm. Equivalent to
+    /// applying [`Event::Insert`] per edge — inserts never fail — but
+    /// amortizes the growth checks, which is what lets the CLI's event
+    /// mode batch consecutive inserts (parity-tested against the batch
+    /// path on the golden streams).
+    pub fn insert_batch(&mut self, edges: &[Edge]) {
+        self.inner.process_chunk(edges);
+        self.inserts += edges.iter().filter(|e| !e.is_self_loop()).count() as u64;
+    }
+
     /// Apply a batch of events, counting failures.
     pub fn apply_all(&mut self, events: &[Event]) -> u64 {
         let mut failures = 0;
@@ -202,6 +215,29 @@ mod tests {
             }
             assert_eq!(d.state().total_volume(), 2 * d.live_edges());
         }
+    }
+
+    #[test]
+    fn insert_batch_matches_per_event_inserts() {
+        // the batched insert path must be the per-event path, exactly —
+        // same sketch, same counters (self-loops skipped by both)
+        let edges = [
+            Edge::new(0, 1),
+            Edge::new(1, 2),
+            Edge::new(2, 2),
+            Edge::new(0, 2),
+            Edge::new(3, 4),
+        ];
+        let mut batched = DynamicClusterer::new(0, StrConfig::new(8));
+        batched.insert_batch(&edges);
+        let mut single = DynamicClusterer::new(0, StrConfig::new(8));
+        for &e in &edges {
+            single.apply(Event::Insert(e)).unwrap();
+        }
+        assert_eq!(batched.inserts, single.inserts);
+        assert_eq!(batched.live_edges(), 4);
+        assert_eq!(batched.labels(), single.labels());
+        assert_eq!(batched.state().total_volume(), single.state().total_volume());
     }
 
     #[test]

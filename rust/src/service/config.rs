@@ -7,7 +7,10 @@
 //! a drain interval short enough that mid-stream answers lag the stream
 //! by well under a second.
 
+use std::path::PathBuf;
+
 use crate::coordinator::algorithm::StrConfig;
+use crate::service::wal::FailPoint;
 
 /// Finality policy for the service's epoch-structured cross-edge log
 /// (`service::crosslog`).
@@ -103,6 +106,22 @@ pub struct ServiceConfig {
     /// head a drained epoch may fall before its decisions are committed
     /// and its edge storage freed. See [`CommitHorizon`].
     pub horizon: CommitHorizon,
+    /// Durability directory. `None` — the default — keeps the service
+    /// purely in memory, bit-identical to every pre-durability
+    /// behaviour. `Some(dir)` appends every ingested edge to a
+    /// per-shard write-ahead log under `dir` before dispatch, writes an
+    /// epoch-aligned checkpoint whenever the cross log commits an epoch
+    /// at a quiesced cut, and lets `ClusterService::resume` restart
+    /// from the latest checkpoint plus the WAL suffix past it.
+    pub wal_dir: Option<PathBuf>,
+    /// Records per WAL segment file. Whole segments below a checkpoint
+    /// cut are deleted, so smaller segments reclaim disk sooner at the
+    /// cost of more files (clamped to ≥ 1 at start-up).
+    pub wal_segment_records: u64,
+    /// Crash-injection hook for the recovery harness; the default is
+    /// never armed and costs one atomic load per durable write. Clones
+    /// of the config share the hook.
+    pub failpoint: FailPoint,
 }
 
 impl ServiceConfig {
@@ -117,6 +136,9 @@ impl ServiceConfig {
             chunk_size: 4_096,
             drain_every: 262_144,
             horizon: CommitHorizon::Unbounded,
+            wal_dir: None,
+            wal_segment_records: 65_536,
+            failpoint: FailPoint::default(),
         }
     }
 

@@ -133,6 +133,47 @@ impl Epoch {
     }
 }
 
+/// One retained epoch flattened for checkpointing — edges and frozen
+/// decision slices verbatim, so recovery never has to reconstruct the
+/// replay order of partially drained epochs.
+#[derive(Debug, Clone)]
+pub(crate) struct EpochExport {
+    /// Global index of the epoch's first edge.
+    pub start: u64,
+    /// Whether the epoch was sealed.
+    pub sealed: bool,
+    /// The epoch's edges, in arrival order.
+    pub edges: Vec<Edge>,
+    /// Frozen decisions per leader partition, each in replay order.
+    pub frozen: Vec<Vec<FrozenDecision>>,
+}
+
+/// The cross log's durable image for checkpointing: every counter plus
+/// the retained (uncommitted) epochs verbatim.
+#[derive(Debug, Clone)]
+pub(crate) struct CrossLogExport {
+    /// Global index of the first retained edge.
+    pub committed: u64,
+    /// Total cross edges ever appended (the log head).
+    pub appended: u64,
+    /// Epochs sealed so far.
+    pub epochs_sealed: u64,
+    /// Epochs committed (and freed) so far.
+    pub epochs_committed: u64,
+    /// Bytes released by committed epochs.
+    pub freed_bytes: u64,
+    /// Edges ever appended, per leader partition.
+    pub appended_per_leader: Vec<u64>,
+    /// Edges committed, per leader partition.
+    pub committed_per_leader: Vec<u64>,
+    /// Frozen records currently resident, per leader partition.
+    pub frozen_retained_per_leader: Vec<u64>,
+    /// Bytes released by commits, per leader partition.
+    pub freed_bytes_per_leader: Vec<u64>,
+    /// Retained epochs, oldest first (the last one is the open epoch).
+    pub epochs: Vec<EpochExport>,
+}
+
 /// The log: a deque of epochs (committed ones are gone, the last one is
 /// open) plus the commit cursor and byte accounting — global and per
 /// leader partition. Lives in the service's shared state behind a
@@ -383,6 +424,63 @@ impl CrossLog {
     pub(crate) fn epochs_committed(&self) -> u64 {
         self.epochs_committed
     }
+
+    /// Flatten the whole log — counters and retained epochs verbatim —
+    /// for checkpointing.
+    pub(crate) fn export(&self) -> CrossLogExport {
+        CrossLogExport {
+            committed: self.committed,
+            appended: self.appended,
+            epochs_sealed: self.epochs_sealed,
+            epochs_committed: self.epochs_committed,
+            freed_bytes: self.freed_bytes,
+            appended_per_leader: self.appended_per_leader.clone(),
+            committed_per_leader: self.committed_per_leader.clone(),
+            frozen_retained_per_leader: self.frozen_retained_per_leader.clone(),
+            freed_bytes_per_leader: self.freed_bytes_per_leader.clone(),
+            epochs: self
+                .epochs
+                .iter()
+                .map(|ep| EpochExport {
+                    start: ep.start,
+                    sealed: ep.sealed,
+                    edges: ep.edges.clone(),
+                    frozen: ep.frozen.clone(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Rebuild a log from a checkpoint image. The deque invariant —
+    /// it always ends with an open epoch — is restored even from an
+    /// image whose last epoch was sealed on an exact boundary.
+    pub(crate) fn resume(horizon: CommitHorizon, leaders: usize, e: CrossLogExport) -> Self {
+        let mut log = Self::new(horizon, leaders);
+        log.committed = e.committed;
+        log.appended = e.appended;
+        log.epochs_sealed = e.epochs_sealed;
+        log.epochs_committed = e.epochs_committed;
+        log.freed_bytes = e.freed_bytes;
+        log.appended_per_leader = e.appended_per_leader;
+        log.committed_per_leader = e.committed_per_leader;
+        log.frozen_retained_per_leader = e.frozen_retained_per_leader;
+        log.freed_bytes_per_leader = e.freed_bytes_per_leader;
+        log.epochs.clear();
+        for ep in e.epochs {
+            let mut epoch = Epoch::new(ep.start, log.leaders);
+            epoch.sealed = ep.sealed;
+            epoch.edges = ep.edges;
+            epoch.frozen_count = ep.frozen.iter().map(Vec::len).sum();
+            epoch.frozen = ep.frozen;
+            log.epochs.push_back(epoch);
+        }
+        if log.epochs.back().map(|ep| ep.sealed).unwrap_or(true) {
+            let head = log.appended;
+            let leaders = log.leaders;
+            log.epochs.push_back(Epoch::new(head, leaders));
+        }
+        log
+    }
 }
 
 #[cfg(test)]
@@ -534,6 +632,41 @@ mod tests {
         assert_eq!(
             log.freed_bytes_per_leader().iter().sum::<u64>(),
             log.freed_bytes()
+        );
+    }
+
+    #[test]
+    fn export_resume_roundtrips_counters_epochs_and_suffixes() {
+        let horizon = CommitHorizon::Edges(8); // epoch_len 2
+        let mut log = CrossLog::new(horizon, 2);
+        log.append(&mut edges(0..2));
+        let frozen: Vec<FrozenDecision> = (0..2).flat_map(|i| [(i, 9), (i + 1, 9)]).collect();
+        log.record_frozen(0, &frozen);
+        log.append(&mut edges(2..13)); // head far past [0,2)
+        let tail: Vec<FrozenDecision> = (2..13).flat_map(|i| [(i, 9), (i + 1, 9)]).collect();
+        log.record_frozen(2, &tail);
+        assert!(!log.take_committable(13).is_empty());
+
+        let back = CrossLog::resume(horizon, 2, log.export());
+        assert_eq!(back.appended(), log.appended());
+        assert_eq!(back.committed_edges(), log.committed_edges());
+        assert_eq!(back.retained_edges(), log.retained_edges());
+        assert_eq!(back.retained_bytes(), log.retained_bytes());
+        assert_eq!(back.freed_bytes(), log.freed_bytes());
+        assert_eq!(back.epochs_sealed(), log.epochs_sealed());
+        assert_eq!(back.epochs_committed(), log.epochs_committed());
+        assert_eq!(
+            back.retained_bytes_per_leader(),
+            log.retained_bytes_per_leader()
+        );
+        assert_eq!(back.freed_bytes_per_leader(), log.freed_bytes_per_leader());
+        assert_eq!(
+            back.suffix_from(back.committed_edges()),
+            log.suffix_from(log.committed_edges())
+        );
+        assert!(
+            !back.epochs.back().expect("open epoch").sealed,
+            "resume must leave an open epoch at the tail"
         );
     }
 

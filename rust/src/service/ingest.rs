@@ -55,17 +55,19 @@ use crate::coordinator::algorithm::StreamingClusterer;
 use crate::coordinator::state::StreamState;
 use crate::graph::edge::Edge;
 use crate::stream::meter::Meter;
+use crate::stream::shard::{Route, Sharder};
 use crate::stream::source::EdgeSource;
 use crate::util::channel::Channel;
 
 use super::bufpool::BufPool;
-use super::config::ServiceConfig;
+use super::config::{CommitHorizon, ServiceConfig};
 use super::crosslog::{
     CrossLog, BYTES_PER_EDGE, BYTES_PER_FROZEN_ENTRY, EPOCH_COMMIT_HEADER_BYTES,
 };
 use super::query::QueryHandle;
 use super::router::Router;
 use super::snapshot::{merge_committed_bases, CommittedBase, LeaderShard, Merger, Snapshot};
+use super::wal::{self, CheckpointData, WalError, WalSet};
 
 /// State shared between the router, the shard workers, and every
 /// [`QueryHandle`].
@@ -112,6 +114,21 @@ pub(crate) struct Shared {
     pub(crate) delta_last_bytes: AtomicU64,
     /// Σ delta payload across all drains.
     pub(crate) delta_total_bytes: AtomicU64,
+    /// Bytes appended to the write-ahead log by this process (0 when
+    /// durability is off; published by the router after each batch).
+    pub(crate) wal_bytes: AtomicU64,
+    /// Checkpoints successfully written by this process.
+    pub(crate) checkpoints_written: AtomicU64,
+    /// Cross-log epochs covered by the latest durable checkpoint — the
+    /// checkpoint trigger fires when the live commit count passes it.
+    pub(crate) last_checkpoint_epoch: AtomicU64,
+    /// Epochs already committed in the checkpoint this service resumed
+    /// from (0 for a fresh start — proves recovery started from the
+    /// checkpoint, not from an empty service).
+    pub(crate) recovered_epochs: AtomicU64,
+    /// WAL records replayed past the checkpoint cut during resume —
+    /// proves recovery replayed only the suffix.
+    pub(crate) wal_recovered_edges: AtomicU64,
     /// Set by `finish`: the published snapshot is the terminal replay
     /// and must never be overwritten by a late mid-stream drain.
     pub(crate) finished: AtomicBool,
@@ -283,52 +300,227 @@ pub struct ClusterService {
     router: Router,
 }
 
+/// Clamp and resolve the configuration conventions shared by every way
+/// a service comes up (`start` and `resume` must agree on these, or a
+/// resumed service would checkpoint under a different fingerprint than
+/// it validated).
+fn normalize(mut config: ServiceConfig) -> ServiceConfig {
+    config.shards = config.shards.max(1);
+    config.mailbox_depth = config.mailbox_depth.max(1);
+    config.chunk_size = config.chunk_size.max(1);
+    config.wal_segment_records = config.wal_segment_records.max(1);
+    if config.drain_every == 0 {
+        // match the CLI's "0 = disabled" convention — a drain after
+        // every edge would collapse throughput
+        config.drain_every = u64::MAX;
+    }
+    config.horizon = config.horizon.normalized();
+    // 0 = one leader partition per shard worker, so each worker's
+    // node range owns exactly its slice of the committed base
+    if config.leaders == 0 {
+        config.leaders = config.shards;
+    }
+    config
+}
+
 impl ClusterService {
     /// Spawn the shard workers and return the router handle.
+    ///
+    /// With `config.wal_dir` set this **begins a fresh durable
+    /// stream**: previous WAL segments and checkpoints under the
+    /// directory are removed. Use [`resume`](Self::resume) to continue
+    /// an interrupted stream instead.
     pub fn start(config: ServiceConfig) -> Self {
-        let mut config = config;
-        config.shards = config.shards.max(1);
-        config.mailbox_depth = config.mailbox_depth.max(1);
-        config.chunk_size = config.chunk_size.max(1);
-        if config.drain_every == 0 {
-            // match the CLI's "0 = disabled" convention — a drain after
-            // every edge would collapse throughput
-            config.drain_every = u64::MAX;
+        let config = normalize(config);
+        if let Some(dir) = config.wal_dir.as_deref() {
+            wal::init_fresh(dir).expect("initialise WAL directory");
         }
-        config.horizon = config.horizon.normalized();
-        // 0 = one leader partition per shard worker, so each worker's
-        // node range owns exactly its slice of the committed base
-        if config.leaders == 0 {
-            config.leaders = config.shards;
+        let states = (0..config.shards)
+            .map(|_| StreamingClusterer::new(0, config.str_config.clone()))
+            .collect();
+        let crosslog = CrossLog::new(config.horizon, config.leaders);
+        let leaders = (0..config.leaders)
+            .map(|l| LeaderShard::new(l, config.leaders))
+            .collect();
+        Self::boot(config, states, crosslog, Merger::new(), leaders, 0, 0)
+            .expect("open write-ahead log")
+    }
+
+    /// Resume an interrupted durable stream from `config.wal_dir`: load
+    /// the latest checkpoint (none ⇒ an empty service), validate its
+    /// configuration fingerprint, replay the WAL suffix past its cut —
+    /// truncated to the longest contiguous durable prefix, with any
+    /// torn trailing fragment dropped — and come up ready to ingest the
+    /// rest of the stream. `ServiceStats::edges_ingested` then reports
+    /// the recovered stream position, i.e. how many leading edges of
+    /// the stream the caller should skip.
+    ///
+    /// Only the post-checkpoint suffix is re-ingested
+    /// (`ServiceStats::wal_recovered_edges` counts it;
+    /// `recovered_epochs` proves the committed history came from the
+    /// checkpoint). Under [`CommitHorizon::Unbounded`] no epoch ever
+    /// commits, so no checkpoint is ever written and recovery replays
+    /// the whole WAL — exactness without bounds; a bounded horizon
+    /// keeps both the log and the replay bounded. Resume-exactness
+    /// caveat: a `TieBreak::Random` configuration reseeds its RNG here,
+    /// so recovered runs are only bit-identical under deterministic
+    /// tie-breaking (the default).
+    pub fn resume(config: ServiceConfig) -> Result<Self, WalError> {
+        let config = normalize(config);
+        let Some(dir) = config.wal_dir.clone() else {
+            return Err(WalError::Mismatch {
+                detail: "resume requires a WAL directory (config.wal_dir)".to_string(),
+            });
+        };
+        let horizon_edges = match config.horizon {
+            CommitHorizon::Unbounded => 0,
+            CommitHorizon::Edges(h) => h,
+        };
+        let (mut states, mut crosslog, merger, leaders, cut, recovered_epochs) =
+            match wal::read_checkpoint(&dir)? {
+                Some(c) => {
+                    if c.shards as usize != config.shards
+                        || c.leaders as usize != config.leaders
+                        || c.v_max != config.str_config.v_max
+                        || c.horizon != horizon_edges
+                    {
+                        return Err(WalError::Mismatch {
+                            detail: format!(
+                                "checkpoint written under shards={} leaders={} v_max={} \
+                                 horizon={}, resume asked for shards={} leaders={} v_max={} \
+                                 horizon={}",
+                                c.shards,
+                                c.leaders,
+                                c.v_max,
+                                c.horizon,
+                                config.shards,
+                                config.leaders,
+                                config.str_config.v_max,
+                                horizon_edges
+                            ),
+                        });
+                    }
+                    let states: Vec<StreamingClusterer> = c
+                        .states
+                        .into_iter()
+                        .map(|st| StreamingClusterer::with_state(st, config.str_config.clone()))
+                        .collect();
+                    let epochs = c.crosslog.epochs_committed;
+                    let crosslog = CrossLog::resume(config.horizon, config.leaders, c.crosslog);
+                    let leaders: Vec<LeaderShard> = c
+                        .bases
+                        .into_iter()
+                        .enumerate()
+                        .map(|(l, b)| {
+                            LeaderShard::restore(l, config.leaders, CommittedBase::from_parts(b))
+                        })
+                        .collect();
+                    (states, crosslog, Merger::resume(c.merger), leaders, c.cut, epochs)
+                }
+                None => {
+                    // no checkpoint ever completed — recover the whole
+                    // stream from the WAL over an empty service
+                    let states = (0..config.shards)
+                        .map(|_| StreamingClusterer::new(0, config.str_config.clone()))
+                        .collect();
+                    let leaders = (0..config.leaders)
+                        .map(|l| LeaderShard::new(l, config.leaders))
+                        .collect();
+                    let crosslog = CrossLog::new(config.horizon, config.leaders);
+                    (states, crosslog, Merger::new(), leaders, 0, 0)
+                }
+            };
+
+        // the durable suffix: everything contiguously logged past the
+        // cut; the files are truncated there so post-resume appends
+        // (restarting at the prefix) can never duplicate a sequence
+        let files = wal::scan_dir(&dir)?;
+        let prefix = wal::durable_prefix(&files, cut);
+        wal::truncate_beyond(&files, prefix)?;
+        let suffix = wal::suffix(&files, cut, prefix);
+        let recovered_edges = suffix.len() as u64;
+
+        // replay before any worker exists, routing exactly as the
+        // router would have: per-shard order and cross arrival order
+        // are reproduced, and epoch sealing is count-based, so one
+        // bulk append recreates the same epoch structure
+        let sharder = Sharder::new(config.shards);
+        let mut cross: Vec<Edge> = Vec::new();
+        for rec in &suffix {
+            match sharder.route(rec.edge) {
+                Route::Local(w) => {
+                    states[w].process_chunk(std::slice::from_ref(&rec.edge));
+                }
+                Route::Cross => cross.push(rec.edge),
+            }
         }
+        if !cross.is_empty() {
+            crosslog.append(&mut cross);
+        }
+
+        let svc = Self::boot(
+            config,
+            states,
+            crosslog,
+            merger,
+            leaders,
+            prefix,
+            recovered_edges,
+        )?;
+        svc.shared
+            .recovered_epochs
+            .store(recovered_epochs, Ordering::SeqCst);
+        Ok(svc)
+    }
+
+    /// Shared bring-up for `start` and `resume`: wrap the (fresh or
+    /// restored) components in `Shared`, spawn the shard workers, and
+    /// open the WAL writers at stream position `ingested`. `config`
+    /// must already be normalized.
+    fn boot(
+        config: ServiceConfig,
+        states: Vec<StreamingClusterer>,
+        crosslog: CrossLog,
+        merger: Merger,
+        leaders: Vec<LeaderShard>,
+        ingested: u64,
+        recovered_edges: u64,
+    ) -> Result<Self, WalError> {
         let shards = config.shards;
         // per shard, at most: the pending buffer, `mailbox_depth`
         // queued chunks, and one in the worker's hands — the pool never
         // needs to shelve more than can circulate
         let pool_cap = shards * (config.mailbox_depth + 2);
+        // every recovered edge is either in a shard state or in the
+        // cross log, so the local done-count is derivable — it must be,
+        // for later quiesced-cut checks (`dispatched + cross appended
+        // == ingested`) to keep holding
+        let local_done = ingested - crosslog.appended();
+        let checkpoint_epoch = crosslog.epochs_committed();
 
         let shared = Arc::new(Shared {
             mailboxes: (0..shards)
                 .map(|_| Channel::bounded(config.mailbox_depth))
                 .collect(),
             bufpool: BufPool::new(pool_cap),
-            states: (0..shards)
-                .map(|_| Mutex::new(StreamingClusterer::new(0, config.str_config.clone())))
-                .collect(),
-            crosslog: Mutex::new(CrossLog::new(config.horizon, config.leaders)),
-            merger: Mutex::new(Merger::new()),
-            leaders: (0..config.leaders)
-                .map(|l| Mutex::new(LeaderShard::new(l, config.leaders)))
-                .collect(),
-            ingested: AtomicU64::new(0),
-            dispatched: AtomicU64::new(0),
-            processed: AtomicU64::new(0),
+            states: states.into_iter().map(Mutex::new).collect(),
+            crosslog: Mutex::new(crosslog),
+            merger: Mutex::new(merger),
+            leaders: leaders.into_iter().map(Mutex::new).collect(),
+            ingested: AtomicU64::new(ingested),
+            dispatched: AtomicU64::new(local_done),
+            processed: AtomicU64::new(local_done),
             drains: AtomicU64::new(0),
             replayed_last: AtomicU64::new(0),
             replayed_total: AtomicU64::new(0),
             cross_drained: AtomicU64::new(0),
             delta_last_bytes: AtomicU64::new(0),
             delta_total_bytes: AtomicU64::new(0),
+            wal_bytes: AtomicU64::new(0),
+            checkpoints_written: AtomicU64::new(0),
+            last_checkpoint_epoch: AtomicU64::new(checkpoint_epoch),
+            recovered_epochs: AtomicU64::new(0),
+            wal_recovered_edges: AtomicU64::new(recovered_edges),
             finished: AtomicBool::new(false),
             snapshot: RwLock::new(Arc::new(Snapshot::empty())),
             meter: Mutex::new(Meter::start()),
@@ -345,8 +537,18 @@ impl ClusterService {
             })
             .collect();
 
-        let router = Router::new(Arc::clone(&shared));
-        Self { shared, workers, router }
+        let wal = match shared.config.wal_dir.as_deref() {
+            Some(dir) => Some(WalSet::open(
+                dir,
+                shards,
+                shared.config.wal_segment_records,
+                shared.config.failpoint.clone(),
+                ingested,
+            )?),
+            None => None,
+        };
+        let router = Router::new(Arc::clone(&shared), wal);
+        Ok(Self { shared, workers, router })
     }
 
     /// A cloneable query handle sharing this service's state. Handles
@@ -400,7 +602,15 @@ impl ClusterService {
     /// waiting for the workers to drain their mailboxes — the snapshot
     /// covers whatever they have processed so far, plus all buffered
     /// cross edges).
+    ///
+    /// With durability on (`config.wal_dir` set) this upgrades to a
+    /// full [`quiesce`](Self::quiesce): checkpoints need quiesced cuts
+    /// — a stream position where nothing is in flight — so every drain
+    /// point becomes a checkpoint opportunity.
     pub fn refresh(&mut self) -> Arc<Snapshot> {
+        if self.shared.config.wal_dir.is_some() {
+            return self.quiesce();
+        }
         self.flush();
         self.router.reset_drain_clock();
         rebuild_snapshot(&self.shared)
@@ -431,7 +641,98 @@ impl ClusterService {
             }
         }
         self.router.reset_drain_clock();
-        rebuild_snapshot(&self.shared)
+        let snap = rebuild_snapshot(&self.shared);
+        self.maybe_checkpoint();
+        snap
+    }
+
+    /// Write an epoch-aligned checkpoint if one is due: durability on,
+    /// nothing in flight (the workers have processed every dispatched
+    /// edge, so `ingested` is a consistent cut), and the cross log has
+    /// committed at least one epoch since the last checkpoint. Called
+    /// from every quiesced drain. Under `CommitHorizon::Unbounded`
+    /// epochs never commit, so this never fires — recovery then
+    /// replays the whole WAL, trading recovery time for exactness.
+    fn maybe_checkpoint(&mut self) {
+        let Some(dir) = self.shared.config.wal_dir.clone() else {
+            return;
+        };
+        let ingested = self.shared.ingested.load(Ordering::SeqCst);
+        let dispatched = self.shared.dispatched.load(Ordering::SeqCst);
+        let processed = self.shared.processed.load(Ordering::SeqCst);
+        let (appended, epochs_committed) = {
+            let log = self.shared.crosslog.lock().unwrap();
+            (log.appended(), log.epochs_committed())
+        };
+        // a valid cut: every ingested edge is either fully processed by
+        // its shard worker or resident in the cross log
+        if dispatched != processed || dispatched + appended != ingested {
+            return;
+        }
+        if epochs_committed <= self.shared.last_checkpoint_epoch.load(Ordering::SeqCst) {
+            return;
+        }
+        // durability barrier: the checkpoint claims edges [0, cut) are
+        // on disk, so the log must be fsynced up to the cut first
+        self.router.wal_sync();
+        let data = {
+            // hold the merger lock across the whole export so a racing
+            // handle-driven drain cannot commit epochs between the
+            // pieces (lock order merger → crosslog → leaders)
+            let merger = self.shared.merger.lock().unwrap();
+            let states: Vec<StreamState> = self
+                .shared
+                .states
+                .iter()
+                .map(|m| m.lock().unwrap().state.clone())
+                .collect();
+            let (crosslog, epoch_len) = {
+                let log = self.shared.crosslog.lock().unwrap();
+                (log.export(), log.epoch_len())
+            };
+            let bases = self
+                .shared
+                .leaders
+                .iter()
+                .map(|l| l.lock().unwrap().base().export())
+                .collect();
+            let cfg = &self.shared.config;
+            CheckpointData {
+                shards: cfg.shards as u32,
+                leaders: cfg.leaders as u32,
+                v_max: cfg.str_config.v_max,
+                horizon: match cfg.horizon {
+                    CommitHorizon::Unbounded => 0,
+                    CommitHorizon::Edges(h) => h,
+                },
+                epoch_len,
+                cut: ingested,
+                states,
+                merger: merger.export(),
+                crosslog,
+                bases,
+            }
+        };
+        let covered = data.crosslog.epochs_committed;
+        match wal::write_checkpoint(&dir, &data, &self.shared.config.failpoint) {
+            Ok(true) => {
+                self.shared.checkpoints_written.fetch_add(1, Ordering::SeqCst);
+                self.shared
+                    .last_checkpoint_epoch
+                    .store(covered, Ordering::SeqCst);
+                // whole segments below the cut are now redundant
+                if let Err(e) = wal::truncate_segments(&dir, data.cut) {
+                    eprintln!("wal: segment gc failed: {e}");
+                }
+            }
+            // simulated (or real, already-reported) disk death — keep
+            // serving from memory, like every other durable write
+            Ok(false) => {}
+            Err(e) => {
+                eprintln!("wal: disabling durability after checkpoint error: {e}");
+                self.shared.config.failpoint.kill();
+            }
+        }
     }
 
     /// End of stream: flush, close the mailboxes, join the workers, and
@@ -447,6 +748,9 @@ impl ClusterService {
     /// `CommitHorizon::Edges(h)` the freed history stays final instead.
     pub fn finish(mut self) -> ServiceResult {
         self.router.flush();
+        // make the full stream durable before tearing down — a resume
+        // after a clean finish replays to the exact end of stream
+        self.router.wal_sync();
         for mb in &self.shared.mailboxes {
             mb.close();
         }

@@ -38,8 +38,13 @@
 //!   occupancy — global and per leader partition — memory per node).
 //! * [`config`] — [`ServiceConfig`] knobs (shards, leader partitions,
 //!   `v_max`, mailbox depth, chunk size, drain cadence,
-//!   [`CommitHorizon`]) plus the [`batch`](ServiceConfig::batch)
-//!   preset.
+//!   [`CommitHorizon`], WAL directory) plus the
+//!   [`batch`](ServiceConfig::batch) preset.
+//! * [`wal`] — the durability layer: per-shard write-ahead logs of
+//!   fixed-width checksummed records plus epoch-aligned checkpoints
+//!   written at quiesced cuts, so a crashed service resumes from the
+//!   latest checkpoint and replays only the WAL suffix past it. Off by
+//!   default (`wal_dir: None`) — the in-memory path is untouched.
 //!
 //! With the default [`CommitHorizon::Unbounded`], the final partition
 //! after [`ClusterService::finish`] is **bit-identical** to
@@ -77,6 +82,7 @@ pub mod ingest;
 pub mod query;
 pub mod router;
 pub mod snapshot;
+pub mod wal;
 
 pub use bufpool::PoolStats;
 pub use config::{CommitHorizon, ServiceConfig};
@@ -84,3 +90,4 @@ pub use ingest::{ClusterService, ServiceResult};
 pub use query::{LeaderStats, QueryHandle, ServiceStats};
 pub use router::merge_disjoint_states;
 pub use snapshot::{CommunitySummary, Snapshot};
+pub use wal::{CrashPoint, FailPoint, WalError};

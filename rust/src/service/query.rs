@@ -128,6 +128,25 @@ pub struct ServiceStats {
     /// shows up as `misses` frozen at its warm-up value while `hits`
     /// keeps growing (asserted by the service integration suite).
     pub pool: PoolStats,
+    /// Bytes appended to the write-ahead log by this process (0 when
+    /// durability is off). After a resume this restarts at 0 — it
+    /// measures what *this* process wrote, which together with
+    /// `wal_recovered_edges` proves recovery did not re-log the
+    /// checkpointed prefix.
+    pub wal_bytes: u64,
+    /// Checkpoints written by this process (epoch-aligned, at quiesced
+    /// cuts; 0 under `CommitHorizon::Unbounded`, where no epoch ever
+    /// commits).
+    pub checkpoints_written: u64,
+    /// Cross-log epochs covered by the latest durable checkpoint.
+    pub last_checkpoint_epoch: u64,
+    /// Epochs already committed in the checkpoint this service resumed
+    /// from (0 for a fresh start) — proves recovery adopted the
+    /// checkpointed history instead of recomputing it.
+    pub recovered_epochs: u64,
+    /// WAL records replayed past the checkpoint cut during resume —
+    /// proves recovery replayed only the suffix, not the full stream.
+    pub wal_recovered_edges: u64,
     /// Edges covered by the currently-published snapshot (query lag =
     /// `edges_ingested - snapshot_edges`).
     pub snapshot_edges: u64,
@@ -267,6 +286,11 @@ impl QueryHandle {
             queue_peaks,
             chunks_dispatched,
             pool: self.shared.bufpool.stats(),
+            wal_bytes: self.shared.wal_bytes.load(Ordering::Relaxed),
+            checkpoints_written: self.shared.checkpoints_written.load(Ordering::Relaxed),
+            last_checkpoint_epoch: self.shared.last_checkpoint_epoch.load(Ordering::Relaxed),
+            recovered_epochs: self.shared.recovered_epochs.load(Ordering::Relaxed),
+            wal_recovered_edges: self.shared.wal_recovered_edges.load(Ordering::Relaxed),
             snapshot_edges: snap.edges(),
             memory_bytes,
             nodes,
@@ -317,6 +341,12 @@ mod tests {
         // the drain shipped the replayed suffix as its delta payload
         assert!(s.drains >= 1);
         assert_eq!(s.delta_total_bytes, s.cross_replayed_total * 8);
+        // durability off: every WAL/checkpoint counter stays zero
+        assert_eq!(s.wal_bytes, 0);
+        assert_eq!(s.checkpoints_written, 0);
+        assert_eq!(s.last_checkpoint_epoch, 0);
+        assert_eq!(s.recovered_epochs, 0);
+        assert_eq!(s.wal_recovered_edges, 0);
         assert!(s.memory_bytes > 0);
         assert!(s.bytes_per_node() >= 16.0, "{}", s.bytes_per_node());
         assert!(s.uptime.as_nanos() > 0);

@@ -35,6 +35,7 @@ use crate::graph::edge::Edge;
 use crate::stream::shard::{Route, Sharder};
 
 use super::ingest::Shared;
+use super::wal::WalSet;
 
 /// Unreported edges accumulated before the throughput meter's mutex is
 /// taken (once per ~this many edges, or at most once per batch).
@@ -102,10 +103,17 @@ pub(crate) struct Router {
     since_drain: u64,
     /// Edges (local *and* cross) not yet reported to the shared meter.
     unmetered: u64,
+    /// Durability sink: when the service runs with a WAL directory,
+    /// every routed edge is appended here — to the same per-shard /
+    /// cross destination the router chose — **before** it is pushed to
+    /// a pending buffer, so the log is always a superset of what the
+    /// in-memory pipeline has seen. `None` on the default in-memory
+    /// path (zero cost there).
+    wal: Option<WalSet>,
 }
 
 impl Router {
-    pub(crate) fn new(shared: Arc<Shared>) -> Self {
+    pub(crate) fn new(shared: Arc<Shared>, wal: Option<WalSet>) -> Self {
         let shards = shared.config.shards;
         let chunk = shared.config.chunk_size;
         Self {
@@ -114,6 +122,7 @@ impl Router {
             cross_pending: Vec::with_capacity(chunk),
             since_drain: 0,
             unmetered: 0,
+            wal,
             shared,
         }
     }
@@ -145,18 +154,30 @@ impl Router {
         for &e in batch {
             match self.sharder.route(e) {
                 Route::Local(w) => {
+                    if let Some(wal) = self.wal.as_mut() {
+                        wal.append(Some(w), e);
+                    }
                     self.pending[w].push(e);
                     if self.pending[w].len() >= chunk_size {
                         self.dispatch(w);
                     }
                 }
                 Route::Cross => {
+                    if let Some(wal) = self.wal.as_mut() {
+                        wal.append(None, e);
+                    }
                     self.cross_pending.push(e);
                     if self.cross_pending.len() >= chunk_size {
                         self.flush_cross();
                     }
                 }
             }
+        }
+        if let Some(wal) = self.wal.as_mut() {
+            // flush to the OS once per batch (fsync waits for the next
+            // checkpoint); publish the running byte count for stats
+            wal.flush();
+            self.shared.wal_bytes.store(wal.bytes(), Ordering::Relaxed);
         }
         let k = batch.len() as u64;
         self.shared.ingested.fetch_add(k, Ordering::Relaxed);
@@ -223,5 +244,14 @@ impl Router {
         }
         self.flush_cross();
         self.meter_flush();
+    }
+
+    /// Fsync every WAL destination — the durability barrier a
+    /// checkpoint needs before it may claim its cut is on disk. No-op
+    /// on the in-memory path.
+    pub(crate) fn wal_sync(&mut self) {
+        if let Some(wal) = self.wal.as_mut() {
+            wal.sync();
+        }
     }
 }

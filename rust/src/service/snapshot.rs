@@ -104,12 +104,52 @@ pub(crate) struct CommittedBase {
     records: u64,
 }
 
+/// A committed-base slice flattened for checkpointing (field-for-field
+/// image of [`CommittedBase`]).
+#[derive(Debug, Clone)]
+pub(crate) struct BaseExport {
+    /// Per-node committed cross degree.
+    pub degree: Vec<u32>,
+    /// Per-node last committed community (`UNSEEN` = untouched).
+    pub community: Vec<u32>,
+    /// Committed endpoint records folded in.
+    pub records: u64,
+}
+
+/// The merger's durable image for checkpointing: the fold arrays plus
+/// both drain cursors.
+#[derive(Debug, Clone)]
+pub(crate) struct MergerExport {
+    /// Per-node degree from drained cross edges.
+    pub fold_degree: Vec<u32>,
+    /// Per-node last drained community (`UNSEEN` = untouched).
+    pub cross_community: Vec<u32>,
+    /// Cross-log positions already replayed.
+    pub drained: u64,
+    /// Drained cross edges counted into coverage.
+    pub drained_m: u64,
+}
+
 impl CommittedBase {
     fn ensure(&mut self, i: usize) {
         if self.degree.len() <= i {
             self.degree.resize(i + 1, 0);
             self.community.resize(i + 1, UNSEEN);
         }
+    }
+
+    /// Flatten for checkpointing.
+    pub(crate) fn export(&self) -> BaseExport {
+        BaseExport {
+            degree: self.degree.clone(),
+            community: self.community.clone(),
+            records: self.records,
+        }
+    }
+
+    /// Rebuild from a checkpoint image.
+    pub(crate) fn from_parts(e: BaseExport) -> Self {
+        Self { degree: e.degree, community: e.community, records: e.records }
     }
 
     /// Committed cross edges covered (meaningful on a merged base or a
@@ -196,6 +236,12 @@ impl LeaderShard {
         }
     }
 
+    /// Rebuild a partition from a checkpointed base slice.
+    pub(crate) fn restore(id: usize, of: usize, base: CommittedBase) -> Self {
+        debug_assert!(id < of.max(1));
+        Self { id, of: of.max(1), base }
+    }
+
     /// This partition's committed-base slice.
     pub(crate) fn base(&self) -> &CommittedBase {
         &self.base
@@ -256,6 +302,28 @@ impl Merger {
             fold_degree: base.degree,
             cross_community: base.community,
             drained: 0,
+        }
+    }
+
+    /// Flatten for checkpointing.
+    pub(crate) fn export(&self) -> MergerExport {
+        MergerExport {
+            fold_degree: self.fold_degree.clone(),
+            cross_community: self.cross_community.clone(),
+            drained: self.drained,
+            drained_m: self.drained_m,
+        }
+    }
+
+    /// Rebuild from a checkpoint image — unlike [`over`](Self::over),
+    /// this restores the drain cursors verbatim, so the next drain
+    /// resumes exactly where the checkpointed one left off.
+    pub(crate) fn resume(e: MergerExport) -> Self {
+        Self {
+            fold_degree: e.fold_degree,
+            cross_community: e.cross_community,
+            drained: e.drained,
+            drained_m: e.drained_m,
         }
     }
 

@@ -1,0 +1,1165 @@
+//! Durability layer for the cluster service: append-only per-shard
+//! write-ahead logs plus epoch-aligned checkpoints.
+//!
+//! The WAL is a set of fixed-width binary record files in one
+//! directory. Every ingested edge is appended, before dispatch, to the
+//! file set of its routing destination — `shard-{s}` for local edges,
+//! `cross` for cross-shard edges — as a 24-byte little-endian record:
+//!
+//! ```text
+//! [seq u64][u u32][v u32][check u64]
+//! ```
+//!
+//! `seq` is the edge's global 0-based stream position and `check` is a
+//! splitmix64-style mix of the other three fields, so replay can tell
+//! a torn tail (trailing fragment shorter than one record — dropped
+//! cleanly) from real corruption (a full-width record whose checksum
+//! fails — a typed [`WalError::Corrupt`], never a wrong-but-valid
+//! edge). Each file set rotates into a new segment file, named
+//! `{prefix}.{first_seq:020}.wal`, every `wal_segment_records`
+//! records; whole segments below a checkpoint cut are deleted, which
+//! is how the log stays bounded.
+//!
+//! A checkpoint is a consistent cut of the whole service at stream
+//! position `cut`: per-shard node-state arrays, the merger's fold
+//! view, the cross-log's retained (uncommitted) epochs verbatim, and
+//! the per-leader committed bases. It is written atomically —
+//! `checkpoint.tmp`, fsync, rename over `checkpoint.bin` — so a crash
+//! mid-write leaves the previous checkpoint intact. Recovery loads the
+//! latest checkpoint and replays only the WAL suffix past its cut.
+//!
+//! Crash injection for the recovery harness goes through
+//! [`FailPoint`], which models a dying *disk*: once tripped, every
+//! later WAL or checkpoint write is silently dropped while the
+//! in-memory service keeps running, so tests can then drop the service
+//! (an abortive shutdown) and resume from whatever reached disk.
+
+use std::collections::BTreeMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::state::StreamState;
+use crate::graph::edge::Edge;
+use crate::service::crosslog::{CrossLogExport, EpochExport};
+use crate::service::snapshot::{BaseExport, MergerExport};
+
+/// Bytes per WAL record: `[seq u64][u u32][v u32][check u64]`.
+pub(crate) const RECORD_BYTES: usize = 24;
+
+const WAL_SUFFIX: &str = ".wal";
+const CHECKPOINT_FILE: &str = "checkpoint.bin";
+const CHECKPOINT_TMP: &str = "checkpoint.tmp";
+const CKPT_MAGIC: [u8; 4] = *b"SCKP";
+const CKPT_VERSION: u32 = 1;
+
+/// splitmix64-style finalizer over the record fields; 24 bytes per
+/// edge buys a per-record integrity check, which is what lets replay
+/// distinguish a torn tail from silent corruption.
+fn mix(seq: u64, u: u32, v: u32) -> u64 {
+    let packed = ((u as u64) << 32) | v as u64;
+    let mut z = seq ^ packed.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn encode_record(buf: &mut Vec<u8>, seq: u64, e: Edge) {
+    buf.extend_from_slice(&seq.to_le_bytes());
+    buf.extend_from_slice(&e.u.to_le_bytes());
+    buf.extend_from_slice(&e.v.to_le_bytes());
+    buf.extend_from_slice(&mix(seq, e.u, e.v).to_le_bytes());
+}
+
+/// Errors surfaced by WAL replay and checkpoint recovery.
+#[derive(Debug)]
+pub enum WalError {
+    /// Underlying filesystem error.
+    Io(std::io::Error),
+    /// A durability file holds bytes that cannot be a valid prefix:
+    /// a full-width WAL record with a failing checksum, a sequence
+    /// regression within one file, or a checkpoint whose trailing
+    /// checksum does not match its body.
+    Corrupt {
+        /// File holding the offending bytes.
+        file: PathBuf,
+        /// Byte offset of the first invalid record or field.
+        offset: u64,
+    },
+    /// The durable state on disk does not fit the requested
+    /// configuration (shard/leader/horizon fingerprint mismatch, or a
+    /// resume without a WAL directory).
+    Mismatch {
+        /// Human-readable description of the mismatch.
+        detail: String,
+    },
+}
+
+impl std::fmt::Display for WalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WalError::Io(e) => write!(f, "wal io error: {e}"),
+            WalError::Corrupt { file, offset } => {
+                write!(f, "corrupt durability data in {} at byte {offset}", file.display())
+            }
+            WalError::Mismatch { detail } => write!(f, "durable state mismatch: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for WalError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WalError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for WalError {
+    fn from(e: std::io::Error) -> Self {
+        WalError::Io(e)
+    }
+}
+
+/// Where the simulated disk dies, for crash-injection tests.
+#[derive(Debug, Clone)]
+pub enum CrashPoint {
+    /// The first `after_records` appended records reach the log
+    /// intact; the next record is written as a torn fragment of
+    /// `torn_bytes` bytes (less than one full record), everything
+    /// buffered is flushed so the fragment is really on disk, and
+    /// every durability write after that is silently dropped.
+    WalAppend {
+        /// Records written intact before the tear.
+        after_records: u64,
+        /// Bytes of the torn record that reach the log (capped below
+        /// one full record).
+        torn_bytes: usize,
+    },
+    /// The `nth` (0-based) checkpoint attempt writes only `keep_bytes`
+    /// of its temporary file, never renames it into place, and every
+    /// durability write after that is silently dropped — the previous
+    /// `checkpoint.bin`, if any, stays intact.
+    Checkpoint {
+        /// 0-based index of the checkpoint attempt that dies.
+        nth: u64,
+        /// Bytes of the temporary checkpoint file that reach disk.
+        keep_bytes: usize,
+    },
+}
+
+/// Shared crash-injection hook carried in the service configuration.
+///
+/// Models a dying disk rather than a dying process: once the armed
+/// [`CrashPoint`] trips (or [`FailPoint::kill`] is called, or a real
+/// I/O error occurs), all later WAL and checkpoint writes become
+/// silent no-ops while the in-memory service keeps running. The
+/// recovery harness then drops the service — an abortive shutdown —
+/// and resumes a fresh one from whatever reached disk. Clones share
+/// state, so the handle a test keeps observes the same trip.
+#[derive(Debug, Clone, Default)]
+pub struct FailPoint {
+    inner: Arc<FailInner>,
+}
+
+#[derive(Debug, Default)]
+struct FailInner {
+    plan: Mutex<Option<CrashPoint>>,
+    dead: AtomicBool,
+    wal_records: AtomicU64,
+    checkpoints: AtomicU64,
+}
+
+impl FailPoint {
+    /// Arm the hook with a crash plan, replacing any previous plan.
+    pub fn arm(&self, plan: CrashPoint) {
+        *self.inner.plan.lock().unwrap() = Some(plan);
+    }
+
+    /// True once the simulated disk has died.
+    pub fn is_dead(&self) -> bool {
+        self.inner.dead.load(Ordering::SeqCst)
+    }
+
+    /// Kill the simulated disk immediately: every later durability
+    /// write is dropped.
+    pub fn kill(&self) {
+        self.inner.dead.store(true, Ordering::SeqCst);
+    }
+
+    /// Called once per live record append; returns `Some(torn_bytes)`
+    /// when this append is the one the plan tears.
+    fn wal_tear(&self) -> Option<usize> {
+        let n = self.inner.wal_records.fetch_add(1, Ordering::SeqCst);
+        let plan = self.inner.plan.lock().unwrap();
+        match *plan {
+            Some(CrashPoint::WalAppend { after_records, torn_bytes }) if n == after_records => {
+                Some(torn_bytes)
+            }
+            _ => None,
+        }
+    }
+
+    /// Called once per checkpoint attempt; returns `Some(keep_bytes)`
+    /// when this attempt is the one the plan kills.
+    fn checkpoint_tear(&self) -> Option<usize> {
+        let n = self.inner.checkpoints.fetch_add(1, Ordering::SeqCst);
+        let plan = self.inner.plan.lock().unwrap();
+        match *plan {
+            Some(CrashPoint::Checkpoint { nth, keep_bytes }) if n == nth => Some(keep_bytes),
+            _ => None,
+        }
+    }
+}
+
+/// Buffered appender for one file set (`{prefix}.{first_seq:020}.wal`
+/// segments in one directory).
+struct WalWriter {
+    dir: PathBuf,
+    prefix: String,
+    segment_records: u64,
+    file: Option<File>,
+    in_segment: u64,
+    buf: Vec<u8>,
+}
+
+impl WalWriter {
+    /// Open the file set, appending to the newest existing segment of
+    /// this prefix (recovery already truncated it to whole records) or
+    /// starting fresh when there is none.
+    fn open(dir: &Path, prefix: String, segment_records: u64) -> std::io::Result<Self> {
+        let mut newest: Option<(u64, PathBuf)> = None;
+        for entry in fs::read_dir(dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            if let Some((p, first)) = parse_segment(&name.to_string_lossy()) {
+                if p == prefix && newest.as_ref().map(|(f, _)| first > *f).unwrap_or(true) {
+                    newest = Some((first, entry.path()));
+                }
+            }
+        }
+        let (file, in_segment) = match newest {
+            Some((_, path)) => {
+                let len = fs::metadata(&path)?.len();
+                let f = OpenOptions::new().append(true).open(&path)?;
+                (Some(f), len / RECORD_BYTES as u64)
+            }
+            None => (None, 0),
+        };
+        Ok(WalWriter { dir: dir.to_path_buf(), prefix, segment_records, file, in_segment, buf: Vec::new() })
+    }
+
+    fn segment_path(&self, first_seq: u64) -> PathBuf {
+        self.dir.join(format!("{}.{first_seq:020}{WAL_SUFFIX}", self.prefix))
+    }
+
+    /// Rotate into a fresh segment when the current one is absent or
+    /// full; the new segment is named by the sequence number of the
+    /// record about to be appended.
+    fn ensure_segment(&mut self, seq: u64) -> std::io::Result<()> {
+        if self.file.is_none() || self.in_segment >= self.segment_records {
+            self.flush()?;
+            let path = self.segment_path(seq);
+            let f = OpenOptions::new().create(true).append(true).open(path)?;
+            self.file = Some(f);
+            self.in_segment = 0;
+        }
+        Ok(())
+    }
+
+    fn append(&mut self, seq: u64, e: Edge) -> std::io::Result<()> {
+        self.ensure_segment(seq)?;
+        encode_record(&mut self.buf, seq, e);
+        self.in_segment += 1;
+        Ok(())
+    }
+
+    /// Append only the first `keep` bytes of the record — the torn
+    /// fragment a dying disk leaves behind. Returns the bytes kept.
+    fn append_torn(&mut self, seq: u64, e: Edge, keep: usize) -> std::io::Result<u64> {
+        self.ensure_segment(seq)?;
+        let mut rec = Vec::with_capacity(RECORD_BYTES);
+        encode_record(&mut rec, seq, e);
+        rec.truncate(keep.min(RECORD_BYTES - 1));
+        let kept = rec.len() as u64;
+        self.buf.extend_from_slice(&rec);
+        Ok(kept)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        if let Some(f) = self.file.as_mut() {
+            f.write_all(&self.buf)?;
+        }
+        self.buf.clear();
+        Ok(())
+    }
+
+    fn sync(&mut self) -> std::io::Result<()> {
+        self.flush()?;
+        if let Some(f) = self.file.as_mut() {
+            f.sync_data()?;
+        }
+        Ok(())
+    }
+}
+
+/// The router-owned writer set: one file set per shard plus one for
+/// cross-shard edges, sharing a single global sequence counter (the
+/// stream position) and the crash-injection hook.
+pub(crate) struct WalSet {
+    locals: Vec<WalWriter>,
+    cross: WalWriter,
+    seq: u64,
+    bytes: u64,
+    failpoint: FailPoint,
+    reported: bool,
+}
+
+impl WalSet {
+    /// Open writers over `dir`, continuing the sequence at `next_seq`
+    /// (0 for a fresh stream; the durable prefix after a resume).
+    pub(crate) fn open(
+        dir: &Path,
+        shards: usize,
+        segment_records: u64,
+        failpoint: FailPoint,
+        next_seq: u64,
+    ) -> std::io::Result<Self> {
+        let segment_records = segment_records.max(1);
+        let locals = (0..shards)
+            .map(|s| WalWriter::open(dir, format!("shard-{s}"), segment_records))
+            .collect::<std::io::Result<Vec<_>>>()?;
+        let cross = WalWriter::open(dir, "cross".to_string(), segment_records)?;
+        Ok(WalSet { locals, cross, seq: next_seq, bytes: 0, failpoint, reported: false })
+    }
+
+    /// Total bytes appended to the log by this writer set.
+    pub(crate) fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Append one edge to the file set of its routing destination
+    /// (`Some(shard)` for local, `None` for cross). Always advances
+    /// the sequence counter — it is the stream position — even when
+    /// the simulated disk is dead and nothing is written.
+    pub(crate) fn append(&mut self, shard: Option<usize>, e: Edge) {
+        let seq = self.seq;
+        self.seq += 1;
+        if self.failpoint.is_dead() {
+            return;
+        }
+        if let Some(torn) = self.failpoint.wal_tear() {
+            let res = {
+                let w = match shard {
+                    Some(s) => &mut self.locals[s],
+                    None => &mut self.cross,
+                };
+                w.append_torn(seq, e, torn)
+            };
+            match res {
+                Ok(kept) => self.bytes += kept,
+                Err(e) => self.report(e),
+            }
+            // land everything buffered — prior records and the torn
+            // fragment — so the tear is really visible on disk
+            if let Err(e) = self.flush_inner() {
+                self.report(e);
+            }
+            self.failpoint.kill();
+            return;
+        }
+        let res = match shard {
+            Some(s) => self.locals[s].append(seq, e),
+            None => self.cross.append(seq, e),
+        };
+        match res {
+            Ok(()) => self.bytes += RECORD_BYTES as u64,
+            Err(e) => self.report(e),
+        }
+    }
+
+    /// Push buffered records to the files (no fsync).
+    pub(crate) fn flush(&mut self) {
+        if self.failpoint.is_dead() {
+            return;
+        }
+        if let Err(e) = self.flush_inner() {
+            self.report(e);
+        }
+    }
+
+    /// Flush and fsync every file set — the checkpoint prerequisite: a
+    /// checkpoint cut must never run ahead of the durable log.
+    pub(crate) fn sync(&mut self) {
+        if self.failpoint.is_dead() {
+            return;
+        }
+        let res = (|| -> std::io::Result<()> {
+            for w in &mut self.locals {
+                w.sync()?;
+            }
+            self.cross.sync()
+        })();
+        if let Err(e) = res {
+            self.report(e);
+        }
+    }
+
+    fn flush_inner(&mut self) -> std::io::Result<()> {
+        for w in &mut self.locals {
+            w.flush()?;
+        }
+        self.cross.flush()
+    }
+
+    /// A real I/O error is treated as the disk dying: report once,
+    /// stop writing, keep serving from memory.
+    fn report(&mut self, e: std::io::Error) {
+        if !self.reported {
+            eprintln!("wal: disabling durability after io error: {e}");
+            self.reported = true;
+        }
+        self.failpoint.kill();
+    }
+}
+
+/// Prepare `dir` for a fresh stream: create it and remove previous
+/// WAL segments and checkpoints (only files matching our own naming).
+pub(crate) fn init_fresh(dir: &Path) -> std::io::Result<()> {
+    fs::create_dir_all(dir)?;
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.ends_with(WAL_SUFFIX) || name == CHECKPOINT_FILE || name == CHECKPOINT_TMP {
+            fs::remove_file(entry.path())?;
+        }
+    }
+    Ok(())
+}
+
+/// Parse `{prefix}.{first_seq:020}.wal` into its parts.
+fn parse_segment(name: &str) -> Option<(&str, u64)> {
+    let stem = name.strip_suffix(WAL_SUFFIX)?;
+    let (prefix, seq) = stem.rsplit_once('.')?;
+    seq.parse::<u64>().ok().map(|first| (prefix, first))
+}
+
+/// One decoded WAL record.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct WalRecord {
+    /// Global 0-based stream position.
+    pub seq: u64,
+    /// The edge itself, in arrival orientation.
+    pub edge: Edge,
+}
+
+/// One scanned WAL file: its valid records and where validity ends.
+pub(crate) struct ScannedFile {
+    /// Path of the segment file.
+    pub path: PathBuf,
+    /// Checksum-verified records, in file order (strictly ascending
+    /// sequence numbers).
+    pub records: Vec<WalRecord>,
+    /// Byte offset of the end of the last valid record; anything past
+    /// it is a torn trailing fragment.
+    pub valid_bytes: u64,
+}
+
+/// Scan every WAL segment under `dir`. A trailing fragment shorter
+/// than one record is dropped cleanly; a full-width record with a bad
+/// checksum, or a sequence regression within a file, is
+/// [`WalError::Corrupt`].
+pub(crate) fn scan_dir(dir: &Path) -> Result<Vec<ScannedFile>, WalError> {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    if !dir.is_dir() {
+        return Ok(Vec::new());
+    }
+    for entry in fs::read_dir(dir).map_err(WalError::Io)? {
+        let entry = entry.map_err(WalError::Io)?;
+        if parse_segment(&entry.file_name().to_string_lossy()).is_some() {
+            paths.push(entry.path());
+        }
+    }
+    paths.sort();
+    paths.iter().map(|p| scan_file(p)).collect()
+}
+
+fn scan_file(path: &Path) -> Result<ScannedFile, WalError> {
+    let data = fs::read(path).map_err(WalError::Io)?;
+    let mut records = Vec::with_capacity(data.len() / RECORD_BYTES);
+    let mut off = 0usize;
+    let mut last_seq: Option<u64> = None;
+    while off + RECORD_BYTES <= data.len() {
+        let seq = u64::from_le_bytes(data[off..off + 8].try_into().unwrap());
+        let u = u32::from_le_bytes(data[off + 8..off + 12].try_into().unwrap());
+        let v = u32::from_le_bytes(data[off + 12..off + 16].try_into().unwrap());
+        let check = u64::from_le_bytes(data[off + 16..off + 24].try_into().unwrap());
+        if check != mix(seq, u, v) || last_seq.map(|p| seq <= p).unwrap_or(false) {
+            return Err(WalError::Corrupt { file: path.to_path_buf(), offset: off as u64 });
+        }
+        last_seq = Some(seq);
+        records.push(WalRecord { seq, edge: Edge::new(u, v) });
+        off += RECORD_BYTES;
+    }
+    Ok(ScannedFile { path: path.to_path_buf(), records, valid_bytes: off as u64 })
+}
+
+/// Longest durable prefix of the stream: the first sequence number at
+/// or past `cut` that is missing from the scanned records. Everything
+/// below it was logged contiguously; records at or past it (written
+/// after a gap a dying disk left) are unusable.
+pub(crate) fn durable_prefix(files: &[ScannedFile], cut: u64) -> u64 {
+    let mut seqs: Vec<u64> = files
+        .iter()
+        .flat_map(|f| f.records.iter().map(|r| r.seq))
+        .filter(|&s| s >= cut)
+        .collect();
+    seqs.sort_unstable();
+    seqs.dedup();
+    let mut p = cut;
+    for s in seqs {
+        if s == p {
+            p += 1;
+        } else if s > p {
+            break;
+        }
+    }
+    p
+}
+
+/// All records with `cut ≤ seq < limit`, in global stream order.
+pub(crate) fn suffix(files: &[ScannedFile], cut: u64, limit: u64) -> Vec<WalRecord> {
+    let mut recs: Vec<WalRecord> = files
+        .iter()
+        .flat_map(|f| f.records.iter().copied())
+        .filter(|r| r.seq >= cut && r.seq < limit)
+        .collect();
+    recs.sort_unstable_by_key(|r| r.seq);
+    recs
+}
+
+/// Physically truncate every scanned file at its first record with
+/// `seq ≥ limit`, dropping torn trailing fragments with it, so appends
+/// after a resume (which restart at `limit`) can never produce
+/// duplicate sequence numbers. Files left empty are removed.
+pub(crate) fn truncate_beyond(files: &[ScannedFile], limit: u64) -> std::io::Result<()> {
+    for f in files {
+        let keep = f.records.iter().take_while(|r| r.seq < limit).count();
+        let end = (keep * RECORD_BYTES) as u64;
+        let on_disk = fs::metadata(&f.path)?.len();
+        if end == 0 {
+            fs::remove_file(&f.path)?;
+        } else if on_disk > end {
+            let file = OpenOptions::new().write(true).open(&f.path)?;
+            file.set_len(end)?;
+            file.sync_data()?;
+        }
+    }
+    Ok(())
+}
+
+/// Delete whole WAL segments made redundant by a checkpoint at
+/// `cutoff`: a segment can go once a newer segment of the same prefix
+/// starts at or below `cutoff`, because every record in the older one
+/// is then below the cut the checkpoint already covers. The newest
+/// segment of each prefix is always kept (it is the append target).
+/// Returns the bytes freed.
+pub(crate) fn truncate_segments(dir: &Path, cutoff: u64) -> std::io::Result<u64> {
+    let mut by_prefix: BTreeMap<String, Vec<(u64, PathBuf)>> = BTreeMap::new();
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        if let Some((prefix, first)) = parse_segment(&name.to_string_lossy()) {
+            by_prefix.entry(prefix.to_string()).or_default().push((first, entry.path()));
+        }
+    }
+    let mut freed = 0u64;
+    for segs in by_prefix.values_mut() {
+        segs.sort();
+        for i in 0..segs.len().saturating_sub(1) {
+            if segs[i + 1].0 <= cutoff {
+                freed += fs::metadata(&segs[i].1).map(|m| m.len()).unwrap_or(0);
+                fs::remove_file(&segs[i].1)?;
+            }
+        }
+    }
+    Ok(freed)
+}
+
+/// Everything a checkpoint persists: a consistent cut of the whole
+/// service at stream position `cut`, plus the configuration
+/// fingerprint recovery validates against.
+pub(crate) struct CheckpointData {
+    /// Shard count the state was built under.
+    pub shards: u32,
+    /// Leader partition count.
+    pub leaders: u32,
+    /// Volume threshold `v_max`.
+    pub v_max: u64,
+    /// Commit horizon in edges; 0 encodes unbounded.
+    pub horizon: u64,
+    /// Cross-log epoch length derived from the horizon.
+    pub epoch_len: u64,
+    /// Stream position of the cut: edges `[0, cut)` are covered.
+    pub cut: u64,
+    /// Per-shard node-state arrays.
+    pub states: Vec<StreamState>,
+    /// The merger's fold view and drain cursors.
+    pub merger: MergerExport,
+    /// The cross-log counters and retained (uncommitted) epochs,
+    /// verbatim — frozen decisions included, so recovery never has to
+    /// reconstruct replay order.
+    pub crosslog: CrossLogExport,
+    /// Per-leader committed base slices.
+    pub bases: Vec<BaseExport>,
+}
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+    fn u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    fn len(&mut self, n: usize) {
+        self.u64(n as u64);
+    }
+    fn u32s(&mut self, v: &[u32]) {
+        self.len(v.len());
+        for &x in v {
+            self.u32(x);
+        }
+    }
+    fn u64s(&mut self, v: &[u64]) {
+        self.len(v.len());
+        for &x in v {
+            self.u64(x);
+        }
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    path: &'a Path,
+}
+
+impl<'a> Dec<'a> {
+    fn corrupt(&self) -> WalError {
+        WalError::Corrupt { file: self.path.to_path_buf(), offset: self.pos as u64 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WalError> {
+        if self.pos + n > self.buf.len() {
+            return Err(self.corrupt());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, WalError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, WalError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, WalError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    /// Length prefix, sanity-bounded so a corrupt length can never
+    /// trigger a huge allocation before the bounds check trips.
+    fn len(&mut self, elem_bytes: usize) -> Result<usize, WalError> {
+        let n = self.u64()? as usize;
+        match n.checked_mul(elem_bytes) {
+            Some(total) if self.pos + total <= self.buf.len() => Ok(n),
+            _ => Err(self.corrupt()),
+        }
+    }
+    fn u32s(&mut self) -> Result<Vec<u32>, WalError> {
+        let n = self.len(4)?;
+        (0..n).map(|_| self.u32()).collect()
+    }
+    fn u64s(&mut self) -> Result<Vec<u64>, WalError> {
+        let n = self.len(8)?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+}
+
+fn fnv1a(data: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn encode_checkpoint(d: &CheckpointData) -> Vec<u8> {
+    let mut e = Enc { buf: Vec::new() };
+    e.buf.extend_from_slice(&CKPT_MAGIC);
+    e.u32(CKPT_VERSION);
+    e.u32(d.shards);
+    e.u32(d.leaders);
+    e.u64(d.v_max);
+    e.u64(d.horizon);
+    e.u64(d.epoch_len);
+    e.u64(d.cut);
+    e.len(d.states.len());
+    for s in &d.states {
+        e.u64(s.edges_processed);
+        e.u32s(&s.degree);
+        e.u32s(&s.community);
+        e.u64s(&s.volume);
+    }
+    e.u32s(&d.merger.fold_degree);
+    e.u32s(&d.merger.cross_community);
+    e.u64(d.merger.drained);
+    e.u64(d.merger.drained_m);
+    let c = &d.crosslog;
+    e.u64(c.committed);
+    e.u64(c.appended);
+    e.u64(c.epochs_sealed);
+    e.u64(c.epochs_committed);
+    e.u64(c.freed_bytes);
+    e.u64s(&c.appended_per_leader);
+    e.u64s(&c.committed_per_leader);
+    e.u64s(&c.frozen_retained_per_leader);
+    e.u64s(&c.freed_bytes_per_leader);
+    e.len(c.epochs.len());
+    for ep in &c.epochs {
+        e.u64(ep.start);
+        e.u8(ep.sealed as u8);
+        e.len(ep.edges.len());
+        for edge in &ep.edges {
+            e.u32(edge.u);
+            e.u32(edge.v);
+        }
+        e.len(ep.frozen.len());
+        for lane in &ep.frozen {
+            e.len(lane.len());
+            for &(node, comm) in lane {
+                e.u32(node);
+                e.u32(comm);
+            }
+        }
+    }
+    e.len(d.bases.len());
+    for b in &d.bases {
+        e.u64(b.records);
+        e.u32s(&b.degree);
+        e.u32s(&b.community);
+    }
+    let sum = fnv1a(&e.buf);
+    e.u64(sum);
+    e.buf
+}
+
+fn decode_checkpoint(path: &Path, data: &[u8]) -> Result<CheckpointData, WalError> {
+    let corrupt = |offset: u64| WalError::Corrupt { file: path.to_path_buf(), offset };
+    if data.len() < CKPT_MAGIC.len() + 4 + 8 {
+        return Err(corrupt(data.len() as u64));
+    }
+    let (body, tail) = data.split_at(data.len() - 8);
+    let want = u64::from_le_bytes(tail.try_into().unwrap());
+    if fnv1a(body) != want {
+        return Err(corrupt(body.len() as u64));
+    }
+    let mut d = Dec { buf: body, pos: 0, path };
+    if d.take(4)? != CKPT_MAGIC {
+        return Err(corrupt(0));
+    }
+    let version = d.u32()?;
+    if version != CKPT_VERSION {
+        return Err(WalError::Mismatch {
+            detail: format!("checkpoint version {version}, this build reads {CKPT_VERSION}"),
+        });
+    }
+    let shards = d.u32()?;
+    let leaders = d.u32()?;
+    let v_max = d.u64()?;
+    let horizon = d.u64()?;
+    let epoch_len = d.u64()?;
+    let cut = d.u64()?;
+    let n_states = d.len(8)?;
+    let mut states = Vec::with_capacity(n_states);
+    for _ in 0..n_states {
+        let edges_processed = d.u64()?;
+        let degree = d.u32s()?;
+        let community = d.u32s()?;
+        let volume = d.u64s()?;
+        states.push(StreamState { degree, community, volume, edges_processed });
+    }
+    let merger = MergerExport {
+        fold_degree: d.u32s()?,
+        cross_community: d.u32s()?,
+        drained: d.u64()?,
+        drained_m: d.u64()?,
+    };
+    let committed = d.u64()?;
+    let appended = d.u64()?;
+    let epochs_sealed = d.u64()?;
+    let epochs_committed = d.u64()?;
+    let freed_bytes = d.u64()?;
+    let appended_per_leader = d.u64s()?;
+    let committed_per_leader = d.u64s()?;
+    let frozen_retained_per_leader = d.u64s()?;
+    let freed_bytes_per_leader = d.u64s()?;
+    let n_epochs = d.len(17)?;
+    let mut epochs = Vec::with_capacity(n_epochs);
+    for _ in 0..n_epochs {
+        let start = d.u64()?;
+        let sealed = d.u8()? != 0;
+        let n_edges = d.len(8)?;
+        let mut edges = Vec::with_capacity(n_edges);
+        for _ in 0..n_edges {
+            let u = d.u32()?;
+            let v = d.u32()?;
+            edges.push(Edge::new(u, v));
+        }
+        let n_lanes = d.len(8)?;
+        let mut frozen = Vec::with_capacity(n_lanes);
+        for _ in 0..n_lanes {
+            let n_recs = d.len(8)?;
+            let mut lane = Vec::with_capacity(n_recs);
+            for _ in 0..n_recs {
+                let node = d.u32()?;
+                let comm = d.u32()?;
+                lane.push((node, comm));
+            }
+            frozen.push(lane);
+        }
+        epochs.push(EpochExport { start, sealed, edges, frozen });
+    }
+    let crosslog = CrossLogExport {
+        committed,
+        appended,
+        epochs_sealed,
+        epochs_committed,
+        freed_bytes,
+        appended_per_leader,
+        committed_per_leader,
+        frozen_retained_per_leader,
+        freed_bytes_per_leader,
+        epochs,
+    };
+    let n_bases = d.len(8)?;
+    let mut bases = Vec::with_capacity(n_bases);
+    for _ in 0..n_bases {
+        let records = d.u64()?;
+        let degree = d.u32s()?;
+        let community = d.u32s()?;
+        bases.push(BaseExport { degree, community, records });
+    }
+    Ok(CheckpointData {
+        shards,
+        leaders,
+        v_max,
+        horizon,
+        epoch_len,
+        cut,
+        states,
+        merger,
+        crosslog,
+        bases,
+    })
+}
+
+/// Atomically write a checkpoint: encode, write `checkpoint.tmp`,
+/// fsync, rename over `checkpoint.bin`, best-effort directory fsync.
+/// Returns `Ok(true)` when the checkpoint landed, `Ok(false)` when the
+/// simulated disk is (or just became) dead.
+pub(crate) fn write_checkpoint(
+    dir: &Path,
+    data: &CheckpointData,
+    fp: &FailPoint,
+) -> std::io::Result<bool> {
+    if fp.is_dead() {
+        return Ok(false);
+    }
+    let bytes = encode_checkpoint(data);
+    let tmp = dir.join(CHECKPOINT_TMP);
+    if let Some(keep) = fp.checkpoint_tear() {
+        let _ = fs::write(&tmp, &bytes[..keep.min(bytes.len())]);
+        fp.kill();
+        return Ok(false);
+    }
+    let mut f = File::create(&tmp)?;
+    f.write_all(&bytes)?;
+    f.sync_data()?;
+    drop(f);
+    fs::rename(&tmp, dir.join(CHECKPOINT_FILE))?;
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_data();
+    }
+    Ok(true)
+}
+
+/// Read the latest checkpoint under `dir`. `Ok(None)` when none was
+/// ever completed; a stale `checkpoint.tmp` from an interrupted write
+/// is removed and ignored.
+pub(crate) fn read_checkpoint(dir: &Path) -> Result<Option<CheckpointData>, WalError> {
+    let _ = fs::remove_file(dir.join(CHECKPOINT_TMP));
+    let path = dir.join(CHECKPOINT_FILE);
+    let data = match fs::read(&path) {
+        Ok(d) => d,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    decode_checkpoint(&path, &data).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    fn scratch(tag: &str) -> PathBuf {
+        static NEXT: AtomicU32 = AtomicU32::new(0);
+        let id = NEXT.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir().join(format!(
+            "streamcom-wal-{}-{tag}-{id}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        init_fresh(&dir).unwrap();
+        dir
+    }
+
+    fn edge(u: u32, v: u32) -> Edge {
+        Edge::new(u, v)
+    }
+
+    #[test]
+    fn append_scan_roundtrip_across_segments_and_destinations() {
+        let dir = scratch("roundtrip");
+        let mut wal = WalSet::open(&dir, 2, 3, FailPoint::default(), 0).unwrap();
+        for i in 0..10u32 {
+            let dest = match i % 3 {
+                0 => Some(0),
+                1 => Some(1),
+                _ => None,
+            };
+            wal.append(dest, edge(i, i + 1));
+        }
+        wal.sync();
+        assert_eq!(wal.bytes(), 10 * RECORD_BYTES as u64);
+
+        let files = scan_dir(&dir).unwrap();
+        let recs = suffix(&files, 0, u64::MAX);
+        assert_eq!(recs.len(), 10);
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(r.seq, i as u64);
+            assert_eq!((r.edge.u, r.edge.v), (i as u32, i as u32 + 1));
+        }
+        assert_eq!(durable_prefix(&files, 0), 10);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_and_full_corruption_is_typed() {
+        let dir = scratch("torn");
+        let mut wal = WalSet::open(&dir, 1, 1024, FailPoint::default(), 0).unwrap();
+        for i in 0..4u32 {
+            wal.append(Some(0), edge(i, i + 1));
+        }
+        wal.sync();
+        let files = scan_dir(&dir).unwrap();
+        assert_eq!(files.len(), 1);
+        let path = files[0].path.clone();
+        let full = fs::read(&path).unwrap();
+
+        // every proper-prefix truncation of the last record drops it
+        // cleanly and keeps the first three
+        for keep in 0..RECORD_BYTES {
+            let cut = full.len() - RECORD_BYTES + keep;
+            fs::write(&path, &full[..cut]).unwrap();
+            let scanned = scan_file(&path).unwrap();
+            assert_eq!(scanned.records.len(), 3, "keep={keep}");
+            assert_eq!(scanned.valid_bytes, (3 * RECORD_BYTES) as u64);
+        }
+
+        // a flipped byte inside a full-width record is a typed error
+        let mut bad = full.clone();
+        bad[RECORD_BYTES + 9] ^= 0x40;
+        fs::write(&path, &bad).unwrap();
+        match scan_file(&path) {
+            Err(WalError::Corrupt { offset, .. }) => {
+                assert_eq!(offset, RECORD_BYTES as u64)
+            }
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failpoint_tears_the_planned_record_then_goes_dark() {
+        let dir = scratch("failpoint");
+        let fp = FailPoint::default();
+        fp.arm(CrashPoint::WalAppend { after_records: 5, torn_bytes: 7 });
+        let mut wal = WalSet::open(&dir, 2, 1024, fp.clone(), 0).unwrap();
+        for i in 0..20u32 {
+            wal.append(Some((i % 2) as usize), edge(i, i + 1));
+        }
+        wal.sync();
+        assert!(fp.is_dead());
+        assert_eq!(wal.bytes(), 5 * RECORD_BYTES as u64 + 7);
+
+        let files = scan_dir(&dir).unwrap();
+        assert_eq!(durable_prefix(&files, 0), 5);
+        assert_eq!(suffix(&files, 0, 5).len(), 5);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn durable_prefix_stops_at_the_first_gap() {
+        let files = vec![ScannedFile {
+            path: PathBuf::from("x"),
+            records: [0u64, 1, 2, 4, 5]
+                .iter()
+                .map(|&seq| WalRecord { seq, edge: edge(0, 1) })
+                .collect(),
+            valid_bytes: 0,
+        }];
+        assert_eq!(durable_prefix(&files, 0), 3);
+        assert_eq!(durable_prefix(&files, 4), 6);
+        assert_eq!(suffix(&files, 0, 3).len(), 3);
+    }
+
+    #[test]
+    fn truncate_beyond_cuts_files_at_the_limit() {
+        let dir = scratch("beyond");
+        let mut wal = WalSet::open(&dir, 1, 1024, FailPoint::default(), 0).unwrap();
+        for i in 0..6u32 {
+            wal.append(Some(0), edge(i, i + 1));
+        }
+        wal.sync();
+        let files = scan_dir(&dir).unwrap();
+        truncate_beyond(&files, 4).unwrap();
+        let files = scan_dir(&dir).unwrap();
+        let recs = suffix(&files, 0, u64::MAX);
+        assert_eq!(recs.len(), 4);
+        assert!(recs.iter().all(|r| r.seq < 4));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn segment_gc_keeps_everything_at_or_past_the_cutoff() {
+        let dir = scratch("gc");
+        let mut wal = WalSet::open(&dir, 1, 2, FailPoint::default(), 0).unwrap();
+        for i in 0..9u32 {
+            wal.append(Some(0), edge(i, i + 1));
+        }
+        wal.sync();
+        // segments: [0,1] [2,3] [4,5] [6,7] [8]
+        let freed = truncate_segments(&dir, 5).unwrap();
+        assert_eq!(freed, 2 * 2 * RECORD_BYTES as u64);
+        let files = scan_dir(&dir).unwrap();
+        let recs = suffix(&files, 0, u64::MAX);
+        // records ≥ 4 all survive (segment [4,5] starts below the
+        // cutoff's successor, so it must be kept)
+        assert!(recs.iter().all(|r| r.seq >= 4));
+        assert_eq!(recs.len(), 5);
+        assert_eq!(durable_prefix(&files, 5), 9);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    fn sample_checkpoint() -> CheckpointData {
+        CheckpointData {
+            shards: 2,
+            leaders: 1,
+            v_max: 64,
+            horizon: 32,
+            epoch_len: 8,
+            cut: 40,
+            states: vec![StreamState {
+                degree: vec![1, 2],
+                community: vec![0, 0],
+                volume: vec![3, 4],
+                edges_processed: 5,
+            }],
+            merger: MergerExport {
+                fold_degree: vec![7, 8],
+                cross_community: vec![0, 1],
+                drained: 9,
+                drained_m: 10,
+            },
+            crosslog: CrossLogExport {
+                committed: 8,
+                appended: 12,
+                epochs_sealed: 1,
+                epochs_committed: 1,
+                freed_bytes: 64,
+                appended_per_leader: vec![12],
+                committed_per_leader: vec![8],
+                frozen_retained_per_leader: vec![8],
+                freed_bytes_per_leader: vec![64],
+                epochs: vec![EpochExport {
+                    start: 8,
+                    sealed: false,
+                    edges: vec![edge(1, 9), edge(2, 8)],
+                    frozen: vec![vec![(1, 1), (9, 1), (2, 2), (8, 2)]],
+                }],
+            },
+            bases: vec![BaseExport {
+                degree: vec![2, 2],
+                community: vec![1, 1],
+                records: 4,
+            }],
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_and_detects_corruption() {
+        let dir = scratch("ckpt");
+        assert!(read_checkpoint(&dir).unwrap().is_none());
+        let data = sample_checkpoint();
+        assert!(write_checkpoint(&dir, &data, &FailPoint::default()).unwrap());
+        let back = read_checkpoint(&dir).unwrap().expect("checkpoint present");
+        assert_eq!(back.cut, 40);
+        assert_eq!(back.states[0].volume, vec![3, 4]);
+        assert_eq!(back.crosslog.epochs[0].edges.len(), 2);
+        assert_eq!(back.crosslog.epochs[0].frozen[0].len(), 4);
+        assert_eq!(back.bases[0].records, 4);
+
+        // flip one byte: typed corruption, never a bogus checkpoint
+        let path = dir.join(CHECKPOINT_FILE);
+        let mut raw = fs::read(&path).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 1;
+        fs::write(&path, &raw).unwrap();
+        assert!(matches!(read_checkpoint(&dir), Err(WalError::Corrupt { .. })));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_failpoint_leaves_previous_checkpoint_intact() {
+        let dir = scratch("ckpt-fp");
+        let first = sample_checkpoint();
+        assert!(write_checkpoint(&dir, &first, &FailPoint::default()).unwrap());
+
+        let fp = FailPoint::default();
+        fp.arm(CrashPoint::Checkpoint { nth: 0, keep_bytes: 10 });
+        let mut second = sample_checkpoint();
+        second.cut = 80;
+        assert!(!write_checkpoint(&dir, &second, &fp).unwrap());
+        assert!(fp.is_dead());
+
+        // the torn tmp is ignored and the previous checkpoint survives
+        let back = read_checkpoint(&dir).unwrap().expect("previous checkpoint");
+        assert_eq!(back.cut, 40);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

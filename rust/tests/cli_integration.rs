@@ -192,6 +192,39 @@ fn serve_rejects_malformed_horizon() {
 }
 
 #[test]
+fn serve_wal_dir_then_resume_recovers_the_stream() {
+    // first run: durability on — the stats line surfaces the WAL
+    // counters, and the clean finish syncs the full stream to disk
+    let dir = std::env::temp_dir().join(format!("sc_wal_cli_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let dir_str = dir.to_str().unwrap();
+    let (stdout, stderr, ok) = run_with_stdin(
+        &["serve", "--sbm", "6x40", "--shards", "2", "--vmax", "64", "--wal-dir", dir_str],
+        "stats\n",
+    );
+    assert!(ok, "serve --wal-dir failed: {stderr}");
+    assert!(stdout.contains("wal="), "{stdout}");
+    assert!(stdout.contains("ckpts="), "{stdout}");
+    assert!(stdout.contains("recovered_epochs="), "{stdout}");
+    assert!(stdout.contains("final:"), "{stdout}");
+
+    // second run: --resume recovers the whole logged stream, reports
+    // the recovered position, skips the already-ingested prefix, and
+    // still reaches a final partition
+    let (stdout, stderr, ok) = run_with_stdin(
+        &[
+            "serve", "--sbm", "6x40", "--shards", "2", "--vmax", "64", "--wal-dir", dir_str,
+            "--resume",
+        ],
+        "stats\n",
+    );
+    assert!(ok, "serve --resume failed: {stderr}");
+    assert!(stdout.contains("resume: recovered to t="), "{stdout}");
+    assert!(stdout.contains("final:"), "{stdout}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn serve_dynamic_mode_still_speaks_event_protocol() {
     let (stdout, _, ok) = run_with_stdin(
         &["serve", "--dynamic", "--vmax", "8"],

@@ -216,6 +216,42 @@ fn golden_lfr_stream_partitions_are_stable() {
 }
 
 #[test]
+fn dynamic_event_mode_matches_batch_mode_on_golden_streams() {
+    // the CLI's event mode now batches consecutive inserts through
+    // `DynamicClusterer::insert_batch` (the same chunk spine as the
+    // batch path); an insert-only event stream must therefore stay
+    // bit-identical to the sequential batch run — whatever the batch
+    // boundaries — and to per-event application
+    use streamcom::coordinator::algorithm::StrConfig;
+    use streamcom::coordinator::dynamic::{DynamicClusterer, Event};
+    for stem in ["sbm_k6_s30", "lfr_mu015"] {
+        let gs = read_stream(stem);
+        let seq = pad(cluster_edges(gs.n, &gs.edges, gs.v_max), gs.n);
+
+        let mut batched = DynamicClusterer::new(0, StrConfig::new(gs.v_max));
+        for chunk in gs.edges.chunks(113) {
+            batched.insert_batch(chunk);
+        }
+        assert_labels_match(
+            &format!("{stem}: event mode (batched inserts) vs sequential batch"),
+            &pad(batched.labels(), gs.n),
+            &seq,
+        );
+
+        let mut single = DynamicClusterer::new(0, StrConfig::new(gs.v_max));
+        for &e in &gs.edges {
+            single.apply(Event::Insert(e)).unwrap();
+        }
+        assert_labels_match(
+            &format!("{stem}: per-event inserts vs sequential batch"),
+            &pad(single.labels(), gs.n),
+            &seq,
+        );
+        assert_eq!(batched.live_edges(), single.live_edges(), "{stem}");
+    }
+}
+
+#[test]
 fn golden_diff_helper_reports_node_level_diffs() {
     // the helper itself is part of the contract: a mismatch must name
     // the diverging nodes

@@ -1,0 +1,559 @@
+//! Crash/fault-injection recovery harness for the durable service.
+//!
+//! The durability contract under test: with `config.wal_dir` set, every
+//! ingested edge hits a per-shard write-ahead log before dispatch, and
+//! an epoch-aligned checkpoint is written whenever the cross log
+//! commits an epoch at a quiesced cut. Recovery
+//! (`ClusterService::resume`) loads the latest checkpoint, truncates
+//! the WAL to its longest contiguous durable prefix (dropping any torn
+//! trailing fragment), replays only the suffix past the checkpoint cut,
+//! and continues the stream.
+//!
+//! The harness "crashes" the service with the [`FailPoint`] hook baked
+//! into the config: an armed [`CrashPoint`] models a dying disk — a
+//! WAL append torn mid-record, or a checkpoint that writes part of its
+//! temporary file and never renames it — after which every durability
+//! write is silently dropped while the in-memory service keeps running.
+//! Dropping the service is the abortive process death; a fresh
+//! `resume` from the same directory is the restart. The proof
+//! obligation everywhere: finish the stream after the restart and the
+//! final partition is **bit-identical** to the uninterrupted run, and
+//! the recovery stats (`recovered_epochs`, `wal_recovered_edges`)
+//! prove only the post-checkpoint suffix was replayed.
+//!
+//! Exactness domains (mirrors `docs/ARCHITECTURE.md` §Durability):
+//! under [`CommitHorizon::Unbounded`] the final partition is
+//! drain-cadence independent, so recovery from *any* crash point is
+//! exact (no checkpoint ever exists — the whole WAL is the suffix).
+//! Under a bounded horizon mid-stream drains freeze decisions, so
+//! exactness additionally needs the recovery to land on a quiesced
+//! drain cut and the restarted run to re-drain at the same schedule —
+//! which is what checkpoints provide: they are only written at
+//! quiesced, epoch-committed cuts.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use streamcom::graph::edge::Edge;
+use streamcom::service::{
+    ClusterService, CommitHorizon, CrashPoint, ServiceConfig, WalError,
+};
+use streamcom::util::proptest::property;
+use streamcom::util::rng::Xoshiro256;
+
+/// Bytes per WAL record (`[seq u64][u u32][v u32][check u64]`) — pinned
+/// here independently so a layout change fails the byte-level tests
+/// loudly instead of silently shifting their offsets.
+const RECORD_BYTES: usize = 24;
+
+static SCRATCH_ID: AtomicU32 = AtomicU32::new(0);
+
+/// Fresh per-test WAL directory under the system temp dir.
+fn scratch_dir(tag: &str) -> PathBuf {
+    let id = SCRATCH_ID.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!(
+        "streamcom-recovery-{}-{tag}-{id}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+/// Service config used throughout: explicit quiesce schedules only
+/// (automatic drains disabled), small dispatch chunks.
+fn base_config(shards: usize, v_max: u64, horizon: CommitHorizon) -> ServiceConfig {
+    let mut cfg = ServiceConfig::new(shards, v_max);
+    cfg.chunk_size = 64;
+    cfg.drain_every = u64::MAX;
+    cfg.horizon = horizon;
+    cfg
+}
+
+/// Same, with durability on. Always built fresh so every service
+/// instance gets its own unarmed [`FailPoint`].
+fn durable_config(
+    dir: &Path,
+    shards: usize,
+    v_max: u64,
+    horizon: CommitHorizon,
+) -> ServiceConfig {
+    let mut cfg = base_config(shards, v_max, horizon);
+    cfg.wal_dir = Some(dir.to_path_buf());
+    cfg.wal_segment_records = 32; // small segments: exercise rotation + gc
+    cfg
+}
+
+/// Random multigraph edge stream over `size` nodes, in random order
+/// (same shape as the router property suite's generator).
+fn random_stream(rng: &mut Xoshiro256, size: usize) -> (usize, Vec<Edge>) {
+    let n = size.max(2);
+    let m = size * 4;
+    let mut edges: Vec<Edge> = (0..m)
+        .map(|_| {
+            let u = rng.range(0, n) as u32;
+            let mut v = rng.range(0, n) as u32;
+            if u == v {
+                v = (v + 1) % n as u32;
+            }
+            Edge::new(u, v)
+        })
+        .collect();
+    rng.shuffle(&mut edges);
+    (n, edges)
+}
+
+fn pad(mut labels: Vec<u32>, n: usize) -> Vec<u32> {
+    while labels.len() < n {
+        labels.push(labels.len() as u32);
+    }
+    labels
+}
+
+/// Read a committed golden stream (duplicated from the golden suite —
+/// integration tests are separate crates).
+fn read_golden(stem: &str) -> (usize, u64, usize, Vec<Edge>) {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden")
+        .join(format!("{stem}.edges"));
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()));
+    let mut lines = text.lines().filter(|l| !l.trim_start().starts_with('#'));
+    let header = lines.next().expect("missing golden header");
+    let mut parts = header.split_whitespace();
+    let n: usize = parts.next().unwrap().parse().unwrap();
+    let v_max: u64 = parts.next().unwrap().parse().unwrap();
+    let shards: usize = parts.next().unwrap().parse().unwrap();
+    let edges: Vec<Edge> = lines
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| {
+            let mut it = l.split_whitespace();
+            Edge::new(it.next().unwrap().parse().unwrap(), it.next().unwrap().parse().unwrap())
+        })
+        .collect();
+    (n, v_max, shards, edges)
+}
+
+/// Push `edges[from..]` in `step`-sized chunks whose boundaries fall on
+/// global multiples of `step`, quiescing at every boundary — the
+/// schedule both the uninterrupted reference and every restarted run
+/// follow, so drains land on identical cuts.
+fn push_with_schedule(svc: &mut ClusterService, edges: &[Edge], from: usize, step: usize) {
+    let mut at = from;
+    while at < edges.len() {
+        let next = ((at / step) + 1) * step;
+        let next = next.min(edges.len());
+        svc.push_chunk(&edges[at..next]);
+        svc.quiesce();
+        at = next;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tentpole: kill mid-stream on the golden streams, restart, finish —
+// bit-identical.
+// ---------------------------------------------------------------------
+
+/// Mid-WAL-append crashes with torn tails at several stream positions,
+/// on both golden streams, under the default unbounded horizon: the
+/// restarted run must finish to the exact partition of the
+/// uninterrupted run, and recovery must account every surviving record.
+#[test]
+fn crash_mid_wal_append_recovers_bit_identical_on_golden_streams() {
+    for stem in ["sbm_k6_s30", "lfr_mu015"] {
+        let (n, v_max, shards, edges) = read_golden(stem);
+        let m = edges.len();
+
+        // uninterrupted reference: same config, durability off
+        let mut reference = ClusterService::start(base_config(shards, v_max, CommitHorizon::Unbounded));
+        reference.push_chunk(&edges);
+        let want = reference.finish().snapshot.labels_padded(n);
+
+        for (point, torn) in [(m / 7, 1usize), (m / 2, 13), (m - 2, 23)] {
+            let point = point.max(1);
+            let dir = scratch_dir("golden");
+
+            // the doomed run: disk dies tearing record `point`; the
+            // in-memory service keeps going until we "kill" it by drop
+            let cfg = durable_config(&dir, shards, v_max, CommitHorizon::Unbounded);
+            let fp = cfg.failpoint.clone();
+            fp.arm(CrashPoint::WalAppend { after_records: point as u64, torn_bytes: torn });
+            let mut doomed = ClusterService::start(cfg);
+            for chunk in edges.chunks(97) {
+                doomed.push_chunk(chunk);
+            }
+            assert!(fp.is_dead(), "{stem}: crash point {point} never tripped");
+            drop(doomed); // abortive shutdown: nothing flushed, nothing synced
+
+            // restart: recover, then finish the stream from where the
+            // durable prefix ends
+            let mut svc =
+                ClusterService::resume(durable_config(&dir, shards, v_max, CommitHorizon::Unbounded))
+                    .expect("resume after torn WAL append");
+            let handle = svc.handle();
+            let s = handle.stats();
+            assert_eq!(s.edges_ingested as usize, point, "{stem}: recovered position");
+            // unbounded ⇒ no epoch ever commits ⇒ no checkpoint: the
+            // whole durable prefix is the replayed suffix
+            assert_eq!(s.wal_recovered_edges as usize, point, "{stem}");
+            assert_eq!(s.recovered_epochs, 0, "{stem}");
+            assert_eq!(s.checkpoints_written, 0, "{stem}");
+            assert_eq!(s.wal_bytes, 0, "{stem}: no bytes appended by this process yet");
+
+            for chunk in edges[point..].chunks(97) {
+                svc.push_chunk(chunk);
+            }
+            // the revived disk logs the re-pushed tail
+            assert!(handle.stats().wal_bytes > 0, "{stem}");
+            let res = svc.finish();
+            assert_eq!(res.edges_ingested as usize, m, "{stem}");
+            assert_eq!(
+                res.snapshot.labels_padded(n),
+                want,
+                "{stem}: crash at {point} (torn {torn}B) diverged after recovery"
+            );
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+/// A checkpoint that dies mid-write (partial temporary file, never
+/// renamed) must be invisible: recovery falls back to the previous
+/// checkpoint, replays the WAL suffix between the two cuts, and — with
+/// the restarted run re-draining on the same schedule — finishes
+/// bit-identical to the uninterrupted bounded-horizon run.
+#[test]
+fn crash_mid_checkpoint_falls_back_to_previous_checkpoint() {
+    let mut rng = Xoshiro256::new(0xD1CE);
+    let (n, edges) = random_stream(&mut rng, 384); // m = 1536
+    let m = edges.len();
+    let (shards, leaders, v_max) = (2usize, 2usize, 32u64);
+    let horizon = CommitHorizon::Edges(8); // epoch_len 2: commits every drain
+    const Q: usize = 256;
+
+    let mut reference = ClusterService::start({
+        let mut cfg = base_config(shards, v_max, horizon);
+        cfg.leaders = leaders;
+        cfg
+    });
+    push_with_schedule(&mut reference, &edges, 0, Q);
+    let want = reference.finish().snapshot.labels_padded(n);
+
+    let dir = scratch_dir("ckpt");
+    let mk_durable = |dir: &Path| {
+        let mut cfg = durable_config(dir, shards, v_max, horizon);
+        cfg.leaders = leaders;
+        cfg
+    };
+
+    // arm: the third checkpoint attempt (0-based nth = 2) tears after
+    // 41 bytes of its temporary file and the disk dies with it
+    let cfg = mk_durable(&dir);
+    let fp = cfg.failpoint.clone();
+    fp.arm(CrashPoint::Checkpoint { nth: 2, keep_bytes: 41 });
+    let mut doomed = ClusterService::start(cfg);
+    let handle = doomed.handle();
+    let mut pushed = 0usize;
+    while pushed < m && !fp.is_dead() {
+        doomed.push_chunk(&edges[pushed..pushed + Q]);
+        doomed.quiesce();
+        pushed += Q;
+        if !fp.is_dead() {
+            // this workload is cross-heavy enough that *every* quiesced
+            // drain commits fresh epochs, i.e. every quiesce checkpoints
+            // — the property the fall-back arithmetic below relies on
+            assert_eq!(
+                handle.stats().checkpoints_written as usize,
+                pushed / Q,
+                "expected a checkpoint at every quiesce (tune Q/horizon)"
+            );
+        }
+    }
+    assert!(fp.is_dead(), "checkpoint crash never tripped");
+    assert_eq!(pushed, 3 * Q, "disk must die at the third checkpoint attempt");
+    assert_eq!(handle.stats().checkpoints_written, 2);
+    drop(doomed);
+
+    // restart: the torn attempt is invisible — recovery lands on
+    // checkpoint #1 (cut 2Q) and replays exactly one interval of WAL
+    let mut svc = ClusterService::resume(mk_durable(&dir)).expect("resume past torn checkpoint");
+    let handle = svc.handle();
+    let s = handle.stats();
+    assert_eq!(s.edges_ingested as usize, 3 * Q, "durable prefix reaches the failed cut");
+    assert_eq!(s.wal_recovered_edges as usize, Q, "suffix-only replay: one interval");
+    assert!(s.recovered_epochs > 0, "committed history came from the checkpoint");
+    assert_eq!(s.last_checkpoint_epoch, s.recovered_epochs);
+
+    // re-drain at the crashed run's last cut, then keep its schedule:
+    // every drain of the uninterrupted run is reproduced exactly
+    svc.quiesce();
+    assert!(handle.stats().checkpoints_written >= 1, "revived disk checkpoints again");
+    push_with_schedule(&mut svc, &edges, 3 * Q, Q);
+    let res = svc.finish();
+    assert_eq!(res.edges_ingested as usize, m);
+    assert_eq!(
+        res.snapshot.labels_padded(n),
+        want,
+        "bounded-horizon recovery through a torn checkpoint diverged"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// Satellite: recover-at-every-epoch-boundary property.
+// ---------------------------------------------------------------------
+
+/// Property: for shards × leaders × horizon combinations, kill the
+/// stream at each quiesce boundary (torn WAL tail) and restart; under
+/// an unbounded horizon — and under a bounded horizon whenever
+/// recovery lands exactly on a checkpoint cut — the finished partition
+/// is bit-identical to the uninterrupted run on the same schedule.
+/// Elsewhere (bounded, recovery behind the last drain) exactness is
+/// out of contract, but accounting must still balance.
+#[test]
+fn recovery_at_every_quiesce_boundary_matches_uninterrupted() {
+    // prove the bounded exactness branch was actually exercised
+    let aligned_bounded_cases = std::cell::Cell::new(0u32);
+    property("recover at every quiesce boundary", 4, |rng, size| {
+        let (n, edges) = random_stream(rng, size);
+        let m = edges.len();
+        let q = (m / 4).max(4);
+        let v_max = 1 + rng.next_below(100);
+
+        for shards in [1usize, 2, 4] {
+            for leaders in [1usize, 2] {
+                for horizon in [CommitHorizon::Unbounded, CommitHorizon::Edges(8)] {
+                    let mut cfg = base_config(shards, v_max, horizon);
+                    cfg.leaders = leaders;
+                    let mut reference = ClusterService::start(cfg);
+                    push_with_schedule(&mut reference, &edges, 0, q);
+                    let want = reference.finish().snapshot.labels_padded(n);
+
+                    for k in 1..4usize {
+                        let cut = k * q;
+                        if cut >= m {
+                            break;
+                        }
+                        let dir = scratch_dir("prop");
+                        let mut cfg = durable_config(&dir, shards, v_max, horizon);
+                        cfg.leaders = leaders;
+                        let fp = cfg.failpoint.clone();
+                        fp.arm(CrashPoint::WalAppend {
+                            after_records: cut as u64,
+                            torn_bytes: 1 + (cut % (RECORD_BYTES - 1)),
+                        });
+                        let mut doomed = ClusterService::start(cfg);
+                        push_with_schedule(&mut doomed, &edges, 0, q);
+                        if !fp.is_dead() {
+                            return Err(format!("tear at {cut} never tripped (m={m})"));
+                        }
+                        drop(doomed);
+
+                        let mut cfg = durable_config(&dir, shards, v_max, horizon);
+                        cfg.leaders = leaders;
+                        let mut svc = match ClusterService::resume(cfg) {
+                            Ok(svc) => svc,
+                            Err(e) => return Err(format!("resume at {cut} failed: {e}")),
+                        };
+                        let s = svc.handle().stats();
+                        if s.edges_ingested as usize != cut {
+                            return Err(format!(
+                                "recovered to {} instead of the boundary {cut}",
+                                s.edges_ingested
+                            ));
+                        }
+                        // shards=1 has no cross edges at all, so the
+                        // bounded horizon is semantically unbounded
+                        let exact = horizon.is_unbounded()
+                            || shards == 1
+                            || s.wal_recovered_edges == 0;
+                        if !horizon.is_unbounded() && shards > 1 && s.wal_recovered_edges == 0 {
+                            // landed exactly on a checkpoint cut
+                            aligned_bounded_cases.set(aligned_bounded_cases.get() + 1);
+                            if s.recovered_epochs == 0 {
+                                return Err(format!(
+                                    "boundary {cut}: empty replay but no checkpoint epochs"
+                                ));
+                            }
+                        }
+                        push_with_schedule(&mut svc, &edges, cut, q);
+                        let res = svc.finish();
+                        let got = res.snapshot.labels_padded(n);
+                        if res.edges_ingested as usize != m {
+                            return Err(format!(
+                                "boundary {cut}: finished with {} of {m} edges",
+                                res.edges_ingested
+                            ));
+                        }
+                        if res.state().total_volume() != 2 * m as u64 {
+                            return Err(format!(
+                                "boundary {cut}: volume {} != 2m={}",
+                                res.state().total_volume(),
+                                2 * m
+                            ));
+                        }
+                        if exact && got != want {
+                            let diffs = got.iter().zip(&want).filter(|(a, b)| a != b).count();
+                            return Err(format!(
+                                "shards={shards} leaders={leaders} horizon={horizon:?} \
+                                 boundary {cut}: {diffs}/{n} labels diverged after recovery"
+                            ));
+                        }
+                        std::fs::remove_dir_all(&dir).ok();
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+    assert!(
+        aligned_bounded_cases.get() > 0,
+        "no bounded case ever recovered exactly at a checkpoint cut — \
+         the exactness branch went untested"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Satellite: byte-level WAL fault injection.
+// ---------------------------------------------------------------------
+
+/// The single WAL segment written by a clean single-shard run (every
+/// edge is local with one shard, so there is exactly one file set).
+fn only_wal_file(dir: &Path) -> PathBuf {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+        .expect("read wal dir")
+        .map(|e| e.expect("dir entry").path())
+        .filter(|p| p.extension().is_some_and(|x| x == "wal"))
+        .collect();
+    assert_eq!(files.len(), 1, "expected one WAL segment, got {files:?}");
+    files.pop().unwrap()
+}
+
+/// Write a 40-edge single-shard WAL to `dir` and return
+/// `(n, edges, reference labels, pristine file bytes)`.
+fn pristine_wal(dir: &Path) -> (usize, Vec<Edge>, Vec<u32>, Vec<u8>) {
+    let n = 41usize;
+    let edges: Vec<Edge> = (0u32..40).map(|i| Edge::new(i, i + 1)).collect();
+    let mut reference = ClusterService::start(base_config(1, 8, CommitHorizon::Unbounded));
+    reference.push_chunk(&edges);
+    let want = reference.finish().snapshot.labels_padded(n);
+
+    let mut cfg = durable_config(dir, 1, 8, CommitHorizon::Unbounded);
+    cfg.wal_segment_records = 1 << 20; // single segment for byte surgery
+    let mut svc = ClusterService::start(cfg);
+    svc.push_chunk(&edges);
+    let res = svc.finish(); // finish syncs: all 40 records durable
+    assert_eq!(res.edges_ingested, 40);
+    let bytes = std::fs::read(only_wal_file(dir)).expect("read pristine wal");
+    assert_eq!(bytes.len(), 40 * RECORD_BYTES, "record layout changed?");
+    (n, edges, want, bytes)
+}
+
+/// Truncate the WAL's last record at **every** byte offset: recovery
+/// must drop the torn record cleanly every time — never panic, never
+/// conjure a wrong-but-valid edge — recover exactly the 39 intact
+/// records, and reach the reference partition once the lost edge is
+/// re-pushed.
+#[test]
+fn torn_wal_tail_at_every_byte_offset_is_dropped_cleanly() {
+    let dir = scratch_dir("tear");
+    let (n, edges, want, pristine) = pristine_wal(&dir);
+    let file = only_wal_file(&dir);
+
+    for keep in 0..RECORD_BYTES {
+        std::fs::write(&file, &pristine[..39 * RECORD_BYTES + keep]).expect("truncate tail");
+        let mut svc =
+            ClusterService::resume(durable_config(&dir, 1, 8, CommitHorizon::Unbounded))
+                .unwrap_or_else(|e| panic!("torn tail at byte {keep} must recover, got {e}"));
+        let s = svc.handle().stats();
+        assert_eq!(s.edges_ingested, 39, "keep={keep}");
+        assert_eq!(s.wal_recovered_edges, 39, "keep={keep}");
+        svc.push_chunk(&edges[39..]);
+        let res = svc.finish();
+        assert_eq!(res.edges_ingested, 40, "keep={keep}");
+        assert_eq!(res.snapshot.labels_padded(n), want, "keep={keep}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A *full-width* record that fails its checksum is not a torn tail —
+/// it is corruption, and recovery must refuse with the typed error
+/// (naming the file and offset) instead of replaying a damaged edge.
+#[test]
+fn corrupt_wal_record_yields_typed_error_not_panic() {
+    let dir = scratch_dir("corrupt");
+    let (_n, _edges, _want, pristine) = pristine_wal(&dir);
+    let file = only_wal_file(&dir);
+
+    // flip one byte of record 10's payload; its checksum now fails
+    let mut bytes = pristine.clone();
+    bytes[10 * RECORD_BYTES + 13] ^= 0x5A;
+    std::fs::write(&file, &bytes).expect("write corrupted wal");
+    let err = ClusterService::resume(durable_config(&dir, 1, 8, CommitHorizon::Unbounded))
+        .err()
+        .expect("corrupt record must fail resume");
+    match err {
+        WalError::Corrupt { ref file, offset } => {
+            assert_eq!(offset, (10 * RECORD_BYTES) as u64, "offset names the bad record");
+            assert!(file.extension().is_some_and(|x| x == "wal"));
+        }
+        other => panic!("expected WalError::Corrupt, got {other:?}"),
+    }
+
+    // a checksum-valid record with a regressed sequence number is
+    // equally corrupt (duplicated/reordered history, not a torn tail)
+    let mut bytes = pristine.clone();
+    let dup: [u8; RECORD_BYTES] = bytes[..RECORD_BYTES].try_into().unwrap();
+    bytes[20 * RECORD_BYTES..21 * RECORD_BYTES].copy_from_slice(&dup);
+    std::fs::write(&file, &bytes).expect("write regressed wal");
+    let err = ClusterService::resume(durable_config(&dir, 1, 8, CommitHorizon::Unbounded))
+        .err()
+        .expect("sequence regression must fail resume");
+    assert!(matches!(err, WalError::Corrupt { .. }), "got {err:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Resuming under a configuration that does not match the checkpoint's
+/// fingerprint — or without a WAL directory at all — is a typed
+/// `Mismatch`, never a silent reinterpretation of durable state.
+#[test]
+fn mismatched_resume_configuration_yields_typed_error() {
+    let mut rng = Xoshiro256::new(0xFEED);
+    let (_n, edges) = random_stream(&mut rng, 192); // m = 768
+    let (shards, leaders, v_max) = (2usize, 2usize, 32u64);
+    let horizon = CommitHorizon::Edges(8);
+
+    let dir = scratch_dir("mismatch");
+    let mk = |dir: &Path, shards: usize, leaders: usize, v_max: u64, horizon: CommitHorizon| {
+        let mut cfg = durable_config(dir, shards, v_max, horizon);
+        cfg.leaders = leaders;
+        cfg
+    };
+    let mut svc = ClusterService::start(mk(&dir, shards, leaders, v_max, horizon));
+    let handle = svc.handle();
+    push_with_schedule(&mut svc, &edges, 0, 256);
+    assert!(handle.stats().checkpoints_written >= 1, "need a checkpoint to fingerprint");
+    drop(svc); // abort mid-stream; the checkpoint + WAL stay behind
+
+    let wrong = [
+        mk(&dir, 3, leaders, v_max, horizon),                    // shard count
+        mk(&dir, shards, 1, v_max, horizon),                     // leader count
+        mk(&dir, shards, leaders, v_max + 1, horizon),           // v_max
+        mk(&dir, shards, leaders, v_max, CommitHorizon::Unbounded), // horizon
+    ];
+    for cfg in wrong {
+        let err = ClusterService::resume(cfg).err().expect("fingerprint mismatch must fail");
+        assert!(matches!(err, WalError::Mismatch { .. }), "got {err:?}");
+    }
+    let err = ClusterService::resume(base_config(shards, v_max, horizon))
+        .err()
+        .expect("resume without wal_dir must fail");
+    assert!(matches!(err, WalError::Mismatch { .. }), "got {err:?}");
+
+    // and the matching fingerprint still resumes fine afterwards
+    let svc = ClusterService::resume(mk(&dir, shards, leaders, v_max, horizon))
+        .expect("matching fingerprint must resume");
+    assert!(svc.handle().stats().recovered_epochs > 0);
+    drop(svc);
+    std::fs::remove_dir_all(&dir).ok();
+}
