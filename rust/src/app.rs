@@ -15,6 +15,7 @@ use streamcom::coordinator::dynamic::{DynamicClusterer, Event};
 use streamcom::coordinator::parallel::{run_parallel, ParallelConfig};
 use streamcom::coordinator::selection::{select, NativeEngine, SelectionRule};
 use streamcom::coordinator::sweep::MultiSweep;
+use streamcom::graph::binfmt;
 use streamcom::graph::edge::Edge;
 use streamcom::graph::generators::presets;
 use streamcom::graph::generators::sbm::{self, SbmConfig};
@@ -23,6 +24,8 @@ use streamcom::graph::io;
 use streamcom::metrics;
 use streamcom::service::{ClusterService, CommitHorizon, ServiceConfig};
 use streamcom::stream::meter::Meter;
+use streamcom::stream::pscan::{ParallelScanner, ScanStats};
+use streamcom::stream::EdgeSource;
 use streamcom::util::cli::Args;
 
 const USAGE: &str = "\
@@ -47,11 +50,21 @@ COMMANDS:
                --preset/--scale/--input as above
                --base <u64>         ladder base [default 4]
                --engine <native|pjrt>  metric engine [default native]
+  convert    translate an edge file between text and segmented binary
+             (direction from the --out extension; always re-reads the
+             written file and verifies the round trip before reporting)
+               --input <path>       source (.bin = binary, else text;
+                                    text ids are interned to dense u32)
+               --out <path>         target (.bin = segmented binary v2,
+                                    else SNAP-style text)
+               --seg-records <k>    records per binary segment [default 65536]
   bench      regenerate the paper's tables / service benchmarks
                table1|table2|memory|service  --scale <f>
-               service prints the horizon sweep AND the ingest-path
-               microbench (shards × batch, pool hit/miss, router RMWs);
-               --json writes both to BENCH_service.json
+               service prints the horizon sweep, the ingest-path
+               microbench (shards × batch, pool hit/miss, router RMWs)
+               AND the parallel-scan sweep (text/binary × readers
+               {1,2,4}, partition checked against the in-memory
+               baseline); --json writes all three to BENCH_service.json
                (--out <path> overrides the file name)
   serve      long-lived sharded clustering service: ingests the workload
              while answering queries on stdin
@@ -75,6 +88,12 @@ COMMANDS:
                --resume             recover from the latest checkpoint + WAL
                                     suffix in --wal-dir, then skip the already-
                                     ingested prefix of the workload
+               --readers <k>        parallel source scan: k reader threads
+                                    split --input (binary: segment-aligned,
+                                    text: at newlines) and feed ingest in
+                                    file order — the final partition is
+                                    bit-identical to a single reader's
+                                    (0 = in-memory path [default])
                queries: '? <node>' community, 'top <k>' largest, 'stats', 'q'
                --dynamic            legacy event mode ('+ u v' insert,
                                     '- u v' delete, '?' report on stdin)
@@ -95,6 +114,7 @@ pub fn main_with_args(argv: Vec<String>) -> i32 {
         "generate" => cmd_generate(&args),
         "run" => cmd_run(&args),
         "sweep" => cmd_sweep(&args),
+        "convert" => cmd_convert(&args),
         "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
         "help" | "--help" | "-h" => {
@@ -250,6 +270,64 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `convert`: translate between SNAP text and the segmented binary
+/// format, re-reading the written file to verify the round trip. Text
+/// sources are interned to dense u32 ids (same as every other text
+/// ingest path); a text *target* cannot represent isolated nodes, so
+/// its node-count check is `≤` rather than `==`.
+fn cmd_convert(args: &Args) -> Result<(), String> {
+    let input = args.get("input").ok_or("convert needs --input <file>")?;
+    let out = args.get("out").ok_or("convert needs --out <file>")?;
+    let seg_records = args
+        .u64_or("seg-records", binfmt::DEFAULT_SEG_RECORDS)
+        .map_err(|e| e.to_string())?;
+    let el = if input.ends_with(".bin") {
+        io::read_binary_edges(input).map_err(|e| format!("read {input}: {e}"))?
+    } else {
+        io::read_text_edges(input).map_err(|e| format!("read {input}: {e}"))?.0
+    };
+    if out.ends_with(".bin") {
+        io::write_binary_edges_with(out, &el, seg_records)
+            .map_err(|e| format!("write {out}: {e}"))?;
+        let got = io::read_binary_edges(out).map_err(|e| format!("verify {out}: {e}"))?;
+        if got.n != el.n || got.edges != el.edges {
+            return Err(format!("round-trip verification failed for {out}: re-read differs"));
+        }
+        let h = binfmt::SegHeader::new(el.n, el.edges.len() as u64, seg_records)
+            .map_err(|e| e.to_string())?;
+        println!(
+            "convert: {input} → {out} (binary v{}, n={} m={}, {} segments of {seg_records}) — \
+             round trip verified",
+            binfmt::VERSION,
+            el.n,
+            el.m(),
+            h.seg_count
+        );
+    } else {
+        io::write_text_edges(out, &el).map_err(|e| format!("write {out}: {e}"))?;
+        // the text reader interns ids by first appearance, so the
+        // re-read compares through its dense→original map
+        let (got, back) = io::read_text_edges(out).map_err(|e| format!("verify {out}: {e}"))?;
+        let same = got.m() == el.m()
+            && got.n <= el.n
+            && got.edges.iter().zip(&el.edges).all(|(g2, e1)| {
+                back[g2.u as usize] == e1.u as u64 && back[g2.v as usize] == e1.v as u64
+            });
+        if !same {
+            return Err(format!(
+                "round-trip verification failed for {out}: re-read differs \
+                 (self-loop edges cannot survive a text round trip)"
+            ));
+        }
+        println!(
+            "convert: {input} → {out} (text, n={} m={}) — round trip verified",
+            el.n,
+            el.m()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> Result<(), String> {
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("table1");
     let scale = args.f64_or("scale", workloads::DEFAULT_SCALE).map_err(|e| e.to_string())?;
@@ -322,9 +400,14 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             // pool/RMW counters that pin the batch spine's amortization
             let (ti, ingest) = service_bench::run_ingest(&cfg);
             println!("{}", ti.render());
+            // the parallel-scan microbench: format × reader-count sweep
+            // through real files, partition checked against the
+            // in-memory baseline
+            let (tr, readers) = service_bench::run_readers(&cfg);
+            println!("{}", tr.render());
             if args.flag("json") {
                 let path = args.get_or("out", "BENCH_service.json");
-                std::fs::write(path, service_bench::to_json(&cfg, &rows, &ingest))
+                std::fs::write(path, service_bench::to_json(&cfg, &rows, &ingest, &readers))
                     .map_err(|e| format!("write {path}: {e}"))?;
                 println!("json → {path}");
             }
@@ -362,6 +445,11 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let v_max = args.u64_or("vmax", 64).map_err(|e| e.to_string())?;
     let shards = args.usize_or("shards", 4).map_err(|e| e.to_string())?;
     let pace = args.u64_or("pace", 0).map_err(|e| e.to_string())?;
+    let readers = args.usize_or("readers", 0).map_err(|e| e.to_string())?;
+    if readers > 0 && args.get("input").is_none() {
+        return Err("--readers needs --input <file> (the parallel scan reads the file directly)"
+            .to_string());
+    }
     let mut g = load_serve_workload(args)?;
     let truth = if g.truth.is_empty() { None } else { Some(g.truth.to_labels(g.n())) };
 
@@ -408,28 +496,51 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let stop_ingest = std::sync::Arc::clone(&stop);
     let edges = std::mem::take(&mut g.edges.edges);
     let skip = skip.min(edges.len());
-    let ingest = std::thread::spawn(move || {
-        'stream: for chunk in edges[skip..].chunks(8_192) {
-            if stop_ingest.load(std::sync::atomic::Ordering::Relaxed) {
-                break;
-            }
-            service.push_chunk(chunk);
-            if pace > 0 {
-                // sleep in short slices so 'q' interrupts a slow pace
-                // within ~100 ms instead of a full chunk interval
-                let mut left = chunk.len() as f64 / pace as f64;
-                while left > 0.0 {
-                    if stop_ingest.load(std::sync::atomic::Ordering::Relaxed) {
-                        break 'stream;
-                    }
-                    let slice = left.min(0.1);
-                    std::thread::sleep(std::time::Duration::from_secs_f64(slice));
-                    left -= slice;
+    // --readers: feed ingest from a parallel scan of the input file
+    // instead of the preloaded copy. The scanner re-emits edges in
+    // file order, so the final partition is bit-identical either way.
+    // A resume skip needs positional slicing, so it keeps the
+    // in-memory path.
+    let mut scan_info: Option<(usize, std::sync::Arc<ScanStats>)> = None;
+    let ingest = if readers > 0 && skip == 0 {
+        let input = args.get("input").expect("checked above").to_string();
+        let mut scanner = ParallelScanner::open(&input, readers, 8_192)
+            .map_err(|e| format!("parallel scan {input}: {e}"))?;
+        scan_info = Some((scanner.readers(), scanner.stats()));
+        println!("scan: {} reader threads over {input}", scanner.readers());
+        std::thread::spawn(move || {
+            let mut buf: Vec<Edge> = Vec::with_capacity(8_192);
+            while scanner.next_batch(&mut buf) > 0 {
+                if stop_ingest.load(std::sync::atomic::Ordering::Relaxed) {
+                    break;
+                }
+                service.push_chunk(&buf);
+                if pace > 0 && pace_sleep(buf.len(), pace, &stop_ingest) {
+                    break;
                 }
             }
+            if let Some(e) = scanner.take_error() {
+                eprintln!("scan error: {e} (stream ended short)");
+            }
+            service.finish()
+        })
+    } else {
+        if readers > 0 {
+            println!("note: resume skip > 0 — using the in-memory ingest path");
         }
-        service.finish()
-    });
+        std::thread::spawn(move || {
+            for chunk in edges[skip..].chunks(8_192) {
+                if stop_ingest.load(std::sync::atomic::Ordering::Relaxed) {
+                    break;
+                }
+                service.push_chunk(chunk);
+                if pace > 0 && pace_sleep(chunk.len(), pace, &stop_ingest) {
+                    break;
+                }
+            }
+            service.finish()
+        })
+    };
 
     let stdin = std::io::stdin();
     for line in stdin.lock().lines() {
@@ -548,6 +659,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         result.elapsed.as_secs_f64(),
         result.edges_ingested as f64 / result.elapsed.as_secs_f64().max(1e-12) / 1e6
     );
+    if let Some((nreaders, st)) = scan_info {
+        println!(
+            "scan: readers={nreaders} bytes={} segments={} oversized={} malformed={}",
+            memory::fmt_bytes(st.bytes_read()),
+            st.segments_verified(),
+            st.oversized_skipped(),
+            st.malformed_skipped()
+        );
+    }
     if let Some(truth) = truth {
         let full = result.snapshot.labels_padded(g.n());
         println!(
@@ -609,6 +729,21 @@ fn cmd_serve_dynamic(args: &Args) -> Result<(), String> {
     drain(&mut d, &mut pending);
     println!("bye: {} nodes, {} live edges", d.state().n(), d.live_edges());
     Ok(())
+}
+
+/// Sleep out `n_edges / pace` seconds in ≤ 100 ms slices so a raised
+/// stop flag interrupts a slow pace promptly; true means "stopped".
+fn pace_sleep(n_edges: usize, pace: u64, stop: &std::sync::atomic::AtomicBool) -> bool {
+    let mut left = n_edges as f64 / pace as f64;
+    while left > 0.0 {
+        if stop.load(std::sync::atomic::Ordering::Relaxed) {
+            return true;
+        }
+        let slice = left.min(0.1);
+        std::thread::sleep(std::time::Duration::from_secs_f64(slice));
+        left -= slice;
+    }
+    false
 }
 
 fn parse_pair(u: &str, v: &str) -> Result<(u32, u32), String> {

@@ -23,7 +23,9 @@
 //! can be recorded run over run.
 
 use crate::graph::generators::sbm::{self, SbmConfig};
+use crate::graph::io;
 use crate::service::{ClusterService, CommitHorizon, LeaderStats, ServiceConfig};
+use crate::stream::pscan::ParallelScanner;
 
 use super::memory::fmt_bytes;
 use super::report::Table;
@@ -32,6 +34,13 @@ use super::report::Table;
 pub const INGEST_SHARDS_SWEEP: &[usize] = &[1, 4, 8];
 /// Ingest batch sizes swept by the microbench (edges per `push_chunk`).
 pub const INGEST_BATCH_SWEEP: &[usize] = &[1, 256, 4096];
+/// Reader counts swept by the parallel-scan microbench.
+pub const INGEST_READERS_SWEEP: &[usize] = &[1, 2, 4];
+/// Edges per scanner chunk / ingest batch in the readers sweep.
+const SCAN_BATCH: usize = 4_096;
+/// Segment size for the bench's binary file — small enough that the
+/// bench-scale workload still splits across every swept reader count.
+const SCAN_SEG_RECORDS: u64 = 4_096;
 
 /// Workload + service shape for one `bench service` run.
 #[derive(Debug, Clone)]
@@ -220,6 +229,110 @@ pub fn run_ingest(cfg: &ServiceBenchConfig) -> (Table, Vec<IngestBenchRow>) {
     (table, rows)
 }
 
+/// One parallel-scan microbench measurement: a (format × readers) cell
+/// streaming a real file through [`ParallelScanner`] into the service.
+#[derive(Debug, Clone)]
+pub struct ReaderBenchRow {
+    /// Source file format (`"text"` or `"binary"`).
+    pub format: &'static str,
+    /// Reader threads requested for the scan.
+    pub readers: usize,
+    /// Edges ingested.
+    pub edges: u64,
+    /// File bytes parsed by the reader threads.
+    pub bytes: u64,
+    /// Wall-clock ingest + terminal replay time.
+    pub elapsed_secs: f64,
+    /// Ingest throughput.
+    pub edges_per_sec: f64,
+    /// Whether the final partition matched the in-memory baseline
+    /// bit-for-bit (the ordered scan makes this the invariant, not a
+    /// tolerance — a `false` here is a regression).
+    pub labels_match: bool,
+}
+
+/// The parallel-scan microbench: write the SBM workload to temporary
+/// text and binary files, then sweep [`INGEST_READERS_SWEEP`] reader
+/// counts per format, streaming each scan through the full service
+/// ingest (drains off). Every cell's final partition is compared
+/// against the in-memory `push_chunk` baseline; the ordered sequencer
+/// makes bit-identical the expected verdict at any reader count.
+pub fn run_readers(cfg: &ServiceBenchConfig) -> (Table, Vec<ReaderBenchRow>) {
+    let g = sbm::generate(&SbmConfig::equal(
+        cfg.communities,
+        cfg.community_size,
+        0.3,
+        0.002,
+        cfg.seed,
+    ));
+    let baseline = {
+        let mut config = ServiceConfig::new(cfg.shards, cfg.v_max);
+        config.drain_every = 0;
+        let mut svc = ClusterService::start(config);
+        for chunk in g.edges.edges.chunks(SCAN_BATCH) {
+            svc.push_chunk(chunk);
+        }
+        svc.finish().labels()
+    };
+
+    let dir = std::env::temp_dir();
+    let stem = format!("streamcom_bench_scan_{}_{}", std::process::id(), cfg.seed);
+    let txt = dir.join(format!("{stem}.txt"));
+    let bin = dir.join(format!("{stem}.bin"));
+    io::write_text_edges(&txt, &g.edges).expect("write bench text file");
+    io::write_binary_edges_with(&bin, &g.edges, SCAN_SEG_RECORDS).expect("write bench binary file");
+
+    let mut table = Table::new(
+        &format!(
+            "parallel scan: {} (n={} m={}, {} shards, file source, drains off)",
+            g.name,
+            g.n(),
+            g.m(),
+            cfg.shards
+        ),
+        &["format", "readers", "Medges/s", "MB/s", "partition"],
+    );
+    let mut rows = Vec::new();
+    for (format, path) in [("text", &txt), ("binary", &bin)] {
+        for &readers in INGEST_READERS_SWEEP {
+            let mut config = ServiceConfig::new(cfg.shards, cfg.v_max);
+            config.drain_every = 0;
+            let mut svc = ClusterService::start(config);
+            let mut scanner =
+                ParallelScanner::open(path, readers, SCAN_BATCH).expect("open bench scan");
+            let stats = scanner.stats();
+            svc.ingest(&mut scanner, SCAN_BATCH);
+            let err = scanner.take_error();
+            let res = svc.finish();
+            let elapsed = res.elapsed.as_secs_f64().max(1e-9);
+            let row = ReaderBenchRow {
+                format,
+                readers,
+                edges: res.edges_ingested,
+                bytes: stats.bytes_read(),
+                elapsed_secs: elapsed,
+                edges_per_sec: res.edges_ingested as f64 / elapsed,
+                labels_match: err.is_none() && res.labels() == baseline,
+            };
+            table.push_row(vec![
+                row.format.to_string(),
+                row.readers.to_string(),
+                format!("{:.2}", row.edges_per_sec / 1e6),
+                format!("{:.1}", row.bytes as f64 / elapsed / 1e6),
+                if row.labels_match {
+                    "exact".to_string()
+                } else {
+                    "MISMATCH".to_string()
+                },
+            ]);
+            rows.push(row);
+        }
+    }
+    std::fs::remove_file(&txt).ok();
+    std::fs::remove_file(&bin).ok();
+    (table, rows)
+}
+
 /// Stream one SBM workload through the service per configured horizon
 /// and collect the table + raw rows.
 pub fn run(cfg: &ServiceBenchConfig) -> (Table, Vec<ServiceBenchRow>) {
@@ -304,11 +417,13 @@ pub fn run(cfg: &ServiceBenchConfig) -> (Table, Vec<ServiceBenchRow>) {
 /// Render the rows as the `BENCH_service.json` document (hand-rolled —
 /// the offline build has no serde; every value is numeric so no string
 /// escaping is required beyond the fixed keys). `ingest` carries the
-/// shards × batch microbench sweep next to the horizon rows.
+/// shards × batch microbench sweep and `readers` the parallel-scan
+/// format × reader-count sweep next to the horizon rows.
 pub fn to_json(
     cfg: &ServiceBenchConfig,
     rows: &[ServiceBenchRow],
     ingest: &[IngestBenchRow],
+    readers: &[ReaderBenchRow],
 ) -> String {
     let mut out = String::from("{\n  \"bench\": \"service\",\n");
     out.push_str(&format!(
@@ -378,6 +493,22 @@ pub fn to_json(
             if i + 1 < ingest.len() { "," } else { "" }
         ));
     }
+    out.push_str("  ],\n  \"readers\": [\n");
+    for (i, r) in readers.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"format\": \"{}\", \"readers\": {}, \"edges\": {}, \
+             \"bytes\": {}, \"elapsed_secs\": {:.6}, \
+             \"edges_per_sec\": {:.1}, \"labels_match\": {}}}{}\n",
+            r.format,
+            r.readers,
+            r.edges,
+            r.bytes,
+            r.elapsed_secs,
+            r.edges_per_sec,
+            r.labels_match,
+            if i + 1 < readers.len() { "," } else { "" }
+        ));
+    }
     out.push_str("  ]\n}\n");
     out
 }
@@ -412,12 +543,13 @@ mod tests {
         assert!(bounded.cross_freed_bytes > 0);
         assert_eq!(bounded.per_leader.len(), cfg.shards);
 
-        let json = to_json(&cfg, &rows, &[]);
+        let json = to_json(&cfg, &rows, &[], &[]);
         assert!(json.starts_with('{') && json.trim_end().ends_with('}'));
         assert!(json.contains("\"bench\": \"service\""));
         assert!(json.contains("\"delta_last_bytes\""));
         assert!(json.contains("\"per_leader\""));
         assert!(json.contains("\"ingest\""));
+        assert!(json.contains("\"readers\""));
         // two rows, comma-separated exactly once at the top level list
         assert_eq!(json.matches("\"horizon\"").count(), 2);
     }
@@ -456,7 +588,30 @@ mod tests {
             small.rmws_per_kedge()
         );
 
-        let json = to_json(&cfg, &[], &rows);
+        let json = to_json(&cfg, &[], &rows, &[]);
         assert_eq!(json.matches("\"rmws_per_kedge\"").count(), cells);
+    }
+
+    #[test]
+    fn readers_sweep_covers_both_formats_and_matches_the_baseline() {
+        let cfg = tiny();
+        let (table, rows) = run_readers(&cfg);
+        let cells = 2 * INGEST_READERS_SWEEP.len();
+        assert_eq!(rows.len(), cells);
+        assert_eq!(table.rows.len(), cells);
+        assert_eq!(rows.iter().filter(|r| r.format == "text").count(), cells / 2);
+        assert_eq!(rows.iter().filter(|r| r.format == "binary").count(), cells / 2);
+        for r in &rows {
+            assert!(r.edges > 0 && r.bytes > 0 && r.edges_per_sec > 0.0, "{r:?}");
+            // every cell ingests the whole file exactly once
+            assert_eq!(r.edges, rows[0].edges, "{r:?}");
+            // the scan is ordered: any reader count reproduces the
+            // in-memory baseline partition bit-for-bit
+            assert!(r.labels_match, "{r:?}");
+        }
+
+        let json = to_json(&cfg, &[], &[], &rows);
+        assert_eq!(json.matches("\"labels_match\"").count(), cells);
+        assert!(!json.contains("\"labels_match\": false"));
     }
 }

@@ -5,21 +5,25 @@
 //! Arbitrary (sparse) node ids are remapped to dense `u32` on ingest and
 //! the mapping is returned so results can be translated back.
 //!
-//! Binary format (`.bin`): little-endian header `[magic u32, n u32,
-//! m u64]` followed by `m` pairs of `u32`. This is what the Table-1
-//! benches stream from — it removes the text-parsing confound when
-//! comparing against the `cat` lower bound, matching the paper's setup
-//! where the algorithm reads a raw edge list.
+//! Binary format (`.bin`): the versioned, checksummed, segmented
+//! layout defined in [`super::binfmt`] — a fixed 48 B header
+//! (magic/version/n/m + the computed segment table) followed by
+//! independently scannable, individually checksummed segments of
+//! fixed-width `u32` pairs. This is what the Table-1 benches stream
+//! from — it removes the text-parsing confound when comparing against
+//! the `cat` lower bound — and what the parallel source scan
+//! (`stream::pscan`) splits segment-aligned across reader threads.
+//! `streamcom convert` moves between the two formats with round-trip
+//! verification.
 
 use std::collections::HashMap;
 use std::fs::File;
 use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
+use super::binfmt;
 use super::edge::{Edge, EdgeList};
 use super::ground_truth::GroundTruth;
-
-const BIN_MAGIC: u32 = 0x5354_4d43; // "STMC"
 
 /// Parse one text line as an edge; `None` for comments/blank lines.
 /// Thin `&str` wrapper over the byte scanner (`parse_edge_bytes`) so
@@ -129,6 +133,49 @@ pub(crate) fn parse_edge_bytes(line: &[u8]) -> LineParse<'_> {
     }
 }
 
+/// Frame one `fill_buf` chunk into newline-terminated lines, stitching
+/// lines that span chunk boundaries through `carry`. This is the single
+/// line-framing loop shared by the strict batch reader
+/// ([`read_text_edges`]) and the lenient streaming transport
+/// (`stream::source::TextFileSource`) — it used to be duplicated in
+/// both, with a NOTE admitting a boundary fix to one likely applied to
+/// the other; now a carry/refill edge case has exactly one home, pinned
+/// by a shared fuzz test (`tests/edge_io.rs`).
+///
+/// `on_line` sees each complete line (without its `\n`); returning
+/// `Ok(false)` stops framing early (capacity-bounded consumers), and
+/// the returned byte count — how much of `chunk` was consumed, through
+/// that line's newline — must be passed to `BufRead::consume`. At the
+/// end of the chunk a trailing partial line is saved into `carry` (and
+/// counted as consumed): on EOF the caller flushes `carry` as the final
+/// unterminated line.
+pub(crate) fn frame_lines<E>(
+    chunk: &[u8],
+    carry: &mut Vec<u8>,
+    mut on_line: impl FnMut(&[u8]) -> Result<bool, E>,
+) -> Result<usize, E> {
+    let mut start = 0usize;
+    while let Some(pos) = chunk[start..].iter().position(|&b| b == b'\n') {
+        let line_end = start + pos;
+        let keep_going = if carry.is_empty() {
+            on_line(&chunk[start..line_end])?
+        } else {
+            carry.extend_from_slice(&chunk[start..line_end]);
+            let r = on_line(carry)?;
+            carry.clear();
+            r
+        };
+        start = line_end + 1;
+        if !keep_going {
+            return Ok(start);
+        }
+    }
+    if start < chunk.len() {
+        carry.extend_from_slice(&chunk[start..]);
+    }
+    Ok(chunk.len())
+}
+
 /// Read a SNAP-style text edge list, remapping ids to dense u32.
 /// Returns the edge list and the original ids indexed by dense id.
 ///
@@ -203,13 +250,10 @@ pub fn read_text_edges<P: AsRef<Path>>(path: P) -> io::Result<(EdgeList, Vec<u64
         }
     }
 
-    // fill_buf + carry: scan lines in place in the reader's buffer; a
-    // line that spans a refill boundary is stitched in `carry`.
-    // NOTE: `stream::source::TextFileSource::next_batch` carries a
-    // sibling of this framing loop (incremental, capacity-bounded,
-    // infallible — different enough that unifying them would complicate
-    // both); a fix to a carry/boundary edge case here likely applies
-    // there too.
+    // fill_buf + frame_lines: scan lines in place in the reader's
+    // buffer; a line spanning a refill boundary is stitched in `carry`
+    // by the shared framing helper (also used by the streaming
+    // `stream::source::TextFileSource`).
     let mut carry: Vec<u8> = Vec::with_capacity(64);
     let mut lineno: u64 = 0;
     loop {
@@ -222,23 +266,10 @@ pub fn read_text_edges<P: AsRef<Path>>(path: P) -> io::Result<(EdgeList, Vec<u64
             }
             break;
         }
-        let mut start = 0usize;
-        while let Some(pos) = chunk[start..].iter().position(|&b| b == b'\n') {
+        let consumed = frame_lines(chunk, &mut carry, |line| {
             lineno += 1;
-            let line = &chunk[start..start + pos];
-            if carry.is_empty() {
-                consume_line(line, lineno, &mut map, &mut back, &mut edges)?;
-            } else {
-                carry.extend_from_slice(line);
-                consume_line(&carry, lineno, &mut map, &mut back, &mut edges)?;
-                carry.clear();
-            }
-            start += pos + 1;
-        }
-        if start < chunk.len() {
-            carry.extend_from_slice(&chunk[start..]);
-        }
-        let consumed = chunk.len();
+            consume_line(line, lineno, &mut map, &mut back, &mut edges).map(|()| true)
+        })?;
         reader.consume(consumed);
     }
     Ok((EdgeList::new(back.len(), edges), back))
@@ -254,40 +285,61 @@ pub fn write_text_edges<P: AsRef<Path>>(path: P, el: &EdgeList) -> io::Result<()
     w.flush()
 }
 
-/// Write the compact binary format.
+/// Write the segmented binary format ([`binfmt`]) with the default
+/// segment size. Hard-errors (`InvalidInput`) when `el.n` exceeds the
+/// format's u32 id space — the v1 writer silently truncated `el.n as
+/// u32` into a wrong-but-plausible header.
 pub fn write_binary_edges<P: AsRef<Path>>(path: P, el: &EdgeList) -> io::Result<()> {
+    write_binary_edges_with(path, el, binfmt::DEFAULT_SEG_RECORDS)
+}
+
+/// Write the segmented binary format with `seg_records` records per
+/// full segment (the knob behind `convert --seg-records`; every full
+/// segment holds exactly `seg_records` records, which is what keeps
+/// segment offsets computable for the parallel scan).
+pub fn write_binary_edges_with<P: AsRef<Path>>(
+    path: P,
+    el: &EdgeList,
+    seg_records: u64,
+) -> io::Result<()> {
+    let header = binfmt::SegHeader::new(el.n, el.edges.len() as u64, seg_records)?;
     let mut w = BufWriter::with_capacity(1 << 20, File::create(path)?);
-    w.write_all(&BIN_MAGIC.to_le_bytes())?;
-    w.write_all(&(el.n as u32).to_le_bytes())?;
-    w.write_all(&(el.edges.len() as u64).to_le_bytes())?;
-    for e in &el.edges {
-        w.write_all(&e.u.to_le_bytes())?;
-        w.write_all(&e.v.to_le_bytes())?;
+    w.write_all(&header.encode())?;
+    let mut block = Vec::new();
+    for seg in el.edges.chunks(seg_records as usize) {
+        binfmt::encode_segment(&mut block, seg);
+        w.write_all(&block)?;
     }
     w.flush()
 }
 
-/// Read the compact binary format.
+/// Read the segmented binary format, verifying the header and every
+/// segment checksum.
+///
+/// Hostile-input hardened: every header-derived size is cross-checked
+/// against the actual file length with checked arithmetic
+/// ([`binfmt::SegHeader::validate_file_len`]) *before* any edge-sized
+/// allocation — a corrupt or hostile header (say, a tiny file claiming
+/// m = 2^61) is an `InvalidData` error, never an unbounded
+/// `vec![0; m * 8]`.
 pub fn read_binary_edges<P: AsRef<Path>>(path: P) -> io::Result<EdgeList> {
-    let mut r = BufReader::with_capacity(1 << 20, File::open(path)?);
-    let mut head = [0u8; 16];
+    let f = File::open(path)?;
+    let file_len = f.metadata()?.len();
+    let mut r = BufReader::with_capacity(1 << 20, f);
+    let mut head = [0u8; binfmt::HEADER_BYTES];
     r.read_exact(&mut head)?;
-    let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
-    if magic != BIN_MAGIC {
-        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic"));
+    let header = binfmt::SegHeader::decode(&head)?;
+    header.validate_file_len(file_len)?;
+    // validate_file_len proved every size below is backed by real bytes
+    let mut edges = Vec::with_capacity(header.m as usize);
+    let mut block = Vec::new();
+    for seg in 0..header.seg_count {
+        let records = header.records_in(seg);
+        block.resize((binfmt::SEG_OVERHEAD_BYTES + records * binfmt::RECORD_BYTES) as usize, 0);
+        r.read_exact(&mut block)?;
+        binfmt::decode_segment(&block, records, seg, &mut edges)?;
     }
-    let n = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
-    let m = u64::from_le_bytes(head[8..16].try_into().unwrap()) as usize;
-    let mut buf = vec![0u8; m * 8];
-    r.read_exact(&mut buf)?;
-    let mut edges = Vec::with_capacity(m);
-    for c in buf.chunks_exact(8) {
-        edges.push(Edge::new(
-            u32::from_le_bytes(c[0..4].try_into().unwrap()),
-            u32::from_le_bytes(c[4..8].try_into().unwrap()),
-        ));
-    }
-    Ok(EdgeList::new(n, edges))
+    Ok(EdgeList::new(header.n as usize, edges))
 }
 
 /// Write SNAP-style ground truth: one community per line, node ids
@@ -302,19 +354,29 @@ pub fn write_ground_truth<P: AsRef<Path>>(path: P, gt: &GroundTruth) -> io::Resu
 }
 
 /// Read SNAP-style ground truth.
+///
+/// A token that fails to parse as a node id is a hard `InvalidData`
+/// error, matching [`read_text_edges`]'s bad-target contract — the old
+/// `filter_map(|t| t.parse().ok())` silently dropped it, so a corrupt
+/// ground-truth file quietly shifted every NMI/F1 score downstream.
 pub fn read_ground_truth<P: AsRef<Path>>(path: P) -> io::Result<GroundTruth> {
     let f = File::open(path)?;
     let mut communities = Vec::new();
-    for line in BufReader::new(f).lines() {
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
         let line = line?;
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
-        let c: Vec<u32> = line
-            .split_whitespace()
-            .filter_map(|t| t.parse().ok())
-            .collect();
+        let mut c: Vec<u32> = Vec::new();
+        for t in line.split_whitespace() {
+            c.push(t.parse().map_err(|_| {
+                io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("ground truth line {}: unparseable node id {t:?}", lineno + 1),
+                )
+            })?);
+        }
         if !c.is_empty() {
             communities.push(c);
         }
@@ -495,10 +557,127 @@ mod tests {
 
     #[test]
     fn binary_rejects_bad_magic() {
+        // too short for even a header
         let p = tmp("bad.bin");
         std::fs::write(&p, [0u8; 32]).unwrap();
         assert!(read_binary_edges(&p).is_err());
+        // a full-size header of garbage names the magic in its error
+        std::fs::write(&p, [0u8; 48]).unwrap();
+        let err = read_binary_edges(&p).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn binary_multi_segment_roundtrip() {
+        // 10 edges in segments of 4 → segments of 4, 4, 2
+        let p = tmp("multiseg.bin");
+        let el = EdgeList::new(11, (0..10).map(|i| Edge::new(i, i + 1)).collect());
+        write_binary_edges_with(&p, &el, 4).unwrap();
+        let h = binfmt::SegHeader::new(11, 10, 4).unwrap();
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), h.file_len().unwrap());
+        let got = read_binary_edges(&p).unwrap();
+        assert_eq!(got.n, 11);
+        assert_eq!(got.edges, el.edges);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn binary_empty_roundtrip() {
+        let p = tmp("empty.bin");
+        let el = EdgeList::new(3, vec![]);
+        write_binary_edges(&p, &el).unwrap();
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), binfmt::HEADER_BYTES as u64);
+        let got = read_binary_edges(&p).unwrap();
+        assert_eq!(got.n, 3);
+        assert!(got.edges.is_empty());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn binary_rejects_hostile_header_before_allocating() {
+        // a 48-byte file whose (checksum-valid) header claims m = 2^61:
+        // the length cross-check must fail before any edge-sized buffer
+        // is sized — this test completing at all is the proof
+        let p = tmp("hostile.bin");
+        let h = binfmt::SegHeader::new(8, 1u64 << 61, binfmt::DEFAULT_SEG_RECORDS).unwrap();
+        std::fs::write(&p, h.encode()).unwrap();
+        let err = read_binary_edges(&p).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // …and a plausible-but-truncated m is caught the same way
+        let h = binfmt::SegHeader::new(8, 1 << 20, binfmt::DEFAULT_SEG_RECORDS).unwrap();
+        std::fs::write(&p, h.encode()).unwrap();
+        let err = read_binary_edges(&p).unwrap_err();
+        assert!(err.to_string().contains("does not match"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn binary_detects_payload_corruption() {
+        let p = tmp("flip.bin");
+        let el = EdgeList::new(9, (0..8).map(|i| Edge::new(i, i + 1)).collect());
+        write_binary_edges_with(&p, &el, 3).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let off = binfmt::HEADER_BYTES + 8 + 2; // inside segment 0's records
+        bytes[off] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_binary_edges(&p).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        assert!(err.to_string().contains("segment 0"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn binary_writer_hard_errors_on_oversized_n() {
+        // the v1 writer wrote (n as u32) silently; n beyond the id
+        // space must now refuse to produce a wrong-but-plausible header
+        let p = tmp("wide_n.bin");
+        let el = EdgeList::new((1usize << 32) + 1, vec![Edge::new(0, 1)]);
+        let err = write_binary_edges(&p, &el).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+        assert!(err.to_string().contains("u32 id space"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn ground_truth_errors_on_garbage_token() {
+        // a corrupt token mid-line used to be silently dropped, quietly
+        // shifting NMI/F1 — it must be a hard error with a line number
+        let p = tmp("gt_bad.txt");
+        std::fs::write(&p, "0\t1\t2\n3\tfour\t5\n6\t7\n").unwrap();
+        let err = read_ground_truth(&p).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        let msg = err.to_string();
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("four"), "{msg}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn frame_lines_stops_early_and_reports_consumed_bytes() {
+        // Ok(false) from the callback stops framing mid-chunk; the
+        // returned count points just past that line's newline so the
+        // caller's consume() leaves the rest for the next call
+        let chunk = b"aa\nbb\ncc\ndd";
+        let mut carry = Vec::new();
+        let mut seen: Vec<Vec<u8>> = Vec::new();
+        let consumed = frame_lines(chunk, &mut carry, |line| {
+            seen.push(line.to_vec());
+            Ok::<bool, std::convert::Infallible>(seen.len() < 2)
+        })
+        .unwrap();
+        assert_eq!(consumed, 6); // "aa\nbb\n"
+        assert_eq!(seen, vec![b"aa".to_vec(), b"bb".to_vec()]);
+        assert!(carry.is_empty());
+        // resuming on the remainder frames "cc" and carries "dd"
+        let consumed = frame_lines(&chunk[6..], &mut carry, |line| {
+            seen.push(line.to_vec());
+            Ok::<bool, std::convert::Infallible>(true)
+        })
+        .unwrap();
+        assert_eq!(consumed, 5);
+        assert_eq!(seen.last().unwrap(), b"cc");
+        assert_eq!(carry, b"dd");
     }
 
     #[test]

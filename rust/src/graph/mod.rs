@@ -7,6 +7,7 @@
 //! [`ground_truth::GroundTruth`]; the experiments need the
 //! [`generators`] that produce SNAP-shaped workloads.
 
+pub mod binfmt;
 pub mod csr;
 pub mod edge;
 pub mod generators;

@@ -13,11 +13,16 @@
 //!   the parallel coordinator; edges whose endpoints map to different
 //!   shards are routed to the *leader* queue (cross-shard edges need
 //!   global state — see `coordinator/parallel.rs`).
+//! * [`pscan`] — parallel source scan: N reader threads each parse a
+//!   byte range of one file (binary: segment-aligned; text: newline-
+//!   aligned) and a sequencer re-emits them in file order, so the
+//!   stream is bit-identical to a single reader's at any reader count.
 //! * [`meter`] — throughput metering (edges/s, bytes/s) for the
 //!   Table 1 harness and the §Perf pass.
 
 pub mod chunk;
 pub mod meter;
+pub mod pscan;
 pub mod shard;
 pub mod source;
 

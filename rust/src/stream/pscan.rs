@@ -1,0 +1,565 @@
+//! Parallel source scan: N reader threads, one ordered edge stream.
+//!
+//! The paper's bottleneck at 10^9 edges is *reading* the stream, not
+//! clustering it — parsing text and verifying segment checksums costs
+//! far more per edge than the router's shift-hash. This module
+//! parallelises exactly that part: each reader thread owns a byte range
+//! of the input (binary: segment-aligned via the computable offsets in
+//! `graph::binfmt`; text: advanced to newline boundaries), parses it
+//! into edge chunks, and ships them through its own bounded queue.
+//!
+//! A single sequencer — the [`ParallelScanner`]'s [`EdgeSource`]
+//! implementation — drains those queues **in range order**, so the
+//! global edge order equals file order for *any* reader count. That is
+//! deliberately stronger than the "semantics-equal" the property
+//! suites require: the final partition is bit-identical whether one
+//! reader scans the file or eight do, WAL sequence numbers stay
+//! well-defined, and offline tests can assert exact equality. The
+//! single ingest thread (`Router::push_batch` is one-pass by design)
+//! was never the bottleneck; parse + checksum was, and that is what
+//! runs concurrently here.
+//!
+//! Memory is bounded by construction: each reader queue holds at most
+//! [`READ_AHEAD_CHUNKS`] chunks of ≤ `batch` edges, so a stalled
+//! consumer backpressures every reader through the channel's blocking
+//! `send` — the same discipline as the service mailboxes.
+//!
+//! `EdgeSource::next_batch` has no error channel, so reader failures
+//! (I/O error, checksum mismatch) stop that reader's queue and park
+//! the first message in [`ParallelScanner::take_error`]; callers check
+//! it after the drain, exactly like `source::BinaryFileSource::error`.
+
+use std::fs::File;
+use std::io::{self, BufRead, BufReader, Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+
+use super::source::{emit_lenient, EdgeSource};
+use crate::graph::binfmt;
+use crate::graph::edge::Edge;
+use crate::graph::io::frame_lines;
+use crate::util::channel::Channel;
+
+/// Chunks each reader may buffer ahead of the sequencer. Together with
+/// the batch size this bounds scan memory at
+/// `readers × READ_AHEAD_CHUNKS × batch` edges.
+pub const READ_AHEAD_CHUNKS: usize = 8;
+
+/// Input format of a scanned edge file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScanFormat {
+    /// SNAP-style text (`u <ws> v` lines) — ranges split at newlines.
+    Text,
+    /// Segmented binary (`graph::binfmt`) — ranges split at segments.
+    Binary,
+}
+
+impl ScanFormat {
+    /// Infer the format from the file extension (`.bin` ⇒ binary),
+    /// matching the convention the CLI already uses everywhere else.
+    pub fn infer<P: AsRef<Path>>(path: P) -> Self {
+        match path.as_ref().extension().and_then(|e| e.to_str()) {
+            Some("bin") => ScanFormat::Binary,
+            _ => ScanFormat::Text,
+        }
+    }
+}
+
+/// Shared scan counters, updated by reader threads (relaxed atomics —
+/// they are observability, not synchronisation).
+#[derive(Debug, Default)]
+pub struct ScanStats {
+    bytes_read: AtomicU64,
+    oversized: AtomicU64,
+    malformed: AtomicU64,
+    segments_verified: AtomicU64,
+}
+
+impl ScanStats {
+    /// Total bytes consumed across all readers.
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read.load(Ordering::Relaxed)
+    }
+
+    /// Text lines skipped because an id exceeded `u32` (see
+    /// `source::TextFileSource::oversized_skipped`).
+    pub fn oversized_skipped(&self) -> u64 {
+        self.oversized.load(Ordering::Relaxed)
+    }
+
+    /// Text lines skipped because the target was missing/malformed
+    /// (see `source::TextFileSource::malformed_skipped`).
+    pub fn malformed_skipped(&self) -> u64 {
+        self.malformed.load(Ordering::Relaxed)
+    }
+
+    /// Binary segments whose record count + checksum verified.
+    pub fn segments_verified(&self) -> u64 {
+        self.segments_verified.load(Ordering::Relaxed)
+    }
+}
+
+/// Plan newline-aligned byte ranges for `readers` text readers: raw
+/// even splits advanced to the next line start, so every line belongs
+/// to exactly one range and concatenating the ranges in order yields
+/// the file verbatim. Empty ranges (tiny files) are dropped.
+pub fn plan_text_ranges<P: AsRef<Path>>(path: P, readers: usize) -> io::Result<Vec<(u64, u64)>> {
+    let mut f = File::open(path)?;
+    let len = f.metadata()?.len();
+    let readers = readers.max(1) as u64;
+    let mut bounds = Vec::with_capacity(readers as usize + 1);
+    bounds.push(0u64);
+    for i in 1..readers {
+        let target = ((len as u128 * i as u128) / readers as u128) as u64;
+        bounds.push(next_line_start(&mut f, target, len)?);
+    }
+    bounds.push(len);
+    Ok(bounds.windows(2).filter(|w| w[1] > w[0]).map(|w| (w[0], w[1])).collect())
+}
+
+/// First byte position at or after `target` that starts a line (i.e.
+/// just past the next `\n`), or `len` when no newline follows.
+fn next_line_start(f: &mut File, target: u64, len: u64) -> io::Result<u64> {
+    if target == 0 || target >= len {
+        return Ok(target.min(len));
+    }
+    f.seek(SeekFrom::Start(target))?;
+    let mut pos = target;
+    let mut probe = [0u8; 4096];
+    loop {
+        let n = f.read(&mut probe)?;
+        if n == 0 {
+            return Ok(len);
+        }
+        if let Some(i) = probe[..n].iter().position(|&b| b == b'\n') {
+            return Ok(pos + i as u64 + 1);
+        }
+        pos += n as u64;
+    }
+}
+
+/// Split `seg_count` segments into contiguous `[s0, s1)` ranges, one
+/// per reader (readers clamped to the segment count — a two-segment
+/// file gets two readers no matter what was asked for).
+pub fn plan_segment_ranges(seg_count: u64, readers: usize) -> Vec<(u64, u64)> {
+    if seg_count == 0 {
+        return Vec::new();
+    }
+    let readers = (readers.max(1) as u64).min(seg_count);
+    let per = seg_count / readers;
+    let extra = seg_count % readers;
+    let mut ranges = Vec::with_capacity(readers as usize);
+    let mut s = 0u64;
+    for i in 0..readers {
+        let take = per + u64::from(i < extra);
+        ranges.push((s, s + take));
+        s += take;
+    }
+    ranges
+}
+
+fn run_text_reader(
+    path: &Path,
+    start: u64,
+    end: u64,
+    batch: usize,
+    tx: &Channel<Vec<Edge>>,
+    stats: &ScanStats,
+) -> io::Result<()> {
+    let mut f = File::open(path)?;
+    f.seek(SeekFrom::Start(start))?;
+    let mut reader = BufReader::with_capacity(1 << 20, f.take(end - start));
+    let mut carry: Vec<u8> = Vec::with_capacity(64);
+    let mut buf: Vec<Edge> = Vec::with_capacity(batch);
+    let mut oversized = 0u64;
+    let mut malformed = 0u64;
+    let mut bytes = 0u64;
+    let mut hung_up = false;
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            if !carry.is_empty() {
+                // the final unterminated line (last range only — every
+                // other range ends just past a newline by construction;
+                // its bytes were already counted when stashed)
+                let tail = std::mem::take(&mut carry);
+                emit_lenient(&tail, &mut buf, &mut oversized, &mut malformed);
+            }
+            break;
+        }
+        let consumed = match frame_lines(chunk, &mut carry, |line| {
+            emit_lenient(line, &mut buf, &mut oversized, &mut malformed);
+            if buf.len() >= batch {
+                let full = std::mem::replace(&mut buf, Vec::with_capacity(batch));
+                if tx.send(full).is_err() {
+                    // receiver dropped the scanner: benign early stop
+                    hung_up = true;
+                    return Ok(false);
+                }
+            }
+            Ok::<bool, std::convert::Infallible>(true)
+        }) {
+            Ok(c) => c,
+            Err(never) => match never {},
+        };
+        bytes += consumed as u64;
+        reader.consume(consumed);
+        if hung_up {
+            break;
+        }
+    }
+    if !buf.is_empty() && !hung_up {
+        let _ = tx.send(buf);
+    }
+    stats.bytes_read.fetch_add(bytes, Ordering::Relaxed);
+    stats.oversized.fetch_add(oversized, Ordering::Relaxed);
+    stats.malformed.fetch_add(malformed, Ordering::Relaxed);
+    Ok(())
+}
+
+fn run_binary_reader(
+    path: &Path,
+    header: binfmt::SegHeader,
+    segs: (u64, u64),
+    batch: usize,
+    tx: &Channel<Vec<Edge>>,
+    stats: &ScanStats,
+) -> io::Result<()> {
+    let mut f = File::open(path)?;
+    // the header was validate_file_len-checked at open: offsets exist
+    let off = header.seg_offset(segs.0).expect("validated header");
+    f.seek(SeekFrom::Start(off))?;
+    let mut reader = BufReader::with_capacity(1 << 20, f);
+    let mut block = Vec::new();
+    let mut edges: Vec<Edge> = Vec::new();
+    for seg in segs.0..segs.1 {
+        let records = header.records_in(seg);
+        block.resize((binfmt::SEG_OVERHEAD_BYTES + records * binfmt::RECORD_BYTES) as usize, 0);
+        reader.read_exact(&mut block)?;
+        edges.clear();
+        binfmt::decode_segment(&block, records, seg, &mut edges)?;
+        stats.segments_verified.fetch_add(1, Ordering::Relaxed);
+        stats.bytes_read.fetch_add(block.len() as u64, Ordering::Relaxed);
+        for part in edges.chunks(batch) {
+            if tx.send(part.to_vec()).is_err() {
+                return Ok(()); // receiver dropped the scanner
+            }
+        }
+    }
+    Ok(())
+}
+
+/// N-reader parallel scan over one edge file, consumed as an ordinary
+/// [`EdgeSource`]: readers parse their ranges concurrently, the
+/// sequencer hands edges out in file order (module docs explain why
+/// order is preserved rather than merely semantics).
+pub struct ParallelScanner {
+    queues: Vec<Channel<Vec<Edge>>>,
+    threads: Vec<JoinHandle<()>>,
+    /// queue currently being drained (ranges are in file order)
+    current: usize,
+    /// chunk received but not yet fully handed to a caller
+    leftover: Vec<Edge>,
+    leftover_pos: usize,
+    stats: Arc<ScanStats>,
+    error: Arc<Mutex<Option<String>>>,
+    len_hint: Option<usize>,
+}
+
+impl ParallelScanner {
+    /// Open `path` with the format inferred from its extension
+    /// (`.bin` ⇒ segmented binary, anything else text).
+    pub fn open<P: AsRef<Path>>(path: P, readers: usize, batch: usize) -> io::Result<Self> {
+        let format = ScanFormat::infer(&path);
+        Self::open_with(path, format, readers, batch)
+    }
+
+    /// Open `path` as `format` with `readers` reader threads shipping
+    /// chunks of up to `batch` edges (both clamped to ≥ 1; binary
+    /// readers are further clamped to the segment count). The header of
+    /// a binary file is decoded and length-validated *here*, so a
+    /// corrupt or hostile header fails the open, not a reader thread.
+    pub fn open_with<P: AsRef<Path>>(
+        path: P,
+        format: ScanFormat,
+        readers: usize,
+        batch: usize,
+    ) -> io::Result<Self> {
+        let path: PathBuf = path.as_ref().to_path_buf();
+        let readers = readers.max(1);
+        let batch = batch.max(1);
+        let stats = Arc::new(ScanStats::default());
+        let error: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let mut queues = Vec::new();
+        let mut threads = Vec::new();
+        let mut len_hint = None;
+
+        match format {
+            ScanFormat::Text => {
+                for (start, end) in plan_text_ranges(&path, readers)? {
+                    let q: Channel<Vec<Edge>> = Channel::bounded(READ_AHEAD_CHUNKS);
+                    let tx = q.clone();
+                    let p = path.clone();
+                    let st = Arc::clone(&stats);
+                    let err = Arc::clone(&error);
+                    threads.push(thread::spawn(move || {
+                        if let Err(e) = run_text_reader(&p, start, end, batch, &tx, &st) {
+                            let mut slot = err.lock().unwrap();
+                            if slot.is_none() {
+                                *slot = Some(format!("text reader [{start}..{end}): {e}"));
+                            }
+                        }
+                        tx.close();
+                    }));
+                    queues.push(q);
+                }
+            }
+            ScanFormat::Binary => {
+                let f = File::open(&path)?;
+                let file_len = f.metadata()?.len();
+                let mut r = BufReader::new(f);
+                let mut head = [0u8; binfmt::HEADER_BYTES];
+                r.read_exact(&mut head)?;
+                let header = binfmt::SegHeader::decode(&head)?;
+                header.validate_file_len(file_len)?;
+                len_hint = usize::try_from(header.m).ok();
+                for (s0, s1) in plan_segment_ranges(header.seg_count, readers) {
+                    let q: Channel<Vec<Edge>> = Channel::bounded(READ_AHEAD_CHUNKS);
+                    let tx = q.clone();
+                    let p = path.clone();
+                    let st = Arc::clone(&stats);
+                    let err = Arc::clone(&error);
+                    threads.push(thread::spawn(move || {
+                        if let Err(e) = run_binary_reader(&p, header, (s0, s1), batch, &tx, &st) {
+                            let mut slot = err.lock().unwrap();
+                            if slot.is_none() {
+                                *slot = Some(format!("binary reader segments [{s0}..{s1}): {e}"));
+                            }
+                        }
+                        tx.close();
+                    }));
+                    queues.push(q);
+                }
+            }
+        }
+        Ok(Self {
+            queues,
+            threads,
+            current: 0,
+            leftover: Vec::new(),
+            leftover_pos: 0,
+            stats,
+            error,
+            len_hint,
+        })
+    }
+
+    /// Number of reader threads actually running (after clamping).
+    pub fn readers(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Shared scan counters (live — safe to read mid-scan).
+    pub fn stats(&self) -> Arc<ScanStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// First reader failure, if any (I/O error or segment checksum
+    /// mismatch). Check after the drain: a failed reader closes its
+    /// queue early, so the stream ends short instead of blocking.
+    pub fn take_error(&mut self) -> Option<String> {
+        self.error.lock().unwrap().take()
+    }
+}
+
+impl EdgeSource for ParallelScanner {
+    fn next_batch(&mut self, buf: &mut Vec<Edge>) -> usize {
+        buf.clear();
+        while buf.len() < buf.capacity() {
+            if self.leftover_pos < self.leftover.len() {
+                let take =
+                    (buf.capacity() - buf.len()).min(self.leftover.len() - self.leftover_pos);
+                buf.extend_from_slice(&self.leftover[self.leftover_pos..self.leftover_pos + take]);
+                self.leftover_pos += take;
+                continue;
+            }
+            let Some(q) = self.queues.get(self.current) else {
+                break; // every range drained
+            };
+            match q.recv() {
+                Some(chunk) => {
+                    self.leftover = chunk;
+                    self.leftover_pos = 0;
+                }
+                None => self.current += 1, // this range is done: next
+            }
+        }
+        buf.len()
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        self.len_hint
+    }
+}
+
+impl Drop for ParallelScanner {
+    fn drop(&mut self) {
+        // closing the queues turns any blocked reader `send` into an
+        // error, so readers exit promptly even on early drop
+        for q in &self.queues {
+            q.close();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::edge::EdgeList;
+    use crate::graph::io::write_binary_edges_with;
+    use crate::stream::source::{collect, BinaryFileSource, TextFileSource};
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("streamcom_pscan_{}_{name}", std::process::id()));
+        p
+    }
+
+    /// Deterministic LCG (no rand crate offline).
+    fn lcg(seed: u64) -> impl FnMut() -> u64 {
+        let mut x = seed.max(1);
+        move || {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            x >> 33
+        }
+    }
+
+    fn messy_text(lines: usize, seed: u64) -> String {
+        let mut rng = lcg(seed);
+        let mut s = String::new();
+        for i in 0..lines {
+            match rng() % 12 {
+                0 => s.push_str("# a comment line of middling length\n"),
+                1 => s.push('\n'),
+                2 => s.push_str(&format!("{} {}\n", rng() % 300, rng() % 300)), // may self-loop
+                3 => s.push_str(&format!("{} oops\n", rng() % 300)),            // malformed
+                4 => s.push_str(&format!("{} {}\n", 1u64 << 40, rng() % 300)),  // oversized
+                _ => s.push_str(&format!("{}\t{}\n", i % 997, (i * 7 + 1) % 997)),
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn segment_ranges_cover_contiguously_and_clamp() {
+        assert_eq!(plan_segment_ranges(0, 4), vec![]);
+        assert_eq!(plan_segment_ranges(2, 8), vec![(0, 1), (1, 2)], "clamped to seg count");
+        let r = plan_segment_ranges(10, 3);
+        assert_eq!(r, vec![(0, 4), (4, 7), (7, 10)]);
+        assert_eq!(r.first().unwrap().0, 0);
+        assert_eq!(r.last().unwrap().1, 10);
+    }
+
+    #[test]
+    fn text_ranges_align_to_line_starts_and_cover_the_file() {
+        let p = tmp("ranges.txt");
+        let data = messy_text(400, 7);
+        std::fs::write(&p, &data).unwrap();
+        for readers in 1..=5 {
+            let ranges = plan_text_ranges(&p, readers).unwrap();
+            assert_eq!(ranges.first().unwrap().0, 0);
+            assert_eq!(ranges.last().unwrap().1, data.len() as u64);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            for &(s, _) in &ranges[1..] {
+                assert_eq!(data.as_bytes()[s as usize - 1], b'\n', "boundary at a line start");
+            }
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn text_scan_matches_single_reader_edge_for_edge() {
+        let p = tmp("order.txt");
+        std::fs::write(&p, messy_text(3000, 42)).unwrap();
+        let mut single = TextFileSource::open(&p).unwrap();
+        let want = collect(&mut single, 64);
+        assert!(!want.is_empty());
+        for readers in 1..=4 {
+            let mut sc = ParallelScanner::open_with(&p, ScanFormat::Text, readers, 64).unwrap();
+            let got = collect(&mut sc, 64);
+            assert_eq!(got, want, "readers={readers}");
+            assert!(sc.take_error().is_none());
+            let stats = sc.stats();
+            assert_eq!(stats.oversized_skipped(), single.oversized_skipped());
+            assert_eq!(stats.malformed_skipped(), single.malformed_skipped());
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn binary_scan_matches_single_reader_edge_for_edge() {
+        let p = tmp("order.bin");
+        let mut rng = lcg(99);
+        let edges: Vec<Edge> =
+            (0..5000).map(|_| Edge::new((rng() % 800) as u32, (rng() % 800) as u32)).collect();
+        let el = EdgeList::new(800, edges);
+        write_binary_edges_with(&p, &el, 64).unwrap(); // 79 segments
+        let mut single = BinaryFileSource::open(&p).unwrap();
+        let want = collect(&mut single, 97);
+        assert_eq!(want, el.edges);
+        for readers in [1usize, 2, 3, 8, 200] {
+            let mut sc = ParallelScanner::open_with(&p, ScanFormat::Binary, readers, 97).unwrap();
+            assert_eq!(sc.len_hint(), Some(5000));
+            assert!(sc.readers() <= 79, "clamped to segment count");
+            let got = collect(&mut sc, 97);
+            assert_eq!(got, want, "readers={readers}");
+            assert!(sc.take_error().is_none());
+            assert_eq!(sc.stats().segments_verified(), 79);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn corrupt_segment_surfaces_through_take_error() {
+        let p = tmp("corrupt.bin");
+        let el = EdgeList::new(101, (0..100u32).map(|i| Edge::new(i, i + 1)).collect());
+        write_binary_edges_with(&p, &el, 16).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let seg2 = binfmt::HEADER_BYTES + 2 * (16 + 16 * 8);
+        bytes[seg2 + 8 + 3] ^= 0x10;
+        std::fs::write(&p, &bytes).unwrap();
+        let mut sc = ParallelScanner::open_with(&p, ScanFormat::Binary, 2, 32).unwrap();
+        let _ = collect(&mut sc, 32);
+        let err = sc.take_error().expect("corruption must surface");
+        assert!(err.contains("segment 2"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn early_drop_does_not_hang() {
+        let p = tmp("drop.txt");
+        std::fs::write(&p, messy_text(20_000, 5)).unwrap();
+        let mut sc = ParallelScanner::open_with(&p, ScanFormat::Text, 4, 16).unwrap();
+        let mut buf = Vec::with_capacity(16);
+        assert!(sc.next_batch(&mut buf) > 0);
+        drop(sc); // readers blocked on full queues must still exit
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn hostile_binary_header_fails_the_open_not_a_thread() {
+        let p = tmp("hostile.bin");
+        let h = binfmt::SegHeader::new(8, 1u64 << 61, binfmt::DEFAULT_SEG_RECORDS).unwrap();
+        std::fs::write(&p, h.encode()).unwrap();
+        let err = ParallelScanner::open_with(&p, ScanFormat::Binary, 4, 32).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -9,8 +9,9 @@ use std::fs::File;
 use std::io::{BufRead, BufReader, Read};
 use std::path::Path;
 
+use crate::graph::binfmt;
 use crate::graph::edge::Edge;
-use crate::graph::io::{parse_edge_bytes, LineParse};
+use crate::graph::io::{frame_lines, parse_edge_bytes, LineParse};
 
 /// A single-pass edge stream.
 pub trait EdgeSource: Send {
@@ -149,30 +150,37 @@ impl TextFileSource {
     pub fn malformed_skipped(&self) -> u64 {
         self.malformed
     }
+}
 
-    #[inline]
-    fn emit(line: &[u8], buf: &mut Vec<Edge>, oversized: &mut u64, malformed: &mut u64) {
-        // lenient transport: only well-formed pairs become edges;
-        // comment/non-numeric lines skip silently, the two observable
-        // drop classes (bad target, oversized id) are counted
-        match parse_edge_bytes(line) {
-            LineParse::Edge(u, v) => {
-                // oversized before self-loop: the counter covers every
-                // line whose ids cannot be dense u32, loops included
-                if u > u32::MAX as u64 || v > u32::MAX as u64 {
-                    // an id that cannot be a dense u32 would alias
-                    // another node if narrowed with `as` — skip + count
-                    *oversized += 1;
-                    return;
-                }
-                if u == v {
-                    return;
-                }
-                buf.push(Edge::new(u as u32, v as u32));
+/// Lenient-transport line consumer: only well-formed pairs become
+/// edges; comment/non-numeric lines skip silently, the two observable
+/// drop classes (bad target, oversized id) are counted. Shared by
+/// [`TextFileSource`] and the parallel text scan
+/// (`stream::pscan`) so both transports classify byte-for-byte alike.
+#[inline]
+pub(crate) fn emit_lenient(
+    line: &[u8],
+    buf: &mut Vec<Edge>,
+    oversized: &mut u64,
+    malformed: &mut u64,
+) {
+    match parse_edge_bytes(line) {
+        LineParse::Edge(u, v) => {
+            // oversized before self-loop: the counter covers every
+            // line whose ids cannot be dense u32, loops included
+            if u > u32::MAX as u64 || v > u32::MAX as u64 {
+                // an id that cannot be a dense u32 would alias
+                // another node if narrowed with `as` — skip + count
+                *oversized += 1;
+                return;
             }
-            LineParse::BadTarget(..) => *malformed += 1,
-            LineParse::Skip => {}
+            if u == v {
+                return;
+            }
+            buf.push(Edge::new(u as u32, v as u32));
         }
+        LineParse::BadTarget(..) => *malformed += 1,
+        LineParse::Skip => {}
     }
 }
 
@@ -182,9 +190,7 @@ impl EdgeSource for TextFileSource {
         buf.clear();
         while buf.len() < buf.capacity() && !self.eof {
             // scan lines directly in the reader's internal buffer —
-            // no per-line copy (§Perf). A sibling of this framing loop
-            // lives in graph::io::read_text_edges (one-shot, fallible);
-            // carry/boundary fixes likely apply to both.
+            // no per-line copy (§Perf)
             let chunk = match self.reader.fill_buf() {
                 Ok(c) => c,
                 Err(_) => break,
@@ -193,38 +199,22 @@ impl EdgeSource for TextFileSource {
                 self.eof = true;
                 if !self.carry.is_empty() {
                     let carry = std::mem::take(&mut self.carry);
-                    Self::emit(&carry, buf, &mut self.oversized, &mut self.malformed);
+                    emit_lenient(&carry, buf, &mut self.oversized, &mut self.malformed);
                 }
                 break;
             }
-            let mut start = 0usize;
-            let mut consumed = 0usize;
-            while let Some(pos) = chunk[start..].iter().position(|&b| b == b'\n') {
-                let line = &chunk[start..start + pos];
-                if self.carry.is_empty() {
-                    Self::emit(line, buf, &mut self.oversized, &mut self.malformed);
-                } else {
-                    self.carry.extend_from_slice(line);
-                    let carry = std::mem::take(&mut self.carry);
-                    Self::emit(&carry, buf, &mut self.oversized, &mut self.malformed);
-                    self.carry = carry;
-                    self.carry.clear();
-                }
-                start += pos + 1;
-                consumed = start;
-                if buf.len() >= buf.capacity() {
-                    break;
-                }
-            }
-            if consumed == 0 && start == 0 && buf.len() < buf.capacity() {
-                // no newline in the whole chunk: stash and refill
-                self.carry.extend_from_slice(chunk);
-                consumed = chunk.len();
-            } else if buf.len() < buf.capacity() && consumed < chunk.len() {
-                // trailing partial line: stash it
-                self.carry.extend_from_slice(&chunk[consumed..]);
-                consumed = chunk.len();
-            }
+            // the shared framing helper (graph::io::frame_lines, also
+            // the strict reader's loop); Ok(false) stops it the moment
+            // buf fills, leaving the rest of the chunk for next call
+            let oversized = &mut self.oversized;
+            let malformed = &mut self.malformed;
+            let consumed = match frame_lines(chunk, &mut self.carry, |line| {
+                emit_lenient(line, buf, oversized, malformed);
+                Ok::<bool, std::convert::Infallible>(buf.len() < buf.capacity())
+            }) {
+                Ok(c) => c,
+                Err(never) => match never {},
+            };
             self.bytes_read += consumed as u64;
             self.reader.consume(consumed);
         }
@@ -232,52 +222,111 @@ impl EdgeSource for TextFileSource {
     }
 }
 
-/// Stream the compact binary format written by `graph::io`.
+/// Stream the segmented binary format written by `graph::io` (layout
+/// in `graph::binfmt`). The header is validated on open — every
+/// header-derived size is cross-checked against the real file length
+/// before any allocation — and each segment's record count + trailing
+/// checksum is verified as it is loaded.
 ///
-/// §Perf: the read buffer is owned and reused across batches — a fresh
-/// `vec![0; want*8]` per batch cost ~25% of streaming throughput
+/// `EdgeSource::next_batch` has no error channel, so a segment that
+/// fails verification mid-stream stops the source (returns 0) and
+/// parks the message in [`error`](Self::error) — callers that care
+/// check it after the drain, and a truncated stream never silently
+/// passes as complete because `len_hint` still reports the shortfall.
+///
+/// §Perf: the segment block buffer and decoded-edge buffer are owned
+/// and reused across batches — a fresh allocation per batch cost ~25%
+/// of streaming throughput back when this read raw records
 /// (EXPERIMENTS.md §Perf).
 pub struct BinaryFileSource {
     reader: BufReader<File>,
-    remaining: u64,
-    scratch: Vec<u8>,
+    header: binfmt::SegHeader,
+    /// next segment to load and verify
+    next_seg: u64,
+    /// decoded edges of the current segment, served through `seg_pos`
+    seg_buf: Vec<Edge>,
+    seg_pos: usize,
+    /// edges handed to callers so far (for `len_hint`)
+    served: u64,
+    /// reusable raw segment block
+    block: Vec<u8>,
+    error: Option<String>,
 }
 
 impl BinaryFileSource {
-    /// Open a binary edge file (validates the header).
+    /// Open a segmented binary edge file (validates the header against
+    /// the actual file length before any edge-sized allocation).
     pub fn open<P: AsRef<Path>>(path: P) -> std::io::Result<Self> {
-        let mut reader = BufReader::with_capacity(1 << 20, File::open(path)?);
-        let mut head = [0u8; 16];
+        let f = File::open(path)?;
+        let file_len = f.metadata()?.len();
+        let mut reader = BufReader::with_capacity(1 << 20, f);
+        let mut head = [0u8; binfmt::HEADER_BYTES];
         reader.read_exact(&mut head)?;
-        let m = u64::from_le_bytes(head[8..16].try_into().unwrap());
-        Ok(Self { reader, remaining: m, scratch: Vec::new() })
+        let header = binfmt::SegHeader::decode(&head)?;
+        header.validate_file_len(file_len)?;
+        Ok(Self {
+            reader,
+            header,
+            next_seg: 0,
+            seg_buf: Vec::new(),
+            seg_pos: 0,
+            served: 0,
+            block: Vec::new(),
+            error: None,
+        })
+    }
+
+    /// The verification failure that stopped the stream, if any.
+    pub fn error(&self) -> Option<&str> {
+        self.error.as_deref()
+    }
+
+    /// Load + verify the next segment into `seg_buf`; false on EOF or
+    /// on a verification failure (recorded in `error`).
+    fn load_segment(&mut self) -> bool {
+        if self.error.is_some() || self.next_seg >= self.header.seg_count {
+            return false;
+        }
+        let seg = self.next_seg;
+        let records = self.header.records_in(seg);
+        self.block
+            .resize((binfmt::SEG_OVERHEAD_BYTES + records * binfmt::RECORD_BYTES) as usize, 0);
+        self.seg_buf.clear();
+        self.seg_pos = 0;
+        let loaded = self
+            .reader
+            .read_exact(&mut self.block)
+            .and_then(|()| binfmt::decode_segment(&self.block, records, seg, &mut self.seg_buf));
+        match loaded {
+            Ok(()) => {
+                self.next_seg += 1;
+                true
+            }
+            Err(e) => {
+                self.error = Some(e.to_string());
+                false
+            }
+        }
     }
 }
 
 impl EdgeSource for BinaryFileSource {
     fn next_batch(&mut self, buf: &mut Vec<Edge>) -> usize {
         buf.clear();
-        let want = (buf.capacity() as u64).min(self.remaining) as usize;
-        if want == 0 {
-            return 0;
+        while buf.len() < buf.capacity() {
+            if self.seg_pos == self.seg_buf.len() && !self.load_segment() {
+                break;
+            }
+            let take = (buf.capacity() - buf.len()).min(self.seg_buf.len() - self.seg_pos);
+            buf.extend_from_slice(&self.seg_buf[self.seg_pos..self.seg_pos + take]);
+            self.seg_pos += take;
         }
-        self.scratch.resize(want * 8, 0);
-        match self.reader.read_exact(&mut self.scratch) {
-            Ok(()) => {}
-            Err(_) => return 0,
-        }
-        for c in self.scratch.chunks_exact(8) {
-            buf.push(Edge::new(
-                u32::from_le_bytes(c[0..4].try_into().unwrap()),
-                u32::from_le_bytes(c[4..8].try_into().unwrap()),
-            ));
-        }
-        self.remaining -= want as u64;
-        want
+        self.served += buf.len() as u64;
+        buf.len()
     }
 
     fn len_hint(&self) -> Option<usize> {
-        Some(self.remaining as usize)
+        Some((self.header.m - self.served) as usize)
     }
 }
 
@@ -397,6 +446,40 @@ mod tests {
         assert_eq!(src.len_hint(), Some(100));
         let got = collect(&mut src, 13);
         assert_eq!(got, el.edges);
+        assert!(src.error().is_none());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn binary_file_source_streams_across_segments() {
+        // batch size deliberately not a divisor of the segment size, so
+        // batches straddle segment boundaries
+        let p = std::env::temp_dir().join(format!("sc_src_seg_{}.bin", std::process::id()));
+        let el = EdgeList::new(101, edges());
+        io::write_binary_edges_with(&p, &el, 7).unwrap();
+        let mut src = BinaryFileSource::open(&p).unwrap();
+        let got = collect(&mut src, 13);
+        assert_eq!(got, el.edges);
+        assert!(src.error().is_none());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn binary_file_source_stops_and_reports_on_corruption() {
+        let p = std::env::temp_dir().join(format!("sc_src_corrupt_{}.bin", std::process::id()));
+        let el = EdgeList::new(101, edges());
+        io::write_binary_edges_with(&p, &el, 32).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // flip one payload byte inside segment 1
+        let seg1 = binfmt::HEADER_BYTES + (16 + 32 * 8);
+        bytes[seg1 + 8 + 4] ^= 1;
+        std::fs::write(&p, &bytes).unwrap();
+        let mut src = BinaryFileSource::open(&p).unwrap();
+        let got = collect(&mut src, 13);
+        assert_eq!(got, el.edges[..32].to_vec(), "clean prefix still streams");
+        let err = src.error().expect("corruption must be reported");
+        assert!(err.contains("segment 1"), "{err}");
+        assert!(src.len_hint().unwrap() > 0, "shortfall stays visible");
         std::fs::remove_file(&p).ok();
     }
 }

@@ -55,7 +55,7 @@ fn run_with_stdin(args: &[&str], input: &str) -> (String, String, bool) {
 fn help_lists_commands() {
     let (stdout, _, ok) = run(&["help"]);
     assert!(ok);
-    for cmd in ["generate", "run", "sweep", "bench", "serve"] {
+    for cmd in ["generate", "run", "sweep", "bench", "serve", "convert"] {
         assert!(stdout.contains(cmd), "missing {cmd} in help");
     }
 }
@@ -237,6 +237,85 @@ fn serve_dynamic_mode_still_speaks_event_protocol() {
 }
 
 #[test]
+fn convert_roundtrips_text_and_binary() {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let bin = dir.join(format!("sc_conv_{pid}.bin"));
+    let bin_str = bin.to_str().unwrap();
+    let (_, stderr, ok) = run(&[
+        "generate", "--preset", "amazon-s", "--scale", "0.02", "--out", bin_str,
+    ]);
+    assert!(ok, "generate failed: {stderr}");
+    let stem = bin_str.trim_end_matches(".bin");
+    let txt = format!("{stem}.txt");
+
+    // text → binary (small segments so the file is multi-segment) —
+    // convert verifies the round trip itself before reporting
+    let bin2 = dir.join(format!("sc_conv_{pid}_rt.bin"));
+    let (stdout, stderr, ok) = run(&[
+        "convert", "--input", &txt, "--out", bin2.to_str().unwrap(), "--seg-records", "512",
+    ]);
+    assert!(ok, "convert to binary failed: {stderr}");
+    assert!(stdout.contains("round trip verified"), "{stdout}");
+    assert!(stdout.contains("segments"), "{stdout}");
+
+    // binary → text, then the converted file still runs end-to-end
+    let txt2 = dir.join(format!("sc_conv_{pid}_rt.txt"));
+    let (stdout, stderr, ok) =
+        run(&["convert", "--input", bin2.to_str().unwrap(), "--out", txt2.to_str().unwrap()]);
+    assert!(ok, "convert to text failed: {stderr}");
+    assert!(stdout.contains("round trip verified"), "{stdout}");
+    let (stdout, stderr, ok) = run(&["run", "--input", txt2.to_str().unwrap(), "--vmax", "32"]);
+    assert!(ok, "run on converted file failed: {stderr}");
+    assert!(stdout.contains("communities"), "{stdout}");
+
+    for p in [bin_str.to_string(), txt, format!("{stem}.cmty")] {
+        std::fs::remove_file(&p).ok();
+    }
+    std::fs::remove_file(&bin2).ok();
+    std::fs::remove_file(&txt2).ok();
+}
+
+#[test]
+fn serve_parallel_readers_scan_the_input_file() {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let bin = dir.join(format!("sc_scan_{pid}.bin"));
+    let bin_str = bin.to_str().unwrap();
+    let (_, stderr, ok) = run(&[
+        "generate", "--preset", "amazon-s", "--scale", "0.02", "--out", bin_str,
+    ]);
+    assert!(ok, "generate failed: {stderr}");
+    // scan the text sibling: text ranges split at newlines whatever the
+    // file size, so 3 readers stay 3 (a small binary file can clamp to
+    // its segment count)
+    let stem = bin_str.trim_end_matches(".bin");
+    let txt = format!("{stem}.txt");
+
+    let (stdout, stderr, ok) = run_with_stdin(
+        &[
+            "serve", "--input", &txt, "--readers", "3", "--shards", "2", "--vmax", "64",
+            "--drain-every", "500",
+        ],
+        "stats\n",
+    );
+    assert!(ok, "serve --readers failed: {stderr}");
+    assert!(stdout.contains("scan: 3 reader threads"), "{stdout}");
+    assert!(stdout.contains("final:"), "{stdout}");
+    assert!(stdout.contains("scan: readers=3"), "{stdout}");
+
+    // --readers needs a file to scan
+    let (_, stderr, ok) =
+        run_with_stdin(&["serve", "--sbm", "4x20", "--readers", "2"], "");
+    assert!(!ok, "--readers without --input must fail fast");
+    assert!(stderr.contains("--readers"), "{stderr}");
+
+    std::fs::remove_file(&bin).ok();
+    std::fs::remove_file(&txt).ok();
+    std::fs::remove_file(format!("{stem}.cmty")).ok();
+}
+
+#[test]
 fn bench_service_writes_machine_readable_json() {
     let dir = std::env::temp_dir();
     let json_path = dir.join(format!("sc_bench_{}.json", std::process::id()));
@@ -250,12 +329,16 @@ fn bench_service_writes_machine_readable_json() {
     assert!(stdout.contains("delta_last"), "{stdout}");
     assert!(stdout.contains("ingest microbench"), "{stdout}");
     assert!(stdout.contains("rmw/kedge"), "{stdout}");
+    assert!(stdout.contains("parallel scan"), "{stdout}");
     let json = std::fs::read_to_string(&json_path).expect("BENCH_service.json written");
     assert!(json.contains("\"bench\": \"service\""), "{json}");
     assert!(json.contains("\"edges_per_sec\""), "{json}");
     assert!(json.contains("\"per_leader\""), "{json}");
     assert!(json.contains("\"ingest\""), "{json}");
     assert!(json.contains("\"pool_misses\""), "{json}");
+    assert!(json.contains("\"readers\""), "{json}");
+    assert!(json.contains("\"labels_match\": true"), "{json}");
+    assert!(!json.contains("\"labels_match\": false"), "{json}");
     std::fs::remove_file(&json_path).ok();
 
     // without --json the table still renders and nothing is written

@@ -1,0 +1,277 @@
+//! Edge I/O hardening end-to-end: the segmented binary format rejects
+//! hostile headers, truncation, and payload corruption *before* it
+//! costs memory; the writer refuses silent id truncation; the shared
+//! line-framing loop gives the strict reader, the lenient transport,
+//! and the parallel text scan the same view of the same bytes (fuzzed
+//! across buffer-refill boundaries); and the parallel scan reproduces
+//! the single-reader service partition bit-for-bit on golden SBM/LFR
+//! streams at every swept reader count.
+
+use std::io::ErrorKind;
+use std::path::{Path, PathBuf};
+
+use streamcom::graph::binfmt::{self, SegHeader};
+use streamcom::graph::edge::{Edge, EdgeList};
+use streamcom::graph::generators::lfr::{self, LfrConfig};
+use streamcom::graph::generators::sbm::{self, SbmConfig};
+use streamcom::graph::io::{
+    read_binary_edges, read_text_edges, write_binary_edges, write_binary_edges_with,
+    write_text_edges,
+};
+use streamcom::service::{ClusterService, ServiceConfig};
+use streamcom::stream::pscan::ParallelScanner;
+use streamcom::stream::source::TextFileSource;
+use streamcom::stream::EdgeSource;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("sc_edge_io_{}_{name}", std::process::id()))
+}
+
+fn lcg(state: &mut u64) -> u64 {
+    *state = state
+        .wrapping_mul(6364136223846793005)
+        .wrapping_add(1442695040888963407);
+    *state >> 33
+}
+
+/// Drain an [`EdgeSource`] to a flat edge vector.
+fn drain<S: EdgeSource>(src: &mut S) -> Vec<Edge> {
+    let mut out = Vec::new();
+    let mut buf = Vec::with_capacity(1024);
+    while src.next_batch(&mut buf) > 0 {
+        out.extend_from_slice(&buf);
+    }
+    out
+}
+
+// --- hostile headers, truncation, corruption ------------------------
+
+#[test]
+fn hostile_header_is_rejected_before_any_allocation() {
+    // a syntactically valid header whose m claims 2^61 records: the
+    // reader must bound-check against the real file length and fail
+    // with InvalidData instead of attempting a ~2 EiB allocation
+    let path = tmp("hostile_header.bin");
+    let header = SegHeader::new(4, 1 << 61, binfmt::DEFAULT_SEG_RECORDS).unwrap();
+    std::fs::write(&path, header.encode()).unwrap();
+    let err = read_binary_edges(&path).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidData, "{err}");
+    assert!(err.to_string().contains("hostile"), "{err}");
+    std::fs::remove_file(&path).ok();
+
+    // the legacy shape of the bug: a tiny file (old 16-byte header
+    // size) claiming a huge edge count — too short to even hold the
+    // v2 header, and it must error rather than trust any field
+    let path = tmp("hostile_short.bin");
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"SSEG");
+    bytes.extend_from_slice(&2u32.to_le_bytes());
+    bytes.extend_from_slice(&(1u64 << 61).to_le_bytes());
+    assert_eq!(bytes.len(), 16);
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(read_binary_edges(&path).is_err());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn truncated_and_corrupted_files_are_detected() {
+    let edges: Vec<Edge> = (0..300u32).map(|i| Edge::new(i, i + 1)).collect();
+    let el = EdgeList::new(301, edges);
+    let path = tmp("corrupt.bin");
+    write_binary_edges_with(&path, &el, 64).unwrap();
+    let clean = std::fs::read(&path).unwrap();
+
+    // truncation: file length no longer matches the segment table
+    std::fs::write(&path, &clean[..clean.len() - 5]).unwrap();
+    let err = read_binary_edges(&path).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidData, "{err}");
+
+    // bit flip in the payload of segment 2: the checksum names it
+    let mut dirty = clean.clone();
+    let seg2 = binfmt::HEADER_BYTES + 2 * (16 + 64 * 8);
+    dirty[seg2 + 8 + 11] ^= 0x40;
+    std::fs::write(&path, &dirty).unwrap();
+    let err = read_binary_edges(&path).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidData, "{err}");
+    assert!(err.to_string().contains("checksum"), "{err}");
+    assert!(err.to_string().contains("segment 2"), "{err}");
+
+    // intact bytes still round-trip
+    std::fs::write(&path, &clean).unwrap();
+    let got = read_binary_edges(&path).unwrap();
+    assert_eq!(got.n, el.n);
+    assert_eq!(got.edges, el.edges);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn writer_hard_errors_instead_of_truncating_node_ids() {
+    let el = EdgeList::new((1usize << 32) + 1, Vec::new());
+    let path = tmp("oversized_n.bin");
+    let err = write_binary_edges(&path, &el).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidInput, "{err}");
+    assert!(!path.exists() || std::fs::remove_file(&path).is_ok());
+}
+
+// --- shared line framing: strict / lenient / parallel agree ---------
+
+/// ~2.5 MB of messy text: valid edges, comments, blank lines, garbage
+/// tokens, and occasional very long pad runs so that lines straddle
+/// the 1 MiB `fill_buf` refill boundary and exercise the carry path.
+fn write_messy_text(path: &Path, seed: u64) -> Vec<(u64, u64)> {
+    let mut s = String::new();
+    let mut rng = seed;
+    let mut valid = Vec::new();
+    while s.len() < 2_500_000 {
+        match lcg(&mut rng) % 8 {
+            0 => s.push_str("# comment line\n"),
+            1 => s.push('\n'),
+            2 => s.push_str("garbage tokens here\n"),
+            3 => {
+                // pad with trailing spaces to fuzz the refill boundary
+                let pad = (lcg(&mut rng) % 4000) as usize;
+                let u = lcg(&mut rng) % 100_000;
+                let v = u + 1 + lcg(&mut rng) % 1000;
+                s.push_str(&format!("{u}\t{v}{}\n", " ".repeat(pad)));
+                valid.push((u, v));
+            }
+            _ => {
+                let u = lcg(&mut rng) % 100_000;
+                let v = u + 1 + lcg(&mut rng) % 1000;
+                s.push_str(&format!("{u} {v}\n"));
+                valid.push((u, v));
+            }
+        }
+    }
+    std::fs::write(path, s.as_bytes()).unwrap();
+    valid
+}
+
+#[test]
+fn framing_is_identical_across_lenient_strict_and_parallel_paths() {
+    let path = tmp("messy.txt");
+    let expected = write_messy_text(&path, 0xfeed);
+
+    // lenient transport (TextFileSource) sees exactly the valid pairs
+    let mut single = TextFileSource::open(&path).unwrap();
+    let lenient = drain(&mut single);
+    assert_eq!(lenient.len(), expected.len());
+    for (e, (u, v)) in lenient.iter().zip(&expected) {
+        assert_eq!((e.u as u64, e.v as u64), (*u, *v));
+    }
+    assert_eq!(single.malformed_skipped(), 0);
+    assert_eq!(single.oversized_skipped(), 0);
+
+    // parallel text scan re-emits the same stream at any reader count
+    for readers in 1..=4 {
+        let mut scan = ParallelScanner::open(&path, readers, 777).unwrap();
+        let got = drain(&mut scan);
+        assert_eq!(got, lenient, "readers={readers}");
+        assert_eq!(scan.take_error(), None);
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn strict_reader_agrees_with_lenient_transport_on_clean_files() {
+    // a clean file (no malformed targets, ids < 2^32): the strict
+    // interner and the lenient raw-id transport must describe the same
+    // edge sequence — pinned through the intern back-map
+    let path = tmp("clean.txt");
+    let mut s = String::from("# clean edges\n");
+    let mut rng = 0xbeefu64;
+    for _ in 0..50_000 {
+        let u = lcg(&mut rng) % 1_000_000;
+        let v = u + 1 + lcg(&mut rng) % 97;
+        s.push_str(&format!("{u}\t{v}\n"));
+    }
+    std::fs::write(&path, s.as_bytes()).unwrap();
+
+    let (el, back) = read_text_edges(&path).unwrap();
+    let mut src = TextFileSource::open(&path).unwrap();
+    let lenient = drain(&mut src);
+    assert_eq!(el.edges.len(), lenient.len());
+    for (strict, raw) in el.edges.iter().zip(&lenient) {
+        assert_eq!(back[strict.u as usize], raw.u as u64);
+        assert_eq!(back[strict.v as usize], raw.v as u64);
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+// --- convert round trip at the io layer -----------------------------
+
+#[test]
+fn text_binary_text_round_trip_is_lossless() {
+    let g = sbm::generate(&SbmConfig::equal(6, 25, 0.3, 0.01, 42));
+    let t1 = tmp("rt1.txt");
+    let b = tmp("rt.bin");
+    let t2 = tmp("rt2.txt");
+
+    write_text_edges(&t1, &g.edges).unwrap();
+    let (el1, back1) = read_text_edges(&t1).unwrap();
+    // multi-segment on purpose: seg_records far below m
+    write_binary_edges_with(&b, &el1, 128).unwrap();
+    let el2 = read_binary_edges(&b).unwrap();
+    assert_eq!(el1.edges, el2.edges);
+    assert_eq!(el1.n, el2.n);
+
+    write_text_edges(&t2, &el2).unwrap();
+    let (el3, back3) = read_text_edges(&t2).unwrap();
+    assert_eq!(el1.edges.len(), el3.edges.len());
+    for (a, c) in el1.edges.iter().zip(&el3.edges) {
+        assert_eq!(back1[a.u as usize], back3[c.u as usize]);
+        assert_eq!(back1[a.v as usize], back3[c.v as usize]);
+    }
+    for p in [t1, b, t2] {
+        std::fs::remove_file(&p).ok();
+    }
+}
+
+// --- parallel scan × service: golden-stream partition parity --------
+
+fn assert_scan_partition_parity(name: &str, el: &EdgeList) {
+    let shards = 4;
+    let v_max = 128;
+    let baseline = {
+        let mut svc = ClusterService::start(ServiceConfig::new(shards, v_max));
+        for chunk in el.edges.chunks(4096) {
+            svc.push_chunk(chunk);
+        }
+        svc.finish().labels()
+    };
+
+    let txt = tmp(&format!("{name}.txt"));
+    let bin = tmp(&format!("{name}.bin"));
+    write_text_edges(&txt, el).unwrap();
+    write_binary_edges_with(&bin, el, 1024).unwrap();
+
+    for path in [&txt, &bin] {
+        for readers in [1usize, 2, 4] {
+            let mut svc = ClusterService::start(ServiceConfig::new(shards, v_max));
+            let mut scan = ParallelScanner::open(path, readers, 4096).unwrap();
+            svc.ingest(&mut scan, 4096);
+            assert_eq!(scan.take_error(), None, "{name} {path:?} readers={readers}");
+            let res = svc.finish();
+            assert_eq!(res.edges_ingested, el.m() as u64, "{name} readers={readers}");
+            assert_eq!(
+                res.labels(),
+                baseline,
+                "{name} {path:?} readers={readers}: scanned partition diverged"
+            );
+        }
+    }
+    std::fs::remove_file(&txt).ok();
+    std::fs::remove_file(&bin).ok();
+}
+
+#[test]
+fn parallel_scan_partition_matches_single_reader_on_golden_sbm() {
+    let g = sbm::generate(&SbmConfig::equal(10, 50, 0.3, 0.002, 1712));
+    assert_scan_partition_parity("sbm", &g.edges);
+}
+
+#[test]
+fn parallel_scan_partition_matches_single_reader_on_golden_lfr() {
+    let g = lfr::generate(&LfrConfig::named("lfr-io", 600, 10.0, 0.3, 433));
+    assert_scan_partition_parity("lfr", &g.edges);
+}
