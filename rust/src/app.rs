@@ -58,13 +58,17 @@ COMMANDS:
                --out <path>         target (.bin = segmented binary v2,
                                     else SNAP-style text)
                --seg-records <k>    records per binary segment [default 65536]
+               --mmap               read binary files through one read-only
+                                    memory map (zero-copy; unix only, buffered
+                                    fallback elsewhere)
   bench      regenerate the paper's tables / service benchmarks
                table1|table2|memory|service  --scale <f>
                service prints the horizon sweep, the ingest-path
-               microbench (shards × batch, pool hit/miss, router RMWs)
-               AND the parallel-scan sweep (text/binary × readers
+               microbench (shards × batch, pool hit/miss, router RMWs),
+               the parallel-scan sweep (text/binary × readers
                {1,2,4}, partition checked against the in-memory
-               baseline); --json writes all three to BENCH_service.json
+               baseline) AND the mmap-vs-buffered scan sweep; --json
+               writes all four to BENCH_service.json
                (--out <path> overrides the file name)
   serve      long-lived sharded clustering service: ingests the workload
              while answering queries on stdin
@@ -93,7 +97,16 @@ COMMANDS:
                                     text: at newlines) and feed ingest in
                                     file order — the final partition is
                                     bit-identical to a single reader's
-                                    (0 = in-memory path [default])
+                                    (0 = in-memory path [default]; under
+                                    --mmap, 0 auto-detects the machine's
+                                    parallelism instead)
+               --mmap               share one read-only memory map of a binary
+                                    --input across all reader threads
+                                    (zero-copy; unix only, buffered fallback
+                                    elsewhere; text inputs keep buffered
+                                    framing). Also seeds worker sketches from
+                                    the header's n so they never grow
+                                    mid-stream
                queries: '? <node>' community, 'top <k>' largest, 'stats', 'q'
                --dynamic            legacy event mode ('+ u v' insert,
                                     '- u v' delete, '?' report on stdin)
@@ -281,15 +294,25 @@ fn cmd_convert(args: &Args) -> Result<(), String> {
     let seg_records = args
         .u64_or("seg-records", binfmt::DEFAULT_SEG_RECORDS)
         .map_err(|e| e.to_string())?;
+    // --mmap routes every binary read (source and the verify re-read)
+    // through the zero-copy mapped path; same format, same errors
+    let use_mmap = args.flag("mmap");
+    let read_bin = |p: &str| {
+        if use_mmap {
+            io::read_binary_edges_mmap(p)
+        } else {
+            io::read_binary_edges(p)
+        }
+    };
     let el = if input.ends_with(".bin") {
-        io::read_binary_edges(input).map_err(|e| format!("read {input}: {e}"))?
+        read_bin(input).map_err(|e| format!("read {input}: {e}"))?
     } else {
         io::read_text_edges(input).map_err(|e| format!("read {input}: {e}"))?.0
     };
     if out.ends_with(".bin") {
         io::write_binary_edges_with(out, &el, seg_records)
             .map_err(|e| format!("write {out}: {e}"))?;
-        let got = io::read_binary_edges(out).map_err(|e| format!("verify {out}: {e}"))?;
+        let got = read_bin(out).map_err(|e| format!("verify {out}: {e}"))?;
         if got.n != el.n || got.edges != el.edges {
             return Err(format!("round-trip verification failed for {out}: re-read differs"));
         }
@@ -297,11 +320,12 @@ fn cmd_convert(args: &Args) -> Result<(), String> {
             .map_err(|e| e.to_string())?;
         println!(
             "convert: {input} → {out} (binary v{}, n={} m={}, {} segments of {seg_records}) — \
-             round trip verified",
+             round trip verified ({} reads)",
             binfmt::VERSION,
             el.n,
             el.m(),
-            h.seg_count
+            h.seg_count,
+            if use_mmap { "mmap" } else { "buffered" }
         );
     } else {
         io::write_text_edges(out, &el).map_err(|e| format!("write {out}: {e}"))?;
@@ -405,10 +429,15 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             // in-memory baseline
             let (tr, readers) = service_bench::run_readers(&cfg);
             println!("{}", tr.render());
+            // the mmap-vs-buffered sweep: same binary file through both
+            // scan transports at each reader count, labels checked
+            // against the in-memory baseline
+            let (tm, mmap_rows) = service_bench::run_mmap(&cfg);
+            println!("{}", tm.render());
             if args.flag("json") {
                 let path = args.get_or("out", "BENCH_service.json");
-                std::fs::write(path, service_bench::to_json(&cfg, &rows, &ingest, &readers))
-                    .map_err(|e| format!("write {path}: {e}"))?;
+                let json = service_bench::to_json(&cfg, &rows, &ingest, &readers, &mmap_rows);
+                std::fs::write(path, json).map_err(|e| format!("write {path}: {e}"))?;
                 println!("json → {path}");
             }
         }
@@ -445,11 +474,25 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let v_max = args.u64_or("vmax", 64).map_err(|e| e.to_string())?;
     let shards = args.usize_or("shards", 4).map_err(|e| e.to_string())?;
     let pace = args.u64_or("pace", 0).map_err(|e| e.to_string())?;
-    let readers = args.usize_or("readers", 0).map_err(|e| e.to_string())?;
-    if readers > 0 && args.get("input").is_none() {
+    let readers_arg = args.usize_or("readers", 0).map_err(|e| e.to_string())?;
+    let mmap = args.flag("mmap");
+    if readers_arg > 0 && args.get("input").is_none() {
         return Err("--readers needs --input <file> (the parallel scan reads the file directly)"
             .to_string());
     }
+    if mmap && args.get("input").is_none() {
+        return Err("--mmap needs --input <file> (the mapped scan reads the file directly)"
+            .to_string());
+    }
+    // --mmap turns --readers 0 (the default) into auto-detection: one
+    // reader per available core. Without --mmap, 0 keeps meaning the
+    // in-memory path.
+    let auto = mmap && readers_arg == 0;
+    let readers = if auto {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        readers_arg
+    };
     let mut g = load_serve_workload(args)?;
     let truth = if g.truth.is_empty() { None } else { Some(g.truth.to_labels(g.n())) };
 
@@ -464,6 +507,13 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         config.wal_dir = Some(std::path::PathBuf::from(dir));
     }
     let resume = args.flag("resume");
+    // the file scan knows the final node count up front (the binary
+    // header's n / the interned text id space): pre-size every worker
+    // sketch so the per-chunk `ensure` never grows arrays mid-stream.
+    // A perf knob only — unseen nodes label as singletons either way.
+    if readers > 0 && !resume {
+        config.initial_nodes = g.n();
+    }
     let mut service = if resume {
         ClusterService::resume(config).map_err(|e| format!("resume: {e}"))?
     } else {
@@ -501,13 +551,27 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     // file order, so the final partition is bit-identical either way.
     // A resume skip needs positional slicing, so it keeps the
     // in-memory path.
-    let mut scan_info: Option<(usize, std::sync::Arc<ScanStats>)> = None;
+    let mut scan_info: Option<(usize, bool, std::sync::Arc<ScanStats>)> = None;
     let ingest = if readers > 0 && skip == 0 {
         let input = args.get("input").expect("checked above").to_string();
-        let mut scanner = ParallelScanner::open(&input, readers, 8_192)
-            .map_err(|e| format!("parallel scan {input}: {e}"))?;
-        scan_info = Some((scanner.readers(), scanner.stats()));
-        println!("scan: {} reader threads over {input}", scanner.readers());
+        // --mmap on a binary input shares one read-only mapping across
+        // all readers; text inputs (and non-unix builds) keep buffered
+        // framing — open_mmap itself degrades on unsupported platforms
+        let mut scanner = if mmap && input.ends_with(".bin") {
+            ParallelScanner::open_mmap(&input, readers, 8_192)
+        } else {
+            ParallelScanner::open(&input, readers, 8_192)
+        }
+        .map_err(|e| format!("parallel scan {input}: {e}"))?;
+        scan_info = Some((scanner.readers(), scanner.mmapped(), scanner.stats()));
+        if auto {
+            println!("scan: --readers 0 auto-detected {readers} reader threads");
+        }
+        println!(
+            "scan: {} reader threads over {input}{}",
+            scanner.readers(),
+            if scanner.mmapped() { " (one shared mmap)" } else { "" }
+        );
         std::thread::spawn(move || {
             let mut buf: Vec<Edge> = Vec::with_capacity(8_192);
             while scanner.next_batch(&mut buf) > 0 {
@@ -659,9 +723,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         result.elapsed.as_secs_f64(),
         result.edges_ingested as f64 / result.elapsed.as_secs_f64().max(1e-12) / 1e6
     );
-    if let Some((nreaders, st)) = scan_info {
+    if let Some((nreaders, mapped, st)) = scan_info {
         println!(
-            "scan: readers={nreaders} bytes={} segments={} oversized={} malformed={}",
+            "scan: readers={nreaders} mmap={} bytes={} segments={} oversized={} malformed={}",
+            if mapped { "on" } else { "off" },
             memory::fmt_bytes(st.bytes_read()),
             st.segments_verified(),
             st.oversized_skipped(),

@@ -36,6 +36,8 @@ pub const INGEST_SHARDS_SWEEP: &[usize] = &[1, 4, 8];
 pub const INGEST_BATCH_SWEEP: &[usize] = &[1, 256, 4096];
 /// Reader counts swept by the parallel-scan microbench.
 pub const INGEST_READERS_SWEEP: &[usize] = &[1, 2, 4];
+/// Reader counts swept by the mmap-vs-buffered scan microbench.
+pub const MMAP_READERS_SWEEP: &[usize] = &[1, 2, 4];
 /// Edges per scanner chunk / ingest batch in the readers sweep.
 const SCAN_BATCH: usize = 4_096;
 /// Segment size for the bench's binary file — small enough that the
@@ -333,6 +335,121 @@ pub fn run_readers(cfg: &ServiceBenchConfig) -> (Table, Vec<ReaderBenchRow>) {
     (table, rows)
 }
 
+/// One mmap-vs-buffered measurement: the same binary file streamed
+/// through both scan transports at one reader count.
+#[derive(Debug, Clone)]
+pub struct MmapBenchRow {
+    /// Scan transport (`"buffered"` or `"mmap"`).
+    pub mode: &'static str,
+    /// Reader threads requested for the scan.
+    pub readers: usize,
+    /// Edges ingested.
+    pub edges: u64,
+    /// File bytes parsed by the reader threads.
+    pub bytes: u64,
+    /// Wall-clock ingest + terminal replay time.
+    pub elapsed_secs: f64,
+    /// Ingest throughput.
+    pub edges_per_sec: f64,
+    /// Whether the final partition matched the in-memory baseline
+    /// bit-for-bit (compared via padded labels — the bench seeds the
+    /// sketches from the header's `n`, which changes only the
+    /// label-vector length, never the partition).
+    pub labels_match: bool,
+    /// Whether the cell actually ran on a shared memory map (`false`
+    /// on non-unix builds, where `open_mmap` degrades to buffered).
+    pub mapped: bool,
+}
+
+/// The mmap-vs-buffered microbench: write the SBM workload to one
+/// binary file, then stream it through both scan transports at each
+/// [`MMAP_READERS_SWEEP`] reader count — seeded sketches, drains off —
+/// and compare every cell's padded partition against the in-memory
+/// baseline. The transport must never change results, only the
+/// per-edge cost.
+pub fn run_mmap(cfg: &ServiceBenchConfig) -> (Table, Vec<MmapBenchRow>) {
+    let g = sbm::generate(&SbmConfig::equal(
+        cfg.communities,
+        cfg.community_size,
+        0.3,
+        0.002,
+        cfg.seed,
+    ));
+    let n = g.n();
+    let baseline = {
+        let mut config = ServiceConfig::new(cfg.shards, cfg.v_max);
+        config.drain_every = 0;
+        let mut svc = ClusterService::start(config);
+        for chunk in g.edges.edges.chunks(SCAN_BATCH) {
+            svc.push_chunk(chunk);
+        }
+        svc.finish().snapshot.labels_padded(n)
+    };
+
+    let dir = std::env::temp_dir();
+    let stem = format!("streamcom_bench_mmap_{}_{}", std::process::id(), cfg.seed);
+    let bin = dir.join(format!("{stem}.bin"));
+    io::write_binary_edges_with(&bin, &g.edges, SCAN_SEG_RECORDS).expect("write bench binary file");
+
+    let mut table = Table::new(
+        &format!(
+            "mmap scan: {} (n={} m={}, {} shards, binary source, seeded sketches, drains off)",
+            g.name,
+            g.n(),
+            g.m(),
+            cfg.shards
+        ),
+        &["mode", "readers", "Medges/s", "MB/s", "mapped", "partition"],
+    );
+    let mut rows = Vec::new();
+    for mode in ["buffered", "mmap"] {
+        for &readers in MMAP_READERS_SWEEP {
+            let mut config = ServiceConfig::new(cfg.shards, cfg.v_max);
+            config.drain_every = 0;
+            // the serve fast path under test: header-seeded sketches
+            config.initial_nodes = n;
+            let mut svc = ClusterService::start(config);
+            let mut scanner = if mode == "mmap" {
+                ParallelScanner::open_mmap(&bin, readers, SCAN_BATCH)
+            } else {
+                ParallelScanner::open(&bin, readers, SCAN_BATCH)
+            }
+            .expect("open bench scan");
+            let stats = scanner.stats();
+            let mapped = scanner.mmapped();
+            svc.ingest(&mut scanner, SCAN_BATCH);
+            let err = scanner.take_error();
+            let res = svc.finish();
+            let elapsed = res.elapsed.as_secs_f64().max(1e-9);
+            let row = MmapBenchRow {
+                mode,
+                readers,
+                edges: res.edges_ingested,
+                bytes: stats.bytes_read(),
+                elapsed_secs: elapsed,
+                edges_per_sec: res.edges_ingested as f64 / elapsed,
+                labels_match: err.is_none() && res.snapshot.labels_padded(n) == baseline,
+                mapped,
+            };
+            table.push_row(vec![
+                row.mode.to_string(),
+                row.readers.to_string(),
+                format!("{:.2}", row.edges_per_sec / 1e6),
+                format!("{:.1}", row.bytes as f64 / elapsed / 1e6),
+                if row.mapped { "yes".to_string() } else { "no".to_string() },
+                if row.labels_match {
+                    "exact".to_string()
+                } else {
+                    "MISMATCH".to_string()
+                },
+            ]);
+            rows.push(row);
+        }
+    }
+    std::fs::remove_file(&bin).ok();
+    (table, rows)
+}
+
 /// Stream one SBM workload through the service per configured horizon
 /// and collect the table + raw rows.
 pub fn run(cfg: &ServiceBenchConfig) -> (Table, Vec<ServiceBenchRow>) {
@@ -417,15 +534,19 @@ pub fn run(cfg: &ServiceBenchConfig) -> (Table, Vec<ServiceBenchRow>) {
 /// Render the rows as the `BENCH_service.json` document (hand-rolled —
 /// the offline build has no serde; every value is numeric so no string
 /// escaping is required beyond the fixed keys). `ingest` carries the
-/// shards × batch microbench sweep and `readers` the parallel-scan
-/// format × reader-count sweep next to the horizon rows.
+/// shards × batch microbench sweep, `readers` the parallel-scan
+/// format × reader-count sweep, and `mmap` the mmap-vs-buffered
+/// transport sweep next to the horizon rows. `"measured": true` marks
+/// a document produced by a real run, as opposed to the committed
+/// placeholder — CI's verify step keys off it.
 pub fn to_json(
     cfg: &ServiceBenchConfig,
     rows: &[ServiceBenchRow],
     ingest: &[IngestBenchRow],
     readers: &[ReaderBenchRow],
+    mmap: &[MmapBenchRow],
 ) -> String {
-    let mut out = String::from("{\n  \"bench\": \"service\",\n");
+    let mut out = String::from("{\n  \"bench\": \"service\",\n  \"measured\": true,\n");
     out.push_str(&format!(
         "  \"workload\": {{\"communities\": {}, \"community_size\": {}, \"seed\": {}}},\n",
         cfg.communities, cfg.community_size, cfg.seed
@@ -509,6 +630,23 @@ pub fn to_json(
             if i + 1 < readers.len() { "," } else { "" }
         ));
     }
+    out.push_str("  ],\n  \"mmap\": [\n");
+    for (i, r) in mmap.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"readers\": {}, \"edges\": {}, \
+             \"bytes\": {}, \"elapsed_secs\": {:.6}, \
+             \"edges_per_sec\": {:.1}, \"labels_match\": {}, \"mapped\": {}}}{}\n",
+            r.mode,
+            r.readers,
+            r.edges,
+            r.bytes,
+            r.elapsed_secs,
+            r.edges_per_sec,
+            r.labels_match,
+            r.mapped,
+            if i + 1 < mmap.len() { "," } else { "" }
+        ));
+    }
     out.push_str("  ]\n}\n");
     out
 }
@@ -543,13 +681,15 @@ mod tests {
         assert!(bounded.cross_freed_bytes > 0);
         assert_eq!(bounded.per_leader.len(), cfg.shards);
 
-        let json = to_json(&cfg, &rows, &[], &[]);
+        let json = to_json(&cfg, &rows, &[], &[], &[]);
         assert!(json.starts_with('{') && json.trim_end().ends_with('}'));
         assert!(json.contains("\"bench\": \"service\""));
+        assert!(json.contains("\"measured\": true"));
         assert!(json.contains("\"delta_last_bytes\""));
         assert!(json.contains("\"per_leader\""));
         assert!(json.contains("\"ingest\""));
         assert!(json.contains("\"readers\""));
+        assert!(json.contains("\"mmap\""));
         // two rows, comma-separated exactly once at the top level list
         assert_eq!(json.matches("\"horizon\"").count(), 2);
     }
@@ -588,7 +728,7 @@ mod tests {
             small.rmws_per_kedge()
         );
 
-        let json = to_json(&cfg, &[], &rows, &[]);
+        let json = to_json(&cfg, &[], &rows, &[], &[]);
         assert_eq!(json.matches("\"rmws_per_kedge\"").count(), cells);
     }
 
@@ -610,8 +750,34 @@ mod tests {
             assert!(r.labels_match, "{r:?}");
         }
 
-        let json = to_json(&cfg, &[], &[], &rows);
+        let json = to_json(&cfg, &[], &[], &rows, &[]);
         assert_eq!(json.matches("\"labels_match\"").count(), cells);
+        assert!(!json.contains("\"labels_match\": false"));
+    }
+
+    #[test]
+    fn mmap_sweep_covers_both_transports_and_matches_the_baseline() {
+        let cfg = tiny();
+        let (table, rows) = run_mmap(&cfg);
+        let cells = 2 * MMAP_READERS_SWEEP.len();
+        assert_eq!(rows.len(), cells);
+        assert_eq!(table.rows.len(), cells);
+        assert_eq!(rows.iter().filter(|r| r.mode == "buffered").count(), cells / 2);
+        assert_eq!(rows.iter().filter(|r| r.mode == "mmap").count(), cells / 2);
+        let mmap_supported = crate::util::mmap::supported();
+        for r in &rows {
+            assert!(r.edges > 0 && r.bytes > 0 && r.edges_per_sec > 0.0, "{r:?}");
+            // every cell ingests the whole file exactly once
+            assert_eq!(r.edges, rows[0].edges, "{r:?}");
+            // the transport must never change results — only speed
+            assert!(r.labels_match, "{r:?}");
+            // mmap cells really map on platforms that support it (and
+            // honestly report the buffered fallback elsewhere)
+            assert_eq!(r.mapped, r.mode == "mmap" && mmap_supported, "{r:?}");
+        }
+
+        let json = to_json(&cfg, &[], &[], &[], &rows);
+        assert_eq!(json.matches("\"mapped\"").count(), cells);
         assert!(!json.contains("\"labels_match\": false"));
     }
 }

@@ -254,19 +254,42 @@ pub fn encode_segment(out: &mut Vec<u8>, edges: &[Edge]) {
     out.extend_from_slice(&check.to_le_bytes());
 }
 
-/// Decode one segment block (count + records + checksum, exactly
-/// [`SEG_OVERHEAD_BYTES`]` + expected·`[`RECORD_BYTES`] bytes — callers
-/// size it from a [`validate_file_len`](SegHeader::validate_file_len)-
-/// checked header) and append its records to `out`. The stored record
-/// count must match the header-derived `expected`, and the trailing
-/// checksum must verify; `seg` only labels error messages.
-pub fn decode_segment(
-    block: &[u8],
-    expected: u64,
-    seg: u64,
-    out: &mut Vec<Edge>,
-) -> io::Result<()> {
-    debug_assert_eq!(block.len() as u64, SEG_OVERHEAD_BYTES + expected * RECORD_BYTES);
+/// Decode and length-validate the header of a file that is fully
+/// resident in memory — a memory-mapped file, or a `Vec<u8>` on the
+/// non-unix fallback. Same gate order as the streaming open:
+/// magic/version/checksum/consistency via [`SegHeader::decode`], then
+/// [`SegHeader::validate_file_len`] against the *real* byte count.
+///
+/// On success every `seg < seg_count` satisfies
+/// `seg_offset(seg) + seg_bytes(seg) ≤ bytes.len()` (segments are
+/// contiguous and the last one ends exactly at `file_len`), so borrowed
+/// [`SegView`]s can be carved out of `bytes` with plain slicing — a
+/// short map is an `InvalidData` error here, never a fault later.
+pub fn parse_mapped(bytes: &[u8]) -> io::Result<SegHeader> {
+    if bytes.len() < HEADER_BYTES {
+        return Err(invalid(format!(
+            "file is {} B — too short for the {HEADER_BYTES} B v2 header",
+            bytes.len()
+        )));
+    }
+    let head: &[u8; HEADER_BYTES] = bytes[..HEADER_BYTES].try_into().unwrap();
+    let header = SegHeader::decode(head)?;
+    header.validate_file_len(bytes.len() as u64)?;
+    Ok(header)
+}
+
+/// Shared validation core for [`decode_segment`] and [`SegView::parse`]:
+/// checks the stored record count against the header-derived `expected`,
+/// then the trailing checksum, and returns the raw record payload
+/// (`expected ·`[`RECORD_BYTES`] bytes of `[u u32][v u32]` pairs).
+fn validate_segment(block: &[u8], expected: u64, seg: u64) -> io::Result<&[u8]> {
+    let want_len = SEG_OVERHEAD_BYTES + expected * RECORD_BYTES;
+    if block.len() as u64 != want_len {
+        return Err(invalid(format!(
+            "segment {seg}: block is {} B, expected {want_len} B — truncated file",
+            block.len()
+        )));
+    }
     let count = u64::from_le_bytes(block[0..8].try_into().unwrap());
     if count != expected {
         return Err(invalid(format!(
@@ -281,13 +304,106 @@ pub fn decode_segment(
             "segment {seg}: checksum mismatch (stored {stored:#018x}, computed {computed:#018x})"
         )));
     }
-    out.reserve(expected as usize);
-    for c in block[8..payload_end].chunks_exact(8) {
-        out.push(Edge::new(
-            u32::from_le_bytes(c[0..4].try_into().unwrap()),
-            u32::from_le_bytes(c[4..8].try_into().unwrap()),
-        ));
+    Ok(&block[8..payload_end])
+}
+
+/// A borrowed, checksum-verified view of one segment's records — the
+/// zero-copy counterpart of [`decode_segment`]. [`parse`](Self::parse)
+/// validates in place (count, then trailing FNV-1a) with the exact
+/// error contract of the streaming reader, and afterwards the records
+/// are readable straight out of the underlying bytes: [`raw`](Self::raw)
+/// for the `&[u8]` payload, [`edges`](Self::edges) for a decoding
+/// cursor, [`extend_into`](Self::extend_into) to materialise. No
+/// edge-sized allocation happens anywhere in this type.
+#[derive(Debug, Clone, Copy)]
+pub struct SegView<'a> {
+    /// Verified record payload: `count ·`[`RECORD_BYTES`] bytes.
+    records: &'a [u8],
+    count: u64,
+}
+
+impl<'a> SegView<'a> {
+    /// Validate `block` (count + records + checksum, exactly
+    /// [`SEG_OVERHEAD_BYTES`]` + expected·`[`RECORD_BYTES`] bytes —
+    /// callers slice it out of a
+    /// [`validate_file_len`](SegHeader::validate_file_len)-checked
+    /// file) and return a view of its records. `seg` only labels
+    /// error messages.
+    pub fn parse(block: &'a [u8], expected: u64, seg: u64) -> io::Result<Self> {
+        let records = validate_segment(block, expected, seg)?;
+        Ok(Self { records, count: expected })
     }
+
+    /// Verified record count.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// `true` when the segment holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// The raw little-endian `[u u32][v u32]` payload, borrowed from
+    /// the underlying file bytes.
+    pub fn raw(&self) -> &'a [u8] {
+        self.records
+    }
+
+    /// Zero-copy decoding cursor over the records.
+    pub fn edges(&self) -> SegCursor<'a> {
+        SegCursor { chunks: self.records.chunks_exact(RECORD_BYTES as usize) }
+    }
+
+    /// Append every record to `out` (one reserve, then straight-line
+    /// decode — the materialising path the pooled-chunk readers use).
+    pub fn extend_into(&self, out: &mut Vec<Edge>) {
+        out.reserve(self.count as usize);
+        for e in self.edges() {
+            out.push(e);
+        }
+    }
+}
+
+/// Iterator over a [`SegView`]'s records, decoding each 8 B chunk to an
+/// [`Edge`] on the fly (a concrete type so it can be stored/named).
+pub struct SegCursor<'a> {
+    chunks: std::slice::ChunksExact<'a, u8>,
+}
+
+impl Iterator for SegCursor<'_> {
+    type Item = Edge;
+
+    #[inline]
+    fn next(&mut self) -> Option<Edge> {
+        self.chunks.next().map(|c| {
+            Edge::new(
+                u32::from_le_bytes(c[0..4].try_into().unwrap()),
+                u32::from_le_bytes(c[4..8].try_into().unwrap()),
+            )
+        })
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        self.chunks.size_hint()
+    }
+}
+
+impl ExactSizeIterator for SegCursor<'_> {}
+
+/// Decode one segment block (count + records + checksum, exactly
+/// [`SEG_OVERHEAD_BYTES`]` + expected·`[`RECORD_BYTES`] bytes — callers
+/// size it from a [`validate_file_len`](SegHeader::validate_file_len)-
+/// checked header) and append its records to `out`. The stored record
+/// count must match the header-derived `expected`, and the trailing
+/// checksum must verify; `seg` only labels error messages.
+pub fn decode_segment(
+    block: &[u8],
+    expected: u64,
+    seg: u64,
+    out: &mut Vec<Edge>,
+) -> io::Result<()> {
+    SegView::parse(block, expected, seg)?.extend_into(out);
     Ok(())
 }
 
@@ -403,5 +519,93 @@ mod tests {
         let err = decode_segment(&flipped, 100, 3, &mut Vec::new()).unwrap_err();
         assert!(err.to_string().contains("checksum"), "{err}");
         assert!(err.to_string().contains("segment 3"), "{err}");
+    }
+
+    /// Build a full in-memory file: header + segments.
+    fn encode_file(edges: &[Edge], n: usize, seg_records: u64) -> Vec<u8> {
+        let h = SegHeader::new(n, edges.len() as u64, seg_records).unwrap();
+        let mut out = h.encode().to_vec();
+        let mut block = Vec::new();
+        for chunk in edges.chunks(seg_records as usize) {
+            encode_segment(&mut block, chunk);
+            out.extend_from_slice(&block);
+        }
+        out
+    }
+
+    #[test]
+    fn seg_view_is_a_zero_copy_cursor_over_verified_records() {
+        let edges: Vec<Edge> = (0..37u32).map(|i| Edge::new(i, 2 * i)).collect();
+        let mut block = Vec::new();
+        encode_segment(&mut block, &edges);
+
+        let view = SegView::parse(&block, 37, 0).unwrap();
+        assert_eq!(view.count(), 37);
+        assert!(!view.is_empty());
+        // raw() borrows the original bytes — no copy happened
+        assert_eq!(view.raw().as_ptr(), block[8..].as_ptr());
+        assert_eq!(view.raw().len() as u64, 37 * RECORD_BYTES);
+        // the cursor decodes on the fly and is exact-sized
+        let cursor = view.edges();
+        assert_eq!(cursor.len(), 37);
+        assert_eq!(cursor.collect::<Vec<_>>(), edges);
+        let mut out = Vec::new();
+        view.extend_into(&mut out);
+        assert_eq!(out, edges);
+    }
+
+    #[test]
+    fn seg_view_shares_the_streaming_error_contract() {
+        let edges: Vec<Edge> = (0..16u32).map(|i| Edge::new(i, i)).collect();
+        let mut block = Vec::new();
+        encode_segment(&mut block, &edges);
+
+        // flipped bit → checksum error naming the segment
+        let mut flipped = block.clone();
+        flipped[30] ^= 0x10;
+        let err = SegView::parse(&flipped, 16, 5).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("segment 5"), "{err}");
+        assert!(err.to_string().contains("checksum"), "{err}");
+
+        // short block → truncation error, still InvalidData
+        let err = SegView::parse(&block[..block.len() - 1], 16, 2).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("segment 2"), "{err}");
+        assert!(err.to_string().contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn parse_mapped_validates_header_and_length_before_any_view() {
+        let edges: Vec<Edge> = (0..10u32).map(|i| Edge::new(i, i + 1)).collect();
+        let file = encode_file(&edges, 11, 4);
+
+        let h = parse_mapped(&file).unwrap();
+        assert_eq!((h.n, h.m, h.seg_count), (11, 10, 3));
+        // every segment is in bounds after parse_mapped succeeds
+        let mut got = Vec::new();
+        for seg in 0..h.seg_count {
+            let off = h.seg_offset(seg).unwrap() as usize;
+            let len = h.seg_bytes(seg) as usize;
+            SegView::parse(&file[off..off + len], h.records_in(seg), seg)
+                .unwrap()
+                .extend_into(&mut got);
+        }
+        assert_eq!(got, edges);
+
+        // shorter than a header → InvalidData, not a slice panic
+        let err = parse_mapped(&file[..20]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("too short"), "{err}");
+
+        // valid header, truncated payload → the length gate fires
+        let err = parse_mapped(&file[..file.len() - 8]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("does not match the header"), "{err}");
+
+        // header-only empty file is valid
+        let empty = encode_file(&[], 0, 4);
+        let h = parse_mapped(&empty).unwrap();
+        assert_eq!((h.m, h.seg_count), (0, 0));
     }
 }

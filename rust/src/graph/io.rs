@@ -14,7 +14,10 @@
 //! the `cat` lower bound — and what the parallel source scan
 //! (`stream::pscan`) splits segment-aligned across reader threads.
 //! `streamcom convert` moves between the two formats with round-trip
-//! verification.
+//! verification. Binary reads come in two transports: the buffered
+//! copy loop ([`read_binary_edges`]) and a zero-copy memory-mapped
+//! path ([`read_binary_edges_mmap`]) that verifies segments in place
+//! and decodes straight out of the mapping.
 
 use std::collections::HashMap;
 use std::fs::File;
@@ -342,6 +345,39 @@ pub fn read_binary_edges<P: AsRef<Path>>(path: P) -> io::Result<EdgeList> {
     Ok(EdgeList::new(header.n as usize, edges))
 }
 
+/// Read the segmented binary format through one read-only memory map
+/// ([`crate::util::mmap`]) instead of a buffered copy loop: each
+/// segment is checksum-verified in place ([`binfmt::SegView`]) and its
+/// records decoded straight out of the mapping — the only copy is the
+/// `Edge` push into the result vector.
+///
+/// Same hostile-input contract as [`read_binary_edges`]: the header is
+/// cross-checked against the *mapped* length before any edge-sized
+/// allocation ([`binfmt::parse_mapped`]), so a corrupt or truncated
+/// file is an `InvalidData` error at open — never a fault on a short
+/// map. On platforms without mmap support this falls back to the
+/// buffered reader at compile time, so callers need no `cfg` of their
+/// own.
+pub fn read_binary_edges_mmap<P: AsRef<Path>>(path: P) -> io::Result<EdgeList> {
+    if !crate::util::mmap::supported() {
+        return read_binary_edges(path);
+    }
+    let f = File::open(path)?;
+    let map = crate::util::mmap::Mmap::map_file(&f)?;
+    drop(f); // the mapping outlives the descriptor
+    let bytes = map.as_slice();
+    let header = binfmt::parse_mapped(bytes)?;
+    // parse_mapped proved every segment range below is in bounds
+    let mut edges = Vec::with_capacity(header.m as usize);
+    for seg in 0..header.seg_count {
+        let records = header.records_in(seg);
+        let off = header.seg_offset(seg).expect("validated header") as usize;
+        let len = header.seg_bytes(seg) as usize;
+        binfmt::SegView::parse(&bytes[off..off + len], records, seg)?.extend_into(&mut edges);
+    }
+    Ok(EdgeList::new(header.n as usize, edges))
+}
+
 /// Write SNAP-style ground truth: one community per line, node ids
 /// separated by tabs.
 pub fn write_ground_truth<P: AsRef<Path>>(path: P, gt: &GroundTruth) -> io::Result<()> {
@@ -623,6 +659,47 @@ mod tests {
         std::fs::write(&p, &bytes).unwrap();
         let err = read_binary_edges(&p).unwrap_err();
         assert!(err.to_string().contains("checksum"), "{err}");
+        assert!(err.to_string().contains("segment 0"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mmap_reader_matches_buffered_reader() {
+        // mmap is a transport change, not a format change: byte-for-byte
+        // identical EdgeList out of both readers, including the empty
+        // (header-only) and multi-segment shapes
+        let p = tmp("mmap_eq.bin");
+        for (n, m, seg) in [(7usize, 0u32, 4u64), (9, 8, 3), (600, 500, 64)] {
+            let el = EdgeList::new(n, (0..m).map(|i| Edge::new(i % 9, (i + 1) % 9)).collect());
+            write_binary_edges_with(&p, &el, seg).unwrap();
+            let buffered = read_binary_edges(&p).unwrap();
+            let mapped = read_binary_edges_mmap(&p).unwrap();
+            assert_eq!(mapped.n, buffered.n);
+            assert_eq!(mapped.edges, buffered.edges);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mmap_reader_shares_the_hostile_input_contract() {
+        // same InvalidData-at-open guarantees as the buffered reader:
+        // hostile header, truncated payload, flipped bit — and never a
+        // fault on a short map
+        let p = tmp("mmap_hostile.bin");
+        let h = binfmt::SegHeader::new(8, 1u64 << 61, binfmt::DEFAULT_SEG_RECORDS).unwrap();
+        std::fs::write(&p, h.encode()).unwrap();
+        assert_eq!(read_binary_edges_mmap(&p).unwrap_err().kind(), io::ErrorKind::InvalidData);
+
+        let el = EdgeList::new(9, (0..8).map(|i| Edge::new(i, i + 1)).collect());
+        write_binary_edges_with(&p, &el, 3).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() - 5]).unwrap();
+        assert_eq!(read_binary_edges_mmap(&p).unwrap_err().kind(), io::ErrorKind::InvalidData);
+
+        let mut flipped = full.clone();
+        flipped[binfmt::HEADER_BYTES + 8 + 2] ^= 0x40;
+        std::fs::write(&p, &flipped).unwrap();
+        let err = read_binary_edges_mmap(&p).unwrap_err();
         assert!(err.to_string().contains("segment 0"), "{err}");
         std::fs::remove_file(&p).ok();
     }

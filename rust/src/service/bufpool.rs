@@ -15,11 +15,15 @@
 //!
 //! In steady state every `checkout` is a **hit** (a recycled buffer
 //! with its capacity intact), so chunk dispatch performs no heap
-//! allocation at all. Misses happen only while the cycle warms up —
+//! allocation at all. The cycle used to *warm up* through misses —
 //! bounded by the number of buffers that can be in flight at once
-//! (per shard: the pending buffer, `mailbox_depth` queued chunks, and
-//! one in the worker's hands) — which is exactly what the
-//! zero-allocation integration test asserts via [`PoolStats`].
+//! (per shard: the pending buffer, `mailbox_depth` queued chunks, one
+//! in the worker's hands, and one in transit during the dispatch
+//! swap). [`prewarm`](BufPool::prewarm) removes even that ramp: the
+//! service boot fills the shelf to the in-flight bound before the
+//! router checks out its first pending buffer, so steady state starts
+//! at **zero misses** — which is exactly what the zero-allocation
+//! integration test asserts via [`PoolStats`].
 //!
 //! The idle shelf is capped (`max_idle`): buffers beyond the cap are
 //! dropped on return, so a transient burst cannot pin memory forever.
@@ -33,8 +37,9 @@ use crate::graph::edge::Edge;
 /// Counters of the chunk-buffer pool, surfaced in
 /// [`ServiceStats::pool`](super::ServiceStats::pool) and the `serve`
 /// stats line. `hits + misses` is the total number of checkouts;
-/// steady-state zero-allocation ingest shows up as `misses` frozen at
-/// its warm-up value while `hits` keeps growing.
+/// with the boot-time [`prewarm`](BufPool::prewarm) steady-state
+/// zero-allocation ingest shows up as `misses == 0` while `hits`
+/// keeps growing.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PoolStats {
     /// Checkouts served by a recycled buffer (no allocation).
@@ -68,6 +73,21 @@ impl BufPool {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             recycled_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Fill the shelf with ready buffers of `cap` capacity, up to
+    /// `count` (clamped to `max_idle`). Called once at service boot
+    /// with the in-flight bound, *before* the router's first checkout,
+    /// so the recycle loop starts full: the pre-allocated buffers are
+    /// deliberately not counted as hits, misses, or recycled bytes —
+    /// they are capacity planning, not cycle traffic — which is what
+    /// lets the integration test pin `misses == 0` after warmup.
+    pub(crate) fn prewarm(&self, count: usize, cap: usize) {
+        let want = count.min(self.max_idle);
+        let mut free = self.free.lock().unwrap();
+        while free.len() < want {
+            free.push(Vec::with_capacity(cap));
         }
     }
 
@@ -192,5 +212,27 @@ mod tests {
         pool.give_back(Vec::new());
         assert_eq!(pool.idle(), 0);
         assert_eq!(pool.stats().recycled_bytes, 0);
+    }
+
+    #[test]
+    fn prewarm_fills_the_shelf_without_counting_as_traffic() {
+        let pool = BufPool::new(8);
+        pool.prewarm(4, 16);
+        assert_eq!(pool.idle(), 4);
+        assert_eq!(pool.stats(), PoolStats::default(), "prewarm is not cycle traffic");
+
+        // every checkout up to the prewarmed depth is a hit — no ramp
+        let bufs: Vec<_> = (0..4).map(|_| pool.checkout(16)).collect();
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses), (4, 0));
+        for b in &bufs {
+            assert!(b.capacity() >= 16);
+        }
+
+        // prewarm is idempotent and respects max_idle
+        pool.prewarm(100, 16);
+        assert_eq!(pool.idle(), 8, "clamped to max_idle");
+        pool.prewarm(2, 16);
+        assert_eq!(pool.idle(), 8, "never drains the shelf");
     }
 }

@@ -122,6 +122,16 @@ pub struct ServiceConfig {
     /// never armed and costs one atomic load per durable write. Clones
     /// of the config share the hook.
     pub failpoint: FailPoint,
+    /// Pre-size every worker sketch to this many nodes at start-up
+    /// (`0` — the default — starts empty and grows on demand). File
+    /// ingest sets it from the binary header's `n`, so workers never
+    /// grow their degree/community/volume arrays mid-stream: the
+    /// per-chunk `ensure` becomes a no-op branch for the whole scan.
+    /// A perf knob, not a semantics knob — unseen nodes label as
+    /// singletons either way, so the partition is unchanged; only the
+    /// label-vector *length* reflects the pre-size (compare via
+    /// `Snapshot::labels_padded` when mixing seeded/unseeded runs).
+    pub initial_nodes: usize,
 }
 
 impl ServiceConfig {
@@ -139,6 +149,7 @@ impl ServiceConfig {
             wal_dir: None,
             wal_segment_records: 65_536,
             failpoint: FailPoint::default(),
+            initial_nodes: 0,
         }
     }
 
@@ -203,6 +214,15 @@ mod tests {
         // changing `shards` after construction still tracks
         assert_eq!(ServiceConfig::new(4, 64).leaders, 0);
         assert_eq!(ServiceConfig::batch(4, 64).leaders, 0);
+    }
+
+    #[test]
+    fn sketches_start_empty_unless_seeded() {
+        // initial_nodes is the file-ingest fast path; the in-memory
+        // default must stay grow-on-demand so label-vector lengths of
+        // existing callers are unchanged
+        assert_eq!(ServiceConfig::new(4, 64).initial_nodes, 0);
+        assert_eq!(ServiceConfig::batch(4, 64).initial_nodes, 0);
     }
 
     #[test]

@@ -336,7 +336,7 @@ impl ClusterService {
             wal::init_fresh(dir).expect("initialise WAL directory");
         }
         let states = (0..config.shards)
-            .map(|_| StreamingClusterer::new(0, config.str_config.clone()))
+            .map(|_| StreamingClusterer::new(config.initial_nodes, config.str_config.clone()))
             .collect();
         let crosslog = CrossLog::new(config.horizon, config.leaders);
         let leaders = (0..config.leaders)
@@ -421,7 +421,9 @@ impl ClusterService {
                     // no checkpoint ever completed — recover the whole
                     // stream from the WAL over an empty service
                     let states = (0..config.shards)
-                        .map(|_| StreamingClusterer::new(0, config.str_config.clone()))
+                        .map(|_| {
+                            StreamingClusterer::new(config.initial_nodes, config.str_config.clone())
+                        })
                         .collect();
                     let leaders = (0..config.leaders)
                         .map(|l| LeaderShard::new(l, config.leaders))
@@ -488,9 +490,12 @@ impl ClusterService {
     ) -> Result<Self, WalError> {
         let shards = config.shards;
         // per shard, at most: the pending buffer, `mailbox_depth`
-        // queued chunks, and one in the worker's hands — the pool never
-        // needs to shelve more than can circulate
-        let pool_cap = shards * (config.mailbox_depth + 2);
+        // queued chunks, one in the worker's hands, and one in transit
+        // during the dispatch swap (checkout happens before the spent
+        // buffer returns) — the in-flight bound. Sizing the shelf to it
+        // and prewarming below means checkout can never find the shelf
+        // empty: steady state starts at zero misses.
+        let pool_cap = shards * (config.mailbox_depth + 3);
         // every recovered edge is either in a shard state or in the
         // cross log, so the local done-count is derivable — it must be,
         // for later quiesced-cut checks (`dispatched + cross appended
@@ -526,6 +531,11 @@ impl ClusterService {
             meter: Mutex::new(Meter::start()),
             config,
         });
+
+        // fill the shelf to the in-flight bound before the router's
+        // first checkout (Router::new takes one pending buffer per
+        // shard) — the warm-up miss ramp becomes hits from edge one
+        shared.bufpool.prewarm(pool_cap, shared.config.chunk_size);
 
         let workers = (0..shards)
             .map(|w| {

@@ -124,9 +124,10 @@ pub struct ServiceStats {
     /// (with the batch spine, router-side atomic RMWs are one per
     /// ingest batch plus one per dispatched chunk — not per edge).
     pub chunks_dispatched: u64,
-    /// Chunk-buffer pool counters: steady-state zero-allocation ingest
-    /// shows up as `misses` frozen at its warm-up value while `hits`
-    /// keeps growing (asserted by the service integration suite).
+    /// Chunk-buffer pool counters: the shelf is prewarmed to the
+    /// in-flight bound at boot, so steady-state zero-allocation ingest
+    /// shows up as `misses == 0` while `hits` keeps growing (asserted
+    /// by the service integration suite).
     pub pool: PoolStats,
     /// Bytes appended to the write-ahead log by this process (0 when
     /// durability is off). After a resume this restarts at 0 — it

@@ -5,7 +5,8 @@
 //! module provides that stream as infrastructure:
 //!
 //! * [`source`] — [`source::EdgeSource`]: pull-based edge producers
-//!   (in-memory, text file, binary file, synthetic generator-backed).
+//!   (in-memory, text file, binary file — buffered or zero-copy
+//!   memory-mapped, synthetic generator-backed).
 //! * [`chunk`] — chunked pipelining of a source through a bounded
 //!   channel: a producer thread reads ahead while the consumer
 //!   processes, with backpressure when the consumer lags.
@@ -17,6 +18,9 @@
 //!   byte range of one file (binary: segment-aligned; text: newline-
 //!   aligned) and a sequencer re-emits them in file order, so the
 //!   stream is bit-identical to a single reader's at any reader count.
+//!   Binary scans can share one read-only mapping across all readers
+//!   (`pscan::ParallelScanner::open_mmap` — zero-copy, unix only,
+//!   buffered fallback elsewhere).
 //! * [`meter`] — throughput metering (edges/s, bytes/s) for the
 //!   Table 1 harness and the §Perf pass.
 

@@ -28,6 +28,25 @@
 //! (I/O error, checksum mismatch) stop that reader's queue and park
 //! the first message in [`ParallelScanner::take_error`]; callers check
 //! it after the drain, exactly like `source::BinaryFileSource::error`.
+//!
+//! # mmap mode (`open_mmap`)
+//!
+//! For binary inputs [`ParallelScanner::open_mmap`] replaces the
+//! per-range `File` handles with **one** shared read-only mapping
+//! (`util::mmap::Mmap`, `MADV_SEQUENTIAL`): the scanner owns an
+//! `Arc<Mmap>`, every reader thread borrows a clone and walks its
+//! disjoint segment range directly in the mapped bytes — checksums
+//! verified in place via `binfmt::SegView`, records decoded straight
+//! into the outgoing chunk. No seeks, no `read_exact` block copies,
+//! no per-segment staging vec. Ownership story: one map, N borrowing
+//! readers, unmap after join — `Drop` closes the queues and joins the
+//! reader threads *first* (their `Arc` clones die there), then the
+//! scanner's own `Arc` drops and `munmap` runs. The header is
+//! validated against the real mapped length before any thread spawns,
+//! so segment offsets can never leave the map (a short file is
+//! `InvalidData` at open, never a SIGBUS). On non-unix targets
+//! `open_mmap` degrades at compile time to the buffered
+//! per-range-handle path with identical semantics.
 
 use std::fs::File;
 use std::io::{self, BufRead, BufReader, Read, Seek, SeekFrom};
@@ -41,6 +60,7 @@ use crate::graph::binfmt;
 use crate::graph::edge::Edge;
 use crate::graph::io::frame_lines;
 use crate::util::channel::Channel;
+use crate::util::mmap::{self, Mmap};
 
 /// Chunks each reader may buffer ahead of the sequencer. Together with
 /// the batch size this bounds scan memory at
@@ -251,6 +271,45 @@ fn run_binary_reader(
     Ok(())
 }
 
+/// Zero-copy reader over a shared mapping: verify each owned segment's
+/// checksum in place and decode records straight into outgoing chunks
+/// (the mmap counterpart of [`run_binary_reader`] — no file handle, no
+/// block buffer, no staging vec). `map` is the thread's borrowed view
+/// of the scanner's one mapping; slicing is safe because the header
+/// was validated against the real mapped length at open.
+fn run_mmap_reader(
+    map: &Mmap,
+    header: binfmt::SegHeader,
+    segs: (u64, u64),
+    batch: usize,
+    tx: &Channel<Vec<Edge>>,
+    stats: &ScanStats,
+) -> io::Result<()> {
+    let bytes = map.as_slice();
+    let mut chunk: Vec<Edge> = Vec::with_capacity(batch);
+    for seg in segs.0..segs.1 {
+        let records = header.records_in(seg);
+        let off = header.seg_offset(seg).expect("validated header") as usize;
+        let len = header.seg_bytes(seg) as usize;
+        let view = binfmt::SegView::parse(&bytes[off..off + len], records, seg)?;
+        stats.segments_verified.fetch_add(1, Ordering::Relaxed);
+        stats.bytes_read.fetch_add(len as u64, Ordering::Relaxed);
+        for e in view.edges() {
+            chunk.push(e);
+            if chunk.len() == batch {
+                let full = std::mem::replace(&mut chunk, Vec::with_capacity(batch));
+                if tx.send(full).is_err() {
+                    return Ok(()); // receiver dropped the scanner
+                }
+            }
+        }
+    }
+    if !chunk.is_empty() {
+        let _ = tx.send(chunk);
+    }
+    Ok(())
+}
+
 /// N-reader parallel scan over one edge file, consumed as an ordinary
 /// [`EdgeSource`]: readers parse their ranges concurrently, the
 /// sequencer hands edges out in file order (module docs explain why
@@ -266,6 +325,10 @@ pub struct ParallelScanner {
     stats: Arc<ScanStats>,
     error: Arc<Mutex<Option<String>>>,
     len_hint: Option<usize>,
+    /// the one shared mapping in mmap mode (`None` on the buffered
+    /// path). Reader threads hold borrowed `Arc` clones; this last
+    /// `Arc` drops after `Drop` joins them — unmap-after-join.
+    map: Option<Arc<Mmap>>,
 }
 
 impl ParallelScanner {
@@ -353,12 +416,72 @@ impl ParallelScanner {
             stats,
             error,
             len_hint,
+            map: None,
+        })
+    }
+
+    /// Open a segmented binary file in zero-copy mmap mode: one shared
+    /// read-only mapping, `readers` threads walking disjoint segment
+    /// ranges of it (module docs §mmap mode). Header validation happens
+    /// here against the real mapped length — a hostile or truncated
+    /// file fails the open as `InvalidData`, never a short-map fault in
+    /// a reader. On non-unix targets this is a compile-time fallback to
+    /// [`open_with`](Self::open_with)'s buffered binary path (identical
+    /// stream, per-range file handles).
+    pub fn open_mmap<P: AsRef<Path>>(path: P, readers: usize, batch: usize) -> io::Result<Self> {
+        if !mmap::supported() {
+            return Self::open_with(path, ScanFormat::Binary, readers, batch);
+        }
+        let readers = readers.max(1);
+        let batch = batch.max(1);
+        let f = File::open(path.as_ref())?;
+        let map = Arc::new(Mmap::map_file(&f)?);
+        drop(f); // the mapping keeps the pages alive
+        let header = binfmt::parse_mapped(map.as_slice())?;
+        let stats = Arc::new(ScanStats::default());
+        let error: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let mut queues = Vec::new();
+        let mut threads = Vec::new();
+        for (s0, s1) in plan_segment_ranges(header.seg_count, readers) {
+            let q: Channel<Vec<Edge>> = Channel::bounded(READ_AHEAD_CHUNKS);
+            let tx = q.clone();
+            let m = Arc::clone(&map);
+            let st = Arc::clone(&stats);
+            let err = Arc::clone(&error);
+            threads.push(thread::spawn(move || {
+                if let Err(e) = run_mmap_reader(&m, header, (s0, s1), batch, &tx, &st) {
+                    let mut slot = err.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(format!("mmap reader segments [{s0}..{s1}): {e}"));
+                    }
+                }
+                tx.close();
+            }));
+            queues.push(q);
+        }
+        Ok(Self {
+            queues,
+            threads,
+            current: 0,
+            leftover: Vec::new(),
+            leftover_pos: 0,
+            stats,
+            error,
+            len_hint: usize::try_from(header.m).ok(),
+            map: Some(map),
         })
     }
 
     /// Number of reader threads actually running (after clamping).
     pub fn readers(&self) -> usize {
         self.queues.len()
+    }
+
+    /// `true` when the scan runs over one shared mapping (`open_mmap`
+    /// on a unix target); `false` on the buffered path, including the
+    /// non-unix `open_mmap` fallback.
+    pub fn mmapped(&self) -> bool {
+        self.map.is_some()
     }
 
     /// Shared scan counters (live — safe to read mid-scan).
@@ -414,6 +537,8 @@ impl Drop for ParallelScanner {
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
+        // `self.map` (the last Arc<Mmap>) drops after this body — i.e.
+        // after every borrowing reader has joined: unmap-after-join.
     }
 }
 
@@ -560,6 +685,80 @@ mod tests {
         std::fs::write(&p, h.encode()).unwrap();
         let err = ParallelScanner::open_with(&p, ScanFormat::Binary, 4, 32).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // the mmap open shares the gate (falls back to the same gate on
+        // non-unix) — InvalidData, not a fault on the short map
+        let err = ParallelScanner::open_mmap(&p, 4, 32).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mmap_scan_matches_buffered_scan_edge_for_edge() {
+        let p = tmp("mmap_order.bin");
+        let mut rng = lcg(4242);
+        let edges: Vec<Edge> =
+            (0..5000).map(|_| Edge::new((rng() % 800) as u32, (rng() % 800) as u32)).collect();
+        let el = EdgeList::new(800, edges);
+        write_binary_edges_with(&p, &el, 64).unwrap(); // 79 segments
+        let mut single = BinaryFileSource::open(&p).unwrap();
+        let want = collect(&mut single, 97);
+        assert_eq!(want, el.edges);
+        for readers in [1usize, 2, 4, 200] {
+            let mut sc = ParallelScanner::open_mmap(&p, readers, 97).unwrap();
+            assert_eq!(sc.len_hint(), Some(5000));
+            assert!(sc.readers() <= 79, "clamped to segment count");
+            assert_eq!(sc.mmapped(), mmap::supported());
+            let got = collect(&mut sc, 97);
+            assert_eq!(got, want, "readers={readers}");
+            assert!(sc.take_error().is_none());
+            let stats = sc.stats();
+            assert_eq!(stats.segments_verified(), 79);
+            assert!(stats.bytes_read() > 0);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mmap_scan_surfaces_corruption_through_take_error() {
+        let p = tmp("mmap_corrupt.bin");
+        let el = EdgeList::new(101, (0..100u32).map(|i| Edge::new(i, i + 1)).collect());
+        write_binary_edges_with(&p, &el, 16).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let seg2 = binfmt::HEADER_BYTES + 2 * (16 + 16 * 8);
+        bytes[seg2 + 8 + 3] ^= 0x10;
+        std::fs::write(&p, &bytes).unwrap();
+        let mut sc = ParallelScanner::open_mmap(&p, 2, 32).unwrap();
+        let _ = collect(&mut sc, 32);
+        let err = sc.take_error().expect("corruption must surface");
+        assert!(err.contains("segment 2"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mmap_scan_early_drop_unmaps_after_join() {
+        // drop mid-stream with full queues: readers must exit, join,
+        // and the mapping must be released without a hang or fault
+        let p = tmp("mmap_drop.bin");
+        let edges: Vec<Edge> =
+            (0..20_000u32).map(|i| Edge::new(i % 2000, (i + 1) % 2000)).collect();
+        let el = EdgeList::new(2001, edges);
+        write_binary_edges_with(&p, &el, 64).unwrap();
+        let mut sc = ParallelScanner::open_mmap(&p, 4, 16).unwrap();
+        let mut buf = Vec::with_capacity(16);
+        assert!(sc.next_batch(&mut buf) > 0);
+        drop(sc);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mmap_scan_handles_the_empty_file() {
+        let p = tmp("mmap_empty.bin");
+        let el = EdgeList::new(0, Vec::new());
+        write_binary_edges_with(&p, &el, 16).unwrap();
+        let mut sc = ParallelScanner::open_mmap(&p, 4, 32).unwrap();
+        assert_eq!(sc.readers(), 0, "no segments, no readers");
+        assert_eq!(collect(&mut sc, 32), vec![]);
+        assert!(sc.take_error().is_none());
         std::fs::remove_file(&p).ok();
     }
 }

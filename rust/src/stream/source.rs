@@ -330,6 +330,124 @@ impl EdgeSource for BinaryFileSource {
     }
 }
 
+/// Zero-copy variant of [`BinaryFileSource`]: the whole file is
+/// memory-mapped once on open ([`util::mmap::Mmap`], `MADV_SEQUENTIAL`)
+/// and batches decode straight out of the mapping — no segment block
+/// buffer, no decoded-segment staging vec, no `read_exact` copies.
+/// Segment checksums are still verified in place (via
+/// [`binfmt::SegView`]) *before* any record of that segment is served,
+/// so the error contract is byte-for-byte the buffered reader's:
+/// hostile headers and truncation fail the open as `InvalidData`
+/// (`binfmt::parse_mapped` cross-checks the header against the real
+/// mapped length, so segment offsets can never run off the map — a
+/// short file is an error at open, never a SIGBUS), and a mid-file bit
+/// flip stops the stream with the failure parked in
+/// [`error`](Self::error).
+///
+/// On non-unix targets `open` fails with `ErrorKind::Unsupported`;
+/// callers fall back to [`BinaryFileSource`] (see
+/// `util::mmap::supported`).
+pub struct MmapBinarySource {
+    map: crate::util::mmap::Mmap,
+    header: binfmt::SegHeader,
+    /// next segment to verify
+    next_seg: u64,
+    /// byte cursor within the current verified segment's record payload
+    cur_pos: usize,
+    /// end of the current verified segment's record payload
+    cur_end: usize,
+    /// edges handed to callers so far (for `len_hint`)
+    served: u64,
+    error: Option<String>,
+}
+
+impl MmapBinarySource {
+    /// Map a segmented binary edge file and validate its header against
+    /// the real mapped length (same gates as [`BinaryFileSource::open`],
+    /// still before any edge-sized allocation — there is none at all on
+    /// this path).
+    pub fn open<P: AsRef<Path>>(path: P) -> std::io::Result<Self> {
+        let f = File::open(path)?;
+        let map = crate::util::mmap::Mmap::map_file(&f)?;
+        let header = binfmt::parse_mapped(map.as_slice())?;
+        Ok(Self {
+            map,
+            header,
+            next_seg: 0,
+            cur_pos: 0,
+            cur_end: 0,
+            served: 0,
+            error: None,
+        })
+    }
+
+    /// The decoded, validated file header.
+    pub fn header(&self) -> &binfmt::SegHeader {
+        &self.header
+    }
+
+    /// The verification failure that stopped the stream, if any.
+    pub fn error(&self) -> Option<&str> {
+        self.error.as_deref()
+    }
+
+    /// Verify the next segment's checksum in place and point the record
+    /// cursor at its payload; false on EOF or a verification failure
+    /// (recorded in `error`).
+    fn load_segment(&mut self) -> bool {
+        if self.error.is_some() || self.next_seg >= self.header.seg_count {
+            return false;
+        }
+        let seg = self.next_seg;
+        let records = self.header.records_in(seg);
+        // in bounds: parse_mapped validated the header against the map
+        let off = self.header.seg_offset(seg).expect("validated header") as usize;
+        let len = self.header.seg_bytes(seg) as usize;
+        let block = &self.map.as_slice()[off..off + len];
+        match binfmt::SegView::parse(block, records, seg) {
+            Ok(view) => {
+                // the record payload sits 8 B into the block; remember
+                // absolute byte offsets so no borrow outlives this call
+                self.cur_pos = off + 8;
+                self.cur_end = self.cur_pos + view.raw().len();
+                self.next_seg += 1;
+                true
+            }
+            Err(e) => {
+                self.error = Some(e.to_string());
+                false
+            }
+        }
+    }
+}
+
+impl EdgeSource for MmapBinarySource {
+    fn next_batch(&mut self, buf: &mut Vec<Edge>) -> usize {
+        buf.clear();
+        while buf.len() < buf.capacity() {
+            if self.cur_pos == self.cur_end && !self.load_segment() {
+                break;
+            }
+            let rec = binfmt::RECORD_BYTES as usize;
+            let take = (buf.capacity() - buf.len()).min((self.cur_end - self.cur_pos) / rec);
+            let bytes = &self.map.as_slice()[self.cur_pos..self.cur_pos + take * rec];
+            for c in bytes.chunks_exact(rec) {
+                buf.push(Edge::new(
+                    u32::from_le_bytes(c[0..4].try_into().unwrap()),
+                    u32::from_le_bytes(c[4..8].try_into().unwrap()),
+                ));
+            }
+            self.cur_pos += take * rec;
+        }
+        self.served += buf.len() as u64;
+        buf.len()
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some((self.header.m - self.served) as usize)
+    }
+}
+
 /// Drain a source into a Vec (tests/harness convenience).
 pub fn collect(source: &mut dyn EdgeSource, batch: usize) -> Vec<Edge> {
     let mut out = Vec::new();
@@ -475,6 +593,73 @@ mod tests {
         bytes[seg1 + 8 + 4] ^= 1;
         std::fs::write(&p, &bytes).unwrap();
         let mut src = BinaryFileSource::open(&p).unwrap();
+        let got = collect(&mut src, 13);
+        assert_eq!(got, el.edges[..32].to_vec(), "clean prefix still streams");
+        let err = src.error().expect("corruption must be reported");
+        assert!(err.contains("segment 1"), "{err}");
+        assert!(src.len_hint().unwrap() > 0, "shortfall stays visible");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mmap_source_streams_identically_to_buffered() {
+        let p = std::env::temp_dir().join(format!("sc_src_mmap_{}.bin", std::process::id()));
+        let el = EdgeList::new(101, edges());
+        io::write_binary_edges_with(&p, &el, 7).unwrap();
+        let mut buffered = BinaryFileSource::open(&p).unwrap();
+        let mut mapped = MmapBinarySource::open(&p).unwrap();
+        assert_eq!(mapped.len_hint(), Some(100));
+        assert_eq!(mapped.header().m, 100);
+        // batch size straddles segment boundaries on both paths
+        assert_eq!(collect(&mut mapped, 13), collect(&mut buffered, 13));
+        assert!(mapped.error().is_none());
+        assert_eq!(mapped.len_hint(), Some(0));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mmap_source_rejects_hostile_and_truncated_files_at_open() {
+        let p = std::env::temp_dir().join(format!("sc_src_mmap_bad_{}.bin", std::process::id()));
+        let el = EdgeList::new(101, edges());
+        io::write_binary_edges_with(&p, &el, 32).unwrap();
+        let good = std::fs::read(&p).unwrap();
+
+        // hostile header claiming a huge m: InvalidData at open, before
+        // any segment is touched (never a short-map fault)
+        let mut hostile = good.clone();
+        hostile[16..24].copy_from_slice(&(1u64 << 61).to_le_bytes());
+        let check = binfmt::fnv1a(&hostile[0..40]);
+        hostile[40..48].copy_from_slice(&check.to_le_bytes());
+        std::fs::write(&p, &hostile).unwrap();
+        let err = MmapBinarySource::open(&p).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+
+        // truncated file: the length gate fires at open
+        std::fs::write(&p, &good[..good.len() - 10]).unwrap();
+        let err = MmapBinarySource::open(&p).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("does not match the header"), "{err}");
+
+        // shorter than a header
+        std::fs::write(&p, &good[..20]).unwrap();
+        let err = MmapBinarySource::open(&p).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mmap_source_stops_and_reports_on_corruption() {
+        let p = std::env::temp_dir().join(format!("sc_src_mmap_flip_{}.bin", std::process::id()));
+        let el = EdgeList::new(101, edges());
+        io::write_binary_edges_with(&p, &el, 32).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let seg1 = binfmt::HEADER_BYTES + (16 + 32 * 8);
+        bytes[seg1 + 8 + 4] ^= 1;
+        std::fs::write(&p, &bytes).unwrap();
+        let mut src = MmapBinarySource::open(&p).unwrap();
         let got = collect(&mut src, 13);
         assert_eq!(got, el.edges[..32].to_vec(), "clean prefix still streams");
         let err = src.error().expect("corruption must be reported");

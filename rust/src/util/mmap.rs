@@ -1,0 +1,254 @@
+//! Read-only memory-mapped files without a `libc`/`memmap2` crate.
+//!
+//! The segmented binary edge format ([`crate::graph::binfmt`]) places
+//! every segment at a computable offset, so a reader never needs to
+//! copy segment bytes into a heap block — it can verify checksums and
+//! decode records straight out of the page cache. This module supplies
+//! the one OS primitive that enables that: a safe, owned wrapper over
+//! `mmap(2)`.
+//!
+//! Std already links the platform C library on unix targets, so the
+//! three syscalls we need (`mmap`, `munmap`, `madvise`) are declared
+//! with `extern "C"` directly — no new dependency. The declarations
+//! use LP64 types (`usize` length, `i64` offset), which match every
+//! 64-bit unix this crate targets.
+//!
+//! # Safety model
+//!
+//! * [`Mmap::map_file`] maps the whole file `PROT_READ`/`MAP_PRIVATE`
+//!   and advises `MADV_SEQUENTIAL` (the scan reads front to back).
+//! * The mapping is immutable for its lifetime, so [`Mmap`] is `Send`
+//!   + `Sync` and hands out plain `&[u8]` slices; `Drop` unmaps.
+//! * A zero-length file is represented without a syscall (`mmap` with
+//!   `len == 0` is `EINVAL`); `as_slice` returns `&[]`.
+//! * The one hazard mmap cannot remove: if another process truncates
+//!   the file *after* mapping, touching the vanished pages faults.
+//!   Callers defend against short files at open time by validating
+//!   the header's claimed length against `as_slice().len()` (see
+//!   `binfmt::parse_mapped`), which is why a short map is an
+//!   `InvalidData` error and never a SIGBUS.
+//!
+//! On non-unix targets [`Mmap::map_file`] fails with
+//! [`std::io::ErrorKind::Unsupported`] and [`supported`] returns
+//! `false`; callers fall back to the buffered read path at compile
+//! time (the fallback branch is ordinary safe code, always built).
+
+use std::fs::File;
+use std::io;
+
+/// Whether this target has a real `mmap(2)` path. `false` means every
+/// [`Mmap::map_file`] call returns `ErrorKind::Unsupported` and
+/// callers should use the buffered reader instead.
+pub fn supported() -> bool {
+    cfg!(unix)
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+    pub const MADV_SEQUENTIAL: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
+    }
+}
+
+/// An owned, read-only mapping of an entire file.
+#[cfg(unix)]
+pub struct Mmap {
+    /// Base address; null iff `len == 0` (no mapping exists).
+    ptr: *mut std::os::raw::c_void,
+    len: usize,
+}
+
+#[cfg(unix)]
+// SAFETY: the mapping is PROT_READ and never mutated through this
+// type, so shared references from any thread are fine.
+unsafe impl Send for Mmap {}
+#[cfg(unix)]
+unsafe impl Sync for Mmap {}
+
+#[cfg(unix)]
+impl Mmap {
+    /// Map `file` in its entirety, read-only, with sequential-access
+    /// advice. The file handle may be closed afterwards; the mapping
+    /// keeps the pages alive.
+    pub fn map_file(file: &File) -> io::Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+
+        let len = file.metadata()?.len();
+        let len = usize::try_from(len)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "file too large to map"))?;
+        if len == 0 {
+            return Ok(Mmap {
+                ptr: std::ptr::null_mut(),
+                len: 0,
+            });
+        }
+        // SAFETY: fd is a valid open descriptor for `file`; we request
+        // a fresh PROT_READ private mapping of `len` bytes and check
+        // the MAP_FAILED sentinel before trusting the pointer.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(io::Error::last_os_error());
+        }
+        // Best-effort: the scan walks segments front to back, so ask
+        // the kernel for aggressive read-ahead. Failure is harmless.
+        // SAFETY: `ptr..ptr+len` is the mapping established above.
+        unsafe {
+            let _ = sys::madvise(ptr, len, sys::MADV_SEQUENTIAL);
+        }
+        Ok(Mmap { ptr, len })
+    }
+
+    /// The mapped bytes. Empty slice for a zero-length file.
+    pub fn as_slice(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        // SAFETY: `ptr` is a live PROT_READ mapping of exactly `len`
+        // bytes, valid until `Drop`, and never written through.
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+
+    /// Mapped length in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// `true` for a zero-length file (no mapping exists).
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+#[cfg(unix)]
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            // SAFETY: `ptr`/`len` describe the mapping we own; after
+            // munmap nothing dereferences it (self is being dropped).
+            unsafe {
+                let _ = sys::munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+/// Non-unix stub: construction always fails with `Unsupported`, so
+/// the methods below are unreachable but keep call sites compiling.
+#[cfg(not(unix))]
+pub struct Mmap {
+    never: std::convert::Infallible,
+}
+
+#[cfg(not(unix))]
+impl Mmap {
+    pub fn map_file(_file: &File) -> io::Result<Mmap> {
+        Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "mmap is only available on unix targets; use the buffered reader",
+        ))
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        match self.never {}
+    }
+
+    pub fn len(&self) -> usize {
+        match self.never {}
+    }
+
+    pub fn is_empty(&self) -> bool {
+        match self.never {}
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("pallas_mmap_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn maps_file_contents_byte_for_byte() {
+        let path = tmp("bytes.bin");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::File::create(&path)
+            .unwrap()
+            .write_all(&payload)
+            .unwrap();
+
+        let f = File::open(&path).unwrap();
+        let map = Mmap::map_file(&f).unwrap();
+        drop(f); // mapping outlives the descriptor
+        assert_eq!(map.len(), payload.len());
+        assert_eq!(map.as_slice(), &payload[..]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn zero_length_file_maps_to_empty_slice() {
+        let path = tmp("empty.bin");
+        std::fs::File::create(&path).unwrap();
+
+        let f = File::open(&path).unwrap();
+        let map = Mmap::map_file(&f).unwrap();
+        assert!(map.is_empty());
+        assert_eq!(map.as_slice(), &[] as &[u8]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn slices_are_shareable_across_threads() {
+        let path = tmp("threads.bin");
+        std::fs::File::create(&path)
+            .unwrap()
+            .write_all(&vec![7u8; 4096])
+            .unwrap();
+
+        let f = File::open(&path).unwrap();
+        let map = std::sync::Arc::new(Mmap::map_file(&f).unwrap());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = std::sync::Arc::clone(&map);
+                std::thread::spawn(move || m.as_slice().iter().map(|&b| b as u64).sum::<u64>())
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 7 * 4096);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn supported_reports_the_compile_time_truth() {
+        assert!(supported());
+    }
+}

@@ -7,9 +7,11 @@
 //! * [`pool`] — thread pool + scoped fork/join (no `rayon`)
 //! * [`union_find`] — disjoint-set forest
 //! * [`proptest`] — tiny property-testing harness (no `proptest` crate)
+//! * [`mmap`] — read-only memory-mapped files (no `memmap2`)
 
 pub mod channel;
 pub mod cli;
+pub mod mmap;
 pub mod pool;
 pub mod proptest;
 pub mod rng;

@@ -316,6 +316,59 @@ fn serve_parallel_readers_scan_the_input_file() {
 }
 
 #[test]
+fn serve_mmap_scans_the_binary_input() {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let src = dir.join(format!("sc_mmap_{pid}.bin"));
+    let src_str = src.to_str().unwrap();
+    let (_, stderr, ok) = run(&[
+        "generate", "--preset", "amazon-s", "--scale", "0.02", "--out", src_str,
+    ]);
+    assert!(ok, "generate failed: {stderr}");
+    let stem = src_str.trim_end_matches(".bin");
+    // rewrite with small segments so the file splits across 2 readers
+    let bin = dir.join(format!("sc_mmap_{pid}_seg.bin"));
+    let bin_str = bin.to_str().unwrap();
+    let (stdout, stderr, ok) = run(&[
+        "convert", "--input", src_str, "--out", bin_str, "--seg-records", "512", "--mmap",
+    ]);
+    assert!(ok, "convert --mmap failed: {stderr}");
+    assert!(stdout.contains("round trip verified (mmap reads)"), "{stdout}");
+
+    let (stdout, stderr, ok) = run_with_stdin(
+        &[
+            "serve", "--input", bin_str, "--mmap", "--readers", "2", "--shards", "2", "--vmax",
+            "64",
+        ],
+        "stats\n",
+    );
+    assert!(ok, "serve --mmap failed: {stderr}");
+    assert!(stdout.contains("scan: 2 reader threads"), "{stdout}");
+    assert!(stdout.contains("final:"), "{stdout}");
+    // the footer reports the transport honestly: mapped on unix,
+    // buffered fallback elsewhere
+    let want = if cfg!(unix) { "mmap=on" } else { "mmap=off" };
+    assert!(stdout.contains(want), "{stdout}");
+
+    // --readers 0 under --mmap auto-detects the machine's parallelism
+    let (stdout, stderr, ok) =
+        run_with_stdin(&["serve", "--input", bin_str, "--mmap", "--shards", "2"], "");
+    assert!(ok, "serve --mmap auto-readers failed: {stderr}");
+    assert!(stdout.contains("auto-detected"), "{stdout}");
+    assert!(stdout.contains("final:"), "{stdout}");
+
+    // --mmap needs a file to map
+    let (_, stderr, ok) = run_with_stdin(&["serve", "--sbm", "4x20", "--mmap"], "");
+    assert!(!ok, "--mmap without --input must fail fast");
+    assert!(stderr.contains("--mmap"), "{stderr}");
+
+    std::fs::remove_file(&src).ok();
+    std::fs::remove_file(&bin).ok();
+    std::fs::remove_file(format!("{stem}.txt")).ok();
+    std::fs::remove_file(format!("{stem}.cmty")).ok();
+}
+
+#[test]
 fn bench_service_writes_machine_readable_json() {
     let dir = std::env::temp_dir();
     let json_path = dir.join(format!("sc_bench_{}.json", std::process::id()));
@@ -330,13 +383,17 @@ fn bench_service_writes_machine_readable_json() {
     assert!(stdout.contains("ingest microbench"), "{stdout}");
     assert!(stdout.contains("rmw/kedge"), "{stdout}");
     assert!(stdout.contains("parallel scan"), "{stdout}");
+    assert!(stdout.contains("mmap scan"), "{stdout}");
     let json = std::fs::read_to_string(&json_path).expect("BENCH_service.json written");
     assert!(json.contains("\"bench\": \"service\""), "{json}");
+    assert!(json.contains("\"measured\": true"), "{json}");
     assert!(json.contains("\"edges_per_sec\""), "{json}");
     assert!(json.contains("\"per_leader\""), "{json}");
     assert!(json.contains("\"ingest\""), "{json}");
     assert!(json.contains("\"pool_misses\""), "{json}");
     assert!(json.contains("\"readers\""), "{json}");
+    assert!(json.contains("\"mmap\""), "{json}");
+    assert!(json.contains("\"mapped\""), "{json}");
     assert!(json.contains("\"labels_match\": true"), "{json}");
     assert!(!json.contains("\"labels_match\": false"), "{json}");
     std::fs::remove_file(&json_path).ok();

@@ -5,7 +5,9 @@
 //! and the parallel text scan the same view of the same bytes (fuzzed
 //! across buffer-refill boundaries); and the parallel scan reproduces
 //! the single-reader service partition bit-for-bit on golden SBM/LFR
-//! streams at every swept reader count.
+//! streams at every swept reader count — through the buffered readers
+//! and through the zero-copy mmap transport (`open_mmap`), seeded and
+//! unseeded, with the same hostile-input rejections at open.
 
 use std::io::ErrorKind;
 use std::path::{Path, PathBuf};
@@ -101,6 +103,64 @@ fn truncated_and_corrupted_files_are_detected() {
     let got = read_binary_edges(&path).unwrap();
     assert_eq!(got.n, el.n);
     assert_eq!(got.edges, el.edges);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn mmap_open_path_rejects_hostile_and_corrupt_files_as_invalid_data() {
+    // the same three attacks, routed through the zero-copy open path:
+    // every one must surface as InvalidData *at open* — validated
+    // against the mapped length before any segment is dereferenced, so
+    // a short map can never fault mid-scan
+    let path = tmp("mmap_hostile_header.bin");
+    let header = SegHeader::new(4, 1 << 61, binfmt::DEFAULT_SEG_RECORDS).unwrap();
+    std::fs::write(&path, header.encode()).unwrap();
+    let err = ParallelScanner::open_mmap(&path, 4, 4096).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidData, "{err}");
+    std::fs::remove_file(&path).ok();
+
+    let edges: Vec<Edge> = (0..300u32).map(|i| Edge::new(i, i + 1)).collect();
+    let el = EdgeList::new(301, edges);
+    let path = tmp("mmap_corrupt.bin");
+    write_binary_edges_with(&path, &el, 64).unwrap();
+    let clean = std::fs::read(&path).unwrap();
+
+    // truncation is caught by the mapped-length cross-check at open
+    std::fs::write(&path, &clean[..clean.len() - 5]).unwrap();
+    let err = ParallelScanner::open_mmap(&path, 4, 4096).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidData, "{err}");
+
+    // a bit flip inside segment 2 streams the clean prefix, then parks
+    // an error naming the segment (the in-place checksum catches it)
+    let mut dirty = clean.clone();
+    let seg2 = binfmt::HEADER_BYTES + 2 * (16 + 64 * 8);
+    dirty[seg2 + 8 + 11] ^= 0x40;
+    std::fs::write(&path, &dirty).unwrap();
+    let mut scan = ParallelScanner::open_mmap(&path, 1, 4096).unwrap();
+    let got = drain(&mut scan);
+    assert!(got.len() < el.edges.len());
+    let msg = scan.take_error().expect("corruption must park an error");
+    assert!(msg.contains("segment 2"), "{msg}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[cfg(unix)]
+#[test]
+fn mmap_source_error_kinds_match_the_buffered_reader() {
+    // same attacks straight through MmapBinarySource (no fallback in
+    // the way on unix): error kinds must match read_binary_edges
+    use streamcom::stream::source::MmapBinarySource;
+
+    let path = tmp("mmap_src_hostile.bin");
+    let header = SegHeader::new(4, 1 << 61, binfmt::DEFAULT_SEG_RECORDS).unwrap();
+    std::fs::write(&path, header.encode()).unwrap();
+    assert_eq!(
+        MmapBinarySource::open(&path).unwrap_err().kind(),
+        read_binary_edges(&path).unwrap_err().kind()
+    );
+    // a sub-header file too
+    std::fs::write(&path, [0u8; 20]).unwrap();
+    assert_eq!(MmapBinarySource::open(&path).unwrap_err().kind(), ErrorKind::InvalidData);
     std::fs::remove_file(&path).ok();
 }
 
@@ -259,6 +319,48 @@ fn assert_scan_partition_parity(name: &str, el: &EdgeList) {
                 "{name} {path:?} readers={readers}: scanned partition diverged"
             );
         }
+    }
+
+    // the zero-copy transport: one shared mapping, same partition
+    // bit-for-bit at every reader count (buffered fallback on non-unix
+    // builds makes this loop meaningful everywhere)
+    for readers in [1usize, 2, 4] {
+        let mut svc = ClusterService::start(ServiceConfig::new(shards, v_max));
+        let mut scan = ParallelScanner::open_mmap(&bin, readers, 4096).unwrap();
+        svc.ingest(&mut scan, 4096);
+        assert_eq!(scan.take_error(), None, "{name} mmap readers={readers}");
+        let res = svc.finish();
+        assert_eq!(res.edges_ingested, el.m() as u64, "{name} mmap readers={readers}");
+        assert_eq!(
+            res.labels(),
+            baseline,
+            "{name} mmap readers={readers}: mapped partition diverged"
+        );
+    }
+
+    // the serve fast path: sketches seeded from the header's n. The
+    // pre-size changes only the label-vector length, so parity is
+    // asserted through padded labels.
+    {
+        let baseline_padded = {
+            let mut svc = ClusterService::start(ServiceConfig::new(shards, v_max));
+            for chunk in el.edges.chunks(4096) {
+                svc.push_chunk(chunk);
+            }
+            svc.finish().snapshot.labels_padded(el.n)
+        };
+        let mut config = ServiceConfig::new(shards, v_max);
+        config.initial_nodes = el.n;
+        let mut svc = ClusterService::start(config);
+        let mut scan = ParallelScanner::open_mmap(&bin, 4, 4096).unwrap();
+        svc.ingest(&mut scan, 4096);
+        assert_eq!(scan.take_error(), None, "{name} seeded mmap");
+        let res = svc.finish();
+        assert_eq!(
+            res.snapshot.labels_padded(el.n),
+            baseline_padded,
+            "{name}: seeding the sketches from the header's n changed the partition"
+        );
     }
     std::fs::remove_file(&txt).ok();
     std::fs::remove_file(&bin).ok();

@@ -245,14 +245,13 @@ fn unified_router_survives_capacity_one_mailboxes() {
 #[test]
 fn ingest_spine_recycles_chunks_with_zero_steady_state_allocations() {
     // the zero-allocation acceptance criterion, made observable via
-    // the pool counters: once the router → mailbox → worker → pool
-    // cycle is warm, every dispatch checks out a recycled buffer, so
-    // pool misses are bounded by the number of chunk buffers that can
-    // be in flight at once — per shard: the pending buffer,
-    // mailbox_depth queued chunks, one in the worker's hands (plus one
-    // in transit during the swap) — while hits keep growing with the
-    // stream. Any regression that reintroduces a per-chunk allocation
-    // shows up as misses scaling with the chunk count.
+    // the pool counters: boot prewarms the shelf to the in-flight
+    // bound — per shard: the pending buffer, mailbox_depth queued
+    // chunks, one in the worker's hands, one in transit during the
+    // swap — so checkout can never find it empty. There is no warm-up
+    // ramp left: misses must be exactly zero while hits keep growing
+    // with the stream. Any regression that reintroduces a per-chunk
+    // allocation (or breaks the prewarm) shows up as misses > 0.
     let g = sbm::generate(&SbmConfig::equal(12, 60, 0.3, 0.002, 211));
     let shards = 2usize;
     let depth = 2usize;
@@ -269,12 +268,11 @@ fn ingest_spine_recycles_chunks_with_zero_steady_state_allocations() {
     let s = handle.stats();
 
     let in_flight_ceiling = (shards * (depth + 3)) as u64;
-    assert!(
-        s.pool.misses <= in_flight_ceiling,
-        "pool misses {} exceed the in-flight ceiling {} — steady-state \
-         ingest is allocating",
-        s.pool.misses,
-        in_flight_ceiling
+    assert_eq!(
+        s.pool.misses, 0,
+        "the prewarmed pool must serve every checkout from the shelf \
+         ({} hits, {} dispatched)",
+        s.pool.hits, s.chunks_dispatched
     );
     assert!(
         s.chunks_dispatched > 4 * in_flight_ceiling,
