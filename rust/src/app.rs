@@ -22,11 +22,12 @@ use streamcom::graph::generators::sbm::{self, SbmConfig};
 use streamcom::graph::generators::{lfr, GeneratedGraph};
 use streamcom::graph::io;
 use streamcom::metrics;
-use streamcom::service::{ClusterService, CommitHorizon, ServiceConfig};
+use streamcom::service::{ClusterService, CommitHorizon, RouteMode, ServiceConfig};
 use streamcom::stream::meter::Meter;
-use streamcom::stream::pscan::{ParallelScanner, ScanStats};
+use streamcom::stream::pscan::{DirectScan, ParallelScanner, ScanAbort, ScanStats};
 use streamcom::stream::EdgeSource;
 use streamcom::util::cli::Args;
+use streamcom::util::mmap::Advice;
 
 const USAGE: &str = "\
 streamcom — streaming graph clustering (Hollocou et al. 2017 reproduction)
@@ -61,15 +62,19 @@ COMMANDS:
                --mmap               read binary files through one read-only
                                     memory map (zero-copy; unix only, buffered
                                     fallback elsewhere)
+               --madvise <a>        page-cache advice for mapped reads:
+                                    seq [default] | huge | willneed | none
+                                    (best-effort; huge is linux-only)
   bench      regenerate the paper's tables / service benchmarks
                table1|table2|memory|service  --scale <f>
                service prints the horizon sweep, the ingest-path
                microbench (shards × batch, pool hit/miss, router RMWs),
                the parallel-scan sweep (text/binary × readers
                {1,2,4}, partition checked against the in-memory
-               baseline) AND the mmap-vs-buffered scan sweep; --json
-               writes all four to BENCH_service.json
-               (--out <path> overrides the file name)
+               baseline), the mmap-vs-buffered scan sweep AND the
+               routing sweep (funnel vs direct dispatch × readers,
+               labels checked each cell); --json writes all five to
+               BENCH_service.json (--out <path> overrides the file name)
   serve      long-lived sharded clustering service: ingests the workload
              while answering queries on stdin
                --preset/--scale/--input as above, or --sbm <k>x<size>
@@ -107,6 +112,17 @@ COMMANDS:
                                     framing). Also seeds worker sketches from
                                     the header's n so they never grow
                                     mid-stream
+               --route <mode>       how scanned edges reach the shard workers:
+                                    auto [default] picks direct sharded
+                                    dispatch (readers route, per-shard
+                                    delivery in file order) for binary/mmap
+                                    scans without --wal-dir/--pace, funnel
+                                    otherwise; direct requires it (fails fast
+                                    when unsupported); funnel forces the
+                                    ordered single-stream sequencer. Both
+                                    modes yield bit-identical partitions
+               --madvise <a>        page-cache advice for --mmap scans:
+                                    seq [default] | huge | willneed | none
                queries: '? <node>' community, 'top <k>' largest, 'stats', 'q'
                --dynamic            legacy event mode ('+ u v' insert,
                                     '- u v' delete, '?' report on stdin)
@@ -295,11 +311,13 @@ fn cmd_convert(args: &Args) -> Result<(), String> {
         .u64_or("seg-records", binfmt::DEFAULT_SEG_RECORDS)
         .map_err(|e| e.to_string())?;
     // --mmap routes every binary read (source and the verify re-read)
-    // through the zero-copy mapped path; same format, same errors
+    // through the zero-copy mapped path; same format, same errors.
+    // --madvise tunes the mapping's page-cache advice (best-effort).
     let use_mmap = args.flag("mmap");
+    let advice = parse_advice(args)?;
     let read_bin = |p: &str| {
         if use_mmap {
-            io::read_binary_edges_mmap(p)
+            io::read_binary_edges_mmap_with(p, advice)
         } else {
             io::read_binary_edges(p)
         }
@@ -327,6 +345,9 @@ fn cmd_convert(args: &Args) -> Result<(), String> {
             h.seg_count,
             if use_mmap { "mmap" } else { "buffered" }
         );
+        if use_mmap {
+            println!("convert: madvise={} applied to mapped reads", advice.name());
+        }
     } else {
         io::write_text_edges(out, &el).map_err(|e| format!("write {out}: {e}"))?;
         // the text reader interns ids by first appearance, so the
@@ -434,9 +455,21 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             // against the in-memory baseline
             let (tm, mmap_rows) = service_bench::run_mmap(&cfg);
             println!("{}", tm.render());
+            // the routing sweep: funnel vs direct sharded dispatch at
+            // each reader count, labels checked against the in-memory
+            // baseline (CI hard-gates every cell's match)
+            let (tq, routing_rows) = service_bench::run_routing(&cfg);
+            println!("{}", tq.render());
             if args.flag("json") {
                 let path = args.get_or("out", "BENCH_service.json");
-                let json = service_bench::to_json(&cfg, &rows, &ingest, &readers, &mmap_rows);
+                let json = service_bench::to_json(
+                    &cfg,
+                    &rows,
+                    &ingest,
+                    &readers,
+                    &mmap_rows,
+                    &routing_rows,
+                );
                 std::fs::write(path, json).map_err(|e| format!("write {path}: {e}"))?;
                 println!("json → {path}");
             }
@@ -484,6 +517,43 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         return Err("--mmap needs --input <file> (the mapped scan reads the file directly)"
             .to_string());
     }
+    let route = {
+        let s = args.get_or("route", "auto");
+        RouteMode::parse(s)
+            .ok_or_else(|| format!("--route expects auto|direct|funnel, got {s:?}"))?
+    };
+    let advice = parse_advice(args)?;
+    let resume = args.flag("resume");
+    // Direct sharded dispatch needs a coordination-free global sequence
+    // index (segmented binary geometry) and has no single arrival
+    // stream — the reasons it cannot serve an invocation, in the order
+    // a user can fix them. `None` means direct is available.
+    let funnel_because = if readers_arg == 0 && !mmap {
+        Some("no file scan (in-memory ingest); add --readers/--mmap with a binary --input")
+    } else if resume {
+        Some("--resume slices the in-memory stream positionally")
+    } else if !args.get("input").is_some_and(|p| p.ends_with(".bin")) {
+        Some("text inputs have no fixed record geometry to sequence by")
+    } else if args.get("wal-dir").is_some() {
+        Some("--wal-dir appends need the funnel's global arrival stream")
+    } else if args.u64_or("pace", 0).map_err(|e| e.to_string())? > 0 {
+        Some("--pace throttles the funnel's global arrival stream")
+    } else {
+        None
+    };
+    let direct = match route {
+        RouteMode::Funnel => false,
+        RouteMode::Auto => funnel_because.is_none(),
+        RouteMode::Direct => match funnel_because {
+            None => true,
+            Some(why) => {
+                return Err(format!(
+                    "--route direct is unsupported for this invocation: {why} \
+                     (drop the conflicting flag or use --route funnel)"
+                ))
+            }
+        },
+    };
     // --mmap turns --readers 0 (the default) into auto-detection: one
     // reader per available core. Without --mmap, 0 keeps meaning the
     // in-memory path.
@@ -506,7 +576,6 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if let Some(dir) = args.get("wal-dir") {
         config.wal_dir = Some(std::path::PathBuf::from(dir));
     }
-    let resume = args.flag("resume");
     // the file scan knows the final node count up front (the binary
     // header's n / the interned text id space): pre-size every worker
     // sketch so the per-chunk `ensure` never grows arrays mid-stream.
@@ -552,13 +621,46 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     // A resume skip needs positional slicing, so it keeps the
     // in-memory path.
     let mut scan_info: Option<(usize, bool, std::sync::Arc<ScanStats>)> = None;
-    let ingest = if readers > 0 && skip == 0 {
+    // 'q' on a direct scan must unblock the muxers, not just raise the
+    // flag — the abort handle closes every routing queue
+    let mut abort_scan: Option<ScanAbort> = None;
+    let ingest = if direct && readers > 0 && skip == 0 {
         let input = args.get("input").expect("checked above").to_string();
+        let mut dscan = if mmap {
+            DirectScan::open_mmap_advised(&input, readers, 8_192, shards, advice)
+        } else {
+            DirectScan::open(&input, readers, 8_192, shards)
+        }
+        .map_err(|e| format!("direct scan {input}: {e}"))?;
+        scan_info = Some((dscan.readers(), dscan.mmapped(), dscan.stats()));
+        abort_scan = Some(dscan.abort_handle());
+        if auto {
+            println!("scan: --readers 0 auto-detected {readers} reader threads");
+        }
+        println!(
+            "scan: {} reader threads over {input}{}, routing in the readers (direct dispatch)",
+            dscan.readers(),
+            if dscan.mmapped() { " (one shared mmap)" } else { "" }
+        );
+        std::thread::spawn(move || {
+            service.ingest_direct(&mut dscan);
+            if let Some(e) = dscan.take_error() {
+                eprintln!("scan error: {e} (stream ended short)");
+            }
+            service.finish()
+        })
+    } else if readers > 0 && skip == 0 {
+        let input = args.get("input").expect("checked above").to_string();
+        if route == RouteMode::Auto {
+            if let Some(why) = funnel_because {
+                println!("note: --route auto picked the funnel ({why})");
+            }
+        }
         // --mmap on a binary input shares one read-only mapping across
         // all readers; text inputs (and non-unix builds) keep buffered
         // framing — open_mmap itself degrades on unsupported platforms
         let mut scanner = if mmap && input.ends_with(".bin") {
-            ParallelScanner::open_mmap(&input, readers, 8_192)
+            ParallelScanner::open_mmap_advised(&input, readers, 8_192, advice)
         } else {
             ParallelScanner::open(&input, readers, 8_192)
         }
@@ -706,6 +808,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                 // explicit quit aborts the remainder of the stream;
                 // plain EOF lets the ingest run to completion
                 stop.store(true, std::sync::atomic::Ordering::Relaxed);
+                if let Some(a) = &abort_scan {
+                    a.abort();
+                }
                 break;
             }
             [] => {}
@@ -725,12 +830,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     );
     if let Some((nreaders, mapped, st)) = scan_info {
         println!(
-            "scan: readers={nreaders} mmap={} bytes={} segments={} oversized={} malformed={}",
+            "scan: readers={nreaders} mmap={} bytes={} segments={} oversized={} malformed={} \
+             route={} madvise={}",
             if mapped { "on" } else { "off" },
             memory::fmt_bytes(st.bytes_read()),
             st.segments_verified(),
             st.oversized_skipped(),
-            st.malformed_skipped()
+            st.malformed_skipped(),
+            if direct { "direct" } else { "funnel" },
+            if mapped { advice.name() } else { "off" }
         );
     }
     if let Some(truth) = truth {
@@ -794,6 +902,14 @@ fn cmd_serve_dynamic(args: &Args) -> Result<(), String> {
     drain(&mut d, &mut pending);
     println!("bye: {} nodes, {} live edges", d.state().n(), d.live_edges());
     Ok(())
+}
+
+/// Parse `--madvise` (default `seq`): page-cache advice applied —
+/// best-effort — to every memory-mapped read.
+fn parse_advice(args: &Args) -> Result<Advice, String> {
+    let s = args.get_or("madvise", "seq");
+    Advice::parse(s)
+        .ok_or_else(|| format!("--madvise expects seq|huge|willneed|none, got {s:?}"))
 }
 
 /// Sleep out `n_edges / pace` seconds in ≤ 100 ms slices so a raised

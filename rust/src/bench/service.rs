@@ -25,7 +25,7 @@
 use crate::graph::generators::sbm::{self, SbmConfig};
 use crate::graph::io;
 use crate::service::{ClusterService, CommitHorizon, LeaderStats, ServiceConfig};
-use crate::stream::pscan::ParallelScanner;
+use crate::stream::pscan::{DirectScan, ParallelScanner};
 
 use super::memory::fmt_bytes;
 use super::report::Table;
@@ -38,6 +38,8 @@ pub const INGEST_BATCH_SWEEP: &[usize] = &[1, 256, 4096];
 pub const INGEST_READERS_SWEEP: &[usize] = &[1, 2, 4];
 /// Reader counts swept by the mmap-vs-buffered scan microbench.
 pub const MMAP_READERS_SWEEP: &[usize] = &[1, 2, 4];
+/// Reader counts swept by the routing (funnel vs direct) microbench.
+pub const ROUTING_READERS_SWEEP: &[usize] = &[1, 2, 4];
 /// Edges per scanner chunk / ingest batch in the readers sweep.
 const SCAN_BATCH: usize = 4_096;
 /// Segment size for the bench's binary file — small enough that the
@@ -450,6 +452,122 @@ pub fn run_mmap(cfg: &ServiceBenchConfig) -> (Table, Vec<MmapBenchRow>) {
     (table, rows)
 }
 
+/// One routing-mode measurement: the same binary file streamed through
+/// the funnel (sequencer + single routing thread) or direct sharded
+/// dispatch (readers route, per-shard delivery) at one reader count.
+#[derive(Debug, Clone)]
+pub struct RoutingBenchRow {
+    /// Delivery mode (`"funnel"` or `"direct"`).
+    pub mode: &'static str,
+    /// Reader threads requested for the scan.
+    pub readers: usize,
+    /// Edges ingested.
+    pub edges: u64,
+    /// File bytes parsed by the reader threads.
+    pub bytes: u64,
+    /// Wall-clock ingest + terminal replay time.
+    pub elapsed_secs: f64,
+    /// Ingest throughput.
+    pub edges_per_sec: f64,
+    /// Whether the final partition matched the in-memory baseline
+    /// bit-for-bit (padded labels — the bench seeds sketches from the
+    /// header's `n`). Routing is a transport choice, never a semantics
+    /// choice: a `false` here is a regression, and CI hard-gates it.
+    pub labels_match: bool,
+}
+
+/// The routing microbench: write the SBM workload to one binary file,
+/// then stream it through both delivery modes at each
+/// [`ROUTING_READERS_SWEEP`] reader count — mmap transport (buffered
+/// fallback off-unix), seeded sketches, drains off — and compare every
+/// cell's padded partition against the in-memory baseline. The funnel
+/// sequences everything through one routing thread; direct dispatch
+/// routes in the readers and muxes per-shard sub-chunks in file order.
+/// Same partition either way — that is the tentpole invariant.
+pub fn run_routing(cfg: &ServiceBenchConfig) -> (Table, Vec<RoutingBenchRow>) {
+    let g = sbm::generate(&SbmConfig::equal(
+        cfg.communities,
+        cfg.community_size,
+        0.3,
+        0.002,
+        cfg.seed,
+    ));
+    let n = g.n();
+    let baseline = {
+        let mut config = ServiceConfig::new(cfg.shards, cfg.v_max);
+        config.drain_every = 0;
+        let mut svc = ClusterService::start(config);
+        for chunk in g.edges.edges.chunks(SCAN_BATCH) {
+            svc.push_chunk(chunk);
+        }
+        svc.finish().snapshot.labels_padded(n)
+    };
+
+    let dir = std::env::temp_dir();
+    let stem = format!("streamcom_bench_route_{}_{}", std::process::id(), cfg.seed);
+    let bin = dir.join(format!("{stem}.bin"));
+    io::write_binary_edges_with(&bin, &g.edges, SCAN_SEG_RECORDS).expect("write bench binary file");
+
+    let mut table = Table::new(
+        &format!(
+            "routing: {} (n={} m={}, {} shards, binary source, seeded sketches, drains off)",
+            g.name,
+            g.n(),
+            g.m(),
+            cfg.shards
+        ),
+        &["mode", "readers", "Medges/s", "MB/s", "partition"],
+    );
+    let mut rows = Vec::new();
+    for mode in ["funnel", "direct"] {
+        for &readers in ROUTING_READERS_SWEEP {
+            let mut config = ServiceConfig::new(cfg.shards, cfg.v_max);
+            config.drain_every = 0;
+            config.initial_nodes = n;
+            let mut svc = ClusterService::start(config);
+            let (res, bytes, err) = if mode == "direct" {
+                let mut scan = DirectScan::open_mmap(&bin, readers, SCAN_BATCH, cfg.shards)
+                    .expect("open bench direct scan");
+                let stats = scan.stats();
+                svc.ingest_direct(&mut scan);
+                let err = scan.take_error();
+                (svc.finish(), stats.bytes_read(), err)
+            } else {
+                let mut scanner = ParallelScanner::open_mmap(&bin, readers, SCAN_BATCH)
+                    .expect("open bench scan");
+                let stats = scanner.stats();
+                svc.ingest(&mut scanner, SCAN_BATCH);
+                let err = scanner.take_error();
+                (svc.finish(), stats.bytes_read(), err)
+            };
+            let elapsed = res.elapsed.as_secs_f64().max(1e-9);
+            let row = RoutingBenchRow {
+                mode,
+                readers,
+                edges: res.edges_ingested,
+                bytes,
+                elapsed_secs: elapsed,
+                edges_per_sec: res.edges_ingested as f64 / elapsed,
+                labels_match: err.is_none() && res.snapshot.labels_padded(n) == baseline,
+            };
+            table.push_row(vec![
+                row.mode.to_string(),
+                row.readers.to_string(),
+                format!("{:.2}", row.edges_per_sec / 1e6),
+                format!("{:.1}", row.bytes as f64 / elapsed / 1e6),
+                if row.labels_match {
+                    "exact".to_string()
+                } else {
+                    "MISMATCH".to_string()
+                },
+            ]);
+            rows.push(row);
+        }
+    }
+    std::fs::remove_file(&bin).ok();
+    (table, rows)
+}
+
 /// Stream one SBM workload through the service per configured horizon
 /// and collect the table + raw rows.
 pub fn run(cfg: &ServiceBenchConfig) -> (Table, Vec<ServiceBenchRow>) {
@@ -535,16 +653,18 @@ pub fn run(cfg: &ServiceBenchConfig) -> (Table, Vec<ServiceBenchRow>) {
 /// the offline build has no serde; every value is numeric so no string
 /// escaping is required beyond the fixed keys). `ingest` carries the
 /// shards × batch microbench sweep, `readers` the parallel-scan
-/// format × reader-count sweep, and `mmap` the mmap-vs-buffered
-/// transport sweep next to the horizon rows. `"measured": true` marks
-/// a document produced by a real run, as opposed to the committed
-/// placeholder — CI's verify step keys off it.
+/// format × reader-count sweep, `mmap` the mmap-vs-buffered transport
+/// sweep, and `routing` the funnel-vs-direct dispatch sweep next to
+/// the horizon rows. `"measured": true` marks a document produced by a
+/// real run, as opposed to the committed placeholder — CI's verify
+/// step keys off it.
 pub fn to_json(
     cfg: &ServiceBenchConfig,
     rows: &[ServiceBenchRow],
     ingest: &[IngestBenchRow],
     readers: &[ReaderBenchRow],
     mmap: &[MmapBenchRow],
+    routing: &[RoutingBenchRow],
 ) -> String {
     let mut out = String::from("{\n  \"bench\": \"service\",\n  \"measured\": true,\n");
     out.push_str(&format!(
@@ -647,6 +767,22 @@ pub fn to_json(
             if i + 1 < mmap.len() { "," } else { "" }
         ));
     }
+    out.push_str("  ],\n  \"routing\": [\n");
+    for (i, r) in routing.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"readers\": {}, \"edges\": {}, \
+             \"bytes\": {}, \"elapsed_secs\": {:.6}, \
+             \"edges_per_sec\": {:.1}, \"labels_match\": {}}}{}\n",
+            r.mode,
+            r.readers,
+            r.edges,
+            r.bytes,
+            r.elapsed_secs,
+            r.edges_per_sec,
+            r.labels_match,
+            if i + 1 < routing.len() { "," } else { "" }
+        ));
+    }
     out.push_str("  ]\n}\n");
     out
 }
@@ -681,7 +817,7 @@ mod tests {
         assert!(bounded.cross_freed_bytes > 0);
         assert_eq!(bounded.per_leader.len(), cfg.shards);
 
-        let json = to_json(&cfg, &rows, &[], &[], &[]);
+        let json = to_json(&cfg, &rows, &[], &[], &[], &[]);
         assert!(json.starts_with('{') && json.trim_end().ends_with('}'));
         assert!(json.contains("\"bench\": \"service\""));
         assert!(json.contains("\"measured\": true"));
@@ -728,7 +864,7 @@ mod tests {
             small.rmws_per_kedge()
         );
 
-        let json = to_json(&cfg, &[], &rows, &[], &[]);
+        let json = to_json(&cfg, &[], &rows, &[], &[], &[]);
         assert_eq!(json.matches("\"rmws_per_kedge\"").count(), cells);
     }
 
@@ -750,7 +886,7 @@ mod tests {
             assert!(r.labels_match, "{r:?}");
         }
 
-        let json = to_json(&cfg, &[], &[], &rows, &[]);
+        let json = to_json(&cfg, &[], &[], &rows, &[], &[]);
         assert_eq!(json.matches("\"labels_match\"").count(), cells);
         assert!(!json.contains("\"labels_match\": false"));
     }
@@ -776,8 +912,31 @@ mod tests {
             assert_eq!(r.mapped, r.mode == "mmap" && mmap_supported, "{r:?}");
         }
 
-        let json = to_json(&cfg, &[], &[], &[], &rows);
+        let json = to_json(&cfg, &[], &[], &[], &rows, &[]);
         assert_eq!(json.matches("\"mapped\"").count(), cells);
+        assert!(!json.contains("\"labels_match\": false"));
+    }
+
+    #[test]
+    fn routing_sweep_covers_both_modes_and_matches_the_baseline() {
+        let cfg = tiny();
+        let (table, rows) = run_routing(&cfg);
+        let cells = 2 * ROUTING_READERS_SWEEP.len();
+        assert_eq!(rows.len(), cells);
+        assert_eq!(table.rows.len(), cells);
+        assert_eq!(rows.iter().filter(|r| r.mode == "funnel").count(), cells / 2);
+        assert_eq!(rows.iter().filter(|r| r.mode == "direct").count(), cells / 2);
+        for r in &rows {
+            assert!(r.edges > 0 && r.bytes > 0 && r.edges_per_sec > 0.0, "{r:?}");
+            // every cell ingests the whole file exactly once
+            assert_eq!(r.edges, rows[0].edges, "{r:?}");
+            // routing is a transport choice, never a semantics choice
+            assert!(r.labels_match, "{r:?}");
+        }
+
+        let json = to_json(&cfg, &[], &[], &[], &[], &rows);
+        assert!(json.contains("\"routing\""));
+        assert_eq!(json.matches("\"labels_match\"").count(), cells);
         assert!(!json.contains("\"labels_match\": false"));
     }
 }

@@ -359,11 +359,22 @@ pub fn read_binary_edges<P: AsRef<Path>>(path: P) -> io::Result<EdgeList> {
 /// buffered reader at compile time, so callers need no `cfg` of their
 /// own.
 pub fn read_binary_edges_mmap<P: AsRef<Path>>(path: P) -> io::Result<EdgeList> {
+    read_binary_edges_mmap_with(path, crate::util::mmap::Advice::Sequential)
+}
+
+/// [`read_binary_edges_mmap`] with an explicit page-cache advice
+/// ([`crate::util::mmap::Advice`], `--madvise` on the CLI). The advice
+/// is best-effort and never changes what is read — only how the kernel
+/// stages the pages.
+pub fn read_binary_edges_mmap_with<P: AsRef<Path>>(
+    path: P,
+    advice: crate::util::mmap::Advice,
+) -> io::Result<EdgeList> {
     if !crate::util::mmap::supported() {
         return read_binary_edges(path);
     }
     let f = File::open(path)?;
-    let map = crate::util::mmap::Mmap::map_file(&f)?;
+    let map = crate::util::mmap::Mmap::map_file_advised(&f, advice)?;
     drop(f); // the mapping outlives the descriptor
     let bytes = map.as_slice();
     let header = binfmt::parse_mapped(bytes)?;

@@ -66,6 +66,57 @@ impl CommitHorizon {
     }
 }
 
+/// How scanned edges travel from reader threads into shard workers
+/// (`--route` on the CLI; resolved by the serve command, not stored in
+/// [`ServiceConfig`] — it is a property of the ingest path, not of the
+/// service state).
+///
+/// * `Auto` — direct dispatch whenever the input supports it
+///   (segmented binary or mmap scan, no `--wal-dir`, no pacing);
+///   funnel otherwise, with a printed note. The default.
+/// * `Direct` — require direct dispatch
+///   ([`crate::stream::pscan::DirectScan`] +
+///   [`crate::service::ClusterService::ingest_direct`]); the CLI
+///   fails fast when the input cannot support it (text input, WAL,
+///   pacing).
+/// * `Funnel` — always use the ordered single-stream sequencer
+///   ([`crate::stream::pscan::ParallelScanner`]), the only mode that
+///   yields a global arrival stream for WAL appends and pacing.
+///
+/// Both modes produce bit-identical final partitions in the exactness
+/// domains — the routing-mode property suite pins it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RouteMode {
+    /// Pick direct when the input supports it, funnel otherwise.
+    #[default]
+    Auto,
+    /// Require reader-side routing; fail fast when unsupported.
+    Direct,
+    /// Always funnel through the ordered single-stream sequencer.
+    Funnel,
+}
+
+impl RouteMode {
+    /// Parse the CLI spelling (`auto`, `direct`, `funnel`).
+    pub fn parse(s: &str) -> Option<RouteMode> {
+        match s {
+            "auto" => Some(RouteMode::Auto),
+            "direct" => Some(RouteMode::Direct),
+            "funnel" => Some(RouteMode::Funnel),
+            _ => None,
+        }
+    }
+
+    /// The CLI spelling, for stats footers.
+    pub fn name(self) -> &'static str {
+        match self {
+            RouteMode::Auto => "auto",
+            RouteMode::Direct => "direct",
+            RouteMode::Funnel => "funnel",
+        }
+    }
+}
+
 /// Configuration for a [`crate::service::ClusterService`].
 ///
 /// ```
@@ -223,6 +274,20 @@ mod tests {
         // existing callers are unchanged
         assert_eq!(ServiceConfig::new(4, 64).initial_nodes, 0);
         assert_eq!(ServiceConfig::batch(4, 64).initial_nodes, 0);
+    }
+
+    #[test]
+    fn route_mode_parses_the_cli_spellings_and_round_trips() {
+        for (s, m) in [
+            ("auto", RouteMode::Auto),
+            ("direct", RouteMode::Direct),
+            ("funnel", RouteMode::Funnel),
+        ] {
+            assert_eq!(RouteMode::parse(s), Some(m));
+            assert_eq!(m.name(), s);
+        }
+        assert_eq!(RouteMode::parse("express"), None);
+        assert_eq!(RouteMode::default(), RouteMode::Auto);
     }
 
     #[test]

@@ -7,9 +7,14 @@
 //!
 //! * Edges append to the **open epoch**; when the open epoch reaches
 //!   `epoch_len` edges it is **sealed** and a fresh open epoch starts.
-//!   Sealing happens inside `append`, i.e. on the router's chunk
-//!   boundaries — the log never splits a decision's bookkeeping across
-//!   epochs retroactively.
+//!   Sealing is exact count-based, inside `append` (a chunk that
+//!   overfills the open epoch is split at the boundary) — so epoch
+//!   boundaries depend only on the cross **arrival sequence**, never
+//!   on who appends or in what chunk sizes. That is what lets the
+//!   direct dispatch path (`stream::pscan::DirectScan` +
+//!   `ClusterService::ingest_direct`) reproduce the funnel's epoch
+//!   structure bit-for-bit at any reader count: it delivers the same
+//!   cross subsequence in the same order, and the boundaries follow.
 //! * Drains replay the suffix past the merger's cursor and (under a
 //!   bounded horizon) record each replayed edge's **frozen decision**
 //!   — `(endpoint, post-decision community)` pairs — back into the

@@ -11,7 +11,14 @@
 //!   return spent chunks, so steady-state dispatch allocates
 //!   nothing), cross-shard edges append to the epoch-structured cross
 //!   log (`super::crosslog`), which seals epochs on the router's
-//!   chunk boundaries.
+//!   chunk boundaries. This is the **funnel** path — one routing
+//!   thread sees the global arrival stream, which WAL appends and
+//!   pacing require. For segmented binary scans,
+//!   [`ClusterService::ingest_direct`] bypasses it: the scan's reader
+//!   threads route ([`DirectScan`]), thin per-shard muxers forward
+//!   file-ordered sub-chunks into the same mailboxes, and the cross
+//!   lane reaches the same log in the same arrival order — same
+//!   partition, no single-thread funnel.
 //! * **Shard worker** — long-lived thread owning one
 //!   [`StreamingClusterer`] behind a mutex; drains its bounded mailbox
 //!   chunk by chunk. Workers never share nodes (hash-sharding), so they
@@ -55,6 +62,7 @@ use crate::coordinator::algorithm::StreamingClusterer;
 use crate::coordinator::state::StreamState;
 use crate::graph::edge::Edge;
 use crate::stream::meter::Meter;
+use crate::stream::pscan::DirectScan;
 use crate::stream::shard::{Route, Sharder};
 use crate::stream::source::EdgeSource;
 use crate::util::channel::Channel;
@@ -603,6 +611,100 @@ impl ClusterService {
         total
     }
 
+    /// Drain a [`DirectScan`] into the shard workers without the
+    /// routing funnel: the scan's reader threads already partitioned
+    /// the stream, so this spawns one thin **muxer** per shard that
+    /// forwards its [`DestFeed`](crate::stream::pscan::DestFeed)'s
+    /// sub-chunks — in file order — straight into the shard's mailbox,
+    /// while the calling thread consumes the cross lane and appends it
+    /// to the cross log in global-sequence order. Per-shard edge order
+    /// and cross arrival order are exactly what the funnel
+    /// ([`ingest`](Self::ingest) over a
+    /// [`ParallelScanner`](crate::stream::pscan::ParallelScanner))
+    /// produces, and epoch sealing is count-based, so the final
+    /// partition is bit-identical at any reader count — the
+    /// routing-mode property suite pins it.
+    ///
+    /// The automatic drain clock is **seq-keyed** here: a cross chunk
+    /// whose span reaches a multiple of `config.drain_every` (global
+    /// stream position, not cross count) triggers a snapshot rebuild.
+    /// Reader-count-invariant because sequence indices are; cadence is
+    /// approximate — streams with few cross edges drain rarely, which
+    /// only affects mid-stream snapshot freshness, never the final
+    /// partition (unbounded horizon).
+    ///
+    /// Returns the number of edges ingested. Panics if the scan was
+    /// routed for a different shard count, or if durability is on —
+    /// WAL appends need the single global arrival stream only the
+    /// funnel has (the CLI enforces this with a friendlier error).
+    pub fn ingest_direct(&mut self, scan: &mut DirectScan) -> u64 {
+        assert_eq!(
+            scan.shards(),
+            self.shared.config.shards,
+            "DirectScan routed for a different shard count than the service runs"
+        );
+        assert!(
+            self.shared.config.wal_dir.is_none(),
+            "direct dispatch has no global arrival stream for WAL appends; \
+             ingest through the funnel when durability is on"
+        );
+        let (shard_feeds, mut cross_feed) = scan.feeds();
+        let muxers: Vec<JoinHandle<u64>> = shard_feeds
+            .into_iter()
+            .enumerate()
+            .map(|(w, mut feed)| {
+                let shared = Arc::clone(&self.shared);
+                std::thread::Builder::new()
+                    .name(format!("mux-{w}"))
+                    .spawn(move || {
+                        let mut total = 0u64;
+                        while let Some(chunk) = feed.recv() {
+                            let len = chunk.edges.len() as u64;
+                            shared.ingested.fetch_add(len, Ordering::Relaxed);
+                            shared.meter.lock().unwrap().add_edges(len);
+                            // same fail-fast contract as the router:
+                            // a closed mailbox mid-run means the worker
+                            // died, and edges are never dropped
+                            if shared.mailboxes[w].send(chunk.edges).is_err() {
+                                panic!(
+                                    "shard worker {w} died; its mailbox is closed mid-stream"
+                                );
+                            }
+                            shared.dispatched.fetch_add(len, Ordering::SeqCst);
+                            total += len;
+                        }
+                        total
+                    })
+                    .expect("spawn direct-dispatch muxer")
+            })
+            .collect();
+
+        let drain_every = self.shared.config.drain_every;
+        let mut next_drain = drain_every;
+        let mut total = 0u64;
+        while let Some(mut chunk) = cross_feed.recv() {
+            let len = chunk.edges.len() as u64;
+            let last_seq = chunk.last_seq;
+            self.shared.ingested.fetch_add(len, Ordering::Relaxed);
+            self.shared.meter.lock().unwrap().add_edges(len);
+            {
+                // scoped: rebuild_snapshot below takes merger →
+                // crosslog, so the log lock must be released first
+                let mut log = self.shared.crosslog.lock().unwrap();
+                log.append(&mut chunk.edges);
+            }
+            total += len;
+            if drain_every != u64::MAX && last_seq + 1 >= next_drain {
+                rebuild_snapshot(&self.shared);
+                next_drain = ((last_seq + 1) / drain_every + 1) * drain_every;
+            }
+        }
+        for h in muxers {
+            total += h.join().expect("direct-dispatch muxer panicked");
+        }
+        total
+    }
+
     /// Dispatch all partially-filled router buffers (local and cross).
     pub fn flush(&mut self) {
         self.router.flush();
@@ -970,6 +1072,39 @@ mod tests {
         assert_eq!(res.snapshot.edges(), g.m() as u64);
         // the handle now serves the final snapshot
         assert_eq!(handle.snapshot().edges(), g.m() as u64);
+    }
+
+    #[test]
+    fn direct_ingest_matches_the_funneled_partition_and_accounting() {
+        use crate::graph::io::write_binary_edges_with;
+
+        let g = sbm::generate(&SbmConfig::equal(6, 30, 0.4, 0.01, 21));
+        let mut path = std::env::temp_dir();
+        path.push(format!("streamcom_ingest_direct_{}.bin", std::process::id()));
+        write_binary_edges_with(&path, &g.edges, 64).unwrap();
+
+        let mut cfg = small_config(3, 64);
+        cfg.initial_nodes = g.n();
+        let mut funnel = ClusterService::start(cfg.clone());
+        funnel.push_chunk(&g.edges.edges);
+        let want = funnel.finish().snapshot.labels_padded(g.n());
+
+        for readers in [1usize, 2, 4] {
+            let mut scan = DirectScan::open(&path, readers, 64, 3).unwrap();
+            let mut svc = ClusterService::start(cfg.clone());
+            let ingested = svc.ingest_direct(&mut scan);
+            assert_eq!(ingested, g.m() as u64, "readers={readers}");
+            assert!(scan.take_error().is_none());
+            let res = svc.finish();
+            assert_eq!(res.edges_ingested, g.m() as u64);
+            // bit-identical to the funneled run at every reader count
+            assert_eq!(
+                res.snapshot.labels_padded(g.n()),
+                want,
+                "direct route diverged at readers={readers}"
+            );
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -23,7 +23,11 @@
 //!   resident cross-edge memory by `horizon + one epoch`.
 //! * [`ingest`] — N shard workers behind bounded mailboxes (sneldb-style
 //!   shard/mailbox/backpressure design); `push` blocks when a shard
-//!   lags, never drops.
+//!   lags, never drops. For segmented binary scans,
+//!   [`ClusterService::ingest_direct`] consumes reader-routed
+//!   per-shard sub-chunks (`stream::pscan::DirectScan`) without the
+//!   single-threaded routing funnel — same per-shard order, same
+//!   partition ([`RouteMode`] picks the path on the CLI).
 //! * [`snapshot`] — copy-on-read [`Snapshot`]s plus the sharded drain
 //!   leader: a thin commit-invariant `Merger` (each drain folds it over
 //!   a fresh shard merge and replays **only the cross edges that
@@ -85,7 +89,7 @@ pub mod snapshot;
 pub mod wal;
 
 pub use bufpool::PoolStats;
-pub use config::{CommitHorizon, ServiceConfig};
+pub use config::{CommitHorizon, RouteMode, ServiceConfig};
 pub use ingest::{ClusterService, ServiceResult};
 pub use query::{LeaderStats, QueryHandle, ServiceStats};
 pub use router::merge_disjoint_states;

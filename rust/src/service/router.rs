@@ -26,6 +26,13 @@
 //! One core means one place where the paper's "every edge exactly once"
 //! accounting lives, and one place the golden/property suites have to
 //! pin down.
+//!
+//! In routing-mode terms (`--route` on the CLI) this is the **funnel**:
+//! one thread sees the global arrival stream, which is exactly what
+//! WAL appends and pacing need. Segmented binary scans can skip it —
+//! `stream::pscan::DirectScan` routes in the reader threads and
+//! `ClusterService::ingest_direct` muxes the pre-routed sub-chunks
+//! into the same mailboxes and cross log, in the same order.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;

@@ -1,52 +1,82 @@
-//! Parallel source scan: N reader threads, one ordered edge stream.
+//! Parallel source scan: N reader threads, two delivery modes.
 //!
-//! The paper's bottleneck at 10^9 edges is *reading* the stream, not
-//! clustering it — parsing text and verifying segment checksums costs
-//! far more per edge than the router's shift-hash. This module
-//! parallelises exactly that part: each reader thread owns a byte range
-//! of the input (binary: segment-aligned via the computable offsets in
-//! `graph::binfmt`; text: advanced to newline boundaries), parses it
-//! into edge chunks, and ships them through its own bounded queue.
+//! The paper's bottleneck at 10^9 edges is moving edges from disk into
+//! the per-node counters. PR 7 parallelised parse + checksum across
+//! reader threads; PR 8 cut the per-edge parse to an 8-byte decode on
+//! the mmap path. At that point the re-merge — N readers funnelling
+//! back into ONE ingest thread that routes every edge — became the
+//! pipeline's last O(m) single-threaded stage. This module therefore
+//! offers two delivery modes with the same ordering contract:
 //!
-//! A single sequencer — the [`ParallelScanner`]'s [`EdgeSource`]
-//! implementation — drains those queues **in range order**, so the
-//! global edge order equals file order for *any* reader count. That is
-//! deliberately stronger than the "semantics-equal" the property
-//! suites require: the final partition is bit-identical whether one
-//! reader scans the file or eight do, WAL sequence numbers stay
-//! well-defined, and offline tests can assert exact equality. The
-//! single ingest thread (`Router::push_batch` is one-pass by design)
-//! was never the bottleneck; parse + checksum was, and that is what
-//! runs concurrently here.
+//! # Funnel mode ([`ParallelScanner`])
 //!
-//! Memory is bounded by construction: each reader queue holds at most
-//! [`READ_AHEAD_CHUNKS`] chunks of ≤ `batch` edges, so a stalled
-//! consumer backpressures every reader through the channel's blocking
-//! `send` — the same discipline as the service mailboxes.
+//! Each reader thread owns a byte range of the input (binary:
+//! segment-aligned via the computable offsets in `graph::binfmt`;
+//! text: advanced to newline boundaries), parses it into edge chunks,
+//! and ships them through its own bounded queue. A single sequencer —
+//! the [`EdgeSource`] implementation — drains those queues **in range
+//! order**, so the global edge order equals file order for *any*
+//! reader count: the final partition is bit-identical whether one
+//! reader scans the file or eight do, and WAL sequence numbers stay
+//! well-defined. The cost is that one downstream thread still runs
+//! `Router::push_batch` for every edge.
 //!
-//! `EdgeSource::next_batch` has no error channel, so reader failures
-//! (I/O error, checksum mismatch) stop that reader's queue and park
-//! the first message in [`ParallelScanner::take_error`]; callers check
-//! it after the drain, exactly like `source::BinaryFileSource::error`.
+//! # Direct mode ([`DirectScan`])
 //!
-//! # mmap mode (`open_mmap`)
+//! For segmented binary inputs the routing decision itself moves into
+//! the reader threads, deleting the funnel from the hot path. Every
+//! record of a segmented file has a **global sequence index**
+//! computable without any cross-thread coordination — each full
+//! segment holds exactly `seg_records` records, so edge `i` of segment
+//! `s` is stream position `s * seg_records + i`. Each reader partitions
+//! its decoded edges through the shared [`Sharder`] into per-destination
+//! sub-chunks ([`SeqChunk`]: a destination's edges in file order,
+//! tagged `first_seq..=last_seq`) and ships them into per-(reader,
+//! destination) bounded queues. On the consumer side one [`DestFeed`]
+//! per destination (`shards` locals + one cross lane) concatenates its
+//! reader queues **in range order**, so each destination sees exactly
+//! the subsequence of the file bound for it, in file order — the same
+//! per-shard edge order, cross-log arrival order, and (count-keyed)
+//! epoch-seal boundaries as the funneled single-reader run, at any
+//! reader count. `service::ClusterService::ingest_direct` consumes the
+//! feeds with one muxer thread per shard plus a cross consumer.
 //!
-//! For binary inputs [`ParallelScanner::open_mmap`] replaces the
-//! per-range `File` handles with **one** shared read-only mapping
-//! (`util::mmap::Mmap`, `MADV_SEQUENTIAL`): the scanner owns an
-//! `Arc<Mmap>`, every reader thread borrows a clone and walks its
-//! disjoint segment range directly in the mapped bytes — checksums
-//! verified in place via `binfmt::SegView`, records decoded straight
-//! into the outgoing chunk. No seeks, no `read_exact` block copies,
-//! no per-segment staging vec. Ownership story: one map, N borrowing
-//! readers, unmap after join — `Drop` closes the queues and joins the
-//! reader threads *first* (their `Arc` clones die there), then the
-//! scanner's own `Arc` drops and `munmap` runs. The header is
-//! validated against the real mapped length before any thread spawns,
-//! so segment offsets can never leave the map (a short file is
-//! `InvalidData` at open, never a SIGBUS). On non-unix targets
-//! `open_mmap` degrades at compile time to the buffered
-//! per-range-handle path with identical semantics.
+//! # Route/fallback matrix (resolved by the CLI's `--route`)
+//!
+//! | input / flags                            | mode                  |
+//! |------------------------------------------|-----------------------|
+//! | binary or mmap scan, no WAL, no pacing   | direct (auto default) |
+//! | text input                               | funnel (no fixed record geometry ⇒ no coordination-free seq) |
+//! | `--wal-dir` (or `--pace`)                | funnel (WAL append + pacing need the single global arrival stream) |
+//! | `--route funnel`                         | funnel (explicit)     |
+//!
+//! Memory is bounded by construction in both modes: each queue holds
+//! at most [`READ_AHEAD_CHUNKS`] chunks of ≤ `batch` edges, so a
+//! stalled consumer backpressures every reader through the channel's
+//! blocking `send` — the same discipline as the service mailboxes.
+//!
+//! Neither mode has an error channel in its pull path, so reader
+//! failures (I/O error, checksum mismatch) close that reader's queues
+//! and park the first message — uniformly prefixed with the reader's
+//! index and byte span — in [`ParallelScanner::take_error`] /
+//! [`DirectScan::take_error`]; callers check it after the drain.
+//!
+//! # mmap transport (`open_mmap` on either scanner)
+//!
+//! For binary inputs the per-range `File` handles can be replaced with
+//! **one** shared read-only mapping (`util::mmap::Mmap`, advice per
+//! `util::mmap::Advice`): the scanner owns an `Arc<Mmap>`, every
+//! reader thread borrows a clone and walks its disjoint segment range
+//! directly in the mapped bytes — checksums verified in place via
+//! `binfmt::SegView`, records decoded straight into the outgoing
+//! chunk. Ownership story: one map, N borrowing readers, unmap after
+//! join — `Drop` closes the queues and joins the reader threads
+//! *first* (their `Arc` clones die there), then the scanner's own
+//! `Arc` drops and `munmap` runs. The header is validated against the
+//! real mapped length before any thread spawns, so segment offsets can
+//! never leave the map (a short file is `InvalidData` at open, never a
+//! SIGBUS). On non-unix targets `open_mmap` degrades at compile time
+//! to the buffered per-range-handle path with identical semantics.
 
 use std::fs::File;
 use std::io::{self, BufRead, BufReader, Read, Seek, SeekFrom};
@@ -55,12 +85,13 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
 
+use super::shard::{Route, Sharder};
 use super::source::{emit_lenient, EdgeSource};
 use crate::graph::binfmt;
 use crate::graph::edge::Edge;
 use crate::graph::io::frame_lines;
-use crate::util::channel::Channel;
-use crate::util::mmap::{self, Mmap};
+use crate::util::channel::{Channel, SendError};
+use crate::util::mmap::{self, Advice, Mmap};
 
 /// Chunks each reader may buffer ahead of the sequencer. Together with
 /// the batch size this bounds scan memory at
@@ -178,6 +209,15 @@ pub fn plan_segment_ranges(seg_count: u64, readers: usize) -> Vec<(u64, u64)> {
         s += take;
     }
     ranges
+}
+
+/// Byte span `[b0, b1)` of segment range `[s0, s1)`, for the uniform
+/// reader error prefix. `s1 > s0` by construction — planners never
+/// emit an empty range.
+fn seg_byte_span(header: &binfmt::SegHeader, s0: u64, s1: u64) -> (u64, u64) {
+    let b0 = header.seg_offset(s0).expect("validated header");
+    let b1 = header.seg_offset(s1 - 1).expect("validated header") + header.seg_bytes(s1 - 1);
+    (b0, b1)
 }
 
 fn run_text_reader(
@@ -361,7 +401,9 @@ impl ParallelScanner {
 
         match format {
             ScanFormat::Text => {
-                for (start, end) in plan_text_ranges(&path, readers)? {
+                let ranges = plan_text_ranges(&path, readers)?;
+                let n = ranges.len();
+                for (i, (start, end)) in ranges.into_iter().enumerate() {
                     let q: Channel<Vec<Edge>> = Channel::bounded(READ_AHEAD_CHUNKS);
                     let tx = q.clone();
                     let p = path.clone();
@@ -371,7 +413,9 @@ impl ParallelScanner {
                         if let Err(e) = run_text_reader(&p, start, end, batch, &tx, &st) {
                             let mut slot = err.lock().unwrap();
                             if slot.is_none() {
-                                *slot = Some(format!("text reader [{start}..{end}): {e}"));
+                                *slot = Some(format!(
+                                    "reader {i}/{n} (text, bytes {start}..{end}): {e}"
+                                ));
                             }
                         }
                         tx.close();
@@ -388,7 +432,9 @@ impl ParallelScanner {
                 let header = binfmt::SegHeader::decode(&head)?;
                 header.validate_file_len(file_len)?;
                 len_hint = usize::try_from(header.m).ok();
-                for (s0, s1) in plan_segment_ranges(header.seg_count, readers) {
+                let ranges = plan_segment_ranges(header.seg_count, readers);
+                let n = ranges.len();
+                for (i, (s0, s1)) in ranges.into_iter().enumerate() {
                     let q: Channel<Vec<Edge>> = Channel::bounded(READ_AHEAD_CHUNKS);
                     let tx = q.clone();
                     let p = path.clone();
@@ -396,9 +442,12 @@ impl ParallelScanner {
                     let err = Arc::clone(&error);
                     threads.push(thread::spawn(move || {
                         if let Err(e) = run_binary_reader(&p, header, (s0, s1), batch, &tx, &st) {
+                            let (b0, b1) = seg_byte_span(&header, s0, s1);
                             let mut slot = err.lock().unwrap();
                             if slot.is_none() {
-                                *slot = Some(format!("binary reader segments [{s0}..{s1}): {e}"));
+                                *slot = Some(format!(
+                                    "reader {i}/{n} (binary, segments {s0}..{s1}, bytes {b0}..{b1}): {e}"
+                                ));
                             }
                         }
                         tx.close();
@@ -429,20 +478,35 @@ impl ParallelScanner {
     /// [`open_with`](Self::open_with)'s buffered binary path (identical
     /// stream, per-range file handles).
     pub fn open_mmap<P: AsRef<Path>>(path: P, readers: usize, batch: usize) -> io::Result<Self> {
+        Self::open_mmap_advised(path, readers, batch, Advice::Sequential)
+    }
+
+    /// [`open_mmap`](Self::open_mmap) with an explicit page-cache
+    /// [`Advice`] (`--madvise` on the CLI). Advice is best-effort and
+    /// cannot change the edge stream — only how the kernel stages the
+    /// pages behind it.
+    pub fn open_mmap_advised<P: AsRef<Path>>(
+        path: P,
+        readers: usize,
+        batch: usize,
+        advice: Advice,
+    ) -> io::Result<Self> {
         if !mmap::supported() {
             return Self::open_with(path, ScanFormat::Binary, readers, batch);
         }
         let readers = readers.max(1);
         let batch = batch.max(1);
         let f = File::open(path.as_ref())?;
-        let map = Arc::new(Mmap::map_file(&f)?);
+        let map = Arc::new(Mmap::map_file_advised(&f, advice)?);
         drop(f); // the mapping keeps the pages alive
         let header = binfmt::parse_mapped(map.as_slice())?;
         let stats = Arc::new(ScanStats::default());
         let error: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
         let mut queues = Vec::new();
         let mut threads = Vec::new();
-        for (s0, s1) in plan_segment_ranges(header.seg_count, readers) {
+        let ranges = plan_segment_ranges(header.seg_count, readers);
+        let n = ranges.len();
+        for (i, (s0, s1)) in ranges.into_iter().enumerate() {
             let q: Channel<Vec<Edge>> = Channel::bounded(READ_AHEAD_CHUNKS);
             let tx = q.clone();
             let m = Arc::clone(&map);
@@ -450,9 +514,12 @@ impl ParallelScanner {
             let err = Arc::clone(&error);
             threads.push(thread::spawn(move || {
                 if let Err(e) = run_mmap_reader(&m, header, (s0, s1), batch, &tx, &st) {
+                    let (b0, b1) = seg_byte_span(&header, s0, s1);
                     let mut slot = err.lock().unwrap();
                     if slot.is_none() {
-                        *slot = Some(format!("mmap reader segments [{s0}..{s1}): {e}"));
+                        *slot = Some(format!(
+                            "reader {i}/{n} (mmap, segments {s0}..{s1}, bytes {b0}..{b1}): {e}"
+                        ));
                     }
                 }
                 tx.close();
@@ -539,6 +606,432 @@ impl Drop for ParallelScanner {
         }
         // `self.map` (the last Arc<Mmap>) drops after this body — i.e.
         // after every borrowing reader has joined: unmap-after-join.
+    }
+}
+
+// --- direct sharded dispatch ----------------------------------------
+
+/// A routed sub-chunk: one destination's edges in file order, tagged
+/// with the global sequence index of the first and last edge. Sequence
+/// indices are stream positions in the *whole* file (`seg_index ×
+/// seg_records + offset`), so consecutive chunks of one destination
+/// have strictly increasing, generally non-contiguous spans — the gaps
+/// are edges bound elsewhere.
+#[derive(Debug)]
+pub struct SeqChunk {
+    /// Global sequence index of `edges[0]`.
+    pub first_seq: u64,
+    /// Global sequence index of `edges[last]`.
+    pub last_seq: u64,
+    /// The destination's edges, in file order.
+    pub edges: Vec<Edge>,
+}
+
+/// Per-destination pending buffers for one direct reader: edges are
+/// routed as they decode and flushed as [`SeqChunk`]s when a
+/// destination fills `batch`. Destination `shards` is the cross lane.
+struct RouteBuffers<'a> {
+    sharder: Sharder,
+    batch: usize,
+    pending: Vec<SeqChunk>,
+    txs: &'a [Channel<SeqChunk>],
+}
+
+impl<'a> RouteBuffers<'a> {
+    fn new(sharder: Sharder, batch: usize, txs: &'a [Channel<SeqChunk>]) -> Self {
+        debug_assert_eq!(txs.len(), sharder.shards() + 1);
+        let pending = txs
+            .iter()
+            .map(|_| SeqChunk { first_seq: 0, last_seq: 0, edges: Vec::with_capacity(batch) })
+            .collect();
+        Self { sharder, batch, pending, txs }
+    }
+
+    /// Route one edge; a `SendError` means the consumer hung up
+    /// (scanner aborted/dropped) and the reader should stop quietly.
+    fn push(&mut self, seq: u64, e: Edge) -> Result<(), SendError> {
+        let d = match self.sharder.route(e) {
+            Route::Local(w) => w,
+            Route::Cross => self.sharder.shards(),
+        };
+        let p = &mut self.pending[d];
+        if p.edges.is_empty() {
+            p.first_seq = seq;
+        }
+        p.last_seq = seq;
+        p.edges.push(e);
+        if p.edges.len() >= self.batch {
+            let full = std::mem::replace(
+                p,
+                SeqChunk { first_seq: 0, last_seq: 0, edges: Vec::with_capacity(self.batch) },
+            );
+            self.txs[d].send(full)?;
+        }
+        Ok(())
+    }
+
+    /// Ship every non-empty pending buffer (end of the reader's range).
+    fn flush(&mut self) -> Result<(), SendError> {
+        for (d, p) in self.pending.iter_mut().enumerate() {
+            if !p.edges.is_empty() {
+                let full = std::mem::replace(
+                    p,
+                    SeqChunk { first_seq: 0, last_seq: 0, edges: Vec::new() },
+                );
+                self.txs[d].send(full)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Buffered direct reader: decode each owned segment, route every edge
+/// through the shared [`Sharder`], tag it with its global sequence
+/// index, and ship per-destination sub-chunks.
+fn run_direct_binary_reader(
+    path: &Path,
+    header: binfmt::SegHeader,
+    segs: (u64, u64),
+    batch: usize,
+    sharder: Sharder,
+    txs: &[Channel<SeqChunk>],
+    stats: &ScanStats,
+) -> io::Result<()> {
+    let mut f = File::open(path)?;
+    let off = header.seg_offset(segs.0).expect("validated header");
+    f.seek(SeekFrom::Start(off))?;
+    let mut reader = BufReader::with_capacity(1 << 20, f);
+    let mut block = Vec::new();
+    let mut edges: Vec<Edge> = Vec::new();
+    let mut bufs = RouteBuffers::new(sharder, batch, txs);
+    for seg in segs.0..segs.1 {
+        let records = header.records_in(seg);
+        block.resize((binfmt::SEG_OVERHEAD_BYTES + records * binfmt::RECORD_BYTES) as usize, 0);
+        reader.read_exact(&mut block)?;
+        edges.clear();
+        binfmt::decode_segment(&block, records, seg, &mut edges)?;
+        stats.segments_verified.fetch_add(1, Ordering::Relaxed);
+        stats.bytes_read.fetch_add(block.len() as u64, Ordering::Relaxed);
+        let base = seg * header.seg_records;
+        for (i, &e) in edges.iter().enumerate() {
+            if bufs.push(base + i as u64, e).is_err() {
+                return Ok(()); // consumer hung up: benign early stop
+            }
+        }
+    }
+    let _ = bufs.flush();
+    Ok(())
+}
+
+/// Zero-copy direct reader: the mmap counterpart of
+/// [`run_direct_binary_reader`] — checksums verified in place, records
+/// routed straight out of the mapping.
+fn run_direct_mmap_reader(
+    map: &Mmap,
+    header: binfmt::SegHeader,
+    segs: (u64, u64),
+    batch: usize,
+    sharder: Sharder,
+    txs: &[Channel<SeqChunk>],
+    stats: &ScanStats,
+) -> io::Result<()> {
+    let bytes = map.as_slice();
+    let mut bufs = RouteBuffers::new(sharder, batch, txs);
+    for seg in segs.0..segs.1 {
+        let records = header.records_in(seg);
+        let off = header.seg_offset(seg).expect("validated header") as usize;
+        let len = header.seg_bytes(seg) as usize;
+        let view = binfmt::SegView::parse(&bytes[off..off + len], records, seg)?;
+        stats.segments_verified.fetch_add(1, Ordering::Relaxed);
+        stats.bytes_read.fetch_add(len as u64, Ordering::Relaxed);
+        let base = seg * header.seg_records;
+        for (i, e) in view.edges().enumerate() {
+            if bufs.push(base + i as u64, e).is_err() {
+                return Ok(()); // consumer hung up: benign early stop
+            }
+        }
+    }
+    let _ = bufs.flush();
+    Ok(())
+}
+
+/// Direct sharded dispatch over one segmented binary file: `readers`
+/// threads route their own segments through a shared [`Sharder`] and
+/// deliver per-destination [`SeqChunk`]s; per-destination [`DestFeed`]s
+/// replay each destination's subsequence in file order (module docs
+/// §direct mode). Text inputs are unsupported by construction — they
+/// have no fixed record geometry, so there is no coordination-free
+/// global sequence index.
+pub struct DirectScan {
+    /// `queues[reader][dest]`; dest `shards` is the cross lane.
+    queues: Vec<Vec<Channel<SeqChunk>>>,
+    threads: Vec<JoinHandle<()>>,
+    shards: usize,
+    stats: Arc<ScanStats>,
+    error: Arc<Mutex<Option<String>>>,
+    len_hint: Option<usize>,
+    feeds_taken: bool,
+    /// the one shared mapping in mmap mode (`None` buffered);
+    /// unmap-after-join as in [`ParallelScanner`].
+    map: Option<Arc<Mmap>>,
+}
+
+impl DirectScan {
+    /// Open `path` (segmented binary) with buffered per-range file
+    /// handles, routing into `shards` local lanes + one cross lane.
+    /// The header is decoded and length-validated here, so a corrupt
+    /// or hostile header fails the open, not a reader thread.
+    pub fn open<P: AsRef<Path>>(
+        path: P,
+        readers: usize,
+        batch: usize,
+        shards: usize,
+    ) -> io::Result<Self> {
+        let path: PathBuf = path.as_ref().to_path_buf();
+        let batch = batch.max(1);
+        let sharder = Sharder::new(shards.max(1));
+        let f = File::open(&path)?;
+        let file_len = f.metadata()?.len();
+        let mut r = BufReader::new(f);
+        let mut head = [0u8; binfmt::HEADER_BYTES];
+        r.read_exact(&mut head)?;
+        let header = binfmt::SegHeader::decode(&head)?;
+        header.validate_file_len(file_len)?;
+        let mut scan = Self::shell(sharder.shards(), usize::try_from(header.m).ok(), None);
+        let ranges = plan_segment_ranges(header.seg_count, readers.max(1));
+        let n = ranges.len();
+        for (i, (s0, s1)) in ranges.into_iter().enumerate() {
+            let txs = scan.add_reader_queues(sharder.shards());
+            let p = path.clone();
+            let st = Arc::clone(&scan.stats);
+            let err = Arc::clone(&scan.error);
+            scan.threads.push(thread::spawn(move || {
+                if let Err(e) =
+                    run_direct_binary_reader(&p, header, (s0, s1), batch, sharder, &txs, &st)
+                {
+                    let (b0, b1) = seg_byte_span(&header, s0, s1);
+                    let mut slot = err.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(format!(
+                            "reader {i}/{n} (binary, segments {s0}..{s1}, bytes {b0}..{b1}): {e}"
+                        ));
+                    }
+                }
+                for tx in &txs {
+                    tx.close();
+                }
+            }));
+        }
+        Ok(scan)
+    }
+
+    /// [`open`](Self::open) over one shared read-only mapping with
+    /// default (sequential) advice. Non-unix targets fall back to the
+    /// buffered path at compile time with identical semantics.
+    pub fn open_mmap<P: AsRef<Path>>(
+        path: P,
+        readers: usize,
+        batch: usize,
+        shards: usize,
+    ) -> io::Result<Self> {
+        Self::open_mmap_advised(path, readers, batch, shards, Advice::Sequential)
+    }
+
+    /// [`open_mmap`](Self::open_mmap) with an explicit page-cache
+    /// [`Advice`] (`--madvise` on the CLI).
+    pub fn open_mmap_advised<P: AsRef<Path>>(
+        path: P,
+        readers: usize,
+        batch: usize,
+        shards: usize,
+        advice: Advice,
+    ) -> io::Result<Self> {
+        if !mmap::supported() {
+            return Self::open(path, readers, batch, shards);
+        }
+        let batch = batch.max(1);
+        let sharder = Sharder::new(shards.max(1));
+        let f = File::open(path.as_ref())?;
+        let map = Arc::new(Mmap::map_file_advised(&f, advice)?);
+        drop(f); // the mapping keeps the pages alive
+        let header = binfmt::parse_mapped(map.as_slice())?;
+        let mut scan = Self::shell(
+            sharder.shards(),
+            usize::try_from(header.m).ok(),
+            Some(Arc::clone(&map)),
+        );
+        let ranges = plan_segment_ranges(header.seg_count, readers.max(1));
+        let n = ranges.len();
+        for (i, (s0, s1)) in ranges.into_iter().enumerate() {
+            let txs = scan.add_reader_queues(sharder.shards());
+            let m = Arc::clone(&map);
+            let st = Arc::clone(&scan.stats);
+            let err = Arc::clone(&scan.error);
+            scan.threads.push(thread::spawn(move || {
+                if let Err(e) =
+                    run_direct_mmap_reader(&m, header, (s0, s1), batch, sharder, &txs, &st)
+                {
+                    let (b0, b1) = seg_byte_span(&header, s0, s1);
+                    let mut slot = err.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(format!(
+                            "reader {i}/{n} (mmap, segments {s0}..{s1}, bytes {b0}..{b1}): {e}"
+                        ));
+                    }
+                }
+                for tx in &txs {
+                    tx.close();
+                }
+            }));
+        }
+        Ok(scan)
+    }
+
+    /// An empty scan with shared counters, ready to take readers.
+    fn shell(shards: usize, len_hint: Option<usize>, map: Option<Arc<Mmap>>) -> Self {
+        Self {
+            queues: Vec::new(),
+            threads: Vec::new(),
+            shards,
+            stats: Arc::new(ScanStats::default()),
+            error: Arc::new(Mutex::new(None)),
+            len_hint,
+            feeds_taken: false,
+            map,
+        }
+    }
+
+    /// Register one reader's `shards + 1` destination queues and hand
+    /// back the reader-side clones.
+    fn add_reader_queues(&mut self, shards: usize) -> Vec<Channel<SeqChunk>> {
+        let row: Vec<Channel<SeqChunk>> =
+            (0..=shards).map(|_| Channel::bounded(READ_AHEAD_CHUNKS)).collect();
+        let txs = row.clone();
+        self.queues.push(row);
+        txs
+    }
+
+    /// One [`DestFeed`] per shard plus the cross-lane feed, each
+    /// replaying its destination's subsequence in file order. Panics
+    /// if called twice — a feed owns its destination's cursor.
+    pub fn feeds(&mut self) -> (Vec<DestFeed>, DestFeed) {
+        assert!(!self.feeds_taken, "DirectScan::feeds may only be taken once");
+        self.feeds_taken = true;
+        let shard_feeds = (0..self.shards).map(|d| self.feed_for(d)).collect();
+        (shard_feeds, self.feed_for(self.shards))
+    }
+
+    /// The consumer cursor for destination `d` (reader queues in range
+    /// order).
+    fn feed_for(&self, d: usize) -> DestFeed {
+        DestFeed {
+            queues: self.queues.iter().map(|row| row[d].clone()).collect(),
+            current: 0,
+            prev_seq: None,
+        }
+    }
+
+    /// A detached handle that aborts the scan: closing every queue
+    /// stops the readers (their sends error) and ends every feed after
+    /// the buffered chunks drain.
+    pub fn abort_handle(&self) -> ScanAbort {
+        ScanAbort { queues: self.queues.iter().flatten().cloned().collect() }
+    }
+
+    /// Number of reader threads actually running (after clamping to
+    /// the segment count).
+    pub fn readers(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Local destination lanes (the shard count routed for).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// `true` when the scan runs over one shared mapping.
+    pub fn mmapped(&self) -> bool {
+        self.map.is_some()
+    }
+
+    /// Shared scan counters (live — safe to read mid-scan).
+    pub fn stats(&self) -> Arc<ScanStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Edge count from the header, when it fits a `usize`.
+    pub fn len_hint(&self) -> Option<usize> {
+        self.len_hint
+    }
+
+    /// First reader failure, if any — same contract and uniform
+    /// message format as [`ParallelScanner::take_error`].
+    pub fn take_error(&mut self) -> Option<String> {
+        self.error.lock().unwrap().take()
+    }
+}
+
+impl Drop for DirectScan {
+    fn drop(&mut self) {
+        for q in self.queues.iter().flatten() {
+            q.close();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        // `self.map` drops after this body: unmap-after-join.
+    }
+}
+
+/// The consumer cursor for one destination of a [`DirectScan`]:
+/// concatenates that destination's per-reader queues in range order,
+/// which replays exactly the subsequence of the file bound for this
+/// destination, in file order. Chunk spans are strictly increasing
+/// (debug-asserted) — the reorder needs no heap because readers own
+/// contiguous, sorted segment ranges.
+pub struct DestFeed {
+    queues: Vec<Channel<SeqChunk>>,
+    current: usize,
+    prev_seq: Option<u64>,
+}
+
+impl DestFeed {
+    /// Next sub-chunk in global-sequence order; `None` once every
+    /// reader has finished (or the scan was aborted and drained).
+    pub fn recv(&mut self) -> Option<SeqChunk> {
+        while let Some(q) = self.queues.get(self.current) {
+            match q.recv() {
+                Some(chunk) => {
+                    if let Some(p) = self.prev_seq {
+                        debug_assert!(
+                            chunk.first_seq > p,
+                            "sub-chunk sequence went backwards: {} after {p}",
+                            chunk.first_seq
+                        );
+                    }
+                    debug_assert!(!chunk.edges.is_empty());
+                    self.prev_seq = Some(chunk.last_seq);
+                    return Some(chunk);
+                }
+                None => self.current += 1, // this reader is done: next
+            }
+        }
+        None
+    }
+}
+
+/// Closes every queue of a [`DirectScan`] — see
+/// [`DirectScan::abort_handle`].
+pub struct ScanAbort {
+    queues: Vec<Channel<SeqChunk>>,
+}
+
+impl ScanAbort {
+    /// Abort the scan. Idempotent; safe from any thread.
+    pub fn abort(&self) {
+        for q in &self.queues {
+            q.close();
+        }
     }
 }
 
@@ -759,6 +1252,182 @@ mod tests {
         assert_eq!(sc.readers(), 0, "no segments, no readers");
         assert_eq!(collect(&mut sc, 32), vec![]);
         assert!(sc.take_error().is_none());
+        std::fs::remove_file(&p).ok();
+    }
+
+    // --- direct sharded dispatch ------------------------------------
+
+    /// Drain one feed on its own thread (feeds must drain concurrently
+    /// — a lone consumer would deadlock against reader backpressure on
+    /// the other destinations' queues).
+    fn spawn_drain(mut feed: DestFeed) -> JoinHandle<Vec<(u64, u64, Vec<Edge>)>> {
+        thread::spawn(move || {
+            let mut out = Vec::new();
+            while let Some(c) = feed.recv() {
+                out.push((c.first_seq, c.last_seq, c.edges));
+            }
+            out
+        })
+    }
+
+    /// Expected (global position, edge) stream for one destination:
+    /// the file subsequence the shared sharder routes there.
+    fn expected_for(el: &EdgeList, sharder: Sharder, dest: usize) -> Vec<(u64, Edge)> {
+        el.edges
+            .iter()
+            .enumerate()
+            .filter(|&(_, &e)| {
+                let d = match sharder.route(e) {
+                    Route::Local(w) => w,
+                    Route::Cross => sharder.shards(),
+                };
+                d == dest
+            })
+            .map(|(i, &e)| (i as u64, e))
+            .collect()
+    }
+
+    fn assert_chunks_replay(
+        chunks: &[(u64, u64, Vec<Edge>)],
+        expected: &[(u64, Edge)],
+        what: &str,
+    ) {
+        let mut k = 0usize;
+        for (first, last, edges) in chunks {
+            assert!(!edges.is_empty(), "{what}: empty chunk");
+            assert_eq!(*first, expected[k].0, "{what}: first_seq at {k}");
+            assert_eq!(*last, expected[k + edges.len() - 1].0, "{what}: last_seq at {k}");
+            for (j, e) in edges.iter().enumerate() {
+                assert_eq!(*e, expected[k + j].1, "{what}: edge at {}", k + j);
+            }
+            k += edges.len();
+        }
+        assert_eq!(k, expected.len(), "{what}: edge count");
+    }
+
+    #[test]
+    fn direct_scan_replays_each_destination_in_file_order() {
+        // both transports, several reader counts: every destination
+        // (4 locals + cross) must see exactly its file subsequence with
+        // exact global sequence tags — seg_records=64 makes the global
+        // index of edge i equal i, so the tags are checkable in closed
+        // form
+        let p = tmp("direct_order.bin");
+        let mut rng = lcg(2024);
+        let edges: Vec<Edge> =
+            (0..5000).map(|_| Edge::new((rng() % 800) as u32, (rng() % 800) as u32)).collect();
+        let el = EdgeList::new(800, edges);
+        write_binary_edges_with(&p, &el, 64).unwrap(); // 79 segments
+        let shards = 4;
+        let sharder = Sharder::new(shards);
+        for mmapped in [false, true] {
+            for readers in [1usize, 2, 3, 200] {
+                let mut sc = if mmapped {
+                    DirectScan::open_mmap(&p, readers, 97, shards).unwrap()
+                } else {
+                    DirectScan::open(&p, readers, 97, shards).unwrap()
+                };
+                assert_eq!(sc.len_hint(), Some(5000));
+                assert_eq!(sc.shards(), shards);
+                assert!(sc.readers() <= 79, "clamped to segment count");
+                let (shard_feeds, cross_feed) = sc.feeds();
+                let handles: Vec<_> = shard_feeds.into_iter().map(spawn_drain).collect();
+                let cross = spawn_drain(cross_feed);
+                for (d, h) in handles.into_iter().enumerate() {
+                    let got = h.join().unwrap();
+                    let want = expected_for(&el, sharder, d);
+                    assert_chunks_replay(&got, &want, &format!("shard {d} readers={readers}"));
+                }
+                let got = cross.join().unwrap();
+                let want = expected_for(&el, sharder, shards);
+                assert_chunks_replay(&got, &want, &format!("cross readers={readers}"));
+                assert!(sc.take_error().is_none());
+                assert_eq!(sc.stats().segments_verified(), 79);
+            }
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn direct_scan_surfaces_corruption_with_the_uniform_reader_prefix() {
+        let p = tmp("direct_corrupt.bin");
+        let el = EdgeList::new(101, (0..100u32).map(|i| Edge::new(i, i + 1)).collect());
+        write_binary_edges_with(&p, &el, 16).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let seg2 = binfmt::HEADER_BYTES + 2 * (16 + 16 * 8);
+        bytes[seg2 + 8 + 3] ^= 0x10;
+        std::fs::write(&p, &bytes).unwrap();
+        let mut sc = DirectScan::open(&p, 2, 32, 2).unwrap();
+        let (shard_feeds, cross_feed) = sc.feeds();
+        let handles: Vec<_> = shard_feeds.into_iter().map(spawn_drain).collect();
+        let cross = spawn_drain(cross_feed);
+        for h in handles {
+            let _ = h.join().unwrap();
+        }
+        let _ = cross.join().unwrap();
+        let err = sc.take_error().expect("corruption must surface");
+        assert!(err.starts_with("reader "), "{err}");
+        assert!(err.contains("segment 2"), "{err}");
+        assert!(err.contains("bytes "), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn direct_scan_abort_and_early_drop_do_not_hang() {
+        let p = tmp("direct_drop.bin");
+        let edges: Vec<Edge> =
+            (0..20_000u32).map(|i| Edge::new(i % 2000, (i + 1) % 2000)).collect();
+        let el = EdgeList::new(2001, edges);
+        write_binary_edges_with(&p, &el, 64).unwrap();
+        let mut sc = DirectScan::open_mmap(&p, 4, 16, 4).unwrap();
+        let abort = sc.abort_handle();
+        let (shard_feeds, cross_feed) = sc.feeds();
+        let mut feeds: Vec<DestFeed> = shard_feeds;
+        feeds.push(cross_feed);
+        // pull one chunk off the first feed, then abort: every feed
+        // must terminate even though most queues were full
+        let first = feeds[0].recv();
+        assert!(first.is_some(), "shard 0 must see at least one chunk");
+        abort.abort();
+        let handles: Vec<_> = feeds.into_iter().map(spawn_drain).collect();
+        for h in handles {
+            let _ = h.join().unwrap();
+        }
+        drop(sc);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn direct_scan_hostile_header_fails_the_open_not_a_thread() {
+        let p = tmp("direct_hostile.bin");
+        let h = binfmt::SegHeader::new(8, 1u64 << 61, binfmt::DEFAULT_SEG_RECORDS).unwrap();
+        std::fs::write(&p, h.encode()).unwrap();
+        let err = DirectScan::open(&p, 4, 32, 4).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        let err = DirectScan::open_mmap(&p, 4, 32, 4).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn uniform_error_prefix_names_reader_and_byte_span_on_every_path() {
+        // truncate a multi-segment file mid-payload *after* open so the
+        // buffered binary reader hits a clean EOF error, then check the
+        // parked message carries the uniform prefix
+        let p = tmp("uniform_err.bin");
+        let el = EdgeList::new(301, (0..300u32).map(|i| Edge::new(i, i + 1)).collect());
+        write_binary_edges_with(&p, &el, 32).unwrap();
+        let clean = std::fs::read(&p).unwrap();
+        let mut sc = ParallelScanner::open_with(&p, ScanFormat::Binary, 2, 64).unwrap();
+        // racing the readers is fine either way: if they finish before
+        // the truncation lands there is simply no error to inspect
+        std::fs::write(&p, &clean[..clean.len() / 2]).unwrap();
+        let _ = collect(&mut sc, 64);
+        if let Some(err) = sc.take_error() {
+            assert!(err.starts_with("reader "), "{err}");
+            assert!(err.contains("segments "), "{err}");
+            assert!(err.contains("bytes "), "{err}");
+        }
         std::fs::remove_file(&p).ok();
     }
 }

@@ -369,6 +369,64 @@ fn serve_mmap_scans_the_binary_input() {
 }
 
 #[test]
+fn serve_routes_binary_scans_directly_and_gates_the_flag() {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let bin = dir.join(format!("sc_route_{pid}.bin"));
+    let bin_str = bin.to_str().unwrap();
+    let (_, stderr, ok) = run(&[
+        "generate", "--preset", "amazon-s", "--scale", "0.02", "--out", bin_str,
+    ]);
+    assert!(ok, "generate failed: {stderr}");
+    let stem = bin_str.trim_end_matches(".bin");
+
+    // --route auto on a plain binary scan picks direct dispatch
+    let (stdout, stderr, ok) = run_with_stdin(
+        &["serve", "--input", bin_str, "--readers", "2", "--shards", "2", "--vmax", "64"],
+        "stats\n",
+    );
+    assert!(ok, "serve direct failed: {stderr}");
+    assert!(stdout.contains("routing in the readers (direct dispatch)"), "{stdout}");
+    assert!(stdout.contains("route=direct"), "{stdout}");
+    assert!(stdout.contains("final:"), "{stdout}");
+
+    // forcing the funnel on the same invocation is honoured
+    let (stdout, stderr, ok) = run_with_stdin(
+        &[
+            "serve", "--input", bin_str, "--readers", "2", "--shards", "2", "--vmax", "64",
+            "--route", "funnel",
+        ],
+        "",
+    );
+    assert!(ok, "serve --route funnel failed: {stderr}");
+    assert!(stdout.contains("route=funnel"), "{stdout}");
+
+    // --route direct + --wal-dir is a contradiction: the WAL needs the
+    // funnel's global arrival stream, so serve must fail fast
+    let wal = dir.join(format!("sc_route_wal_{pid}"));
+    let (_, stderr, ok) = run_with_stdin(
+        &[
+            "serve", "--input", bin_str, "--readers", "2", "--route", "direct", "--wal-dir",
+            wal.to_str().unwrap(),
+        ],
+        "",
+    );
+    assert!(!ok, "--route direct with --wal-dir must fail fast");
+    assert!(stderr.contains("--route"), "{stderr}");
+
+    // unknown spellings are rejected up front
+    let (_, stderr, ok) =
+        run_with_stdin(&["serve", "--input", bin_str, "--route", "sideways"], "");
+    assert!(!ok, "--route sideways must fail fast");
+    assert!(stderr.contains("--route expects"), "{stderr}");
+
+    std::fs::remove_file(&bin).ok();
+    std::fs::remove_dir_all(&wal).ok();
+    std::fs::remove_file(format!("{stem}.txt")).ok();
+    std::fs::remove_file(format!("{stem}.cmty")).ok();
+}
+
+#[test]
 fn bench_service_writes_machine_readable_json() {
     let dir = std::env::temp_dir();
     let json_path = dir.join(format!("sc_bench_{}.json", std::process::id()));
@@ -384,6 +442,7 @@ fn bench_service_writes_machine_readable_json() {
     assert!(stdout.contains("rmw/kedge"), "{stdout}");
     assert!(stdout.contains("parallel scan"), "{stdout}");
     assert!(stdout.contains("mmap scan"), "{stdout}");
+    assert!(stdout.contains("routing:"), "{stdout}");
     let json = std::fs::read_to_string(&json_path).expect("BENCH_service.json written");
     assert!(json.contains("\"bench\": \"service\""), "{json}");
     assert!(json.contains("\"measured\": true"), "{json}");
@@ -394,6 +453,7 @@ fn bench_service_writes_machine_readable_json() {
     assert!(json.contains("\"readers\""), "{json}");
     assert!(json.contains("\"mmap\""), "{json}");
     assert!(json.contains("\"mapped\""), "{json}");
+    assert!(json.contains("\"routing\""), "{json}");
     assert!(json.contains("\"labels_match\": true"), "{json}");
     assert!(!json.contains("\"labels_match\": false"), "{json}");
     std::fs::remove_file(&json_path).ok();
