@@ -22,7 +22,9 @@ use streamcom::graph::generators::sbm::{self, SbmConfig};
 use streamcom::graph::generators::{lfr, GeneratedGraph};
 use streamcom::graph::io;
 use streamcom::metrics;
-use streamcom::service::{ClusterService, CommitHorizon, RouteMode, ServiceConfig};
+use streamcom::service::{
+    ClusterService, CommitHorizon, RouteMode, ServiceConfig, ServiceError,
+};
 use streamcom::stream::meter::Meter;
 use streamcom::stream::pscan::{DirectScan, ParallelScanner, ScanAbort, ScanStats};
 use streamcom::stream::EdgeSource;
@@ -91,9 +93,13 @@ COMMANDS:
                                     the log head become final and their storage is freed,
                                     bounding memory (0 = unbounded, exact batch parity)
                --pace <e/s>         throttle ingest, edges/s (0 = full speed)
-               --wal-dir <dir>      durability: append every edge to a per-shard
+               --wal-dir <dir>      durability: append every edge to a
                                     write-ahead log under <dir> and checkpoint at
-                                    epoch commits (off by default)
+                                    epoch commits (off by default). Works on
+                                    every route: the funnel logs per shard from
+                                    its global stream, direct dispatch logs
+                                    per-reader lanes keyed by the global seq
+                                    index — both recover to the same seq cut
                --resume             recover from the latest checkpoint + WAL
                                     suffix in --wal-dir, then skip the already-
                                     ingested prefix of the workload
@@ -116,11 +122,12 @@ COMMANDS:
                                     auto [default] picks direct sharded
                                     dispatch (readers route, per-shard
                                     delivery in file order) for binary/mmap
-                                    scans without --wal-dir/--pace, funnel
+                                    scans without --pace/--resume, funnel
                                     otherwise; direct requires it (fails fast
                                     when unsupported); funnel forces the
                                     ordered single-stream sequencer. Both
-                                    modes yield bit-identical partitions
+                                    modes yield bit-identical partitions,
+                                    with or without --wal-dir
                --madvise <a>        page-cache advice for --mmap scans:
                                     seq [default] | huge | willneed | none
                queries: '? <node>' community, 'top <k>' largest, 'stats', 'q'
@@ -534,8 +541,6 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         Some("--resume slices the in-memory stream positionally")
     } else if !args.get("input").is_some_and(|p| p.ends_with(".bin")) {
         Some("text inputs have no fixed record geometry to sequence by")
-    } else if args.get("wal-dir").is_some() {
-        Some("--wal-dir appends need the funnel's global arrival stream")
     } else if args.u64_or("pace", 0).map_err(|e| e.to_string())? > 0 {
         Some("--pace throttles the funnel's global arrival stream")
     } else {
@@ -576,6 +581,11 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if let Some(dir) = args.get("wal-dir") {
         config.wal_dir = Some(std::path::PathBuf::from(dir));
     }
+    // direct + durable: the readers write per-reader WAL lanes
+    // themselves. Built from the same config (shared failpoint, same
+    // segment geometry) before the service takes ownership of it; the
+    // scan opens only after `start` has prepared the directory.
+    let direct_wal = if direct { config.direct_wal_cfg() } else { None };
     // the file scan knows the final node count up front (the binary
     // header's n / the interned text id space): pre-size every worker
     // sketch so the per-chunk `ensure` never grows arrays mid-stream.
@@ -626,10 +636,11 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let mut abort_scan: Option<ScanAbort> = None;
     let ingest = if direct && readers > 0 && skip == 0 {
         let input = args.get("input").expect("checked above").to_string();
+        let durable = direct_wal.is_some();
         let mut dscan = if mmap {
-            DirectScan::open_mmap_advised(&input, readers, 8_192, shards, advice)
+            DirectScan::open_mmap_advised(&input, readers, 8_192, shards, direct_wal, advice)
         } else {
-            DirectScan::open(&input, readers, 8_192, shards)
+            DirectScan::open(&input, readers, 8_192, shards, direct_wal)
         }
         .map_err(|e| format!("direct scan {input}: {e}"))?;
         scan_info = Some((dscan.readers(), dscan.mmapped(), dscan.stats()));
@@ -642,12 +653,17 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             dscan.readers(),
             if dscan.mmapped() { " (one shared mmap)" } else { "" }
         );
+        if durable {
+            println!(
+                "wal: durable direct dispatch — {} readers append per-reader WAL lanes",
+                dscan.readers()
+            );
+        }
         std::thread::spawn(move || {
+            // reader failures and worker deaths surface as the
+            // result's typed fault — checked after the join
             service.ingest_direct(&mut dscan);
-            if let Some(e) = dscan.take_error() {
-                eprintln!("scan error: {e} (stream ended short)");
-            }
-            service.finish()
+            (service.finish(), None)
         })
     } else if readers > 0 && skip == 0 {
         let input = args.get("input").expect("checked above").to_string();
@@ -685,10 +701,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                     break;
                 }
             }
-            if let Some(e) = scanner.take_error() {
-                eprintln!("scan error: {e} (stream ended short)");
-            }
-            service.finish()
+            let scan_err = scanner.take_error();
+            (service.finish(), scan_err)
         })
     } else {
         if readers > 0 {
@@ -704,7 +718,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                     break;
                 }
             }
-            service.finish()
+            (service.finish(), None)
         })
     };
 
@@ -818,7 +832,16 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         }
     }
 
-    let result = ingest.join().map_err(|_| "ingest thread panicked".to_string())?;
+    let (result, scan_err) = ingest.join().map_err(|_| "ingest thread panicked".to_string())?;
+    // supervised failures end the run with one typed line and a
+    // nonzero exit — on every route (reader, worker, or WAL lane
+    // failures all funnel into these two)
+    if let Some(detail) = scan_err {
+        return Err(ServiceError::Reader { detail }.to_string());
+    }
+    if let Some(fault) = &result.fault {
+        return Err(fault.to_string());
+    }
     let labels = result.labels();
     let ncomm = metrics::labels_to_communities(&labels).len();
     println!(

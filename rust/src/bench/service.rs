@@ -24,7 +24,7 @@
 
 use crate::graph::generators::sbm::{self, SbmConfig};
 use crate::graph::io;
-use crate::service::{ClusterService, CommitHorizon, LeaderStats, ServiceConfig};
+use crate::service::{ClusterService, CommitHorizon, CrashPoint, LeaderStats, ServiceConfig};
 use crate::stream::pscan::{DirectScan, ParallelScanner};
 
 use super::memory::fmt_bytes;
@@ -526,7 +526,7 @@ pub fn run_routing(cfg: &ServiceBenchConfig) -> (Table, Vec<RoutingBenchRow>) {
             config.initial_nodes = n;
             let mut svc = ClusterService::start(config);
             let (res, bytes, err) = if mode == "direct" {
-                let mut scan = DirectScan::open_mmap(&bin, readers, SCAN_BATCH, cfg.shards)
+                let mut scan = DirectScan::open_mmap(&bin, readers, SCAN_BATCH, cfg.shards, None)
                     .expect("open bench direct scan");
                 let stats = scan.stats();
                 svc.ingest_direct(&mut scan);
@@ -563,6 +563,80 @@ pub fn run_routing(cfg: &ServiceBenchConfig) -> (Table, Vec<RoutingBenchRow>) {
             ]);
             rows.push(row);
         }
+    }
+
+    // crash → resume cell: a durable direct ingest dies from a torn
+    // reader lane mid-stream (simulated dying disk), a fresh service
+    // resumes from the per-reader WAL lanes, and the remainder of the
+    // stream is re-fed. `labels_match` here is the recovery gate the
+    // release CI hard-fails on: crash recovery on the direct route
+    // stays bit-identical at bench scale.
+    {
+        let readers = *ROUTING_READERS_SWEEP.last().expect("non-empty sweep");
+        let wal = dir.join(format!("{stem}_wal"));
+        std::fs::remove_dir_all(&wal).ok();
+        let mut config = ServiceConfig::new(cfg.shards, cfg.v_max);
+        config.drain_every = 0;
+        config.initial_nodes = n;
+        config.wal_dir = Some(wal.clone());
+        let fp = config.failpoint.clone();
+        // tear reader 0's lane about a third into its share
+        fp.arm(CrashPoint::ReaderWalAppend {
+            reader: 0,
+            after_records: (g.m() / (readers * 3)).max(1) as u64,
+            torn_bytes: 11,
+        });
+        let wal_cfg = config.direct_wal_cfg();
+        let mut doomed = ClusterService::start(config);
+        let mut scan = DirectScan::open_mmap(&bin, readers, SCAN_BATCH, cfg.shards, wal_cfg)
+            .expect("open bench direct scan");
+        let stats = scan.stats();
+        doomed.ingest_direct(&mut scan);
+        let crashed = fp.is_dead();
+        drop(doomed); // abortive shutdown: only the synced lanes survive
+
+        let mut config = ServiceConfig::new(cfg.shards, cfg.v_max);
+        config.drain_every = 0;
+        config.wal_dir = Some(wal.clone());
+        let (res, labels_match) = match ClusterService::resume(config) {
+            Ok(mut svc) => {
+                let at = (svc.handle().stats().edges_ingested as usize).min(g.m());
+                for chunk in g.edges.edges[at..].chunks(SCAN_BATCH) {
+                    svc.push_chunk(chunk);
+                }
+                let res = svc.finish();
+                let ok = crashed
+                    && res.edges_ingested == g.m() as u64
+                    && res.snapshot.labels_padded(n) == baseline;
+                (Some(res), ok)
+            }
+            Err(_) => (None, false),
+        };
+        std::fs::remove_dir_all(&wal).ok();
+        let (edges, elapsed) = res
+            .map(|r| (r.edges_ingested, r.elapsed.as_secs_f64().max(1e-9)))
+            .unwrap_or((0, 1e-9));
+        let row = RoutingBenchRow {
+            mode: "direct-crash-resume",
+            readers,
+            edges,
+            bytes: stats.bytes_read(),
+            elapsed_secs: elapsed,
+            edges_per_sec: edges as f64 / elapsed,
+            labels_match,
+        };
+        table.push_row(vec![
+            row.mode.to_string(),
+            row.readers.to_string(),
+            format!("{:.2}", row.edges_per_sec / 1e6),
+            format!("{:.1}", row.bytes as f64 / elapsed / 1e6),
+            if row.labels_match {
+                "exact".to_string()
+            } else {
+                "MISMATCH".to_string()
+            },
+        ]);
+        rows.push(row);
     }
     std::fs::remove_file(&bin).ok();
     (table, rows)
@@ -921,21 +995,30 @@ mod tests {
     fn routing_sweep_covers_both_modes_and_matches_the_baseline() {
         let cfg = tiny();
         let (table, rows) = run_routing(&cfg);
-        let cells = 2 * ROUTING_READERS_SWEEP.len();
+        // funnel + direct sweeps, plus the crash→resume recovery cell
+        let cells = 2 * ROUTING_READERS_SWEEP.len() + 1;
         assert_eq!(rows.len(), cells);
         assert_eq!(table.rows.len(), cells);
-        assert_eq!(rows.iter().filter(|r| r.mode == "funnel").count(), cells / 2);
-        assert_eq!(rows.iter().filter(|r| r.mode == "direct").count(), cells / 2);
+        assert_eq!(rows.iter().filter(|r| r.mode == "funnel").count(), (cells - 1) / 2);
+        assert_eq!(rows.iter().filter(|r| r.mode == "direct").count(), (cells - 1) / 2);
+        assert_eq!(
+            rows.iter().filter(|r| r.mode == "direct-crash-resume").count(),
+            1,
+            "the recovery gate cell must always be present"
+        );
         for r in &rows {
             assert!(r.edges > 0 && r.bytes > 0 && r.edges_per_sec > 0.0, "{r:?}");
-            // every cell ingests the whole file exactly once
+            // every cell ingests the whole file exactly once — the
+            // crash cell too: recovered prefix + re-fed remainder
             assert_eq!(r.edges, rows[0].edges, "{r:?}");
-            // routing is a transport choice, never a semantics choice
+            // routing is a transport choice, never a semantics choice,
+            // and neither is crashing on a durable route
             assert!(r.labels_match, "{r:?}");
         }
 
         let json = to_json(&cfg, &[], &[], &[], &[], &rows);
         assert!(json.contains("\"routing\""));
+        assert!(json.contains("\"mode\": \"direct-crash-resume\""));
         assert_eq!(json.matches("\"labels_match\"").count(), cells);
         assert!(!json.contains("\"labels_match\": false"));
     }

@@ -72,16 +72,18 @@ impl CommitHorizon {
 /// service state).
 ///
 /// * `Auto` — direct dispatch whenever the input supports it
-///   (segmented binary or mmap scan, no `--wal-dir`, no pacing);
-///   funnel otherwise, with a printed note. The default.
+///   (segmented binary or mmap scan, no pacing, no `--resume`);
+///   funnel otherwise, with a printed note. The default. `--wal-dir`
+///   no longer forces the funnel: direct readers write their own
+///   per-reader WAL lanes ([`crate::service::DirectWalCfg`]).
 /// * `Direct` — require direct dispatch
 ///   ([`crate::stream::pscan::DirectScan`] +
 ///   [`crate::service::ClusterService::ingest_direct`]); the CLI
-///   fails fast when the input cannot support it (text input, WAL,
-///   pacing).
+///   fails fast when the input cannot support it (text input,
+///   pacing, resume's positional slicing).
 /// * `Funnel` — always use the ordered single-stream sequencer
 ///   ([`crate::stream::pscan::ParallelScanner`]), the only mode that
-///   yields a global arrival stream for WAL appends and pacing.
+///   yields a global arrival stream for pacing and resume.
 ///
 /// Both modes produce bit-identical final partitions in the exactness
 /// domains — the routing-mode property suite pins it.
@@ -202,6 +204,25 @@ impl ServiceConfig {
             failpoint: FailPoint::default(),
             initial_nodes: 0,
         }
+    }
+
+    /// The direct-route durability wiring, when `wal_dir` is set: the
+    /// [`DirectWalCfg`](crate::service::DirectWalCfg) handed to
+    /// [`DirectScan::open`](crate::stream::pscan::DirectScan::open) so
+    /// each reader thread writes its own per-reader WAL lanes. Carries
+    /// a fresh shared byte counter;
+    /// [`ingest_direct`](crate::service::ClusterService::ingest_direct)
+    /// polls it into the service stats. Call on the **same** config the
+    /// service runs with (shared `failpoint`), after
+    /// `ClusterService::start` (which prepares the directory).
+    pub fn direct_wal_cfg(&self) -> Option<crate::service::wal::DirectWalCfg> {
+        self.wal_dir.as_ref().map(|dir| crate::service::wal::DirectWalCfg {
+            dir: dir.clone(),
+            segment_records: self.wal_segment_records.max(1),
+            shards: self.shards.max(1),
+            failpoint: self.failpoint.clone(),
+            bytes: std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0)),
+        })
     }
 
     /// Batch preset: automatic drains disabled, so the terminal replay

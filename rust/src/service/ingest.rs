@@ -12,13 +12,25 @@
 //!   nothing), cross-shard edges append to the epoch-structured cross
 //!   log (`super::crosslog`), which seals epochs on the router's
 //!   chunk boundaries. This is the **funnel** path — one routing
-//!   thread sees the global arrival stream, which WAL appends and
-//!   pacing require. For segmented binary scans,
-//!   [`ClusterService::ingest_direct`] bypasses it: the scan's reader
-//!   threads route ([`DirectScan`]), thin per-shard muxers forward
-//!   file-ordered sub-chunks into the same mailboxes, and the cross
-//!   lane reaches the same log in the same arrival order — same
-//!   partition, no single-thread funnel.
+//!   thread sees the global arrival stream, which pacing requires.
+//!   For segmented binary scans, [`ClusterService::ingest_direct`]
+//!   bypasses it: the scan's reader threads route ([`DirectScan`]),
+//!   thin per-shard muxers forward file-ordered sub-chunks into the
+//!   same mailboxes, and the cross lane reaches the same log in the
+//!   same arrival order — same partition, no single-thread funnel.
+//!   With durability on, the readers append their routed chunks to
+//!   per-reader WAL lanes before enqueueing them and the durable
+//!   prefix is the **seq cut** over all lanes (`wal::durable_cut`),
+//!   so the fast path and the WAL compose; checkpoints on this path
+//!   fire at the end-of-stream quiesce, where the cut equals the
+//!   ingested count (mid-stream, concurrent muxers have no
+//!   consistent cut).
+//! * **Supervised degradation** — reader and worker deaths no longer
+//!   panic the ingest thread: the first failure is recorded as a
+//!   typed [`ServiceError`] (`Shared::fault`), the remaining feeds
+//!   quiesce and drain, checkpoints stop, and the caller observes
+//!   the fault via [`ClusterService::take_fault`] or
+//!   [`ServiceResult::fault`].
 //! * **Shard worker** — long-lived thread owning one
 //!   [`StreamingClusterer`] behind a mutex; drains its bounded mailbox
 //!   chunk by chunk. Workers never share nodes (hash-sharding), so they
@@ -77,6 +89,41 @@ use super::router::Router;
 use super::snapshot::{merge_committed_bases, CommittedBase, LeaderShard, Merger, Snapshot};
 use super::wal::{self, CheckpointData, WalError, WalSet};
 
+/// A supervised ingest failure: the typed, survivable form of what
+/// used to be a panic. Recorded once (first failure wins) in
+/// `Shared::fault`; the ingest paths then quiesce-and-drain instead of
+/// unwinding, and the caller picks the fault up via
+/// [`ClusterService::take_fault`] or [`ServiceResult::fault`] — the
+/// CLI maps it to a one-line `error:` and a nonzero exit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServiceError {
+    /// A shard worker thread died (panicked) mid-stream; its sketch
+    /// slice is incomplete, so the run's results are unreliable.
+    Worker {
+        /// Index of the dead shard worker.
+        shard: usize,
+    },
+    /// A direct-scan reader failed (decode or I/O); `detail` is the
+    /// scan's uniform `reader {i}/{n} (...): {cause}` message.
+    Reader {
+        /// The reader's own error line.
+        detail: String,
+    },
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Worker { shard } => {
+                write!(f, "shard worker {shard} died mid-stream; results are incomplete")
+            }
+            ServiceError::Reader { detail } => write!(f, "scan failed: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
 /// State shared between the router, the shard workers, and every
 /// [`QueryHandle`].
 ///
@@ -116,6 +163,10 @@ pub(crate) struct Shared {
     pub(crate) replayed_total: AtomicU64,
     /// Cross edges integrated into the published snapshot.
     pub(crate) cross_drained: AtomicU64,
+    /// Cross edges accepted by the router but still in its local
+    /// pending batch (not yet appended to the cross log). Published on
+    /// every batch so `stats()` counts them without a `flush()`.
+    pub(crate) cross_buffered: AtomicU64,
     /// Delta payload of the most recent drain: replayed suffix bytes +
     /// frozen-record bytes + per-epoch commit headers. O(new deltas),
     /// independent of the committed-base size (asserted by tests).
@@ -140,10 +191,28 @@ pub(crate) struct Shared {
     /// Set by `finish`: the published snapshot is the terminal replay
     /// and must never be overwritten by a late mid-stream drain.
     pub(crate) finished: AtomicBool,
+    /// First supervised failure (worker/reader death); see
+    /// [`record_fault`]. Checked cheaply through `faulted`.
+    pub(crate) fault: Mutex<Option<ServiceError>>,
+    /// Lock-free "a fault has been recorded" flag — gates checkpoints
+    /// and lets hot paths skip the `fault` mutex.
+    pub(crate) faulted: AtomicBool,
     /// Latest copy-on-read snapshot (swap-on-drain).
     pub(crate) snapshot: RwLock<Arc<Snapshot>>,
     /// Ingest throughput meter (fed at chunk granularity).
     pub(crate) meter: Mutex<Meter>,
+}
+
+/// Record a supervised failure: the first fault wins (later ones are
+/// usually cascades of the first), and the `faulted` flag flips so the
+/// checkpoint gate and the drain paths see it without taking the lock.
+pub(crate) fn record_fault(shared: &Shared, err: ServiceError) {
+    let mut slot = shared.fault.lock().unwrap();
+    if slot.is_none() {
+        eprintln!("service: {err}");
+        *slot = Some(err);
+    }
+    shared.faulted.store(true, Ordering::SeqCst);
 }
 
 /// Publish a snapshot into the shared slot. Mid-stream drains respect
@@ -280,6 +349,10 @@ pub struct ServiceResult {
     pub cross_edges: u64,
     /// Wall-clock ingest time.
     pub elapsed: Duration,
+    /// First supervised failure recorded during the run (worker or
+    /// reader death), if any — `Some` means the snapshot covers only
+    /// what survived, and callers should treat the run as failed.
+    pub fault: Option<ServiceError>,
 }
 
 impl ServiceResult {
@@ -441,12 +514,24 @@ impl ClusterService {
                 }
             };
 
+        // quarantine first: a segment whose tail fails its checksum is
+        // renamed to `<name>.corrupt` (evidence preserved) and its
+        // clean prefix of whole records is recovered under the
+        // original name — resume then proceeds over intact files only.
+        // Transient I/O gets the bounded retry; Corrupt stays
+        // fail-fast inside the scan itself.
+        for q in wal::retry_wal(|| wal::quarantine_corrupt(&dir))? {
+            eprintln!("wal: quarantined corrupt segment to {}", q.display());
+        }
         // the durable suffix: everything contiguously logged past the
-        // cut; the files are truncated there so post-resume appends
-        // (restarting at the prefix) can never duplicate a sequence
-        let files = wal::scan_dir(&dir)?;
-        let prefix = wal::durable_prefix(&files, cut);
-        wal::truncate_beyond(&files, prefix)?;
+        // cut. The cut is seq-first (`durable_cut` walks the union of
+        // every lane's sorted runs — funnel shard/cross files and
+        // per-reader direct lanes alike), and the files are truncated
+        // there so post-resume appends (restarting at the cut) can
+        // never duplicate a sequence.
+        let files = wal::retry_wal(|| wal::scan_dir(&dir))?;
+        let prefix = wal::durable_cut(&files, cut);
+        wal::retry_wal(|| wal::truncate_beyond(&files, prefix).map_err(WalError::from))?;
         let suffix = wal::suffix(&files, cut, prefix);
         let recovered_edges = suffix.len() as u64;
 
@@ -527,6 +612,7 @@ impl ClusterService {
             replayed_last: AtomicU64::new(0),
             replayed_total: AtomicU64::new(0),
             cross_drained: AtomicU64::new(0),
+            cross_buffered: AtomicU64::new(0),
             delta_last_bytes: AtomicU64::new(0),
             delta_total_bytes: AtomicU64::new(0),
             wal_bytes: AtomicU64::new(0),
@@ -535,6 +621,8 @@ impl ClusterService {
             recovered_epochs: AtomicU64::new(0),
             wal_recovered_edges: AtomicU64::new(recovered_edges),
             finished: AtomicBool::new(false),
+            fault: Mutex::new(None),
+            faulted: AtomicBool::new(false),
             snapshot: RwLock::new(Arc::new(Snapshot::empty())),
             meter: Mutex::new(Meter::start()),
             config,
@@ -633,20 +721,27 @@ impl ClusterService {
     /// only affects mid-stream snapshot freshness, never the final
     /// partition (unbounded horizon).
     ///
-    /// Returns the number of edges ingested. Panics if the scan was
-    /// routed for a different shard count, or if durability is on —
-    /// WAL appends need the single global arrival stream only the
-    /// funnel has (the CLI enforces this with a friendlier error).
+    /// With durability on (`config.wal_dir` set), open the scan with
+    /// [`ServiceConfig::direct_wal_cfg`] so the readers append their
+    /// routed chunks to per-reader WAL lanes before enqueueing; this
+    /// method then publishes the scan's WAL byte counter into the
+    /// service stats and runs an end-of-stream quiesce — the one point
+    /// where the seq cut, the ingested count, and every lane's fsync
+    /// line up, so it doubles as the direct path's checkpoint
+    /// opportunity (mid-stream, concurrent muxers have no consistent
+    /// cut to export).
+    ///
+    /// Returns the number of edges ingested. Worker deaths and reader
+    /// failures do not panic: the first one is recorded as a
+    /// [`ServiceError`] (see [`take_fault`](Self::take_fault)), the
+    /// affected feeds drain, and the count reflects what was actually
+    /// dispatched. Panics only if the scan was routed for a different
+    /// shard count — a wiring bug, not a runtime failure.
     pub fn ingest_direct(&mut self, scan: &mut DirectScan) -> u64 {
         assert_eq!(
             scan.shards(),
             self.shared.config.shards,
             "DirectScan routed for a different shard count than the service runs"
-        );
-        assert!(
-            self.shared.config.wal_dir.is_none(),
-            "direct dispatch has no global arrival stream for WAL appends; \
-             ingest through the funnel when durability is on"
         );
         let (shard_feeds, mut cross_feed) = scan.feeds();
         let muxers: Vec<JoinHandle<u64>> = shard_feeds
@@ -660,16 +755,17 @@ impl ClusterService {
                         let mut total = 0u64;
                         while let Some(chunk) = feed.recv() {
                             let len = chunk.edges.len() as u64;
+                            // a closed mailbox mid-run means the worker
+                            // died: record the fault and keep draining
+                            // the feed so the readers never block on a
+                            // full queue behind a dead shard
+                            if shared.mailboxes[w].send(chunk.edges).is_err() {
+                                record_fault(&shared, ServiceError::Worker { shard: w });
+                                while feed.recv().is_some() {}
+                                break;
+                            }
                             shared.ingested.fetch_add(len, Ordering::Relaxed);
                             shared.meter.lock().unwrap().add_edges(len);
-                            // same fail-fast contract as the router:
-                            // a closed mailbox mid-run means the worker
-                            // died, and edges are never dropped
-                            if shared.mailboxes[w].send(chunk.edges).is_err() {
-                                panic!(
-                                    "shard worker {w} died; its mailbox is closed mid-stream"
-                                );
-                            }
                             shared.dispatched.fetch_add(len, Ordering::SeqCst);
                             total += len;
                         }
@@ -694,13 +790,39 @@ impl ClusterService {
                 log.append(&mut chunk.edges);
             }
             total += len;
+            if let Some(b) = scan.wal_bytes() {
+                self.shared.wal_bytes.store(b, Ordering::Relaxed);
+            }
             if drain_every != u64::MAX && last_seq + 1 >= next_drain {
                 rebuild_snapshot(&self.shared);
                 next_drain = ((last_seq + 1) / drain_every + 1) * drain_every;
             }
         }
-        for h in muxers {
-            total += h.join().expect("direct-dispatch muxer panicked");
+        for (w, h) in muxers.into_iter().enumerate() {
+            match h.join() {
+                Ok(n) => total += n,
+                Err(_) => record_fault(&self.shared, ServiceError::Worker { shard: w }),
+            }
+        }
+        if let Some(b) = scan.wal_bytes() {
+            self.shared.wal_bytes.store(b, Ordering::Relaxed);
+        }
+        if let Some(detail) = scan.take_error() {
+            record_fault(&self.shared, ServiceError::Reader { detail });
+        }
+        // end-of-stream quiesce: every reader synced its lanes on
+        // exit, nothing is in flight, and — only when the scan
+        // delivered the whole file — the delivered seqs are exactly
+        // [0, total), so `ingested` is a valid seq cut for the
+        // checkpoint. A partial delivery (abort, fault) has seq gaps
+        // and must not checkpoint; its WAL lanes still recover to the
+        // durable cut on resume.
+        let complete = scan.len_hint().is_some_and(|m| m as u64 == total);
+        if complete
+            && self.shared.config.wal_dir.is_some()
+            && !self.shared.faulted.load(Ordering::SeqCst)
+        {
+            self.quiesce();
         }
         total
     }
@@ -739,9 +861,11 @@ impl ClusterService {
             < self.shared.dispatched.load(Ordering::SeqCst)
         {
             // a mailbox only closes mid-run when its worker died — a
-            // recv'd-but-unprocessed chunk would make this wait eternal
-            if self.shared.mailboxes.iter().any(|m| m.is_closed()) {
-                panic!("shard worker died mid-stream; sketch state is incomplete");
+            // recv'd-but-unprocessed chunk would make this wait
+            // eternal, so record the fault and snapshot what we have
+            if let Some(w) = self.shared.mailboxes.iter().position(|m| m.is_closed()) {
+                record_fault(&self.shared, ServiceError::Worker { shard: w });
+                break;
             }
             // short yield phase for the common fast drain, then back off
             // to sleeps so a long wait doesn't burn a core
@@ -769,6 +893,11 @@ impl ClusterService {
         let Some(dir) = self.shared.config.wal_dir.clone() else {
             return;
         };
+        // a faulted run has no trustworthy cut: a dead worker's slice
+        // is incomplete even when the counters happen to line up
+        if self.shared.faulted.load(Ordering::SeqCst) {
+            return;
+        }
         let ingested = self.shared.ingested.load(Ordering::SeqCst);
         let dispatched = self.shared.dispatched.load(Ordering::SeqCst);
         let processed = self.shared.processed.load(Ordering::SeqCst);
@@ -866,8 +995,10 @@ impl ClusterService {
         for mb in &self.shared.mailboxes {
             mb.close();
         }
-        for h in std::mem::take(&mut self.workers) {
-            h.join().expect("shard worker panicked");
+        for (w, h) in std::mem::take(&mut self.workers).into_iter().enumerate() {
+            if h.join().is_err() {
+                record_fault(&self.shared, ServiceError::Worker { shard: w });
+            }
         }
         let states: Vec<StreamState> = self
             .shared
@@ -903,12 +1034,25 @@ impl ClusterService {
         ));
         publish_snapshot(&self.shared, &snapshot, true);
         let report = self.shared.meter.lock().unwrap().snapshot();
+        let fault = self.shared.fault.lock().unwrap().take();
         ServiceResult {
             snapshot,
             edges_ingested: self.shared.ingested.load(Ordering::Relaxed),
             cross_edges: cross_total,
             elapsed: report.elapsed,
+            fault,
         }
+    }
+
+    /// Take the first supervised failure recorded so far, if any —
+    /// `None` means the service is healthy. Faults are recorded (not
+    /// panicked) by the muxers, the quiesce wait, and the worker
+    /// joins; once taken, subsequent calls return `None`.
+    pub fn take_fault(&self) -> Option<ServiceError> {
+        if !self.shared.faulted.load(Ordering::SeqCst) {
+            return None;
+        }
+        self.shared.fault.lock().unwrap().take()
     }
 }
 
@@ -1090,7 +1234,7 @@ mod tests {
         let want = funnel.finish().snapshot.labels_padded(g.n());
 
         for readers in [1usize, 2, 4] {
-            let mut scan = DirectScan::open(&path, readers, 64, 3).unwrap();
+            let mut scan = DirectScan::open(&path, readers, 64, 3, None).unwrap();
             let mut svc = ClusterService::start(cfg.clone());
             let ingested = svc.ingest_direct(&mut scan);
             assert_eq!(ingested, g.m() as u64, "readers={readers}");

@@ -44,11 +44,22 @@
 //!   `v_max`, mailbox depth, chunk size, drain cadence,
 //!   [`CommitHorizon`], WAL directory) plus the
 //!   [`batch`](ServiceConfig::batch) preset.
-//! * [`wal`] — the durability layer: per-shard write-ahead logs of
-//!   fixed-width checksummed records plus epoch-aligned checkpoints
+//! * [`wal`] — the durability layer: per-destination write-ahead logs
+//!   of fixed-width checksummed records plus epoch-aligned checkpoints
 //!   written at quiesced cuts, so a crashed service resumes from the
-//!   latest checkpoint and replays only the WAL suffix past it. Off by
-//!   default (`wal_dir: None`) — the in-memory path is untouched.
+//!   latest checkpoint and replays only the WAL suffix past it. The
+//!   durable prefix is **seq-keyed** (`wal::durable_cut` over every
+//!   lane's sorted runs), which lets the direct route write
+//!   per-reader lanes ([`DirectWalCfg`]) instead of forcing the
+//!   funnel; corrupt segments found on resume are quarantined to
+//!   `<name>.corrupt` with their clean prefix recovered, and
+//!   transient WAL I/O gets a bounded retry. Off by default
+//!   (`wal_dir: None`) — the in-memory path is untouched.
+//!
+//! Failures degrade instead of panicking: reader and worker deaths
+//! are recorded as typed [`ServiceError`]s, the remaining feeds drain,
+//! and callers observe the fault via `ClusterService::take_fault` or
+//! `ServiceResult::fault`.
 //!
 //! With the default [`CommitHorizon::Unbounded`], the final partition
 //! after [`ClusterService::finish`] is **bit-identical** to
@@ -90,8 +101,8 @@ pub mod wal;
 
 pub use bufpool::PoolStats;
 pub use config::{CommitHorizon, RouteMode, ServiceConfig};
-pub use ingest::{ClusterService, ServiceResult};
+pub use ingest::{ClusterService, ServiceError, ServiceResult};
 pub use query::{LeaderStats, QueryHandle, ServiceStats};
 pub use router::merge_disjoint_states;
 pub use snapshot::{CommunitySummary, Snapshot};
-pub use wal::{CrashPoint, FailPoint, WalError};
+pub use wal::{CrashPoint, DirectWalCfg, FailPoint, WalError};

@@ -59,11 +59,18 @@ pub struct ServiceStats {
     pub horizon: CommitHorizon,
     /// Edges accepted by the router so far.
     pub edges_ingested: u64,
-    /// Cross-shard edges logged over the service's lifetime.
+    /// Cross-shard edges accepted over the service's lifetime —
+    /// includes the router's still-buffered partial batch, so a stats
+    /// read between batches never undercounts accepted edges.
     pub cross_total: u64,
-    /// Cross edges not yet integrated into the published snapshot
-    /// (awaiting the next incremental drain).
+    /// Cross edges not yet integrated into the published snapshot:
+    /// logged-but-undrained plus the router's buffered partial batch
+    /// (`cross_buffered`).
     pub cross_pending: u64,
+    /// Cross edges accepted by the router but not yet appended to the
+    /// cross log (its local partial batch — what `stats()` before a
+    /// `flush()` used to omit entirely).
+    pub cross_buffered: u64,
     /// Cross edges the drains have integrated so far (the merger's
     /// cursor into the cross log).
     pub cross_drained: u64,
@@ -260,6 +267,11 @@ impl QueryHandle {
             })
             .collect();
         let cross_drained = self.shared.cross_drained.load(Ordering::Relaxed);
+        // fold the router's still-buffered partial batch in: a stats
+        // read between batches must count every accepted cross edge,
+        // not just the flushed ones (the PR 9 footgun)
+        let cross_buffered = self.shared.cross_buffered.load(Ordering::Relaxed);
+        let cross_total = cross_total + cross_buffered;
         ServiceStats {
             shards: self.shared.config.shards,
             leaders: self.shared.config.leaders,
@@ -267,6 +279,7 @@ impl QueryHandle {
             edges_ingested: self.shared.ingested.load(Ordering::Relaxed),
             cross_total,
             cross_pending: cross_total.saturating_sub(cross_drained),
+            cross_buffered,
             cross_drained,
             cross_retained,
             cross_committed,

@@ -29,10 +29,13 @@
 //!
 //! In routing-mode terms (`--route` on the CLI) this is the **funnel**:
 //! one thread sees the global arrival stream, which is exactly what
-//! WAL appends and pacing need. Segmented binary scans can skip it —
+//! pacing needs. Segmented binary scans can skip it —
 //! `stream::pscan::DirectScan` routes in the reader threads and
 //! `ClusterService::ingest_direct` muxes the pre-routed sub-chunks
-//! into the same mailboxes and cross log, in the same order.
+//! into the same mailboxes and cross log, in the same order; with
+//! durability on the readers write per-reader WAL lanes themselves
+//! (`wal::DirectWal`), so the funnel's arrival-stream WAL here is one
+//! of two equivalent producers of the same seq-keyed durable cut.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -41,7 +44,7 @@ use crate::coordinator::state::{StreamState, UNSEEN};
 use crate::graph::edge::Edge;
 use crate::stream::shard::{Route, Sharder};
 
-use super::ingest::Shared;
+use super::ingest::{record_fault, ServiceError, Shared};
 use super::wal::WalSet;
 
 /// Unreported edges accumulated before the throughput meter's mutex is
@@ -186,6 +189,12 @@ impl Router {
             wal.flush();
             self.shared.wal_bytes.store(wal.bytes(), Ordering::Relaxed);
         }
+        // publish the router-local cross batch size so a stats read
+        // between batches sees every accepted cross edge, flushed or
+        // not (the PR 9 footgun: stats before flush() undercounted)
+        self.shared
+            .cross_buffered
+            .store(self.cross_pending.len() as u64, Ordering::Relaxed);
         let k = batch.len() as u64;
         self.shared.ingested.fetch_add(k, Ordering::Relaxed);
         self.unmetered += k;
@@ -213,14 +222,15 @@ impl Router {
         let fresh = self.shared.bufpool.checkout(self.shared.config.chunk_size);
         let batch = std::mem::replace(&mut self.pending[w], fresh);
         let len = batch.len() as u64;
-        // a mailbox only closes mid-run when its worker died; fail fast
-        // rather than silently discarding this shard's edges for the
-        // rest of a long-lived run ("edges are never dropped")
+        // a mailbox only closes mid-run when its worker died; record
+        // the typed fault (first failure wins) instead of panicking —
+        // the `ingested`/`dispatched` gap it leaves blocks every later
+        // checkpoint, and the caller surfaces the fault as an error
         match self.shared.mailboxes[w].send(batch) {
             Ok(()) => {
                 self.shared.dispatched.fetch_add(len, Ordering::SeqCst);
             }
-            Err(_) => panic!("shard worker {w} died; its mailbox is closed mid-stream"),
+            Err(_) => record_fault(&self.shared, ServiceError::Worker { shard: w }),
         }
     }
 
@@ -232,6 +242,7 @@ impl Router {
             return;
         }
         self.shared.crosslog.lock().unwrap().append(&mut self.cross_pending);
+        self.shared.cross_buffered.store(0, Ordering::Relaxed);
     }
 
     /// Report batched edge counts (local and cross) to the throughput

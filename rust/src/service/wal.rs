@@ -20,6 +20,28 @@
 //! records; whole segments below a checkpoint cut are deleted, which
 //! is how the log stays bounded.
 //!
+//! The funnel route appends through a single router-owned writer set
+//! (`shard-{s}` / `cross` prefixes). Direct dispatch has no single
+//! arrival stream, so each reader owns a private lane per destination
+//! — `shard-{s}.r{k}` / `cross.r{k}` for reader `k` — and appends
+//! every routed chunk *before* enqueueing it (flushed per chunk,
+//! fsynced when the reader exits, which is the only checkpoint cut
+//! the direct route reaches). Because `seq` is a global stream
+//! position stamped by the readers themselves, the durable state of
+//! the whole directory reduces to one number no matter how many lanes
+//! exist: [`durable_cut`] — the largest S such that every sequence
+//! number below S is present across all lanes. Recovery truncates
+//! everything at or past the cut and replays the suffix in seq order
+//! through the normal `Sharder` route, so the two write topologies
+//! share one recovery path.
+//!
+//! Failure policy: transient I/O ([`WalError::Io`]) gets a bounded
+//! retry with backoff before the disk is declared dead; corruption
+//! ([`WalError::Corrupt`]) is never retried — a corrupt segment found
+//! on resume is quarantined to `<name>.corrupt` and the checksum-valid
+//! clean prefix is rewritten under the original name, so the durable
+//! cut recovers everything before the damage.
+//!
 //! A checkpoint is a consistent cut of the whole service at stream
 //! position `cut`: per-shard node-state arrays, the merger's fold
 //! view, the cross-log's retained (uncommitted) epochs verbatim, and
@@ -50,6 +72,7 @@ use crate::service::snapshot::{BaseExport, MergerExport};
 pub(crate) const RECORD_BYTES: usize = 24;
 
 const WAL_SUFFIX: &str = ".wal";
+const QUARANTINE_SUFFIX: &str = ".corrupt";
 const CHECKPOINT_FILE: &str = "checkpoint.bin";
 const CHECKPOINT_TMP: &str = "checkpoint.tmp";
 const CKPT_MAGIC: [u8; 4] = *b"SCKP";
@@ -149,6 +172,32 @@ pub enum CrashPoint {
         /// Bytes of the temporary checkpoint file that reach disk.
         keep_bytes: usize,
     },
+    /// Direct-route hook: reader `reader`'s WAL lane writes its first
+    /// `after_records` records intact, tears the next one to
+    /// `torn_bytes` bytes, and the disk dies — every reader's later
+    /// durability writes are dropped while the in-memory stream keeps
+    /// flowing.
+    ReaderWalAppend {
+        /// 0-based reader index whose lane tears.
+        reader: usize,
+        /// Records that reader appends intact before the tear.
+        after_records: u64,
+        /// Bytes of the torn record that reach the lane (capped below
+        /// one full record).
+        torn_bytes: usize,
+    },
+    /// Direct-route hook: the process dies between reader `reader`'s
+    /// WAL flush of its `after_chunks`-th chunk (0-based) and the
+    /// queue push that would hand that chunk to the service — the
+    /// chunk is durable but never ingested, and every later durability
+    /// write is dropped.
+    ReaderEnqueue {
+        /// 0-based reader index that dies.
+        reader: usize,
+        /// Chunks that reader flushes *and* enqueues before the one
+        /// that is flushed but never enqueued.
+        after_chunks: u64,
+    },
 }
 
 /// Shared crash-injection hook carried in the service configuration.
@@ -169,14 +218,18 @@ pub struct FailPoint {
 struct FailInner {
     plan: Mutex<Option<CrashPoint>>,
     dead: AtomicBool,
+    armed: AtomicBool,
     wal_records: AtomicU64,
     checkpoints: AtomicU64,
+    reader_records: Mutex<Vec<u64>>,
+    reader_chunks: Mutex<Vec<u64>>,
 }
 
 impl FailPoint {
     /// Arm the hook with a crash plan, replacing any previous plan.
     pub fn arm(&self, plan: CrashPoint) {
         *self.inner.plan.lock().unwrap() = Some(plan);
+        self.inner.armed.store(true, Ordering::SeqCst);
     }
 
     /// True once the simulated disk has died.
@@ -213,6 +266,101 @@ impl FailPoint {
             _ => None,
         }
     }
+
+    /// Called once per live record a direct-route reader appends;
+    /// returns `Some(torn_bytes)` when this append is the one a
+    /// [`CrashPoint::ReaderWalAppend`] plan tears.
+    fn reader_tear(&self, reader: usize) -> Option<usize> {
+        if !self.inner.armed.load(Ordering::SeqCst) {
+            return None;
+        }
+        let plan = self.inner.plan.lock().unwrap();
+        match *plan {
+            Some(CrashPoint::ReaderWalAppend { reader: r, after_records, torn_bytes })
+                if r == reader =>
+            {
+                let mut counts = self.inner.reader_records.lock().unwrap();
+                if counts.len() <= reader {
+                    counts.resize(reader + 1, 0);
+                }
+                let n = counts[reader];
+                counts[reader] += 1;
+                (n == after_records).then_some(torn_bytes)
+            }
+            _ => None,
+        }
+    }
+
+    /// Called once per chunk a direct-route reader flushes; `true`
+    /// means a [`CrashPoint::ReaderEnqueue`] plan fires here — the
+    /// chunk is on disk but must never reach the queue.
+    fn reader_drop_chunk(&self, reader: usize) -> bool {
+        if !self.inner.armed.load(Ordering::SeqCst) {
+            return false;
+        }
+        let plan = self.inner.plan.lock().unwrap();
+        match *plan {
+            Some(CrashPoint::ReaderEnqueue { reader: r, after_chunks }) if r == reader => {
+                let mut counts = self.inner.reader_chunks.lock().unwrap();
+                if counts.len() <= reader {
+                    counts.resize(reader + 1, 0);
+                }
+                let n = counts[reader];
+                counts[reader] += 1;
+                n == after_chunks
+            }
+            _ => false,
+        }
+    }
+}
+
+/// Attempts for a transient-I/O retry before the disk is declared
+/// dead; delays back off 1 ms → 5 ms between attempts.
+const IO_RETRIES: u32 = 3;
+
+/// Run `op`, retrying transient I/O failures a bounded number of
+/// times with backoff. Only `std::io::Error` is retried — corruption
+/// never routes through here.
+fn with_io_retry<T>(mut op: impl FnMut() -> std::io::Result<T>) -> std::io::Result<T> {
+    let mut delay = std::time::Duration::from_millis(1);
+    let mut last: Option<std::io::Error> = None;
+    for attempt in 0..IO_RETRIES {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                last = Some(e);
+                if attempt + 1 < IO_RETRIES {
+                    std::thread::sleep(delay);
+                    delay *= 5;
+                }
+            }
+        }
+    }
+    Err(last.expect("retry loop ran at least once"))
+}
+
+/// Run `op`, retrying only [`WalError::Io`] with the same bounded
+/// backoff as [`with_io_retry`]; `Corrupt` and `Mismatch` stay
+/// fail-fast on the first occurrence.
+pub(crate) fn retry_wal<T>(
+    mut op: impl FnMut() -> Result<T, WalError>,
+) -> Result<T, WalError> {
+    let mut delay = std::time::Duration::from_millis(1);
+    let mut last: Option<WalError> = None;
+    for attempt in 0..IO_RETRIES {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(WalError::Io(e)) => {
+                last = Some(WalError::Io(e));
+                if attempt + 1 < IO_RETRIES {
+                    std::thread::sleep(delay);
+                    delay *= 5;
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Err(last.expect("retry loop ran at least once"))
 }
 
 /// Buffered appender for one file set (`{prefix}.{first_seq:020}.wal`
@@ -384,12 +532,21 @@ impl WalSet {
         }
     }
 
-    /// Push buffered records to the files (no fsync).
+    /// Push buffered records to the files (no fsync). Transient I/O
+    /// failures get the bounded retry before the disk is declared
+    /// dead.
     pub(crate) fn flush(&mut self) {
         if self.failpoint.is_dead() {
             return;
         }
-        if let Err(e) = self.flush_inner() {
+        let locals = &mut self.locals;
+        let cross = &mut self.cross;
+        if let Err(e) = with_io_retry(|| {
+            for w in locals.iter_mut() {
+                w.flush()?;
+            }
+            cross.flush()
+        }) {
             self.report(e);
         }
     }
@@ -400,13 +557,14 @@ impl WalSet {
         if self.failpoint.is_dead() {
             return;
         }
-        let res = (|| -> std::io::Result<()> {
-            for w in &mut self.locals {
+        let locals = &mut self.locals;
+        let cross = &mut self.cross;
+        if let Err(e) = with_io_retry(|| {
+            for w in locals.iter_mut() {
                 w.sync()?;
             }
-            self.cross.sync()
-        })();
-        if let Err(e) = res {
+            cross.sync()
+        }) {
             self.report(e);
         }
     }
@@ -429,15 +587,179 @@ impl WalSet {
     }
 }
 
+/// Configuration for the direct-route reader lanes, handed to
+/// `DirectScan` so each reader thread can open its own [`DirectWal`].
+#[derive(Clone)]
+pub struct DirectWalCfg {
+    /// WAL directory (already prepared by the service).
+    pub dir: PathBuf,
+    /// Segment rotation threshold, in records.
+    pub segment_records: u64,
+    /// Shard count — one local lane per shard plus a cross lane.
+    pub shards: usize,
+    /// Shared crash-injection hook (the service's own).
+    pub failpoint: FailPoint,
+    /// Shared byte counter all readers add to, polled into
+    /// `ServiceStats::wal_bytes` by the ingest loop.
+    pub bytes: Arc<AtomicU64>,
+}
+
+/// Per-reader writer set for direct dispatch: one lane per routing
+/// destination, prefixed `shard-{s}.r{k}` / `cross.r{k}` so every
+/// file keeps the strictly-ascending per-file seq discipline the
+/// scanner enforces. Records are appended before the owning chunk is
+/// enqueued; [`DirectWal::flush_chunk`] lands the chunk and reports
+/// whether the enqueue may proceed (the `ReaderEnqueue` crash point
+/// fires between the two).
+pub(crate) struct DirectWal {
+    locals: Vec<WalWriter>,
+    cross: WalWriter,
+    reader: usize,
+    failpoint: FailPoint,
+    bytes: Arc<AtomicU64>,
+    reported: bool,
+}
+
+impl DirectWal {
+    /// Open reader `reader`'s lanes under the configured directory.
+    pub(crate) fn open(cfg: &DirectWalCfg, reader: usize) -> std::io::Result<Self> {
+        let segment_records = cfg.segment_records.max(1);
+        let locals = (0..cfg.shards)
+            .map(|s| WalWriter::open(&cfg.dir, format!("shard-{s}.r{reader}"), segment_records))
+            .collect::<std::io::Result<Vec<_>>>()?;
+        let cross = WalWriter::open(&cfg.dir, format!("cross.r{reader}"), segment_records)?;
+        Ok(DirectWal {
+            locals,
+            cross,
+            reader,
+            failpoint: cfg.failpoint.clone(),
+            bytes: Arc::clone(&cfg.bytes),
+            reported: false,
+        })
+    }
+
+    fn writer(&mut self, dest: Option<usize>) -> &mut WalWriter {
+        match dest {
+            Some(s) => &mut self.locals[s],
+            None => &mut self.cross,
+        }
+    }
+
+    /// Append one routed edge to its destination lane (`Some(shard)`
+    /// local, `None` cross). Buffered until the chunk flush; a dead
+    /// disk drops the write while the in-memory stream keeps flowing.
+    pub(crate) fn append(&mut self, dest: Option<usize>, seq: u64, e: Edge) {
+        if self.failpoint.is_dead() {
+            return;
+        }
+        if let Some(torn) = self.failpoint.reader_tear(self.reader) {
+            let res = {
+                let w = self.writer(dest);
+                w.append_torn(seq, e, torn)
+            };
+            match res {
+                Ok(kept) => {
+                    self.bytes.fetch_add(kept, Ordering::Relaxed);
+                }
+                Err(e) => self.report(e),
+            }
+            // land everything this reader buffered, torn fragment
+            // included, so the tear is really visible on disk
+            if let Err(e) = self.flush_all() {
+                self.report(e);
+            }
+            self.failpoint.kill();
+            return;
+        }
+        let res = {
+            let w = self.writer(dest);
+            with_io_retry(|| w.append(seq, e))
+        };
+        match res {
+            Ok(()) => {
+                self.bytes.fetch_add(RECORD_BYTES as u64, Ordering::Relaxed);
+            }
+            Err(e) => self.report(e),
+        }
+    }
+
+    /// Flush the destination lane after its chunk filled. Returns
+    /// `false` when the armed `ReaderEnqueue` crash point fires here:
+    /// the chunk is durable but must never reach the queue, and the
+    /// reader must stop as if the process died.
+    #[must_use]
+    pub(crate) fn flush_chunk(&mut self, dest: Option<usize>) -> bool {
+        if self.failpoint.is_dead() {
+            return true;
+        }
+        let res = {
+            let w = self.writer(dest);
+            with_io_retry(|| w.flush())
+        };
+        if let Err(e) = res {
+            self.report(e);
+            return true;
+        }
+        if self.failpoint.reader_drop_chunk(self.reader) {
+            self.failpoint.kill();
+            return false;
+        }
+        true
+    }
+
+    /// Flush and fsync every lane — called when the reader exits,
+    /// which is the checkpoint cut the direct route rides.
+    pub(crate) fn sync(&mut self) {
+        if self.failpoint.is_dead() {
+            return;
+        }
+        let locals = &mut self.locals;
+        let cross = &mut self.cross;
+        if let Err(e) = with_io_retry(|| {
+            for w in locals.iter_mut() {
+                w.sync()?;
+            }
+            cross.sync()
+        }) {
+            self.report(e);
+        }
+    }
+
+    fn flush_all(&mut self) -> std::io::Result<()> {
+        for w in &mut self.locals {
+            w.flush()?;
+        }
+        self.cross.flush()
+    }
+
+    /// A persistent I/O error (after the bounded retry) is the disk
+    /// dying: report once, stop writing, keep streaming from memory.
+    fn report(&mut self, e: std::io::Error) {
+        if !self.reported {
+            eprintln!(
+                "wal: reader {}: disabling durability after io error: {e}",
+                self.reader
+            );
+            self.reported = true;
+        }
+        self.failpoint.kill();
+    }
+}
+
 /// Prepare `dir` for a fresh stream: create it and remove previous
-/// WAL segments and checkpoints (only files matching our own naming).
+/// WAL segments, quarantined segments, and checkpoints (only files
+/// matching our own naming).
 pub(crate) fn init_fresh(dir: &Path) -> std::io::Result<()> {
     fs::create_dir_all(dir)?;
     for entry in fs::read_dir(dir)? {
         let entry = entry?;
         let name = entry.file_name();
         let name = name.to_string_lossy();
-        if name.ends_with(WAL_SUFFIX) || name == CHECKPOINT_FILE || name == CHECKPOINT_TMP {
+        if name.ends_with(WAL_SUFFIX)
+            || name.ends_with(QUARANTINE_SUFFIX)
+            || name == CHECKPOINT_FILE
+            || name == CHECKPOINT_TMP
+        {
             fs::remove_file(entry.path())?;
         }
     }
@@ -491,6 +813,48 @@ pub(crate) fn scan_dir(dir: &Path) -> Result<Vec<ScannedFile>, WalError> {
     paths.iter().map(|p| scan_file(p)).collect()
 }
 
+/// Quarantine every corrupt segment under `dir`: the offending file
+/// is renamed to `<name>.corrupt` (preserved intact for forensics)
+/// and its clean prefix — the checksum-valid whole records before the
+/// corruption — is rewritten under the original name, so a following
+/// [`scan_dir`] sees only valid data and the durable cut recovers
+/// everything before the damage. Returns the quarantined paths.
+pub(crate) fn quarantine_corrupt(dir: &Path) -> Result<Vec<PathBuf>, WalError> {
+    let mut quarantined = Vec::new();
+    if !dir.is_dir() {
+        return Ok(quarantined);
+    }
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for entry in fs::read_dir(dir).map_err(WalError::Io)? {
+        let entry = entry.map_err(WalError::Io)?;
+        if parse_segment(&entry.file_name().to_string_lossy()).is_some() {
+            paths.push(entry.path());
+        }
+    }
+    paths.sort();
+    for path in paths {
+        match scan_file(&path) {
+            Ok(_) => {}
+            Err(WalError::Corrupt { offset, .. }) => {
+                // `offset` is the start of the first invalid record,
+                // so bytes below it are whole, checksum-valid records
+                let keep = (offset as usize / RECORD_BYTES) * RECORD_BYTES;
+                let data = fs::read(&path).map_err(WalError::Io)?;
+                let mut quarantine = path.clone().into_os_string();
+                quarantine.push(QUARANTINE_SUFFIX);
+                let quarantine = PathBuf::from(quarantine);
+                fs::rename(&path, &quarantine).map_err(WalError::Io)?;
+                if keep > 0 {
+                    fs::write(&path, &data[..keep]).map_err(WalError::Io)?;
+                }
+                quarantined.push(quarantine);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(quarantined)
+}
+
 fn scan_file(path: &Path) -> Result<ScannedFile, WalError> {
     let data = fs::read(path).map_err(WalError::Io)?;
     let mut records = Vec::with_capacity(data.len() / RECORD_BYTES);
@@ -511,11 +875,16 @@ fn scan_file(path: &Path) -> Result<ScannedFile, WalError> {
     Ok(ScannedFile { path: path.to_path_buf(), records, valid_bytes: off as u64 })
 }
 
-/// Longest durable prefix of the stream: the first sequence number at
-/// or past `cut` that is missing from the scanned records. Everything
-/// below it was logged contiguously; records at or past it (written
-/// after a gap a dying disk left) are unusable.
-pub(crate) fn durable_prefix(files: &[ScannedFile], cut: u64) -> u64 {
+/// The durable seq cut of a scanned WAL directory: the largest S such
+/// that every sequence number in `[cut, S)` is present somewhere
+/// across the scanned files — equivalently, the first sequence number
+/// at or past `cut` missing from the union of all lanes. Computed
+/// from the per-file sorted-run structure both write topologies
+/// produce (the funnel's per-destination sets, direct dispatch's
+/// per-reader-per-destination lanes). Everything below S was logged
+/// contiguously; records at or past S (written after a gap a dying
+/// disk left) are unusable.
+pub(crate) fn durable_cut(files: &[ScannedFile], cut: u64) -> u64 {
     let mut seqs: Vec<u64> = files
         .iter()
         .flat_map(|f| f.records.iter().map(|r| r.seq))
@@ -964,7 +1333,7 @@ mod tests {
             assert_eq!(r.seq, i as u64);
             assert_eq!((r.edge.u, r.edge.v), (i as u32, i as u32 + 1));
         }
-        assert_eq!(durable_prefix(&files, 0), 10);
+        assert_eq!(durable_cut(&files, 0), 10);
         let _ = fs::remove_dir_all(&dir);
     }
 
@@ -1018,13 +1387,13 @@ mod tests {
         assert_eq!(wal.bytes(), 5 * RECORD_BYTES as u64 + 7);
 
         let files = scan_dir(&dir).unwrap();
-        assert_eq!(durable_prefix(&files, 0), 5);
+        assert_eq!(durable_cut(&files, 0), 5);
         assert_eq!(suffix(&files, 0, 5).len(), 5);
         let _ = fs::remove_dir_all(&dir);
     }
 
     #[test]
-    fn durable_prefix_stops_at_the_first_gap() {
+    fn durable_cut_stops_at_the_first_gap() {
         let files = vec![ScannedFile {
             path: PathBuf::from("x"),
             records: [0u64, 1, 2, 4, 5]
@@ -1033,8 +1402,8 @@ mod tests {
                 .collect(),
             valid_bytes: 0,
         }];
-        assert_eq!(durable_prefix(&files, 0), 3);
-        assert_eq!(durable_prefix(&files, 4), 6);
+        assert_eq!(durable_cut(&files, 0), 3);
+        assert_eq!(durable_cut(&files, 4), 6);
         assert_eq!(suffix(&files, 0, 3).len(), 3);
     }
 
@@ -1072,7 +1441,7 @@ mod tests {
         // cutoff's successor, so it must be kept)
         assert!(recs.iter().all(|r| r.seq >= 4));
         assert_eq!(recs.len(), 5);
-        assert_eq!(durable_prefix(&files, 5), 9);
+        assert_eq!(durable_cut(&files, 5), 9);
         let _ = fs::remove_dir_all(&dir);
     }
 
@@ -1160,6 +1529,134 @@ mod tests {
         // the torn tmp is ignored and the previous checkpoint survives
         let back = read_checkpoint(&dir).unwrap().expect("previous checkpoint");
         assert_eq!(back.cut, 40);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    fn direct_cfg(dir: &Path, shards: usize, fp: FailPoint) -> DirectWalCfg {
+        DirectWalCfg {
+            dir: dir.to_path_buf(),
+            segment_records: 4,
+            shards,
+            failpoint: fp,
+            bytes: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    #[test]
+    fn direct_lanes_interleave_into_one_durable_cut() {
+        // two readers striping the seq space across two shards plus
+        // the cross lane: the per-file runs stay sorted, the union is
+        // contiguous, and the cut sees through the lane structure
+        let dir = scratch("direct-lanes");
+        let cfg = direct_cfg(&dir, 2, FailPoint::default());
+        let mut r0 = DirectWal::open(&cfg, 0).unwrap();
+        let mut r1 = DirectWal::open(&cfg, 1).unwrap();
+        for seq in 0..20u64 {
+            let w = if seq % 2 == 0 { &mut r0 } else { &mut r1 };
+            let dest = match seq % 3 {
+                0 => Some(0),
+                1 => Some(1),
+                _ => None,
+            };
+            w.append(dest, seq, edge(seq as u32, seq as u32 + 1));
+        }
+        r0.sync();
+        r1.sync();
+        assert_eq!(cfg.bytes.load(Ordering::Relaxed), 20 * RECORD_BYTES as u64);
+
+        let files = scan_dir(&dir).unwrap();
+        assert_eq!(durable_cut(&files, 0), 20);
+        let recs = suffix(&files, 0, u64::MAX);
+        assert_eq!(recs.len(), 20);
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(r.seq, i as u64);
+            assert_eq!((r.edge.u, r.edge.v), (i as u32, i as u32 + 1));
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reader_tear_fires_on_the_planned_lane_then_goes_dark() {
+        let dir = scratch("reader-tear");
+        let fp = FailPoint::default();
+        fp.arm(CrashPoint::ReaderWalAppend { reader: 1, after_records: 3, torn_bytes: 9 });
+        let cfg = direct_cfg(&dir, 1, fp.clone());
+        let mut r0 = DirectWal::open(&cfg, 0).unwrap();
+        let mut r1 = DirectWal::open(&cfg, 1).unwrap();
+        // reader 0 logs even seqs, reader 1 odd seqs, chunk size 1 so
+        // every record is flushed as it lands; reader 1's 4th record
+        // (seq 7) tears, killing the disk for both readers
+        for seq in 0..12u64 {
+            let w = if seq % 2 == 0 { &mut r0 } else { &mut r1 };
+            w.append(Some(0), seq, edge(seq as u32, seq as u32 + 1));
+            let _ = w.flush_chunk(Some(0));
+        }
+        assert!(fp.is_dead());
+        r0.sync();
+        r1.sync();
+        assert_eq!(cfg.bytes.load(Ordering::Relaxed), 7 * RECORD_BYTES as u64 + 9);
+
+        // seqs 0..=6 survive; the torn fragment of 7 is dropped
+        // cleanly and everything after the death never reached disk
+        let files = scan_dir(&dir).unwrap();
+        assert_eq!(durable_cut(&files, 0), 7);
+        assert_eq!(suffix(&files, 0, u64::MAX).len(), 7);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reader_enqueue_crash_is_durable_but_stops_the_reader() {
+        let dir = scratch("reader-enqueue");
+        let fp = FailPoint::default();
+        fp.arm(CrashPoint::ReaderEnqueue { reader: 0, after_chunks: 2 });
+        let cfg = direct_cfg(&dir, 1, fp.clone());
+        let mut r0 = DirectWal::open(&cfg, 0).unwrap();
+        let mut allowed = Vec::new();
+        for chunk in 0..4u64 {
+            for i in 0..3u64 {
+                let seq = chunk * 3 + i;
+                r0.append(Some(0), seq, edge(seq as u32, seq as u32 + 1));
+            }
+            allowed.push(r0.flush_chunk(Some(0)));
+        }
+        // chunk 2 is flushed but must not be enqueued; chunk 3's
+        // appends hit the dead disk, so its flush is a visible no-op
+        assert_eq!(allowed, vec![true, true, false, true]);
+        assert!(fp.is_dead());
+
+        // the dropped chunk itself is durable: replay covers it
+        let files = scan_dir(&dir).unwrap();
+        assert_eq!(durable_cut(&files, 0), 9);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn quarantine_recovers_the_clean_prefix_of_a_corrupt_segment() {
+        let dir = scratch("quarantine");
+        let mut wal = WalSet::open(&dir, 1, 1024, FailPoint::default(), 0).unwrap();
+        for i in 0..8u32 {
+            wal.append(Some(0), edge(i, i + 1));
+        }
+        wal.sync();
+        let files = scan_dir(&dir).unwrap();
+        let path = files[0].path.clone();
+        let mut raw = fs::read(&path).unwrap();
+        raw[5 * RECORD_BYTES + 3] ^= 0x10; // corrupt record 5 in place
+        fs::write(&path, &raw).unwrap();
+        assert!(matches!(scan_dir(&dir), Err(WalError::Corrupt { .. })));
+
+        let quarantined = quarantine_corrupt(&dir).unwrap();
+        assert_eq!(quarantined.len(), 1);
+        assert!(quarantined[0].to_string_lossy().ends_with(QUARANTINE_SUFFIX));
+        // the damaged bytes are preserved verbatim in quarantine...
+        assert_eq!(fs::read(&quarantined[0]).unwrap(), raw);
+        // ...while the clean prefix is recovered under the original
+        // name and the scan goes back to typed-clean
+        let files = scan_dir(&dir).unwrap();
+        assert_eq!(durable_cut(&files, 0), 5);
+        assert_eq!(suffix(&files, 0, u64::MAX).len(), 5);
+        // idempotent: a second pass finds nothing left to quarantine
+        assert!(quarantine_corrupt(&dir).unwrap().is_empty());
         let _ = fs::remove_dir_all(&dir);
     }
 }

@@ -41,13 +41,24 @@
 //! reader count. `service::ClusterService::ingest_direct` consumes the
 //! feeds with one muxer thread per shard plus a cross consumer.
 //!
+//! Direct mode composes with durability: when a `DirectWalCfg` is
+//! passed at open, each reader owns a private WAL lane per destination
+//! (`shard-{s}.r{k}` / `cross.r{k}`) and appends every routed chunk —
+//! with its per-edge global seq tags — *before* enqueueing it, flushed
+//! per chunk and fsynced at reader exit. Because seqs are globally
+//! unique and per-lane ascending, recovery reduces the lane union to
+//! one durable seq cut (`service::wal::durable_cut`) and replays the
+//! suffix through the same `Sharder` route, bit-identical in the
+//! exactness domains.
+//!
 //! # Route/fallback matrix (resolved by the CLI's `--route`)
 //!
 //! | input / flags                            | mode                  |
 //! |------------------------------------------|-----------------------|
-//! | binary or mmap scan, no WAL, no pacing   | direct (auto default) |
+//! | binary or mmap scan, no pacing           | direct (auto default) |
+//! | binary or mmap scan + `--wal-dir`        | direct — readers append their routed chunks to per-reader WAL lanes before enqueueing |
 //! | text input                               | funnel (no fixed record geometry ⇒ no coordination-free seq) |
-//! | `--wal-dir` (or `--pace`)                | funnel (WAL append + pacing need the single global arrival stream) |
+//! | `--pace`, or `--resume`'s positional slicing | funnel (both need the single global arrival stream) |
 //! | `--route funnel`                         | funnel (explicit)     |
 //!
 //! Memory is bounded by construction in both modes: each queue holds
@@ -90,6 +101,7 @@ use super::source::{emit_lenient, EdgeSource};
 use crate::graph::binfmt;
 use crate::graph::edge::Edge;
 use crate::graph::io::frame_lines;
+use crate::service::wal::{DirectWal, DirectWalCfg};
 use crate::util::channel::{Channel, SendError};
 use crate::util::mmap::{self, Advice, Mmap};
 
@@ -630,30 +642,72 @@ pub struct SeqChunk {
 /// Per-destination pending buffers for one direct reader: edges are
 /// routed as they decode and flushed as [`SeqChunk`]s when a
 /// destination fills `batch`. Destination `shards` is the cross lane.
+///
+/// With durability on (`wal` present), every routed edge is appended
+/// to its destination's per-reader WAL lane as it is buffered, and the
+/// lane is flushed immediately before the chunk's queue push — the
+/// WAL-before-enqueue ordering the durable cut depends on. The
+/// `ReaderEnqueue` crash point fires between the two.
 struct RouteBuffers<'a> {
     sharder: Sharder,
     batch: usize,
     pending: Vec<SeqChunk>,
     txs: &'a [Channel<SeqChunk>],
+    wal: Option<DirectWal>,
+    /// Set when a crash point stopped this reader mid-stream: pending
+    /// buffers must die with it, exactly as a killed process's would.
+    stopped: bool,
 }
 
 impl<'a> RouteBuffers<'a> {
-    fn new(sharder: Sharder, batch: usize, txs: &'a [Channel<SeqChunk>]) -> Self {
+    fn new(
+        sharder: Sharder,
+        batch: usize,
+        txs: &'a [Channel<SeqChunk>],
+        wal: Option<DirectWal>,
+    ) -> Self {
         debug_assert_eq!(txs.len(), sharder.shards() + 1);
         let pending = txs
             .iter()
             .map(|_| SeqChunk { first_seq: 0, last_seq: 0, edges: Vec::with_capacity(batch) })
             .collect();
-        Self { sharder, batch, pending, txs }
+        Self { sharder, batch, pending, txs, wal, stopped: false }
     }
 
-    /// Route one edge; a `SendError` means the consumer hung up
-    /// (scanner aborted/dropped) and the reader should stop quietly.
+    /// Routing destination → WAL lane (`None` is the cross lane).
+    fn lane(&self, d: usize) -> Option<usize> {
+        if d == self.sharder.shards() {
+            None
+        } else {
+            Some(d)
+        }
+    }
+
+    /// Land `full` in its WAL lane, then enqueue it. A `SendError`
+    /// means the reader must stop: either the consumer hung up
+    /// (scanner aborted/dropped — benign) or the armed crash point
+    /// killed the reader between its WAL flush and the queue push.
+    fn ship(&mut self, d: usize, full: SeqChunk) -> Result<(), SendError> {
+        if let Some(w) = self.wal.as_mut() {
+            if !w.flush_chunk(self.lane(d)) {
+                self.stopped = true;
+                return Err(SendError);
+            }
+        }
+        self.txs[d].send(full)
+    }
+
+    /// Route one edge; a `SendError` means the reader should stop
+    /// quietly (see [`ship`](Self::ship)).
     fn push(&mut self, seq: u64, e: Edge) -> Result<(), SendError> {
         let d = match self.sharder.route(e) {
             Route::Local(w) => w,
             Route::Cross => self.sharder.shards(),
         };
+        if let Some(w) = self.wal.as_mut() {
+            let lane = if d == self.sharder.shards() { None } else { Some(d) };
+            w.append(lane, seq, e);
+        }
         let p = &mut self.pending[d];
         if p.edges.is_empty() {
             p.first_seq = seq;
@@ -665,21 +719,29 @@ impl<'a> RouteBuffers<'a> {
                 p,
                 SeqChunk { first_seq: 0, last_seq: 0, edges: Vec::with_capacity(self.batch) },
             );
-            self.txs[d].send(full)?;
+            self.ship(d, full)?;
         }
         Ok(())
     }
 
-    /// Ship every non-empty pending buffer (end of the reader's range).
+    /// Ship every non-empty pending buffer (end of the reader's
+    /// range), then fsync the reader's WAL lanes — the reader-exit
+    /// sync that makes the end-of-stream checkpoint cut durable.
     fn flush(&mut self) -> Result<(), SendError> {
-        for (d, p) in self.pending.iter_mut().enumerate() {
-            if !p.edges.is_empty() {
+        if self.stopped {
+            return Ok(());
+        }
+        for d in 0..self.pending.len() {
+            if !self.pending[d].edges.is_empty() {
                 let full = std::mem::replace(
-                    p,
+                    &mut self.pending[d],
                     SeqChunk { first_seq: 0, last_seq: 0, edges: Vec::new() },
                 );
-                self.txs[d].send(full)?;
+                self.ship(d, full)?;
             }
+        }
+        if let Some(w) = self.wal.as_mut() {
+            w.sync();
         }
         Ok(())
     }
@@ -696,6 +758,7 @@ fn run_direct_binary_reader(
     sharder: Sharder,
     txs: &[Channel<SeqChunk>],
     stats: &ScanStats,
+    wal: Option<DirectWal>,
 ) -> io::Result<()> {
     let mut f = File::open(path)?;
     let off = header.seg_offset(segs.0).expect("validated header");
@@ -703,7 +766,7 @@ fn run_direct_binary_reader(
     let mut reader = BufReader::with_capacity(1 << 20, f);
     let mut block = Vec::new();
     let mut edges: Vec<Edge> = Vec::new();
-    let mut bufs = RouteBuffers::new(sharder, batch, txs);
+    let mut bufs = RouteBuffers::new(sharder, batch, txs, wal);
     for seg in segs.0..segs.1 {
         let records = header.records_in(seg);
         block.resize((binfmt::SEG_OVERHEAD_BYTES + records * binfmt::RECORD_BYTES) as usize, 0);
@@ -734,9 +797,10 @@ fn run_direct_mmap_reader(
     sharder: Sharder,
     txs: &[Channel<SeqChunk>],
     stats: &ScanStats,
+    wal: Option<DirectWal>,
 ) -> io::Result<()> {
     let bytes = map.as_slice();
-    let mut bufs = RouteBuffers::new(sharder, batch, txs);
+    let mut bufs = RouteBuffers::new(sharder, batch, txs, wal);
     for seg in segs.0..segs.1 {
         let records = header.records_in(seg);
         let off = header.seg_offset(seg).expect("validated header") as usize;
@@ -774,18 +838,25 @@ pub struct DirectScan {
     /// the one shared mapping in mmap mode (`None` buffered);
     /// unmap-after-join as in [`ParallelScanner`].
     map: Option<Arc<Mmap>>,
+    /// shared WAL byte counter when the scan writes durable lanes
+    /// (`None` with durability off) — see [`Self::wal_bytes`].
+    wal_bytes: Option<Arc<AtomicU64>>,
 }
 
 impl DirectScan {
     /// Open `path` (segmented binary) with buffered per-range file
     /// handles, routing into `shards` local lanes + one cross lane.
     /// The header is decoded and length-validated here, so a corrupt
-    /// or hostile header fails the open, not a reader thread.
+    /// or hostile header fails the open, not a reader thread. With
+    /// `wal` set, each reader appends its routed chunks to per-reader
+    /// durable lanes before enqueueing them (module docs §direct
+    /// mode).
     pub fn open<P: AsRef<Path>>(
         path: P,
         readers: usize,
         batch: usize,
         shards: usize,
+        wal: Option<DirectWalCfg>,
     ) -> io::Result<Self> {
         let path: PathBuf = path.as_ref().to_path_buf();
         let batch = batch.max(1);
@@ -798,6 +869,7 @@ impl DirectScan {
         let header = binfmt::SegHeader::decode(&head)?;
         header.validate_file_len(file_len)?;
         let mut scan = Self::shell(sharder.shards(), usize::try_from(header.m).ok(), None);
+        scan.wal_bytes = wal.as_ref().map(|c| Arc::clone(&c.bytes));
         let ranges = plan_segment_ranges(header.seg_count, readers.max(1));
         let n = ranges.len();
         for (i, (s0, s1)) in ranges.into_iter().enumerate() {
@@ -805,10 +877,15 @@ impl DirectScan {
             let p = path.clone();
             let st = Arc::clone(&scan.stats);
             let err = Arc::clone(&scan.error);
+            let cfg = wal.clone();
             scan.threads.push(thread::spawn(move || {
-                if let Err(e) =
-                    run_direct_binary_reader(&p, header, (s0, s1), batch, sharder, &txs, &st)
-                {
+                let res = match cfg.as_ref().map(|c| DirectWal::open(c, i)).transpose() {
+                    Ok(w) => {
+                        run_direct_binary_reader(&p, header, (s0, s1), batch, sharder, &txs, &st, w)
+                    }
+                    Err(e) => Err(e),
+                };
+                if let Err(e) = res {
                     let (b0, b1) = seg_byte_span(&header, s0, s1);
                     let mut slot = err.lock().unwrap();
                     if slot.is_none() {
@@ -833,8 +910,9 @@ impl DirectScan {
         readers: usize,
         batch: usize,
         shards: usize,
+        wal: Option<DirectWalCfg>,
     ) -> io::Result<Self> {
-        Self::open_mmap_advised(path, readers, batch, shards, Advice::Sequential)
+        Self::open_mmap_advised(path, readers, batch, shards, wal, Advice::Sequential)
     }
 
     /// [`open_mmap`](Self::open_mmap) with an explicit page-cache
@@ -844,10 +922,11 @@ impl DirectScan {
         readers: usize,
         batch: usize,
         shards: usize,
+        wal: Option<DirectWalCfg>,
         advice: Advice,
     ) -> io::Result<Self> {
         if !mmap::supported() {
-            return Self::open(path, readers, batch, shards);
+            return Self::open(path, readers, batch, shards, wal);
         }
         let batch = batch.max(1);
         let sharder = Sharder::new(shards.max(1));
@@ -860,6 +939,7 @@ impl DirectScan {
             usize::try_from(header.m).ok(),
             Some(Arc::clone(&map)),
         );
+        scan.wal_bytes = wal.as_ref().map(|c| Arc::clone(&c.bytes));
         let ranges = plan_segment_ranges(header.seg_count, readers.max(1));
         let n = ranges.len();
         for (i, (s0, s1)) in ranges.into_iter().enumerate() {
@@ -867,10 +947,15 @@ impl DirectScan {
             let m = Arc::clone(&map);
             let st = Arc::clone(&scan.stats);
             let err = Arc::clone(&scan.error);
+            let cfg = wal.clone();
             scan.threads.push(thread::spawn(move || {
-                if let Err(e) =
-                    run_direct_mmap_reader(&m, header, (s0, s1), batch, sharder, &txs, &st)
-                {
+                let res = match cfg.as_ref().map(|c| DirectWal::open(c, i)).transpose() {
+                    Ok(w) => {
+                        run_direct_mmap_reader(&m, header, (s0, s1), batch, sharder, &txs, &st, w)
+                    }
+                    Err(e) => Err(e),
+                };
+                if let Err(e) = res {
                     let (b0, b1) = seg_byte_span(&header, s0, s1);
                     let mut slot = err.lock().unwrap();
                     if slot.is_none() {
@@ -898,6 +983,7 @@ impl DirectScan {
             len_hint,
             feeds_taken: false,
             map,
+            wal_bytes: None,
         }
     }
 
@@ -962,6 +1048,13 @@ impl DirectScan {
     /// Edge count from the header, when it fits a `usize`.
     pub fn len_hint(&self) -> Option<usize> {
         self.len_hint
+    }
+
+    /// Total bytes the readers have appended to their WAL lanes so
+    /// far (live — the counter shared through [`DirectWalCfg`]), or
+    /// `None` when the scan was opened without durability.
+    pub fn wal_bytes(&self) -> Option<u64> {
+        self.wal_bytes.as_ref().map(|b| b.load(Ordering::Relaxed))
     }
 
     /// First reader failure, if any — same contract and uniform
@@ -1323,9 +1416,9 @@ mod tests {
         for mmapped in [false, true] {
             for readers in [1usize, 2, 3, 200] {
                 let mut sc = if mmapped {
-                    DirectScan::open_mmap(&p, readers, 97, shards).unwrap()
+                    DirectScan::open_mmap(&p, readers, 97, shards, None).unwrap()
                 } else {
-                    DirectScan::open(&p, readers, 97, shards).unwrap()
+                    DirectScan::open(&p, readers, 97, shards, None).unwrap()
                 };
                 assert_eq!(sc.len_hint(), Some(5000));
                 assert_eq!(sc.shards(), shards);
@@ -1357,7 +1450,7 @@ mod tests {
         let seg2 = binfmt::HEADER_BYTES + 2 * (16 + 16 * 8);
         bytes[seg2 + 8 + 3] ^= 0x10;
         std::fs::write(&p, &bytes).unwrap();
-        let mut sc = DirectScan::open(&p, 2, 32, 2).unwrap();
+        let mut sc = DirectScan::open(&p, 2, 32, 2, None).unwrap();
         let (shard_feeds, cross_feed) = sc.feeds();
         let handles: Vec<_> = shard_feeds.into_iter().map(spawn_drain).collect();
         let cross = spawn_drain(cross_feed);
@@ -1379,7 +1472,7 @@ mod tests {
             (0..20_000u32).map(|i| Edge::new(i % 2000, (i + 1) % 2000)).collect();
         let el = EdgeList::new(2001, edges);
         write_binary_edges_with(&p, &el, 64).unwrap();
-        let mut sc = DirectScan::open_mmap(&p, 4, 16, 4).unwrap();
+        let mut sc = DirectScan::open_mmap(&p, 4, 16, 4, None).unwrap();
         let abort = sc.abort_handle();
         let (shard_feeds, cross_feed) = sc.feeds();
         let mut feeds: Vec<DestFeed> = shard_feeds;
@@ -1402,9 +1495,9 @@ mod tests {
         let p = tmp("direct_hostile.bin");
         let h = binfmt::SegHeader::new(8, 1u64 << 61, binfmt::DEFAULT_SEG_RECORDS).unwrap();
         std::fs::write(&p, h.encode()).unwrap();
-        let err = DirectScan::open(&p, 4, 32, 4).unwrap_err();
+        let err = DirectScan::open(&p, 4, 32, 4, None).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::InvalidData);
-        let err = DirectScan::open_mmap(&p, 4, 32, 4).unwrap_err();
+        let err = DirectScan::open_mmap(&p, 4, 32, 4, None).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::InvalidData);
         std::fs::remove_file(&p).ok();
     }

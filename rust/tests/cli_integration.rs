@@ -401,18 +401,34 @@ fn serve_routes_binary_scans_directly_and_gates_the_flag() {
     assert!(ok, "serve --route funnel failed: {stderr}");
     assert!(stdout.contains("route=funnel"), "{stdout}");
 
-    // --route direct + --wal-dir is a contradiction: the WAL needs the
-    // funnel's global arrival stream, so serve must fail fast
+    // --route direct + --wal-dir compose: the readers append routed
+    // chunks to per-reader WAL lanes before enqueueing, and the footer
+    // says so
     let wal = dir.join(format!("sc_route_wal_{pid}"));
-    let (_, stderr, ok) = run_with_stdin(
+    let (stdout, stderr, ok) = run_with_stdin(
         &[
-            "serve", "--input", bin_str, "--readers", "2", "--route", "direct", "--wal-dir",
-            wal.to_str().unwrap(),
+            "serve", "--input", bin_str, "--readers", "2", "--shards", "2", "--vmax", "64",
+            "--route", "direct", "--wal-dir", wal.to_str().unwrap(),
+        ],
+        "stats\n",
+    );
+    assert!(ok, "serve --route direct --wal-dir failed: {stderr}");
+    assert!(stdout.contains("route=direct"), "{stdout}");
+    assert!(stdout.contains("wal: durable direct dispatch"), "{stdout}");
+    assert!(stdout.contains("final:"), "{stdout}");
+
+    // ...and the lanes the direct run left behind resume cleanly (the
+    // resume path itself rides the funnel's positional slicing)
+    let (stdout, stderr, ok) = run_with_stdin(
+        &[
+            "serve", "--input", bin_str, "--shards", "2", "--vmax", "64", "--wal-dir",
+            wal.to_str().unwrap(), "--resume",
         ],
         "",
     );
-    assert!(!ok, "--route direct with --wal-dir must fail fast");
-    assert!(stderr.contains("--route"), "{stderr}");
+    assert!(ok, "resume from direct lanes failed: {stderr}");
+    assert!(stdout.contains("resume: recovered to t="), "{stdout}");
+    assert!(stdout.contains("final:"), "{stdout}");
 
     // unknown spellings are rejected up front
     let (_, stderr, ok) =
@@ -422,6 +438,88 @@ fn serve_routes_binary_scans_directly_and_gates_the_flag() {
 
     std::fs::remove_file(&bin).ok();
     std::fs::remove_dir_all(&wal).ok();
+    std::fs::remove_file(format!("{stem}.txt")).ok();
+    std::fs::remove_file(format!("{stem}.cmty")).ok();
+}
+
+/// Like [`run_with_stdin`] but returns the raw exit code, for tests
+/// that pin the error contract (one typed line on stderr, exit 1).
+fn run_with_stdin_code(args: &[&str], input: &str) -> (String, String, Option<i32>) {
+    use std::io::Write;
+    use std::process::Stdio;
+    let mut child = Command::new(exe())
+        .args(args)
+        .current_dir(std::env::temp_dir())
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn streamcom");
+    child
+        .stdin
+        .take()
+        .expect("child stdin")
+        .write_all(input.as_bytes())
+        .expect("write stdin");
+    let out = child.wait_with_output().expect("wait streamcom");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.code(),
+    )
+}
+
+#[test]
+fn serve_failures_exit_with_one_typed_error_line() {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+
+    // a resume that contradicts the durable contract (no WAL directory
+    // to resume from): exactly one "error: ..." line on stderr, exit 1
+    let (_, stderr, code) = run_with_stdin_code(
+        &["serve", "--sbm", "6x40", "--shards", "2", "--vmax", "64", "--resume"],
+        "",
+    );
+    assert_eq!(code, Some(1), "resume without --wal-dir must exit 1: {stderr}");
+    let lines: Vec<&str> = stderr.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert_eq!(lines.len(), 1, "exactly one error line, got: {stderr}");
+    assert!(
+        lines[0].starts_with("error: resume: durable state mismatch"),
+        "{stderr}"
+    );
+
+    // a reader that dies mid-scan (corrupt segment body) on the direct
+    // route: the service drains, and serve exits with the typed
+    // reader error instead of panicking
+    let bin = dir.join(format!("sc_err_scan_{pid}.bin"));
+    let bin_str = bin.to_str().unwrap();
+    let (_, stderr, ok) = run(&[
+        "generate", "--preset", "amazon-s", "--scale", "0.02", "--out", bin_str,
+    ]);
+    assert!(ok, "generate failed: {stderr}");
+    let mut bytes = std::fs::read(&bin).expect("read generated binary");
+    let tail = bytes.len() - 10;
+    bytes[tail] ^= 0x5A; // damage the last segment's body
+    std::fs::write(&bin, &bytes).expect("write damaged binary");
+    let (_, stderr, code) = run_with_stdin_code(
+        &[
+            "serve", "--input", bin_str, "--readers", "2", "--shards", "2", "--vmax", "64",
+            "--route", "direct",
+        ],
+        "",
+    );
+    assert_eq!(code, Some(1), "reader death must exit 1: {stderr}");
+    // the fault is reported once when it happens ("service: ...") and
+    // once, typed, as the exit line — exactly one "error: ..." line,
+    // and it is the last thing on stderr
+    let lines: Vec<&str> = stderr.lines().filter(|l| !l.trim().is_empty()).collect();
+    let errors: Vec<&&str> = lines.iter().filter(|l| l.starts_with("error: ")).collect();
+    assert_eq!(errors.len(), 1, "exactly one typed error line, got: {stderr}");
+    assert!(errors[0].starts_with("error: scan failed: reader "), "{stderr}");
+    assert_eq!(*errors[0], *lines.last().unwrap(), "error must be the exit line: {stderr}");
+
+    std::fs::remove_file(&bin).ok();
+    let stem = bin_str.trim_end_matches(".bin");
     std::fs::remove_file(format!("{stem}.txt")).ok();
     std::fs::remove_file(format!("{stem}.cmty")).ok();
 }

@@ -34,10 +34,12 @@
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU32, Ordering};
 
-use streamcom::graph::edge::Edge;
+use streamcom::graph::edge::{Edge, EdgeList};
+use streamcom::graph::io::write_binary_edges_with;
 use streamcom::service::{
     ClusterService, CommitHorizon, CrashPoint, ServiceConfig, WalError,
 };
+use streamcom::stream::pscan::DirectScan;
 use streamcom::util::proptest::property;
 use streamcom::util::rng::Xoshiro256;
 
@@ -300,6 +302,165 @@ fn crash_mid_checkpoint_falls_back_to_previous_checkpoint() {
 }
 
 // ---------------------------------------------------------------------
+// Tentpole: direct-route crashes. The readers append routed chunks to
+// per-reader WAL lanes before enqueueing, so a crash anywhere on the
+// direct path must recover to the seq-keyed durable cut and finish
+// bit-identical once the lost tail is re-fed.
+// ---------------------------------------------------------------------
+
+/// Arm `plan` on a durable **direct** ingest of `edges` (scanned from
+/// `bin` at `readers` readers), kill the service by drop, resume from
+/// the per-reader lanes, re-feed the stream past the recovered cut
+/// through the funnel, and require the finish to be bit-identical to
+/// `want`. `expect_cut` pins the exact recovered position where it is
+/// deterministic (single reader).
+#[allow(clippy::too_many_arguments)]
+fn crash_direct_and_recover(
+    stem: &str,
+    bin: &Path,
+    dir: &Path,
+    n: usize,
+    v_max: u64,
+    shards: usize,
+    readers: usize,
+    edges: &[Edge],
+    want: &[u32],
+    plan: CrashPoint,
+    expect_cut: Option<u64>,
+) {
+    let m = edges.len();
+    let cfg = durable_config(dir, shards, v_max, CommitHorizon::Unbounded);
+    let fp = cfg.failpoint.clone();
+    fp.arm(plan.clone());
+    // the service prepares the directory before the readers open lanes
+    let wal_cfg = cfg.direct_wal_cfg();
+    let mut doomed = ClusterService::start(cfg);
+    let mut scan =
+        DirectScan::open(bin, readers, 32, shards, wal_cfg).expect("open direct scan");
+    doomed.ingest_direct(&mut scan);
+    assert!(
+        doomed.take_fault().is_none(),
+        "{stem}: a dying disk is degradation, not a service fault"
+    );
+    assert!(fp.is_dead(), "{stem}: {plan:?} never tripped at readers={readers}");
+    drop(doomed); // abortive shutdown: nothing flushed past the death
+
+    let mut svc =
+        ClusterService::resume(durable_config(dir, shards, v_max, CommitHorizon::Unbounded))
+            .unwrap_or_else(|e| panic!("{stem}: resume after {plan:?} failed: {e}"));
+    let s = svc.handle().stats();
+    let d = s.edges_ingested as usize;
+    assert!(d <= m, "{stem}: recovered past the end of the stream");
+    if let Some(cut) = expect_cut {
+        assert_eq!(s.edges_ingested, cut, "{stem}: {plan:?}");
+    }
+    // unbounded ⇒ no checkpoint ever: the whole durable prefix across
+    // every per-reader lane is the replayed suffix
+    assert_eq!(s.wal_recovered_edges, s.edges_ingested, "{stem}: {plan:?}");
+    assert_eq!(s.recovered_epochs, 0, "{stem}");
+    assert_eq!(s.checkpoints_written, 0, "{stem}");
+
+    for chunk in edges[d..].chunks(97) {
+        svc.push_chunk(chunk);
+    }
+    let res = svc.finish();
+    assert_eq!(res.edges_ingested as usize, m, "{stem}");
+    assert_eq!(
+        res.snapshot.labels_padded(n),
+        want,
+        "{stem}: {plan:?} at readers={readers} diverged after recovery"
+    );
+}
+
+/// In-memory uninterrupted reference plus the segmented binary file
+/// the direct crash runs scan (written once per golden stream).
+fn direct_crash_fixture(stem: &str, host: &Path) -> (usize, u64, usize, Vec<Edge>, Vec<u32>, PathBuf) {
+    let (n, v_max, shards, edges) = read_golden(stem);
+    let mut reference =
+        ClusterService::start(base_config(shards, v_max, CommitHorizon::Unbounded));
+    reference.push_chunk(&edges);
+    let want = reference.finish().snapshot.labels_padded(n);
+    let bin = host.join(format!("{stem}.bin"));
+    // small segments so every swept reader count owns several
+    write_binary_edges_with(&bin, &EdgeList::new(n, edges.clone()), 64)
+        .expect("write golden binary");
+    (n, v_max, shards, edges, want, bin)
+}
+
+/// A reader's lane torn mid-record at **every** byte offset: whichever
+/// reader dies, whatever fragment survives, resume lands on the seq
+/// cut and the re-fed stream finishes bit-identical. Single-reader
+/// sweeps additionally pin the exact cut (= the armed append count,
+/// since one reader's append order is the global seq order).
+#[test]
+fn direct_torn_reader_lane_at_every_byte_offset_recovers_bit_identical() {
+    for stem in ["sbm_k6_s30", "lfr_mu015"] {
+        let host = scratch_dir("direct-tear-bin");
+        let (n, v_max, shards, edges, want, bin) = direct_crash_fixture(stem, &host);
+        for readers in [1usize, 2, 4] {
+            for torn in 0..RECORD_BYTES {
+                let dir = scratch_dir("direct-tear");
+                let reader = torn % readers;
+                let point = 40 + torn as u64; // inside every reader's share
+                crash_direct_and_recover(
+                    stem,
+                    &bin,
+                    &dir,
+                    n,
+                    v_max,
+                    shards,
+                    readers,
+                    &edges,
+                    &want,
+                    CrashPoint::ReaderWalAppend {
+                        reader,
+                        after_records: point,
+                        torn_bytes: torn,
+                    },
+                    (readers == 1).then_some(point),
+                );
+                std::fs::remove_dir_all(&dir).ok();
+            }
+        }
+        std::fs::remove_dir_all(&host).ok();
+    }
+}
+
+/// The process dies between a reader's WAL flush and the queue push:
+/// the flushed chunk is durable but was never ingested. Recovery must
+/// replay it (it is below the durable cut unless an earlier gap
+/// intervenes) and the re-fed stream must finish bit-identical — the
+/// WAL-before-enqueue ordering is exactly what makes this crash
+/// window lossless.
+#[test]
+fn direct_crash_between_wal_flush_and_enqueue_recovers_bit_identical() {
+    for stem in ["sbm_k6_s30", "lfr_mu015"] {
+        let host = scratch_dir("direct-enqueue-bin");
+        let (n, v_max, shards, edges, want, bin) = direct_crash_fixture(stem, &host);
+        for readers in [1usize, 2, 4] {
+            for after_chunks in [0u64, 3] {
+                let dir = scratch_dir("direct-enqueue");
+                crash_direct_and_recover(
+                    stem,
+                    &bin,
+                    &dir,
+                    n,
+                    v_max,
+                    shards,
+                    readers,
+                    &edges,
+                    &want,
+                    CrashPoint::ReaderEnqueue { reader: readers - 1, after_chunks },
+                    None,
+                );
+                std::fs::remove_dir_all(&dir).ok();
+            }
+        }
+        std::fs::remove_dir_all(&host).ok();
+    }
+}
+
+// ---------------------------------------------------------------------
 // Satellite: recover-at-every-epoch-boundary property.
 // ---------------------------------------------------------------------
 
@@ -477,39 +638,95 @@ fn torn_wal_tail_at_every_byte_offset_is_dropped_cleanly() {
 }
 
 /// A *full-width* record that fails its checksum is not a torn tail —
-/// it is corruption, and recovery must refuse with the typed error
-/// (naming the file and offset) instead of replaying a damaged edge.
+/// it is corruption. Resume no longer refuses the whole directory: the
+/// damaged segment is quarantined to `<name>.corrupt` (preserved
+/// byte-for-byte for forensics), its clean prefix of whole records is
+/// recovered under the original name, and the stream continues from
+/// the durable cut the surviving records support.
 #[test]
-fn corrupt_wal_record_yields_typed_error_not_panic() {
+fn corrupt_wal_segment_is_quarantined_and_clean_prefix_recovered() {
     let dir = scratch_dir("corrupt");
-    let (_n, _edges, _want, pristine) = pristine_wal(&dir);
+    let (n, edges, want, pristine) = pristine_wal(&dir);
     let file = only_wal_file(&dir);
+    let mut quarantine = file.clone().into_os_string();
+    quarantine.push(".corrupt");
+    let quarantine = PathBuf::from(quarantine);
 
     // flip one byte of record 10's payload; its checksum now fails
     let mut bytes = pristine.clone();
     bytes[10 * RECORD_BYTES + 13] ^= 0x5A;
     std::fs::write(&file, &bytes).expect("write corrupted wal");
-    let err = ClusterService::resume(durable_config(&dir, 1, 8, CommitHorizon::Unbounded))
-        .err()
-        .expect("corrupt record must fail resume");
-    match err {
-        WalError::Corrupt { ref file, offset } => {
-            assert_eq!(offset, (10 * RECORD_BYTES) as u64, "offset names the bad record");
-            assert!(file.extension().is_some_and(|x| x == "wal"));
-        }
-        other => panic!("expected WalError::Corrupt, got {other:?}"),
-    }
+    let mut svc = ClusterService::resume(durable_config(&dir, 1, 8, CommitHorizon::Unbounded))
+        .expect("quarantine must let resume proceed");
+    let s = svc.handle().stats();
+    assert_eq!(s.edges_ingested, 10, "clean prefix before the damage");
+    assert_eq!(s.wal_recovered_edges, 10);
+    assert_eq!(
+        std::fs::read(&quarantine).expect("quarantined segment"),
+        bytes,
+        "forensic copy must preserve the damaged bytes exactly"
+    );
+    assert_eq!(
+        std::fs::metadata(&file).expect("recovered segment").len(),
+        (10 * RECORD_BYTES) as u64,
+        "recovered segment holds exactly the clean prefix"
+    );
+    svc.push_chunk(&edges[10..]);
+    let res = svc.finish();
+    assert_eq!(res.edges_ingested, 40);
+    assert_eq!(res.snapshot.labels_padded(n), want, "post-quarantine finish diverged");
 
     // a checksum-valid record with a regressed sequence number is
     // equally corrupt (duplicated/reordered history, not a torn tail)
+    // and quarantines the same way, keeping the records before it
     let mut bytes = pristine.clone();
     let dup: [u8; RECORD_BYTES] = bytes[..RECORD_BYTES].try_into().unwrap();
     bytes[20 * RECORD_BYTES..21 * RECORD_BYTES].copy_from_slice(&dup);
     std::fs::write(&file, &bytes).expect("write regressed wal");
-    let err = ClusterService::resume(durable_config(&dir, 1, 8, CommitHorizon::Unbounded))
+    std::fs::remove_file(&quarantine).ok();
+    let mut svc = ClusterService::resume(durable_config(&dir, 1, 8, CommitHorizon::Unbounded))
+        .expect("sequence regression must quarantine, not fail");
+    let s = svc.handle().stats();
+    assert_eq!(s.edges_ingested, 20, "clean prefix before the regression");
+    assert!(quarantine.exists(), "regressed segment preserved for forensics");
+    svc.push_chunk(&edges[20..]);
+    let res = svc.finish();
+    assert_eq!(res.snapshot.labels_padded(n), want, "post-regression finish diverged");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Checkpoints have no quarantine path — a `checkpoint.bin` whose
+/// trailing checksum fails is the typed [`WalError::Corrupt`] (naming
+/// the file), never a panic and never a silent fresh start over
+/// durable state.
+#[test]
+fn corrupt_checkpoint_yields_typed_error_not_panic() {
+    let mut rng = Xoshiro256::new(0xBADC);
+    let (_n, edges) = random_stream(&mut rng, 192); // m = 768
+    let (shards, v_max) = (2usize, 32u64);
+    let horizon = CommitHorizon::Edges(8);
+
+    let dir = scratch_dir("ckpt-corrupt");
+    let mut svc = ClusterService::start(durable_config(&dir, shards, v_max, horizon));
+    let handle = svc.handle();
+    push_with_schedule(&mut svc, &edges, 0, 256);
+    assert!(handle.stats().checkpoints_written >= 1, "need a checkpoint to damage");
+    drop(svc);
+
+    let ckpt = dir.join("checkpoint.bin");
+    let mut bytes = std::fs::read(&ckpt).expect("read checkpoint");
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x5A;
+    std::fs::write(&ckpt, &bytes).expect("write damaged checkpoint");
+    let err = ClusterService::resume(durable_config(&dir, shards, v_max, horizon))
         .err()
-        .expect("sequence regression must fail resume");
-    assert!(matches!(err, WalError::Corrupt { .. }), "got {err:?}");
+        .expect("damaged checkpoint must fail resume");
+    match err {
+        WalError::Corrupt { ref file, .. } => {
+            assert!(file.ends_with("checkpoint.bin"), "error names {}", file.display());
+        }
+        other => panic!("expected WalError::Corrupt, got {other:?}"),
+    }
     std::fs::remove_dir_all(&dir).ok();
 }
 

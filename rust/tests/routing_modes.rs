@@ -64,7 +64,7 @@ fn assert_routing_parity(name: &str, el: &EdgeList) {
             // direct, buffered readers
             let mut svc = ClusterService::start(cfg(shards));
             let mut scan =
-                DirectScan::open(&path, readers, 512, shards).expect("open direct scan");
+                DirectScan::open(&path, readers, 512, shards, None).expect("open direct scan");
             svc.ingest_direct(&mut scan);
             assert!(scan.take_error().is_none());
             assert_eq!(
@@ -76,7 +76,7 @@ fn assert_routing_parity(name: &str, el: &EdgeList) {
             // direct, one shared mapping (buffered fallback off-unix —
             // identical semantics either way)
             let mut svc = ClusterService::start(cfg(shards));
-            let mut scan = DirectScan::open_mmap(&path, readers, 512, shards)
+            let mut scan = DirectScan::open_mmap(&path, readers, 512, shards, None)
                 .expect("open direct mmap scan");
             svc.ingest_direct(&mut scan);
             assert!(scan.take_error().is_none());
@@ -127,11 +127,17 @@ fn epoch_seal_counts_are_reader_count_invariant() {
         let mut scanner = ParallelScanner::open(&path, 1, 512).expect("open funnel scan");
         svc.ingest(&mut scanner, 512);
         assert!(scanner.take_error().is_none());
-        // the router buffers a partial cross chunk: flush it so the
-        // log's arrival total covers the whole stream before reading
-        svc.flush();
+        // stats() folds the router's still-buffered partial cross
+        // batch into cross_total, so the arrival total is whole-stream
+        // with no compensating flush; finish() then appends that tail
+        // to the log, making the sealed-epoch count whole-stream too.
+        let before = handle.stats();
+        svc.finish();
         let s = handle.stats();
-        drop(svc); // abort teardown is fine — sealing already happened
+        assert_eq!(
+            before.cross_total, s.cross_total,
+            "stats() must already count the router's buffered tail"
+        );
         (s.epochs_sealed, s.cross_total)
     };
     assert!(want_sealed > 1, "workload too small to seal epochs");
@@ -139,7 +145,8 @@ fn epoch_seal_counts_are_reader_count_invariant() {
     for readers in [1usize, 2, 4] {
         let mut svc = ClusterService::start(mk_cfg());
         let handle = svc.handle();
-        let mut scan = DirectScan::open(&path, readers, 512, 4).expect("open direct scan");
+        let mut scan =
+            DirectScan::open(&path, readers, 512, 4, None).expect("open direct scan");
         svc.ingest_direct(&mut scan);
         assert!(scan.take_error().is_none());
         let s = handle.stats();
@@ -161,7 +168,7 @@ fn direct_ingest_rejects_a_mismatched_shard_count() {
     let g = sbm::generate(&SbmConfig::equal(4, 25, 0.4, 0.01, 9));
     let path = tmp("mismatch");
     write_binary_edges_with(&path, &g.edges, 64).expect("write golden binary");
-    let mut scan = DirectScan::open(&path, 2, 512, 2).expect("open direct scan");
+    let mut scan = DirectScan::open(&path, 2, 512, 2, None).expect("open direct scan");
     let mut svc = ClusterService::start(cfg(4));
     let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         svc.ingest_direct(&mut scan);
